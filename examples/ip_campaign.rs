@@ -1,0 +1,36 @@
+//! Table 3 driver: the interest-point GP system behind a virtualization
+//! layer (Method 3) — 12 solutions on 10 Windows hosts; paper: 215 h
+//! sequential vs 48 h, acceleration 4.48, CP 25.67 GFLOPS.
+
+use vgp::churn::PoolParams;
+use vgp::coordinator::{simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+
+fn main() {
+    let c = Campaign::new("ip_75g_75i", ProblemKind::InterestPoint, 12, 75, 75);
+    let r = simulate_campaign(
+        &c,
+        &PoolParams::virtualized_lab(10),
+        &[("windows-lab", 10)],
+        SimConfig::default(),
+        42,
+    );
+    let mut table = Table::new(&[
+        "config", "T_seq(sim)", "T_B(sim)", "Acc(sim)", "Acc(paper)", "CP(sim)", "CP(paper)",
+    ]);
+    table.row(&[
+        "75 Gen, 75 Ind, 12 solutions, 10 virtualized hosts".into(),
+        format!("{:.0}h", r.t_seq / 3600.0),
+        format!("{:.0}h", r.t_b / 3600.0),
+        format!("{:.2}", r.acceleration),
+        "4.48".into(),
+        format!("{:.1} GF", r.cp_gflops),
+        "25.67 GF".into(),
+    ]);
+    println!("Table 3 — interest-point GP under virtualization:");
+    table.print();
+    println!("\nshape check: ~4-5x on 10 dedicated hosts (virtualization eats ~15%).");
+    assert!(r.acceleration > 3.0 && r.acceleration < 9.0);
+}

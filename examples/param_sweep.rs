@@ -1,0 +1,26 @@
+//! Parameter-sweep example (the Commander-style use case of §1): the
+//! cross product generations x population of an ant campaign, each cell
+//! simulated on a 10-host lab pool, reported as a sweep table.
+
+use vgp::churn::PoolParams;
+use vgp::coordinator::{simulate_campaign, sweep};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+
+fn main() {
+    let campaigns = sweep("ant", ProblemKind::Ant, 25, &[500, 1000, 2000], &[1000, 2000]);
+    let mut table = Table::new(&["campaign", "T_seq", "T_B", "Acc", "done"]);
+    for c in &campaigns {
+        let r = simulate_campaign(&c.clone(), &PoolParams::lab(10), &[("lab", 10)], SimConfig::default(), 11);
+        table.row(&[
+            c.name.clone(),
+            format!("{:.0}s", r.t_seq),
+            format!("{:.0}s", r.t_b),
+            format!("{:.2}", r.acceleration),
+            format!("{}/{}", r.completed, r.runs),
+        ]);
+    }
+    println!("parameter sweep (ant, 25 runs per cell, 10 lab hosts):");
+    table.print();
+}

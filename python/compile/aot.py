@@ -1,0 +1,107 @@
+"""AOT export: lower the L2 evaluators to HLO *text* artifacts.
+
+HLO text — NOT `.serialize()` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once at build time (`make artifacts`); writes
+    artifacts/bool_eval.hlo.txt
+    artifacts/reg_eval.hlo.txt
+    artifacts/meta.json         (shape/opcode contract for the rust side)
+
+Python never runs on the request path: after this, the rust binary is
+self-contained.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import opcodes as oc
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def meta() -> dict:
+    """The contract the rust runtime validates at load time."""
+    return {
+        "tape_len": oc.TAPE_LEN,
+        "stack_depth": oc.STACK_DEPTH,
+        "bool": {
+            "batch": oc.BOOL_BATCH,
+            "words": oc.BOOL_WORDS,
+            "num_vars": oc.BOOL_NUM_VARS,
+            "op_not": oc.BOOL_OP_NOT,
+            "op_and": oc.BOOL_OP_AND,
+            "op_or": oc.BOOL_OP_OR,
+            "op_nand": oc.BOOL_OP_NAND,
+            "op_nor": oc.BOOL_OP_NOR,
+            "op_xor": oc.BOOL_OP_XOR,
+            "op_if": oc.BOOL_OP_IF,
+            "nop": oc.BOOL_NOP,
+        },
+        "reg": {
+            "batch": oc.REG_BATCH,
+            "cases": oc.REG_CASES,
+            "num_vars": oc.REG_NUM_VARS,
+            "op_const": oc.REG_OP_CONST,
+            "op_add": oc.REG_OP_ADD,
+            "op_sub": oc.REG_OP_SUB,
+            "op_mul": oc.REG_OP_MUL,
+            "op_div": oc.REG_OP_DIV,
+            "op_sin": oc.REG_OP_SIN,
+            "op_cos": oc.REG_OP_COS,
+            "op_exp": oc.REG_OP_EXP,
+            "op_log": oc.REG_OP_LOG,
+            "op_neg": oc.REG_OP_NEG,
+            "nop": oc.REG_NOP,
+            "hit_eps": oc.REG_HIT_EPS,
+        },
+    }
+
+
+def build(outdir: str) -> None:
+    os.makedirs(outdir, exist_ok=True)
+
+    lowered = jax.jit(model.bool_fitness).lower(*model.bool_example_args())
+    path = os.path.join(outdir, "bool_eval.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    lowered = jax.jit(model.reg_fitness).lower(*model.reg_example_args())
+    path = os.path.join(outdir, "reg_eval.hlo.txt")
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {path} ({len(text)} chars)")
+
+    path = os.path.join(outdir, "meta.json")
+    with open(path, "w") as f:
+        json.dump(meta(), f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+"""Shared opcode encoding for GP evaluation tapes.
+
+This table is the *contract* between the rust coordinator (gp/tape.rs)
+and the AOT-compiled evaluators. The rust side mirrors these constants;
+`python/tests/test_opcodes.py` golden-tests them and
+`rust/src/gp/tape.rs` has the matching golden test so drift is caught on
+both sides.
+
+Tape semantics (identical in kernel, ref oracle, and rust native eval):
+  - a tape is a fixed-length row of i32 opcodes, executed left to right
+    (postfix); terminals push, operators pop `arity` and push 1.
+  - stack pointer sp starts at 0 and is clamped to [0, D]; operand reads
+    use depth indices clamped to [0, D-1]; this makes evaluation *total*
+    (well-defined for arbitrary ill-formed tapes), which the
+    hypothesis/property tests rely on.
+  - the program result is stack slot 0 after the last tape step.
+  - NOP (and any op >= NOP or < 0) leaves the machine untouched; the
+    tape compiler pads with NOP.
+
+Boolean tapes operate on bit-packed u32 words: 32 fitness cases per
+word, case c -> word c//32, bit c%32 (LSB first). Input variable v's
+truth-table column is packed the same way.
+"""
+
+# ---------------------------------------------------------------- boolean
+BOOL_NUM_VARS = 24          # terminal opcodes 0..23 push input var columns
+BOOL_OP_NOT = 24            # arity 1
+BOOL_OP_AND = 25            # arity 2
+BOOL_OP_OR = 26             # arity 2
+BOOL_OP_NAND = 27           # arity 2
+BOOL_OP_NOR = 28            # arity 2
+BOOL_OP_XOR = 29            # arity 2
+BOOL_OP_IF = 30             # arity 3: pops f, t, cond -> (c&t)|(~c&f)
+BOOL_NOP = 31               # >= NOP (or < 0) is a no-op
+
+# IF stack convention: operands are pushed cond, then t, then f, so at
+# execution time x3 = cond (deepest), x2 = t, x1 = f (top).
+
+# ------------------------------------------------------------- regression
+REG_NUM_VARS = 8            # terminal opcodes 0..7 push input var rows
+REG_OP_CONST = 8            # arity 0: pushes consts[b, t] (per-slot ERC)
+REG_OP_ADD = 9              # arity 2: x2 + x1
+REG_OP_SUB = 10             # arity 2: x2 - x1
+REG_OP_MUL = 11             # arity 2: x2 * x1
+REG_OP_DIV = 12             # arity 2: protected: |x1| < 1e-9 -> 1.0
+REG_OP_SIN = 13             # arity 1
+REG_OP_COS = 14             # arity 1
+REG_OP_EXP = 15             # arity 1: exp(clip(x, -50, 50))
+REG_OP_LOG = 16             # arity 1: protected: log(|x|), 0 -> 0.0
+REG_OP_NEG = 17             # arity 1
+REG_NOP = 18                # >= NOP (or < 0) is a no-op
+
+REG_HIT_EPS = 0.01          # |err| <= eps counts as a Koza "hit"
+
+# ------------------------------------------------------------- AOT shapes
+# The artifacts are compiled for these fixed shapes; the rust runtime
+# chunks populations / case words to fit and accumulates.
+TAPE_LEN = 64               # L: max postfix tape length
+STACK_DEPTH = 16            # D: evaluation stack depth
+BOOL_BATCH = 256            # B: programs per bool_eval call
+BOOL_WORDS = 64             # W: u32 case-words per call (= 2048 cases)
+BOOL_BLOCK_B = 32           # pallas program-block size
+REG_BATCH = 256             # B: programs per reg_eval call
+REG_CASES = 64              # C: f32 fitness cases per call
+REG_BLOCK_B = 32            # pallas program-block size
+
+
+def bool_arity(op: int) -> int:
+    """Arity of a boolean opcode (terminals 0, NOP treated as 0)."""
+    if 0 <= op < BOOL_NUM_VARS:
+        return 0
+    return {
+        BOOL_OP_NOT: 1,
+        BOOL_OP_AND: 2,
+        BOOL_OP_OR: 2,
+        BOOL_OP_NAND: 2,
+        BOOL_OP_NOR: 2,
+        BOOL_OP_XOR: 2,
+        BOOL_OP_IF: 3,
+    }.get(op, 0)
+
+
+def reg_arity(op: int) -> int:
+    """Arity of a regression opcode (terminals/CONST 0, NOP 0)."""
+    if 0 <= op < REG_NUM_VARS or op == REG_OP_CONST:
+        return 0
+    return {
+        REG_OP_ADD: 2,
+        REG_OP_SUB: 2,
+        REG_OP_MUL: 2,
+        REG_OP_DIV: 2,
+        REG_OP_SIN: 1,
+        REG_OP_COS: 1,
+        REG_OP_EXP: 1,
+        REG_OP_LOG: 1,
+        REG_OP_NEG: 1,
+    }.get(op, 0)

@@ -1,0 +1,144 @@
+"""Pure-jnp oracle for the GP tape evaluators.
+
+This is the CORE correctness signal: the Pallas kernels in `tape.py`
+must agree with these scan-based interpreters exactly (bitwise for the
+boolean machine, to float tolerance for the regression machine), for
+*arbitrary* — including ill-formed — tapes. It is also the "pure-jnp
+reference" used for the roofline comparison in EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import opcodes as oc
+
+
+def popcount_u32(v):
+    """Per-lane popcount of a uint32 array (SWAR bit trick)."""
+    v = v.astype(jnp.uint32)
+    c55 = jnp.uint32(0x55555555)
+    c33 = jnp.uint32(0x33333333)
+    c0f = jnp.uint32(0x0F0F0F0F)
+    c01 = jnp.uint32(0x01010101)
+    v = v - ((v >> 1) & c55)
+    v = (v & c33) + ((v >> 2) & c33)
+    v = (v + (v >> 4)) & c0f
+    return (v * c01) >> 24
+
+
+def _gather_depth(stack, idx):
+    """stack: [B, D, W]; idx: [B] depth indices (clamped) -> [B, W]."""
+    d = stack.shape[1]
+    idx = jnp.clip(idx, 0, d - 1)
+    return jnp.take_along_axis(stack, idx[:, None, None], axis=1)[:, 0, :]
+
+
+def bool_eval_ref(tape, inputs, target, mask):
+    """Reference bit-packed boolean tape evaluation.
+
+    tape:    [B, L] int32 opcode rows
+    inputs:  [NV, W] uint32 packed truth-table columns
+    target:  [W] uint32 packed expected outputs
+    mask:    [W] uint32 valid-case bits
+    returns: hits [B] int32 — number of cases where program == target
+    """
+    b, _ = tape.shape
+    d = oc.STACK_DEPTH
+    w = inputs.shape[1]
+    stack0 = jnp.zeros((b, d, w), jnp.uint32)
+    sp0 = jnp.zeros((b,), jnp.int32)
+
+    def step(carry, op):
+        stack, sp = carry
+        op = op.astype(jnp.int32)
+        is_nop = (op >= oc.BOOL_NOP) | (op < 0)
+        is_term = (op >= 0) & (op < oc.BOOL_NUM_VARS)
+        arity = jnp.where(
+            is_term | is_nop,
+            0,
+            jnp.where(op == oc.BOOL_OP_NOT, 1,
+                      jnp.where(op == oc.BOOL_OP_IF, 3, 2)),
+        )
+        x1 = _gather_depth(stack, sp - 1)
+        x2 = _gather_depth(stack, sp - 2)
+        x3 = _gather_depth(stack, sp - 3)
+        term = jnp.take(inputs, jnp.clip(op, 0, oc.BOOL_NUM_VARS - 1), axis=0)
+        res = term
+        res = jnp.where((op == oc.BOOL_OP_NOT)[:, None], ~x1, res)
+        res = jnp.where((op == oc.BOOL_OP_AND)[:, None], x2 & x1, res)
+        res = jnp.where((op == oc.BOOL_OP_OR)[:, None], x2 | x1, res)
+        res = jnp.where((op == oc.BOOL_OP_NAND)[:, None], ~(x2 & x1), res)
+        res = jnp.where((op == oc.BOOL_OP_NOR)[:, None], ~(x2 | x1), res)
+        res = jnp.where((op == oc.BOOL_OP_XOR)[:, None], x2 ^ x1, res)
+        res = jnp.where((op == oc.BOOL_OP_IF)[:, None],
+                        (x3 & x2) | (~x3 & x1), res)
+        new_sp = jnp.clip(sp + jnp.where(is_nop, 0, 1 - arity), 0, d)
+        wr = jnp.clip(new_sp - 1, 0, d - 1)
+        onehot = (jnp.arange(d)[None, :] == wr[:, None]) & (~is_nop)[:, None]
+        stack = jnp.where(onehot[:, :, None], res[:, None, :], stack)
+        return (stack, new_sp), None
+
+    (stack, _), _ = jax.lax.scan(step, (stack0, sp0), tape.T)
+    out = stack[:, 0, :]
+    agree = (~(out ^ target[None, :])) & mask[None, :]
+    return jnp.sum(popcount_u32(agree), axis=1).astype(jnp.int32)
+
+
+def reg_eval_ref(tape, consts, x, y, mask):
+    """Reference f32 tape evaluation for symbolic regression.
+
+    tape:   [B, L] int32
+    consts: [B, L] float32 — per-slot ERC values (used by CONST ops)
+    x:      [NV, C] float32 input variable rows
+    y:      [C] float32 targets
+    mask:   [C] float32 (1.0 valid / 0.0 padding)
+    returns (sse [B] f32, hits [B] i32)
+    """
+    b, _ = tape.shape
+    d = oc.STACK_DEPTH
+    c = x.shape[1]
+    stack0 = jnp.zeros((b, d, c), jnp.float32)
+    sp0 = jnp.zeros((b,), jnp.int32)
+
+    def step(carry, op_const):
+        stack, sp = carry
+        op, konst = op_const
+        op = op.astype(jnp.int32)
+        is_nop = (op >= oc.REG_NOP) | (op < 0)
+        is_push = ((op >= 0) & (op < oc.REG_NUM_VARS)) | (op == oc.REG_OP_CONST)
+        is_unary = ((op == oc.REG_OP_SIN) | (op == oc.REG_OP_COS)
+                    | (op == oc.REG_OP_EXP) | (op == oc.REG_OP_LOG)
+                    | (op == oc.REG_OP_NEG))
+        arity = jnp.where(is_push | is_nop, 0, jnp.where(is_unary, 1, 2))
+        x1 = _gather_depth(stack, sp - 1)
+        x2 = _gather_depth(stack, sp - 2)
+        term = jnp.take(x, jnp.clip(op, 0, oc.REG_NUM_VARS - 1), axis=0)
+        res = term
+        res = jnp.where((op == oc.REG_OP_CONST)[:, None], konst[:, None], res)
+        res = jnp.where((op == oc.REG_OP_ADD)[:, None], x2 + x1, res)
+        res = jnp.where((op == oc.REG_OP_SUB)[:, None], x2 - x1, res)
+        res = jnp.where((op == oc.REG_OP_MUL)[:, None], x2 * x1, res)
+        safe = jnp.where(jnp.abs(x1) < 1e-9, 1.0, x1)
+        res = jnp.where((op == oc.REG_OP_DIV)[:, None],
+                        jnp.where(jnp.abs(x1) < 1e-9, 1.0, x2 / safe), res)
+        res = jnp.where((op == oc.REG_OP_SIN)[:, None], jnp.sin(x1), res)
+        res = jnp.where((op == oc.REG_OP_COS)[:, None], jnp.cos(x1), res)
+        res = jnp.where((op == oc.REG_OP_EXP)[:, None],
+                        jnp.exp(jnp.clip(x1, -50.0, 50.0)), res)
+        res = jnp.where((op == oc.REG_OP_LOG)[:, None],
+                        jnp.where(jnp.abs(x1) < 1e-9, 0.0, jnp.log(jnp.abs(safe))),
+                        res)
+        res = jnp.where((op == oc.REG_OP_NEG)[:, None], -x1, res)
+        new_sp = jnp.clip(sp + jnp.where(is_nop, 0, 1 - arity), 0, d)
+        wr = jnp.clip(new_sp - 1, 0, d - 1)
+        onehot = (jnp.arange(d)[None, :] == wr[:, None]) & (~is_nop)[:, None]
+        stack = jnp.where(onehot[:, :, None], res[:, None, :], stack)
+        return (stack, new_sp), None
+
+    (stack, _), _ = jax.lax.scan(step, (stack0, sp0), (tape.T, consts.T))
+    out = stack[:, 0, :]
+    err = (out - y[None, :]) * mask[None, :]
+    sse = jnp.sum(err * err, axis=1)
+    hits = jnp.sum((jnp.abs(err) <= oc.REG_HIT_EPS) & (mask[None, :] > 0),
+                   axis=1).astype(jnp.int32)
+    return sse, hits

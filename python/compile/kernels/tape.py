@@ -1,0 +1,203 @@
+"""L1: Pallas stack-machine tape-interpreter kernels.
+
+The GP fitness hot-spot as Pallas kernels. Each kernel owns a VMEM
+scratch-resident evaluation stack for a (program-block x case-block)
+tile and runs the *whole* tape loop internally (fori_loop), so one
+pallas_call per population chunk — no per-step dispatch, no scan at the
+L2 level.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the multiplexer paper
+workload is bitwise u32 — VPU work, not MXU. BlockSpec tiles the
+(programs x case-words) plane; per-block VMEM footprint is
+Bblk*D*Wblk*4 B (32*16*64*4 = 128 KiB) plus the Bblk*L tape slice,
+far under VMEM. interpret=True is mandatory for CPU-PJRT execution
+(real-TPU lowering emits a Mosaic custom-call the CPU plugin can't run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import opcodes as oc
+from .ref import popcount_u32
+
+
+def _gather_depth(stack, idx):
+    d = stack.shape[1]
+    idx = jnp.clip(idx, 0, d - 1)
+    return jnp.take_along_axis(stack, idx[:, None, None], axis=1)[:, 0, :]
+
+
+# --------------------------------------------------------------- boolean
+
+
+def _bool_step(tape, inputs, t, carry):
+    """One vectorized tape step over a [Bblk, D, W] packed stack."""
+    stack, sp = carry
+    d = stack.shape[1]
+    op = jax.lax.dynamic_index_in_dim(tape, t, axis=1, keepdims=False)
+    op = op.astype(jnp.int32)
+    is_nop = (op >= oc.BOOL_NOP) | (op < 0)
+    is_term = (op >= 0) & (op < oc.BOOL_NUM_VARS)
+    arity = jnp.where(
+        is_term | is_nop,
+        0,
+        jnp.where(op == oc.BOOL_OP_NOT, 1,
+                  jnp.where(op == oc.BOOL_OP_IF, 3, 2)),
+    )
+    x1 = _gather_depth(stack, sp - 1)
+    x2 = _gather_depth(stack, sp - 2)
+    x3 = _gather_depth(stack, sp - 3)
+    term = jnp.take(inputs, jnp.clip(op, 0, oc.BOOL_NUM_VARS - 1), axis=0)
+    res = term
+    res = jnp.where((op == oc.BOOL_OP_NOT)[:, None], ~x1, res)
+    res = jnp.where((op == oc.BOOL_OP_AND)[:, None], x2 & x1, res)
+    res = jnp.where((op == oc.BOOL_OP_OR)[:, None], x2 | x1, res)
+    res = jnp.where((op == oc.BOOL_OP_NAND)[:, None], ~(x2 & x1), res)
+    res = jnp.where((op == oc.BOOL_OP_NOR)[:, None], ~(x2 | x1), res)
+    res = jnp.where((op == oc.BOOL_OP_XOR)[:, None], x2 ^ x1, res)
+    res = jnp.where((op == oc.BOOL_OP_IF)[:, None],
+                    (x3 & x2) | (~x3 & x1), res)
+    new_sp = jnp.clip(sp + jnp.where(is_nop, 0, 1 - arity), 0, d)
+    wr = jnp.clip(new_sp - 1, 0, d - 1)
+    onehot = (jnp.arange(d)[None, :] == wr[:, None]) & (~is_nop)[:, None]
+    stack = jnp.where(onehot[:, :, None], res[:, None, :], stack)
+    return stack, new_sp
+
+
+def _bool_kernel(tape_ref, inputs_ref, target_ref, mask_ref, hits_ref):
+    bblk, l = tape_ref.shape
+    w = inputs_ref.shape[1]
+    tape = tape_ref[...]
+    inputs = inputs_ref[...]
+    stack0 = jnp.zeros((bblk, oc.STACK_DEPTH, w), jnp.uint32)
+    sp0 = jnp.zeros((bblk,), jnp.int32)
+    stack, _ = jax.lax.fori_loop(
+        0, l, functools.partial(_bool_step, tape, inputs), (stack0, sp0)
+    )
+    out = stack[:, 0, :]
+    agree = (~(out ^ target_ref[...][None, :])) & mask_ref[...][None, :]
+    hits = jnp.sum(popcount_u32(agree), axis=1).astype(jnp.int32)
+    hits_ref[...] = hits[:, None]
+
+
+def bool_eval(tape, inputs, target, mask, *, block_b=None):
+    """Batched bit-packed boolean GP evaluation (Pallas).
+
+    Shapes as in `ref.bool_eval_ref`; returns hits [B] int32.
+    """
+    b, l = tape.shape
+    nv, w = inputs.shape
+    block_b = block_b or min(b, oc.BOOL_BLOCK_B)
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    hits = pl.pallas_call(
+        _bool_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((nv, w), lambda i: (0, 0)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+            pl.BlockSpec((w,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        interpret=True,
+    )(tape, inputs, target, mask)
+    return hits[:, 0]
+
+
+# ------------------------------------------------------------ regression
+
+
+def _reg_step(tape, consts, x, t, carry):
+    stack, sp = carry
+    d = stack.shape[1]
+    op = jax.lax.dynamic_index_in_dim(tape, t, axis=1, keepdims=False)
+    op = op.astype(jnp.int32)
+    konst = jax.lax.dynamic_index_in_dim(consts, t, axis=1, keepdims=False)
+    is_nop = (op >= oc.REG_NOP) | (op < 0)
+    is_push = ((op >= 0) & (op < oc.REG_NUM_VARS)) | (op == oc.REG_OP_CONST)
+    is_unary = ((op == oc.REG_OP_SIN) | (op == oc.REG_OP_COS)
+                | (op == oc.REG_OP_EXP) | (op == oc.REG_OP_LOG)
+                | (op == oc.REG_OP_NEG))
+    arity = jnp.where(is_push | is_nop, 0, jnp.where(is_unary, 1, 2))
+    x1 = _gather_depth(stack, sp - 1)
+    x2 = _gather_depth(stack, sp - 2)
+    term = jnp.take(x, jnp.clip(op, 0, oc.REG_NUM_VARS - 1), axis=0)
+    res = term
+    res = jnp.where((op == oc.REG_OP_CONST)[:, None], konst[:, None], res)
+    res = jnp.where((op == oc.REG_OP_ADD)[:, None], x2 + x1, res)
+    res = jnp.where((op == oc.REG_OP_SUB)[:, None], x2 - x1, res)
+    res = jnp.where((op == oc.REG_OP_MUL)[:, None], x2 * x1, res)
+    safe = jnp.where(jnp.abs(x1) < 1e-9, 1.0, x1)
+    res = jnp.where((op == oc.REG_OP_DIV)[:, None],
+                    jnp.where(jnp.abs(x1) < 1e-9, 1.0, x2 / safe), res)
+    res = jnp.where((op == oc.REG_OP_SIN)[:, None], jnp.sin(x1), res)
+    res = jnp.where((op == oc.REG_OP_COS)[:, None], jnp.cos(x1), res)
+    res = jnp.where((op == oc.REG_OP_EXP)[:, None],
+                    jnp.exp(jnp.clip(x1, -50.0, 50.0)), res)
+    res = jnp.where((op == oc.REG_OP_LOG)[:, None],
+                    jnp.where(jnp.abs(x1) < 1e-9, 0.0, jnp.log(jnp.abs(safe))),
+                    res)
+    res = jnp.where((op == oc.REG_OP_NEG)[:, None], -x1, res)
+    new_sp = jnp.clip(sp + jnp.where(is_nop, 0, 1 - arity), 0, d)
+    wr = jnp.clip(new_sp - 1, 0, d - 1)
+    onehot = (jnp.arange(d)[None, :] == wr[:, None]) & (~is_nop)[:, None]
+    stack = jnp.where(onehot[:, :, None], res[:, None, :], stack)
+    return stack, new_sp
+
+
+def _reg_kernel(tape_ref, consts_ref, x_ref, y_ref, mask_ref,
+                sse_ref, hits_ref):
+    bblk, l = tape_ref.shape
+    c = x_ref.shape[1]
+    tape = tape_ref[...]
+    consts = consts_ref[...]
+    x = x_ref[...]
+    stack0 = jnp.zeros((bblk, oc.STACK_DEPTH, c), jnp.float32)
+    sp0 = jnp.zeros((bblk,), jnp.int32)
+    stack, _ = jax.lax.fori_loop(
+        0, l, functools.partial(_reg_step, tape, consts, x), (stack0, sp0)
+    )
+    out = stack[:, 0, :]
+    mask = mask_ref[...][None, :]
+    err = (out - y_ref[...][None, :]) * mask
+    sse_ref[...] = jnp.sum(err * err, axis=1)[:, None]
+    hits = jnp.sum((jnp.abs(err) <= oc.REG_HIT_EPS) & (mask > 0), axis=1)
+    hits_ref[...] = hits.astype(jnp.int32)[:, None]
+
+
+def reg_eval(tape, consts, x, y, mask, *, block_b=None):
+    """Batched f32 symbolic-regression tape evaluation (Pallas).
+
+    Shapes as in `ref.reg_eval_ref`; returns (sse [B] f32, hits [B] i32).
+    """
+    b, l = tape.shape
+    nv, c = x.shape
+    block_b = block_b or min(b, oc.REG_BLOCK_B)
+    assert b % block_b == 0, (b, block_b)
+    grid = (b // block_b,)
+    sse, hits = pl.pallas_call(
+        _reg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+            pl.BlockSpec((nv, c), lambda i: (0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=True,
+    )(tape, consts, x, y, mask)
+    return sse[:, 0], hits[:, 0]

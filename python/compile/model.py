@@ -1,0 +1,61 @@
+"""L2: the jax compute graph the rust coordinator executes via PJRT.
+
+For this paper the "model" is the GP fitness evaluator — the paper's
+compute hot-spot (Koza: >95% of GP run time is fitness evaluation).
+Both entry points call the L1 Pallas kernels so the kernels lower into
+the same HLO module that `aot.py` exports; nothing here ever runs on
+the rust request path in python.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import opcodes as oc
+from .kernels import tape as tk
+
+
+def bool_fitness(tape, inputs, target, mask):
+    """Hits for a population chunk on a packed boolean case block.
+
+    tape [B,L] i32, inputs [NV,W] u32, target [W] u32, mask [W] u32
+    -> hits [B] i32.
+
+    The rust runtime chunks populations to B=oc.BOOL_BATCH and case sets
+    to W=oc.BOOL_WORDS words, accumulating hits across case blocks (the
+    20-multiplexer's 2^20 cases = 16384 words = 256 blocks per chunk).
+    """
+    return tk.bool_eval(tape, inputs, target, mask)
+
+
+def reg_fitness(tape, consts, x, y, mask):
+    """(SSE, hits) for a population chunk on a f32 case block.
+
+    tape [B,L] i32, consts [B,L] f32, x [NV,C] f32, y [C] f32,
+    mask [C] f32 -> (sse [B] f32, hits [B] i32). SSE accumulates across
+    case blocks by summation.
+    """
+    return tk.reg_eval(tape, consts, x, y, mask)
+
+
+def bool_example_args():
+    """ShapeDtypeStructs for the AOT bool_fitness artifact."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((oc.BOOL_BATCH, oc.TAPE_LEN), jnp.int32),
+        jax.ShapeDtypeStruct((oc.BOOL_NUM_VARS, oc.BOOL_WORDS), jnp.uint32),
+        jax.ShapeDtypeStruct((oc.BOOL_WORDS,), jnp.uint32),
+        jax.ShapeDtypeStruct((oc.BOOL_WORDS,), jnp.uint32),
+    )
+
+
+def reg_example_args():
+    """ShapeDtypeStructs for the AOT reg_fitness artifact."""
+    import jax
+
+    return (
+        jax.ShapeDtypeStruct((oc.REG_BATCH, oc.TAPE_LEN), jnp.int32),
+        jax.ShapeDtypeStruct((oc.REG_BATCH, oc.TAPE_LEN), jnp.float32),
+        jax.ShapeDtypeStruct((oc.REG_NUM_VARS, oc.REG_CASES), jnp.float32),
+        jax.ShapeDtypeStruct((oc.REG_CASES,), jnp.float32),
+        jax.ShapeDtypeStruct((oc.REG_CASES,), jnp.float32),
+    )

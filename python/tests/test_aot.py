@@ -1,0 +1,79 @@
+"""AOT artifact checks: shapes, HLO text validity, meta contract."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import opcodes as oc
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_bool_lowers_to_hlo_text(self):
+        lowered = jax.jit(model.bool_fitness).lower(*model.bool_example_args())
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "s32[256,64]" in text          # tape input
+        assert "u32[24,64]" in text           # packed truth columns
+        assert "(s32[256]" in text            # hits output tuple
+
+    def test_reg_lowers_to_hlo_text(self):
+        lowered = jax.jit(model.reg_fitness).lower(*model.reg_example_args())
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "f32[256,64]" in text
+        assert "f32[256]" in text and "s32[256]" in text
+
+    def test_no_mosaic_custom_call(self):
+        """interpret=True must lower to plain HLO (CPU-PJRT runnable)."""
+        for fn, args in [(model.bool_fitness, model.bool_example_args()),
+                         (model.reg_fitness, model.reg_example_args())]:
+            text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+            assert "tpu_custom_call" not in text
+            assert "mosaic" not in text.lower()
+
+
+class TestMetaContract:
+    def test_meta_matches_opcodes(self):
+        m = aot.meta()
+        assert m["tape_len"] == oc.TAPE_LEN
+        assert m["stack_depth"] == oc.STACK_DEPTH
+        assert m["bool"]["num_vars"] == oc.BOOL_NUM_VARS
+        assert m["bool"]["op_if"] == oc.BOOL_OP_IF
+        assert m["reg"]["op_div"] == oc.REG_OP_DIV
+
+    def test_artifacts_on_disk_if_built(self):
+        """If `make artifacts` ran, the files must be loadable + consistent."""
+        meta_path = os.path.join(ARTIFACTS, "meta.json")
+        if not os.path.exists(meta_path):
+            import pytest
+            pytest.skip("artifacts not built yet")
+        with open(meta_path) as f:
+            m = json.load(f)
+        assert m == aot.meta()
+        for name in ("bool_eval.hlo.txt", "reg_eval.hlo.txt"):
+            with open(os.path.join(ARTIFACTS, name)) as f:
+                assert f.read(9) == "HloModule"
+
+
+class TestBatchShapes:
+    def test_full_batch_eval_runs(self):
+        """The exact AOT shapes execute and give sane results."""
+        rng = np.random.default_rng(1)
+        tape = rng.integers(0, oc.BOOL_NOP + 1,
+                            size=(oc.BOOL_BATCH, oc.TAPE_LEN)).astype(np.int32)
+        inputs = rng.integers(0, 2**32,
+                              size=(oc.BOOL_NUM_VARS, oc.BOOL_WORDS),
+                              dtype=np.uint32)
+        target = rng.integers(0, 2**32, size=(oc.BOOL_WORDS,), dtype=np.uint32)
+        mask = np.full((oc.BOOL_WORDS,), 0xFFFFFFFF, np.uint32)
+        hits = np.asarray(model.bool_fitness(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask)))
+        assert hits.shape == (oc.BOOL_BATCH,)
+        assert (hits >= 0).all() and (hits <= 32 * oc.BOOL_WORDS).all()

@@ -1,0 +1,192 @@
+"""Pallas kernels vs the pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps tape contents (including ill-formed tapes: the
+machines are total), batch sizes, tape lengths, word/case counts and
+block sizes; results must agree bitwise (bool) / to float tolerance
+(reg).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import opcodes as oc
+from compile.kernels import ref
+from compile.kernels import tape as tk
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def bool_case(rng, b, l, w):
+    tape = rng.integers(-3, oc.BOOL_NOP + 4, size=(b, l)).astype(np.int32)
+    inputs = rng.integers(0, 2**32, size=(oc.BOOL_NUM_VARS, w), dtype=np.uint32)
+    target = rng.integers(0, 2**32, size=(w,), dtype=np.uint32)
+    mask = rng.integers(0, 2**32, size=(w,), dtype=np.uint32)
+    return tape, inputs, target, mask
+
+
+def reg_case(rng, b, l, c):
+    tape = rng.integers(-3, oc.REG_NOP + 4, size=(b, l)).astype(np.int32)
+    consts = rng.normal(scale=2.0, size=(b, l)).astype(np.float32)
+    x = rng.normal(scale=3.0, size=(oc.REG_NUM_VARS, c)).astype(np.float32)
+    y = rng.normal(scale=3.0, size=(c,)).astype(np.float32)
+    mask = (rng.random(c) < 0.9).astype(np.float32)
+    return tape, consts, x, y, mask
+
+
+class TestBoolKernel:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.sampled_from([32, 64, 128]),
+        l=st.sampled_from([1, 7, 32, 64]),
+        w=st.sampled_from([1, 8, 64]),
+    )
+    def test_matches_ref(self, seed, b, l, w):
+        rng = np.random.default_rng(seed)
+        tape, inputs, target, mask = bool_case(rng, b, l, w)
+        h_ref = np.asarray(ref.bool_eval_ref(tape, inputs, target, mask))
+        h_ker = np.asarray(tk.bool_eval(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask)))
+        np.testing.assert_array_equal(h_ref, h_ker)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1),
+           block_b=st.sampled_from([8, 16, 32, 64]))
+    def test_block_size_invariant(self, seed, block_b):
+        """Result must not depend on the pallas program-block tiling."""
+        rng = np.random.default_rng(seed)
+        tape, inputs, target, mask = bool_case(rng, 64, 16, 4)
+        base = np.asarray(tk.bool_eval(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask), block_b=64))
+        tiled = np.asarray(tk.bool_eval(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask), block_b=block_b))
+        np.testing.assert_array_equal(base, tiled)
+
+    def test_empty_tape_is_all_zero_output(self):
+        """A pure-NOP tape leaves slot 0 = 0; hits = popcount(~target&mask)."""
+        w = 4
+        tape = np.full((32, 8), oc.BOOL_NOP, np.int32)
+        inputs = np.zeros((oc.BOOL_NUM_VARS, w), np.uint32)
+        target = np.array([0, 0xFFFFFFFF, 0x0F0F0F0F, 0], np.uint32)
+        mask = np.full((w,), 0xFFFFFFFF, np.uint32)
+        hits = np.asarray(tk.bool_eval(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask)))
+        expected = 32 + 0 + 16 + 32
+        np.testing.assert_array_equal(hits, np.full(32, expected))
+
+    def test_single_var_program(self):
+        """Tape [v0] outputs exactly input column 0."""
+        w = 2
+        tape = np.full((32, 4), oc.BOOL_NOP, np.int32)
+        tape[:, 0] = 0
+        inputs = np.zeros((oc.BOOL_NUM_VARS, w), np.uint32)
+        inputs[0] = [0xDEADBEEF, 0x12345678]
+        target = inputs[0].copy()
+        mask = np.full((w,), 0xFFFFFFFF, np.uint32)
+        hits = np.asarray(tk.bool_eval(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask)))
+        np.testing.assert_array_equal(hits, np.full(32, 64))
+
+    def test_if_semantics(self):
+        """IF(c,t,f): postfix c t f IF == (c&t)|(~c&f) per case bit."""
+        w = 1
+        tape = np.full((32, 8), oc.BOOL_NOP, np.int32)
+        tape[:, 0] = 0          # cond  = var0
+        tape[:, 1] = 1          # then  = var1
+        tape[:, 2] = 2          # else  = var2
+        tape[:, 3] = oc.BOOL_OP_IF
+        inputs = np.zeros((oc.BOOL_NUM_VARS, w), np.uint32)
+        inputs[0] = 0b1100
+        inputs[1] = 0b1010
+        inputs[2] = 0b0110
+        expect = (0b1100 & 0b1010) | (~0b1100 & 0b0110) & 0xFFFFFFFF
+        target = np.array([expect & 0xFFFFFFFF], np.uint32)
+        mask = np.full((w,), 0xFFFFFFFF, np.uint32)
+        hits = np.asarray(tk.bool_eval(
+            jnp.asarray(tape), jnp.asarray(inputs),
+            jnp.asarray(target), jnp.asarray(mask)))
+        np.testing.assert_array_equal(hits, np.full(32, 32))
+
+
+class TestRegKernel:
+    @settings(**SETTINGS)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.sampled_from([32, 64]),
+        l=st.sampled_from([1, 16, 64]),
+        c=st.sampled_from([1, 16, 64]),
+    )
+    def test_matches_ref(self, seed, b, l, c):
+        rng = np.random.default_rng(seed)
+        tape, consts, x, y, mask = reg_case(rng, b, l, c)
+        s_ref, h_ref = ref.reg_eval_ref(tape, consts, x, y, mask)
+        s_ker, h_ker = tk.reg_eval(
+            jnp.asarray(tape), jnp.asarray(consts), jnp.asarray(x),
+            jnp.asarray(y), jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_ker),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(h_ref), np.asarray(h_ker))
+
+    def test_quartic_exact_program(self):
+        """x + x^2 + x^3 + x^4 in postfix scores SSE 0 / all hits."""
+        c = 16
+        xs = np.linspace(-1, 1, c).astype(np.float32)
+        y = xs + xs**2 + xs**3 + xs**4
+        # postfix: x x x * x x * x * x x * x * x * + + +  (16 ops)
+        post = [0, 0, 0, oc.REG_OP_MUL,
+                0, 0, oc.REG_OP_MUL, 0, oc.REG_OP_MUL,
+                0, 0, oc.REG_OP_MUL, 0, oc.REG_OP_MUL, 0, oc.REG_OP_MUL,
+                oc.REG_OP_ADD, oc.REG_OP_ADD, oc.REG_OP_ADD]
+        tape = np.full((32, 32), oc.REG_NOP, np.int32)
+        tape[:, :len(post)] = post
+        consts = np.zeros((32, 32), np.float32)
+        x = np.zeros((oc.REG_NUM_VARS, c), np.float32)
+        x[0] = xs
+        mask = np.ones((c,), np.float32)
+        sse, hits = tk.reg_eval(
+            jnp.asarray(tape), jnp.asarray(consts), jnp.asarray(x),
+            jnp.asarray(y), jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(sse), 0.0, atol=1e-9)
+        np.testing.assert_array_equal(np.asarray(hits), np.full(32, c))
+
+    def test_protected_division_by_zero(self):
+        """x / 0 -> 1.0 (Koza protected division)."""
+        c = 4
+        tape = np.full((32, 4), oc.REG_NOP, np.int32)
+        tape[:, 0] = 0
+        tape[:, 1] = 1
+        tape[:, 2] = oc.REG_OP_DIV
+        consts = np.zeros((32, 4), np.float32)
+        x = np.zeros((oc.REG_NUM_VARS, c), np.float32)
+        x[0] = [1.0, 2.0, 3.0, 4.0]
+        x[1] = 0.0  # denominator
+        y = np.ones((c,), np.float32)
+        mask = np.ones((c,), np.float32)
+        sse, hits = tk.reg_eval(
+            jnp.asarray(tape), jnp.asarray(consts), jnp.asarray(x),
+            jnp.asarray(y), jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(sse), 0.0, atol=1e-9)
+        np.testing.assert_array_equal(np.asarray(hits), np.full(32, c))
+
+
+class TestPopcount:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_matches_python_bitcount(self, seed):
+        rng = np.random.default_rng(seed)
+        v = rng.integers(0, 2**32, size=64, dtype=np.uint32)
+        got = np.asarray(ref.popcount_u32(jnp.asarray(v)))
+        want = np.array([bin(int(x)).count("1") for x in v], np.uint32)
+        np.testing.assert_array_equal(got, want)
+
+    def test_edges(self):
+        v = np.array([0, 1, 0xFFFFFFFF, 0x80000000, 0x55555555], np.uint32)
+        got = np.asarray(ref.popcount_u32(jnp.asarray(v)))
+        np.testing.assert_array_equal(got, [0, 1, 32, 1, 16])

@@ -1,0 +1,64 @@
+"""Golden test on the opcode contract shared with rust/src/gp/tape.rs.
+
+If this test needs editing, the rust mirror constants (and its matching
+golden test `gp::tape::tests::opcode_contract`) MUST change in the same
+commit.
+"""
+
+from compile.kernels import opcodes as oc
+
+
+def test_bool_opcode_golden():
+    assert oc.BOOL_NUM_VARS == 24
+    assert oc.BOOL_OP_NOT == 24
+    assert oc.BOOL_OP_AND == 25
+    assert oc.BOOL_OP_OR == 26
+    assert oc.BOOL_OP_NAND == 27
+    assert oc.BOOL_OP_NOR == 28
+    assert oc.BOOL_OP_XOR == 29
+    assert oc.BOOL_OP_IF == 30
+    assert oc.BOOL_NOP == 31
+
+
+def test_reg_opcode_golden():
+    assert oc.REG_NUM_VARS == 8
+    assert oc.REG_OP_CONST == 8
+    assert oc.REG_OP_ADD == 9
+    assert oc.REG_OP_SUB == 10
+    assert oc.REG_OP_MUL == 11
+    assert oc.REG_OP_DIV == 12
+    assert oc.REG_OP_SIN == 13
+    assert oc.REG_OP_COS == 14
+    assert oc.REG_OP_EXP == 15
+    assert oc.REG_OP_LOG == 16
+    assert oc.REG_OP_NEG == 17
+    assert oc.REG_NOP == 18
+    assert oc.REG_HIT_EPS == 0.01
+
+
+def test_aot_shape_golden():
+    assert oc.TAPE_LEN == 64
+    assert oc.STACK_DEPTH == 16
+    assert oc.BOOL_BATCH == 256
+    assert oc.BOOL_WORDS == 64
+    assert oc.REG_BATCH == 256
+    assert oc.REG_CASES == 64
+
+
+def test_arity_tables():
+    for v in range(oc.BOOL_NUM_VARS):
+        assert oc.bool_arity(v) == 0
+    assert oc.bool_arity(oc.BOOL_OP_NOT) == 1
+    assert oc.bool_arity(oc.BOOL_OP_IF) == 3
+    for op in (oc.BOOL_OP_AND, oc.BOOL_OP_OR, oc.BOOL_OP_NAND,
+               oc.BOOL_OP_NOR, oc.BOOL_OP_XOR):
+        assert oc.bool_arity(op) == 2
+    assert oc.bool_arity(oc.BOOL_NOP) == 0
+
+    assert oc.reg_arity(oc.REG_OP_CONST) == 0
+    for op in (oc.REG_OP_ADD, oc.REG_OP_SUB, oc.REG_OP_MUL, oc.REG_OP_DIV):
+        assert oc.reg_arity(op) == 2
+    for op in (oc.REG_OP_SIN, oc.REG_OP_COS, oc.REG_OP_EXP,
+               oc.REG_OP_LOG, oc.REG_OP_NEG):
+        assert oc.reg_arity(op) == 1
+    assert oc.reg_arity(oc.REG_NOP) == 0

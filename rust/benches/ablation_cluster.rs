@@ -1,0 +1,35 @@
+//! Bench E9 — VGC vs ideal cluster: the same campaign on (a) dedicated
+//! always-on hosts with no transfer overhead, (b) dedicated hosts with
+//! BOINC overheads, (c) the volunteer pool. Quantifies what volunteer
+//! computing gives up vs gLite-style dedicated infrastructure (§1).
+
+use vgp::churn::{PoolParams, FIG1_CITIES_MUX20};
+use vgp::coordinator::{simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+
+fn main() {
+    println!("== E9: ideal cluster vs BOINC lab vs volunteers (20 hosts, mux20 x30) ==");
+    let c = Campaign::new("cmp", ProblemKind::Mux20, 30, 50, 1000);
+    let ideal_cfg = SimConfig { transfer_overhead: 0.0, poll_interval: 1.0, ..SimConfig::default() };
+    let rows = [
+        ("ideal cluster", simulate_campaign(&c, &PoolParams::lab(20), &[("c", 20)], ideal_cfg, 9)),
+        ("BOINC lab pool", simulate_campaign(&c, &PoolParams::lab(20), &[("c", 20)], SimConfig::default(), 9)),
+        ("BOINC volunteers", simulate_campaign(&c, &PoolParams::volunteer(20), FIG1_CITIES_MUX20, SimConfig::default(), 9)),
+    ];
+    let mut table = Table::new(&["pool", "Acc", "efficiency vs ideal", "done"]);
+    let ideal_acc = rows[0].1.acceleration;
+    for (name, r) in &rows {
+        table.row(&[
+            name.to_string(),
+            format!("{:.2}", r.acceleration),
+            format!("{:.0}%", 100.0 * r.acceleration / ideal_acc),
+            format!("{}/{}", r.completed, r.runs),
+        ]);
+    }
+    table.print();
+    assert!(rows[0].1.acceleration >= rows[1].1.acceleration);
+    assert!(rows[1].1.acceleration >= rows[2].1.acceleration);
+    println!("shape: free volunteer cycles trade efficiency for cost (the paper's pitch)");
+}

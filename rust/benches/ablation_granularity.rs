@@ -1,0 +1,40 @@
+//! Bench E7 — task-granularity ablation: sweep per-run CPU time and
+//! locate the speedup crossover the paper demonstrates between the
+//! 135-second 11-mux runs (Acc 0.29) and the 31079-second 20-mux runs
+//! (Acc 1.95) on a volunteer pool.
+
+use vgp::boinc::server::ServerConfig;
+use vgp::boinc::workunit::WorkUnit;
+use vgp::churn::{sample_pool, PoolParams, FIG1_CITIES_MUX20};
+use vgp::coordinator::REFERENCE_FLOPS;
+use vgp::sim::{SimConfig, Simulation};
+use vgp::util::bench::Table;
+use vgp::util::json::Json;
+use vgp::util::rng::Rng;
+
+fn main() {
+    println!("== E7: task granularity vs speedup (volunteer pool, 40 hosts, 100 runs) ==");
+    let mut table = Table::new(&["per-run secs (ref host)", "Acc", "completed"]);
+    let mut prev = 0.0;
+    let mut crossover = None;
+    for secs in [30.0, 135.0, 600.0, 3600.0, 31079.0, 100000.0] {
+        let flops = secs * REFERENCE_FLOPS;
+        let mut rng = Rng::new(77);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(40), FIG1_CITIES_MUX20);
+        let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 77);
+        for i in 0..100 {
+            sim.submit(WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), flops));
+        }
+        let out = sim.run(REFERENCE_FLOPS);
+        table.row(&[format!("{secs:.0}"), format!("{:.2}", out.speedup), format!("{}/100", out.completed)]);
+        if prev < 1.0 && out.speedup >= 1.0 && crossover.is_none() {
+            crossover = Some(secs);
+        }
+        prev = out.speedup;
+    }
+    table.print();
+    match crossover {
+        Some(s) => println!("speedup crosses 1.0 near per-run time ~{s:.0}s (paper: between 135s and 31079s)"),
+        None => println!("no crossover found in sweep range"),
+    }
+}

@@ -1,0 +1,77 @@
+//! Bench E8 — redundancy ablation: quorum in {1,2,3} vs cheat-detection
+//! rate and the CP penalty (X_redundancy in eq. 2). The paper ran with
+//! quorum 1 ("we didn't use the redundancy facility"); this shows what
+//! it buys and costs.
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::workunit::WorkUnit;
+use vgp::util::bench::Table;
+use vgp::util::json::Json;
+use vgp::util::rng::Rng;
+
+fn run(quorum: usize, cheat_frac: f64, seed: u64) -> (usize, usize, f64) {
+    let mut s = ServerCore::new(ServerConfig::default());
+    let mut rng = Rng::new(seed);
+    let n_hosts = 12;
+    let cheats: Vec<bool> = (0..n_hosts).map(|_| rng.chance(cheat_frac)).collect();
+    let hosts: Vec<u64> = (0..n_hosts)
+        .map(|i| {
+            s.register_host(HostRow {
+                id: 0, name: format!("h{i}"), city: "x".into(), flops: 1e9, ncpus: 1,
+                on_frac: 1.0, active_frac: 1.0, registered_at: 0.0, last_heartbeat: 0.0,
+                error_results: 0, valid_results: 0, credit: 0.0,
+            })
+        })
+        .collect();
+    let n_wus = 40;
+    for i in 0..n_wus {
+        s.submit_wu(
+            WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), 1e9)
+                .with_redundancy(quorum, quorum),
+        );
+    }
+    let mut now = 0.0;
+    let mut dispatched = 0usize;
+    for _round in 0..4000 {
+        if s.is_complete() {
+            break;
+        }
+        now += 5.0;
+        for (i, &h) in hosts.iter().enumerate() {
+            if let Some((rid, wu, _)) = s.request_work(h, now) {
+                dispatched += 1;
+                let truth = wu.spec.u64_of("i").unwrap();
+                let v = if cheats[i] { truth + 5000 } else { truth };
+                s.report_success(rid, now + 1.0, 1.0, Json::obj().set("answer", v));
+            }
+        }
+        s.tick(now);
+    }
+    let bad = s
+        .assimilated()
+        .iter()
+        .filter(|a| a.payload.u64_of("answer").unwrap_or(0) >= 5000)
+        .count();
+    (bad, dispatched, now)
+}
+
+fn main() {
+    println!("== E8: redundancy/quorum vs cheat pollution (25% cheating hosts) ==");
+    let mut table = Table::new(&["quorum", "bogus assimilated /40", "results dispatched", "X_redundancy", "makespan"]);
+    for quorum in [1usize, 2, 3] {
+        let (bad, dispatched, t) = run(quorum, 0.25, 99);
+        table.row(&[
+            quorum.to_string(),
+            bad.to_string(),
+            dispatched.to_string(),
+            format!("{:.2}", 1.0 / quorum as f64),
+            format!("{t:.0}s"),
+        ]);
+    }
+    table.print();
+    let (bad1, _, _) = run(1, 0.25, 99);
+    let (bad3, _, _) = run(3, 0.25, 99);
+    assert!(bad3 < bad1, "higher quorum must reduce assimilated cheats ({bad1} -> {bad3})");
+    println!("shape: quorum cuts cheat pollution at the cost of X_redundancy in eq. 2");
+}

@@ -1,0 +1,26 @@
+//! Bench E5 — regenerates Fig 1 (distributed infrastructure): hosts per
+//! city for both volunteer campaigns.
+
+use vgp::churn::{sample_pool, PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
+use vgp::util::bench::Table;
+use vgp::util::rng::Rng;
+
+fn main() {
+    println!("== E5 / Fig 1: distributed infrastructure ==");
+    for (label, cities, n) in [
+        ("11-mux campaign (45 hosts, 3 cities)", FIG1_CITIES_MUX11, 45usize),
+        ("20-mux campaign (41 hosts, 8 sites)", FIG1_CITIES_MUX20, 41usize),
+    ] {
+        let mut rng = Rng::new(1);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(n), cities);
+        let mut table = Table::new(&["city", "hosts", "mean GFLOPS"]);
+        for (city, _) in cities {
+            let in_city: Vec<_> = hosts.iter().filter(|h| h.city == *city).collect();
+            let mean_gf = in_city.iter().map(|h| h.flops).sum::<f64>() / in_city.len().max(1) as f64 / 1e9;
+            table.row(&[city.to_string(), in_city.len().to_string(), format!("{mean_gf:.2}")]);
+        }
+        println!("\n{label}:");
+        table.print();
+        assert_eq!(hosts.len(), n);
+    }
+}

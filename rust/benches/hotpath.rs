@@ -1,0 +1,104 @@
+//! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md):
+//! * native bit-packed tape evaluation (progs x cases /s)
+//! * AOT-artifact evaluation via PJRT (same metric, Method-2 path)
+//! * tape compilation
+//! * scheduler RPC throughput
+//! * DES event throughput
+//! * GP breeding (crossover+mutation) throughput
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::workunit::WorkUnit;
+use vgp::churn::{sample_pool, PoolParams};
+use vgp::coordinator::REFERENCE_FLOPS;
+use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::ops::{crossover, Limits};
+use vgp::gp::problems::multiplexer::Multiplexer;
+use vgp::gp::tape::{self, opcodes};
+use vgp::sim::{SimConfig, Simulation};
+use vgp::util::bench::Bench;
+use vgp::util::json::Json;
+use vgp::util::rng::Rng;
+
+fn main() {
+    println!("== hot-path microbenches ==");
+    let b = Bench::new(3, 15);
+
+    // ---- native packed eval: mux11, 256 programs x 2048 cases
+    let m = Multiplexer::new(3);
+    let mut rng = Rng::new(1);
+    let pop = ramped_half_and_half(&mut rng, m.primset(), 256, 2, 6);
+    let tapes: Vec<_> =
+        pop.iter().map(|t| tape::compile(t, m.primset(), opcodes::BOOL_NOP).unwrap()).collect();
+    let progs_cases = 256.0 * 2048.0;
+    b.run_throughput("native bool eval (256 prog x 2048 cases)", progs_cases, "prog*case", || {
+        let mut acc = 0u64;
+        for t in &tapes {
+            acc += tape::eval_bool_native(t, &m.cases);
+        }
+        std::hint::black_box(acc);
+    });
+
+    // ---- artifact eval (if built)
+    if std::path::Path::new("artifacts/meta.json").exists() {
+        let rt = vgp::runtime::Runtime::load("artifacts").unwrap();
+        b.run_throughput("artifact bool eval (256 prog x 2048 cases)", progs_cases, "prog*case", || {
+            let hits = rt.eval_bool(&tapes, &m.cases).unwrap();
+            std::hint::black_box(hits);
+        });
+    } else {
+        println!("artifact bench skipped (run `make artifacts`)");
+    }
+
+    // ---- tape compilation
+    b.run_throughput("tape compile (256 trees)", 256.0, "tree", || {
+        for t in &pop {
+            std::hint::black_box(tape::compile(t, m.primset(), opcodes::BOOL_NOP).unwrap());
+        }
+    });
+
+    // ---- breeding
+    let limits = Limits::default();
+    let ps = m.primset().clone();
+    let mut brng = Rng::new(3);
+    b.run_throughput("crossover (1000 offspring)", 1000.0, "offspring", || {
+        for i in 0..1000 {
+            let a = &pop[i % pop.len()];
+            let c = &pop[(i * 7 + 1) % pop.len()];
+            std::hint::black_box(crossover(&mut brng, a, c, &ps, limits));
+        }
+    });
+
+    // ---- scheduler RPC throughput (request+report cycles)
+    b.run_throughput("scheduler dispatch+report cycle (x1000)", 1000.0, "rpc-pair", || {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(HostRow {
+            id: 0, name: "h".into(), city: "x".into(), flops: 1e9, ncpus: 1,
+            on_frac: 1.0, active_frac: 1.0, registered_at: 0.0, last_heartbeat: 0.0,
+            error_results: 0, valid_results: 0, credit: 0.0,
+        });
+        for i in 0..1000 {
+            s.submit_wu(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e9));
+        }
+        let mut now = 0.0;
+        for _ in 0..1000 {
+            let (rid, _, _) = s.request_work(h, now).unwrap();
+            s.report_success(rid, now + 1.0, 1.0, Json::obj().set("ok", true));
+            now += 2.0;
+        }
+        std::hint::black_box(s.assimilated().len());
+    });
+
+    // ---- DES throughput: a full volunteer campaign per iteration
+    b.run_throughput("DES volunteer campaign (40 hosts, 100 wus)", 100.0, "wu", || {
+        let mut rng = Rng::new(9);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(40), &[("x", 40)]);
+        let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 9);
+        for i in 0..100 {
+            sim.submit(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e12));
+        }
+        std::hint::black_box(sim.run(REFERENCE_FLOPS).completed);
+    });
+
+    println!("done");
+}

@@ -1,0 +1,51 @@
+//! Bench E1 — regenerates Table 1 (Lil-gp ant, lab pools of 5/10).
+//! Paper-vs-measured; shape target: Acc grows with clients & run length.
+
+use vgp::churn::PoolParams;
+use vgp::coordinator::{simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+
+fn main() {
+    println!("== E1 / Table 1: Lil-gp-BOINC, artificial ant, 25 runs ==");
+    let mut table =
+        Table::new(&["config", "clients", "T_seq", "T_B", "Acc(sim)", "Acc(paper)"]);
+    let rows: &[(usize, usize, usize, &str)] = &[
+        (1000, 1000, 5, "-"),
+        (1000, 2000, 5, "1.65"),
+        (2000, 1000, 5, "3.90"),
+        (1000, 1000, 10, "-"),
+        (1000, 2000, 10, "-"),
+        (2000, 1000, 10, "5.67"),
+    ];
+    let mut acc5 = 0.0;
+    let mut acc10 = 0.0;
+    for &(gens, pop, clients, paper) in rows {
+        let c = Campaign::new("ant", ProblemKind::Ant, 25, gens, pop);
+        let r = simulate_campaign(
+            &c,
+            &PoolParams::lab(clients),
+            &[("lab", clients)],
+            SimConfig::default(),
+            42,
+        );
+        if gens == 2000 && clients == 5 {
+            acc5 = r.acceleration;
+        }
+        if gens == 2000 && clients == 10 {
+            acc10 = r.acceleration;
+        }
+        table.row(&[
+            format!("{gens} Gen, {pop} Ind"),
+            clients.to_string(),
+            format!("{:.0}s", r.t_seq),
+            format!("{:.0}s", r.t_b),
+            format!("{:.2}", r.acceleration),
+            paper.to_string(),
+        ]);
+    }
+    table.print();
+    println!("shape: acc(10 clients) / acc(5 clients) = {:.2} (paper: 5.67/3.90 = 1.45)", acc10 / acc5);
+    assert!(acc10 > acc5, "Table 1 shape violated");
+}

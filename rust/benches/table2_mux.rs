@@ -1,0 +1,35 @@
+//! Bench E2/E3 — regenerates Table 2 (ECJ multiplexers on volunteers).
+//! Shape target: Acc(11-mux) < 1 < Acc(20-mux); CP in tens of GFLOPS.
+
+use vgp::churn::{PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
+use vgp::coordinator::{simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+
+fn main() {
+    println!("== E2+E3 / Table 2: ECJ-BOINC multiplexer campaigns ==");
+    let mut table = Table::new(&[
+        "campaign", "runs", "hosts(prod/att)", "T_seq", "T_B", "Acc(sim)", "Acc(paper)", "CP(sim)", "CP(paper)",
+    ]);
+    let mux11 = Campaign::new("11-mux 50Gx4000I", ProblemKind::Mux11, 828, 50, 4000);
+    let r11 = simulate_campaign(&mux11, &PoolParams::volunteer(45), FIG1_CITIES_MUX11, SimConfig::default(), 42);
+    let mux20 = Campaign::new("20-mux 50Gx1000I", ProblemKind::Mux20, 42, 50, 1000);
+    let r20 = simulate_campaign(&mux20, &PoolParams::volunteer(41), FIG1_CITIES_MUX20, SimConfig::default(), 42);
+    for (r, pacc, pcp) in [(&r11, "0.29", "80 GF"), (&r20, "1.95", "23 GF")] {
+        table.row(&[
+            r.campaign.clone(),
+            r.runs.to_string(),
+            format!("{}/{}", r.productive_hosts, r.attached_hosts),
+            format!("{:.0}s", r.t_seq),
+            format!("{:.0}s", r.t_b),
+            format!("{:.2}", r.acceleration),
+            pacc.to_string(),
+            format!("{:.0} GF", r.cp_gflops),
+            pcp.to_string(),
+        ]);
+    }
+    table.print();
+    println!("client errors (paper: Java heap failures): mux11={} mux20={}", r11.client_errors, r20.client_errors);
+    assert!(r11.acceleration < r20.acceleration, "Table 2 shape violated");
+}

@@ -1,0 +1,26 @@
+//! Bench E4 — regenerates Table 3 (interest-point GP, virtualization).
+//! Shape target: ~4-5x acceleration on 10 dedicated virtualized hosts.
+
+use vgp::churn::PoolParams;
+use vgp::coordinator::{simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+
+fn main() {
+    println!("== E4 / Table 3: IP-Virtual-BOINC (Method 3) ==");
+    let c = Campaign::new("ip", ProblemKind::InterestPoint, 12, 75, 75);
+    let r = simulate_campaign(&c, &PoolParams::virtualized_lab(10), &[("windows-lab", 10)], SimConfig::default(), 42);
+    let mut table = Table::new(&["config", "T_seq", "T_B", "Acc(sim)", "Acc(paper)", "CP(sim)", "CP(paper)"]);
+    table.row(&[
+        "75 Gen, 75 Ind, 12 solutions".into(),
+        format!("{:.0}h", r.t_seq / 3600.0),
+        format!("{:.0}h", r.t_b / 3600.0),
+        format!("{:.2}", r.acceleration),
+        "4.48".into(),
+        format!("{:.1} GF", r.cp_gflops),
+        "25.67 GF".into(),
+    ]);
+    table.print();
+    assert!(r.acceleration > 3.0 && r.acceleration < 9.0, "Table 3 shape violated");
+}

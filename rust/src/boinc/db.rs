@@ -1,0 +1,244 @@
+//! In-memory relational store — the project server's MySQL analog.
+//! Tables for hosts, work units and results with the secondary indices
+//! the scheduler/transitioner/validator need. Single-writer semantics
+//! (the `ServerCore` owns the DB); the TCP front-end serializes access.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use super::workunit::{ResultRecord, ServerState, WorkUnit};
+
+/// A registered volunteer host (BOINC `host` row).
+#[derive(Clone, Debug)]
+pub struct HostRow {
+    pub id: u64,
+    pub name: String,
+    pub city: String,
+    /// sustained FLOPS (the `p_fpops` benchmark)
+    pub flops: f64,
+    pub ncpus: u32,
+    pub on_frac: f64,
+    pub active_frac: f64,
+    pub registered_at: f64,
+    pub last_heartbeat: f64,
+    /// results returned that failed validation (reliability tracking)
+    pub error_results: u64,
+    pub valid_results: u64,
+    /// granted credit (cobblestones)
+    pub credit: f64,
+}
+
+/// The database: primary tables + indices.
+#[derive(Default)]
+pub struct Db {
+    pub hosts: BTreeMap<u64, HostRow>,
+    pub wus: BTreeMap<u64, WorkUnit>,
+    pub results: BTreeMap<u64, ResultRecord>,
+    /// index: results by WU
+    by_wu: HashMap<u64, Vec<u64>>,
+    /// index: unsent result ids in FIFO order (the feeder's shmem queue)
+    unsent: VecDeque<u64>,
+    /// index: in-progress result ids (for deadline scans)
+    in_progress: Vec<u64>,
+    next_wu_id: u64,
+    next_result_id: u64,
+}
+
+impl Db {
+    pub fn new() -> Db {
+        Db { next_wu_id: 1, next_result_id: 1, ..Db::default() }
+    }
+
+    // ------------------------------------------------------------ hosts
+    pub fn upsert_host(&mut self, mut h: HostRow) -> u64 {
+        if h.id == 0 {
+            h.id = self.hosts.keys().next_back().copied().unwrap_or(0) + 1;
+        }
+        let id = h.id;
+        self.hosts.insert(id, h);
+        id
+    }
+
+    pub fn host(&self, id: u64) -> Option<&HostRow> {
+        self.hosts.get(&id)
+    }
+
+    pub fn host_mut(&mut self, id: u64) -> Option<&mut HostRow> {
+        self.hosts.get_mut(&id)
+    }
+
+    // ---------------------------------------------------------- workunits
+    pub fn insert_wu(&mut self, mut wu: WorkUnit) -> u64 {
+        wu.id = self.next_wu_id;
+        self.next_wu_id += 1;
+        let id = wu.id;
+        self.wus.insert(id, wu);
+        self.by_wu.insert(id, Vec::new());
+        id
+    }
+
+    pub fn wu(&self, id: u64) -> Option<&WorkUnit> {
+        self.wus.get(&id)
+    }
+
+    pub fn wu_mut(&mut self, id: u64) -> Option<&mut WorkUnit> {
+        self.wus.get_mut(&id)
+    }
+
+    // ------------------------------------------------------------ results
+    pub fn insert_result(&mut self, mut r: ResultRecord) -> u64 {
+        r.id = self.next_result_id;
+        self.next_result_id += 1;
+        let id = r.id;
+        debug_assert_eq!(r.server_state, ServerState::Unsent);
+        self.by_wu.entry(r.wu_id).or_default().push(id);
+        self.unsent.push_back(id);
+        self.results.insert(id, r);
+        id
+    }
+
+    pub fn result(&self, id: u64) -> Option<&ResultRecord> {
+        self.results.get(&id)
+    }
+
+    pub fn result_mut(&mut self, id: u64) -> Option<&mut ResultRecord> {
+        self.results.get_mut(&id)
+    }
+
+    pub fn results_of_wu(&self, wu_id: u64) -> Vec<&ResultRecord> {
+        self.by_wu
+            .get(&wu_id)
+            .map(|ids| ids.iter().filter_map(|id| self.results.get(id)).collect())
+            .unwrap_or_default()
+    }
+
+    /// Pop the next unsent result (feeder queue head), if any.
+    pub fn pop_unsent(&mut self) -> Option<u64> {
+        while let Some(id) = self.unsent.pop_front() {
+            if self.results.get(&id).map(|r| r.server_state == ServerState::Unsent).unwrap_or(false)
+            {
+                return Some(id);
+            }
+        }
+        None
+    }
+
+    pub fn unsent_count(&self) -> usize {
+        self.unsent.len()
+    }
+
+    pub fn push_unsent(&mut self, id: u64) {
+        // requeue at the FRONT: a bounced dispatch (e.g. host-affinity
+        // rejection) must not rotate the whole feeder queue
+        self.unsent.push_front(id);
+    }
+
+    pub fn mark_in_progress(&mut self, id: u64) {
+        self.in_progress.push(id);
+    }
+
+    pub fn in_progress_ids(&self) -> &[u64] {
+        &self.in_progress
+    }
+
+    pub fn sweep_in_progress(&mut self) {
+        let results = &self.results;
+        self.in_progress
+            .retain(|id| results.get(id).map(|r| r.server_state == ServerState::InProgress).unwrap_or(false));
+    }
+
+    /// All WUs assimilated (campaign complete)?
+    pub fn all_assimilated(&self) -> bool {
+        self.wus.values().all(|wu| wu.assimilated || wu.error_mask.any())
+    }
+
+    pub fn stats(&self) -> DbStats {
+        DbStats {
+            hosts: self.hosts.len(),
+            wus: self.wus.len(),
+            wus_done: self.wus.values().filter(|w| w.is_done()).count(),
+            results: self.results.len(),
+            unsent: self.unsent.len(),
+            in_progress: self.in_progress.len(),
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DbStats {
+    pub hosts: usize,
+    pub wus: usize,
+    pub wus_done: usize,
+    pub results: usize,
+    pub unsent: usize,
+    pub in_progress: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn host(name: &str) -> HostRow {
+        HostRow {
+            id: 0,
+            name: name.into(),
+            city: "Cáceres".into(),
+            flops: 1.5e9,
+            ncpus: 1,
+            on_frac: 0.8,
+            active_frac: 0.7,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            credit: 0.0,
+        }
+    }
+
+    #[test]
+    fn host_ids_assigned() {
+        let mut db = Db::new();
+        let a = db.upsert_host(host("a"));
+        let b = db.upsert_host(host("b"));
+        assert_ne!(a, b);
+        assert_eq!(db.host(a).unwrap().name, "a");
+    }
+
+    #[test]
+    fn unsent_queue_fifo_and_state_checked() {
+        let mut db = Db::new();
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let r1 = db.insert_result(ResultRecord::new(0, wu));
+        let r2 = db.insert_result(ResultRecord::new(0, wu));
+        assert_eq!(db.pop_unsent(), Some(r1));
+        // r2 transitions away from Unsent -> must be skipped
+        db.result_mut(r2).unwrap().server_state = ServerState::Over;
+        assert_eq!(db.pop_unsent(), None);
+    }
+
+    #[test]
+    fn results_indexed_by_wu() {
+        let mut db = Db::new();
+        let wu1 = db.insert_wu(WorkUnit::new(0, "wu1", Json::obj(), 1e9));
+        let wu2 = db.insert_wu(WorkUnit::new(0, "wu2", Json::obj(), 1e9));
+        db.insert_result(ResultRecord::new(0, wu1));
+        db.insert_result(ResultRecord::new(0, wu1));
+        db.insert_result(ResultRecord::new(0, wu2));
+        assert_eq!(db.results_of_wu(wu1).len(), 2);
+        assert_eq!(db.results_of_wu(wu2).len(), 1);
+    }
+
+    #[test]
+    fn sweep_in_progress_drops_finished() {
+        let mut db = Db::new();
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let r = db.insert_result(ResultRecord::new(0, wu));
+        db.pop_unsent();
+        db.result_mut(r).unwrap().server_state = ServerState::InProgress;
+        db.mark_in_progress(r);
+        assert_eq!(db.in_progress_ids().len(), 1);
+        db.result_mut(r).unwrap().server_state = ServerState::Over;
+        db.sweep_in_progress();
+        assert!(db.in_progress_ids().is_empty());
+    }
+}

@@ -1,0 +1,31 @@
+//! BOINC-style volunteer-computing middleware (the paper's §2 model,
+//! rebuilt from scratch).
+//!
+//! Server side (the paper's "project server"):
+//! * [`db`] — in-memory relational store (the MySQL analog): hosts,
+//!   work units, results, with the BOINC server state machines.
+//! * [`workunit`] — WU/result state machines: server state
+//!   (UNSENT/IN_PROGRESS/OVER), outcomes (SUCCESS/CLIENT_ERROR/NO_REPLY),
+//!   validate states, error masks.
+//! * [`server`] — `ServerCore`: scheduler RPC (work fetch), the
+//!   transitioner (replication to quorum, retry on timeout/error), the
+//!   validator (quorum agreement, credit) and the assimilator. The core
+//!   is *time-explicit*: every entry point takes `now` seconds, so the
+//!   same code runs under the TCP front-end (wall clock) and the
+//!   discrete-event simulator (virtual clock).
+//! * [`signature`] — SHA-256 checksums + HMAC code signing (the paper's
+//!   "only signed applications can be distributed").
+//! * [`protocol`] — JSON scheduler-RPC messages.
+//! * [`net`] — TCP front-end (`serve`) and a real worker client
+//!   (`Worker`) implementing fetch → compute → checkpoint → upload with
+//!   heartbeats.
+
+pub mod db;
+pub mod net;
+pub mod protocol;
+pub mod server;
+pub mod signature;
+pub mod workunit;
+
+pub use server::{ServerConfig, ServerCore};
+pub use workunit::{Outcome, ResultRecord, ServerState, ValidateState, WorkUnit, WuError};

@@ -1,0 +1,182 @@
+//! Scheduler-RPC wire protocol: newline-delimited canonical JSON over
+//! TCP. Mirrors the BOINC scheduler request/reply cycle (§2 of the
+//! paper): register, work fetch, heartbeat, result report.
+
+use crate::util::json::Json;
+
+/// Client -> server requests.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Register { name: String, city: String, flops: f64, ncpus: u32 },
+    RequestWork { host_id: u64 },
+    Heartbeat { host_id: u64 },
+    ReportSuccess { result_id: u64, cpu_time: f64, payload: Json },
+    ReportError { result_id: u64 },
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Register { name, city, flops, ncpus } => Json::obj()
+                .set("op", "register")
+                .set("name", name.as_str())
+                .set("city", city.as_str())
+                .set("flops", *flops)
+                .set("ncpus", *ncpus as u64),
+            Request::RequestWork { host_id } => {
+                Json::obj().set("op", "request_work").set("host_id", *host_id)
+            }
+            Request::Heartbeat { host_id } => {
+                Json::obj().set("op", "heartbeat").set("host_id", *host_id)
+            }
+            Request::ReportSuccess { result_id, cpu_time, payload } => Json::obj()
+                .set("op", "report_success")
+                .set("result_id", *result_id)
+                .set("cpu_time", *cpu_time)
+                .set("payload", payload.clone()),
+            Request::ReportError { result_id } => {
+                Json::obj().set("op", "report_error").set("result_id", *result_id)
+            }
+            Request::Stats => Json::obj().set("op", "stats"),
+            Request::Shutdown => Json::obj().set("op", "shutdown"),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Request> {
+        Ok(match j.str_of("op")? {
+            "register" => Request::Register {
+                name: j.str_of("name")?.to_string(),
+                city: j.str_of("city")?.to_string(),
+                flops: j.f64_of("flops")?,
+                ncpus: j.u64_of("ncpus")? as u32,
+            },
+            "request_work" => Request::RequestWork { host_id: j.u64_of("host_id")? },
+            "heartbeat" => Request::Heartbeat { host_id: j.u64_of("host_id")? },
+            "report_success" => Request::ReportSuccess {
+                result_id: j.u64_of("result_id")?,
+                cpu_time: j.f64_of("cpu_time")?,
+                payload: j.get("payload").cloned().unwrap_or(Json::Null),
+            },
+            "report_error" => Request::ReportError { result_id: j.u64_of("result_id")? },
+            "stats" => Request::Stats,
+            "shutdown" => Request::Shutdown,
+            other => anyhow::bail!("unknown op '{other}'"),
+        })
+    }
+}
+
+/// Server -> client replies.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    Registered { host_id: u64 },
+    Work { result_id: u64, wu_id: u64, wu_name: String, spec: Json, flops_est: f64, signature: String },
+    NoWork { campaign_done: bool },
+    Ok,
+    Stats { dump: String },
+    Error { message: String },
+}
+
+impl Reply {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Reply::Registered { host_id } => {
+                Json::obj().set("kind", "registered").set("host_id", *host_id)
+            }
+            Reply::Work { result_id, wu_id, wu_name, spec, flops_est, signature } => Json::obj()
+                .set("kind", "work")
+                .set("result_id", *result_id)
+                .set("wu_id", *wu_id)
+                .set("wu_name", wu_name.as_str())
+                .set("spec", spec.clone())
+                .set("flops_est", *flops_est)
+                .set("signature", signature.as_str()),
+            Reply::NoWork { campaign_done } => {
+                Json::obj().set("kind", "no_work").set("campaign_done", *campaign_done)
+            }
+            Reply::Ok => Json::obj().set("kind", "ok"),
+            Reply::Stats { dump } => Json::obj().set("kind", "stats").set("dump", dump.as_str()),
+            Reply::Error { message } => {
+                Json::obj().set("kind", "error").set("message", message.as_str())
+            }
+        }
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Reply> {
+        Ok(match j.str_of("kind")? {
+            "registered" => Reply::Registered { host_id: j.u64_of("host_id")? },
+            "work" => Reply::Work {
+                result_id: j.u64_of("result_id")?,
+                wu_id: j.u64_of("wu_id")?,
+                wu_name: j.str_of("wu_name")?.to_string(),
+                spec: j.get("spec").cloned().unwrap_or(Json::Null),
+                flops_est: j.f64_of("flops_est")?,
+                signature: j.str_of("signature")?.to_string(),
+            },
+            "no_work" => Reply::NoWork {
+                campaign_done: j.get("campaign_done").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "ok" => Reply::Ok,
+            "stats" => Reply::Stats { dump: j.str_of("dump")?.to_string() },
+            "error" => Reply::Error { message: j.str_of("message")?.to_string() },
+            other => anyhow::bail!("unknown reply kind '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let reqs = vec![
+            Request::Register { name: "pc1".into(), city: "Mérida".into(), flops: 1.2e9, ncpus: 2 },
+            Request::RequestWork { host_id: 3 },
+            Request::Heartbeat { host_id: 3 },
+            Request::ReportSuccess {
+                result_id: 9,
+                cpu_time: 12.5,
+                payload: Json::obj().set("hits", 42u64),
+            },
+            Request::ReportError { result_id: 9 },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let s = r.to_json().to_string();
+            let back = Request::from_json(&Json::parse(&s).unwrap()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let replies = vec![
+            Reply::Registered { host_id: 5 },
+            Reply::Work {
+                result_id: 1,
+                wu_id: 2,
+                wu_name: "mux11_run_007".into(),
+                spec: Json::obj().set("problem", "mux11").set("seed", 7u64),
+                flops_est: 1e11,
+                signature: "abc123".into(),
+            },
+            Reply::NoWork { campaign_done: true },
+            Reply::Ok,
+            Reply::Stats { dump: "wu.submitted = 3\n".into() },
+            Reply::Error { message: "bad host".into() },
+        ];
+        for r in replies {
+            let s = r.to_json().to_string();
+            let back = Reply::from_json(&Json::parse(&s).unwrap()).unwrap();
+            assert_eq!(back, r);
+        }
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        assert!(Request::from_json(&Json::obj().set("op", "exploit")).is_err());
+    }
+}

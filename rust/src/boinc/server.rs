@@ -1,0 +1,487 @@
+//! `ServerCore` — the project server's daemons as one time-explicit
+//! state machine: **scheduler** (work dispatch), **transitioner**
+//! (replication, retry, error masks), **validator** (quorum agreement,
+//! credit) and **assimilator** (canonical-result collection).
+//!
+//! Every entry point takes `now` (seconds since campaign start), so the
+//! identical middleware runs under the real TCP front-end ([`super::net`])
+//! and under the discrete-event simulator ([`crate::sim`]) — the
+//! reproduction measures the *same* state machines the paper's BOINC
+//! server ran.
+
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+
+use super::db::{Db, HostRow};
+use super::signature::{sha256_hex, SigningKey};
+use super::workunit::{Outcome, ResultRecord, ServerState, ValidateState, WorkUnit};
+
+/// Server tuning knobs.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// deadline = now + max(wu.delay_bound, slack * est_cpu_time(host))
+    pub deadline_slack: f64,
+    /// grant credit per 1e9 FLOPs of validated work (cobblestone-ish)
+    pub credit_per_gflop: f64,
+    /// hosts silent longer than this are considered dead by reports
+    pub heartbeat_timeout: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { deadline_slack: 3.0, credit_per_gflop: 1.0 / 3600.0, heartbeat_timeout: 86400.0 }
+    }
+}
+
+/// An assimilated (canonical, validated) result.
+#[derive(Clone, Debug)]
+pub struct Assimilated {
+    pub wu_id: u64,
+    pub wu_name: String,
+    pub result_id: u64,
+    pub host_id: u64,
+    pub payload: Json,
+    pub completed_at: f64,
+}
+
+/// The server core. Single-threaded by design; front-ends serialize.
+pub struct ServerCore {
+    pub db: Db,
+    pub cfg: ServerConfig,
+    pub key: SigningKey,
+    pub metrics: Metrics,
+    assimilated: Vec<Assimilated>,
+}
+
+impl ServerCore {
+    pub fn new(cfg: ServerConfig) -> ServerCore {
+        ServerCore {
+            db: Db::new(),
+            cfg,
+            key: SigningKey::new(b"vgp-project-key"),
+            metrics: Metrics::new(),
+            assimilated: Vec::new(),
+        }
+    }
+
+    // ------------------------------------------------------------ intake
+
+    /// Submit a work unit; the transitioner immediately creates its
+    /// initial replications.
+    pub fn submit_wu(&mut self, wu: WorkUnit) -> u64 {
+        let target = wu.target_nresults;
+        let id = self.db.insert_wu(wu);
+        for _ in 0..target {
+            self.db.insert_result(ResultRecord::new(0, id));
+        }
+        self.metrics.add("wu.submitted", 1);
+        id
+    }
+
+    pub fn register_host(&mut self, host: HostRow) -> u64 {
+        self.metrics.inc("host.registered");
+        self.db.upsert_host(host)
+    }
+
+    pub fn heartbeat(&mut self, host_id: u64, now: f64) {
+        if let Some(h) = self.db.host_mut(host_id) {
+            h.last_heartbeat = now;
+        }
+        self.metrics.inc("host.heartbeat");
+    }
+
+    // --------------------------------------------------------- scheduler
+
+    /// Scheduler RPC: a host asks for work. Returns the dispatched
+    /// result id, the WU (payload spec) and the application signature
+    /// the client must verify before running.
+    pub fn request_work(&mut self, host_id: u64, now: f64) -> Option<(u64, WorkUnit, String)> {
+        self.heartbeat(host_id, now);
+        let host_flops = self.db.host(host_id).map(|h| h.flops).unwrap_or(1e9);
+        let rid = self.db.pop_unsent()?;
+        let wu_id = self.db.result(rid).expect("result exists").wu_id;
+        let wu = self.db.wu(wu_id).expect("wu exists").clone();
+        // redundancy must span distinct hosts (BOINC "one result per
+        // user per WU"); non-redundant WUs may be retried anywhere
+        if wu.target_nresults > 1 {
+            let already_here = self
+                .db
+                .results_of_wu(wu_id)
+                .iter()
+                .any(|r| r.host_id == host_id && r.server_state != ServerState::Unsent);
+            if already_here {
+                self.db.push_unsent(rid);
+                return None;
+            }
+        }
+        let est = wu.flops_est / host_flops.max(1e6);
+        let deadline = now + (self.cfg.deadline_slack * est).max(wu.delay_bound);
+        {
+            let r = self.db.result_mut(rid).unwrap();
+            r.host_id = host_id;
+            r.server_state = ServerState::InProgress;
+            r.sent_at = now;
+            r.deadline = deadline;
+        }
+        self.db.mark_in_progress(rid);
+        self.metrics.inc("result.dispatched");
+        let sig = self.key.sign(wu.spec.to_string().as_bytes());
+        Some((rid, wu, sig))
+    }
+
+    // ----------------------------------------------------------- reports
+
+    /// Client reports success with a result payload.
+    pub fn report_success(&mut self, rid: u64, now: f64, cpu_time: f64, payload: Json) {
+        let wu_id = {
+            let Some(r) = self.db.result_mut(rid) else { return };
+            if r.server_state != ServerState::InProgress {
+                return; // late report after deadline reissue — drop
+            }
+            r.server_state = ServerState::Over;
+            r.outcome = Outcome::Success;
+            r.received_at = now;
+            r.cpu_time = cpu_time;
+            r.payload_hash = sha256_hex(payload.to_string().as_bytes());
+            r.payload = Some(payload);
+            r.wu_id
+        };
+        self.metrics.inc("result.success");
+        self.transition_wu(wu_id, now);
+        self.db.sweep_in_progress();
+    }
+
+    /// Client reports failure (the paper's Java-heap-size errors, §4.2).
+    pub fn report_error(&mut self, rid: u64, now: f64) {
+        let wu_id = {
+            let Some(r) = self.db.result_mut(rid) else { return };
+            if r.server_state != ServerState::InProgress {
+                return;
+            }
+            r.server_state = ServerState::Over;
+            r.outcome = Outcome::ClientError;
+            r.received_at = now;
+            r.wu_id
+        };
+        self.metrics.inc("result.client_error");
+        self.transition_wu(wu_id, now);
+        self.db.sweep_in_progress();
+    }
+
+    // ------------------------------------------------------ transitioner
+
+    /// Periodic pass: expire deadlines (hosts that churned away) and
+    /// re-run transitions.
+    pub fn tick(&mut self, now: f64) {
+        let expired: Vec<u64> = self
+            .db
+            .in_progress_ids()
+            .iter()
+            .copied()
+            .filter(|id| {
+                self.db
+                    .result(*id)
+                    .map(|r| r.server_state == ServerState::InProgress && r.deadline < now)
+                    .unwrap_or(false)
+            })
+            .collect();
+        for rid in expired {
+            let wu_id = {
+                let r = self.db.result_mut(rid).unwrap();
+                r.server_state = ServerState::Over;
+                r.outcome = Outcome::NoReply;
+                r.wu_id
+            };
+            self.metrics.inc("result.no_reply");
+            self.transition_wu(wu_id, now);
+        }
+        self.db.sweep_in_progress();
+    }
+
+    /// The transitioner for one WU: validation, error masks, reissue.
+    fn transition_wu(&mut self, wu_id: u64, now: f64) {
+        // copy only the scalar policy fields — cloning the whole WU
+        // (incl. the spec Json) on every report dominated the RPC
+        // profile (see EXPERIMENTS.md §Perf)
+        struct Policy {
+            min_quorum: usize,
+            max_error_results: usize,
+            max_total_results: usize,
+            flops_est: f64,
+        }
+        let wu = match self.db.wu(wu_id) {
+            Some(w) if !w.is_done() => Policy {
+                min_quorum: w.min_quorum,
+                max_error_results: w.max_error_results,
+                max_total_results: w.max_total_results,
+                flops_est: w.flops_est,
+            },
+            _ => return,
+        };
+        let results = self.db.results_of_wu(wu_id);
+        let successes: Vec<(u64, u64, String, f64)> = results
+            .iter()
+            .filter(|r| r.outcome == Outcome::Success && r.validate_state != ValidateState::Invalid)
+            .map(|r| (r.id, r.host_id, r.payload_hash.clone(), r.received_at))
+            .collect();
+        let errors = results
+            .iter()
+            .filter(|r| {
+                matches!(r.outcome, Outcome::ClientError | Outcome::NoReply | Outcome::ValidateError)
+            })
+            .count();
+        let total = results.len();
+        let pending = results
+            .iter()
+            .filter(|r| r.server_state != ServerState::Over)
+            .count();
+
+        // ---- validator: find a quorum of agreeing payload hashes
+        if successes.len() >= wu.min_quorum {
+            let mut groups: std::collections::HashMap<&str, Vec<usize>> = Default::default();
+            for (i, s) in successes.iter().enumerate() {
+                groups.entry(s.2.as_str()).or_default().push(i);
+            }
+            if let Some((_, grp)) = groups
+                .iter()
+                .filter(|(_, g)| g.len() >= wu.min_quorum)
+                .max_by_key(|(_, g)| g.len())
+            {
+                // canonical result: earliest-received member of the group
+                let canon_idx =
+                    *grp.iter().min_by(|&&a, &&b| successes[a].3.partial_cmp(&successes[b].3).unwrap()).unwrap();
+                let canon = &successes[canon_idx];
+                let valid_ids: Vec<u64> =
+                    grp.iter().map(|&i| successes[i].0).collect();
+                let all_ids: Vec<u64> = successes.iter().map(|s| s.0).collect();
+                let credit = self.cfg.credit_per_gflop * wu.flops_est / 1e9;
+                for rid in &all_ids {
+                    let valid = valid_ids.contains(rid);
+                    let host_id = {
+                        let r = self.db.result_mut(*rid).unwrap();
+                        r.validate_state =
+                            if valid { ValidateState::Valid } else { ValidateState::Invalid };
+                        r.host_id
+                    };
+                    if let Some(h) = self.db.host_mut(host_id) {
+                        if valid {
+                            h.valid_results += 1;
+                            h.credit += credit;
+                        } else {
+                            h.error_results += 1;
+                        }
+                    }
+                    self.metrics.inc(if valid { "result.valid" } else { "result.invalid" });
+                }
+                // ---- assimilator
+                let payload = self
+                    .db
+                    .result(canon.0)
+                    .and_then(|r| r.payload.clone())
+                    .unwrap_or(Json::Null);
+                let wu_name = {
+                    let w = self.db.wu_mut(wu_id).unwrap();
+                    w.canonical_result = Some(canon.0);
+                    w.assimilated = true;
+                    w.name.clone()
+                };
+                self.assimilated.push(Assimilated {
+                    wu_id,
+                    wu_name,
+                    result_id: canon.0,
+                    host_id: canon.1,
+                    payload,
+                    completed_at: now,
+                });
+                self.metrics.inc("wu.assimilated");
+                return;
+            }
+        }
+
+        // ---- error masks
+        if errors > wu.max_error_results {
+            self.db.wu_mut(wu_id).unwrap().error_mask.too_many_errors = true;
+            self.metrics.inc("wu.too_many_errors");
+            return;
+        }
+        if total >= wu.max_total_results && pending == 0 {
+            self.db.wu_mut(wu_id).unwrap().error_mask.too_many_total = true;
+            self.metrics.inc("wu.too_many_total");
+            return;
+        }
+
+        // ---- reissue: keep enough live replications to reach quorum.
+        // Progress toward quorum is the LARGEST AGREEING group, not the
+        // raw success count — two disagreeing results are inconclusive
+        // (BOINC validate_state INCONCLUSIVE) and need a tie-breaker.
+        let max_group = {
+            let mut groups: std::collections::HashMap<&str, usize> = Default::default();
+            for s in &successes {
+                *groups.entry(s.2.as_str()).or_default() += 1;
+            }
+            groups.values().copied().max().unwrap_or(0)
+        };
+        let live = pending + max_group;
+        if live < wu.min_quorum && total < wu.max_total_results {
+            let need = wu.min_quorum - live;
+            for _ in 0..need {
+                self.db.insert_result(ResultRecord::new(0, wu_id));
+                self.metrics.inc("result.reissued");
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- query
+
+    pub fn is_complete(&self) -> bool {
+        self.db.all_assimilated()
+    }
+
+    pub fn assimilated(&self) -> &[Assimilated] {
+        &self.assimilated
+    }
+
+    /// Completion time of the last assimilated WU (the campaign's T_B
+    /// numerator component; the paper measures first-registration to
+    /// last-communication).
+    pub fn last_completion(&self) -> f64 {
+        self.assimilated.iter().map(|a| a.completed_at).fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn host(flops: f64) -> HostRow {
+        HostRow {
+            id: 0,
+            name: "h".into(),
+            city: "Badajoz".into(),
+            flops,
+            ncpus: 1,
+            on_frac: 1.0,
+            active_frac: 1.0,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            credit: 0.0,
+        }
+    }
+
+    fn payload(x: u64) -> Json {
+        Json::obj().set("best_raw", x).set("hits", x)
+    }
+
+    #[test]
+    fn single_replica_lifecycle() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(host(1e9));
+        let wu = s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let (rid, wu_got, sig) = s.request_work(h, 0.0).unwrap();
+        assert_eq!(wu_got.id, wu);
+        assert!(s.key.verify(wu_got.spec.to_string().as_bytes(), &sig));
+        s.report_success(rid, 100.0, 90.0, payload(7));
+        assert!(s.is_complete());
+        assert_eq!(s.assimilated().len(), 1);
+        assert_eq!(s.assimilated()[0].payload.u64_of("hits").unwrap(), 7);
+        assert!(s.db.host(h).unwrap().credit > 0.0);
+    }
+
+    #[test]
+    fn quorum_two_requires_agreement() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h1 = s.register_host(host(1e9));
+        let h2 = s.register_host(host(1e9));
+        s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9).with_redundancy(2, 2));
+        let (r1, _, _) = s.request_work(h1, 0.0).unwrap();
+        let (r2, _, _) = s.request_work(h2, 0.0).unwrap();
+        s.report_success(r1, 10.0, 9.0, payload(5));
+        assert!(!s.is_complete(), "one result of quorum 2");
+        s.report_success(r2, 11.0, 9.0, payload(5));
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn cheater_outvoted_by_quorum() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let honest1 = s.register_host(host(1e9));
+        let honest2 = s.register_host(host(1e9));
+        let cheat = s.register_host(host(1e9));
+        s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9).with_redundancy(3, 2));
+        let (r1, _, _) = s.request_work(honest1, 0.0).unwrap();
+        let (r2, _, _) = s.request_work(honest2, 0.0).unwrap();
+        let (r3, _, _) = s.request_work(cheat, 0.0).unwrap();
+        s.report_success(r3, 5.0, 0.1, payload(999)); // cheater: fast bogus result
+        s.report_success(r1, 10.0, 9.0, payload(5));
+        s.report_success(r2, 11.0, 9.0, payload(5));
+        assert!(s.is_complete());
+        let canon = &s.assimilated()[0];
+        assert_eq!(canon.payload.u64_of("hits").unwrap(), 5, "honest result wins");
+        assert_eq!(s.db.host(cheat).unwrap().error_results, 1);
+        assert_eq!(s.db.host(cheat).unwrap().credit, 0.0, "no credit for cheats");
+    }
+
+    #[test]
+    fn deadline_expiry_reissues() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(host(1e9));
+        let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+        wu.delay_bound = 100.0;
+        s.submit_wu(wu);
+        let (r1, _, _) = s.request_work(h, 0.0).unwrap();
+        s.tick(50.0);
+        assert!(s.request_work(h, 50.0).is_none(), "no reissue before deadline");
+        s.tick(10_000.0);
+        assert_eq!(s.db.result(r1).unwrap().outcome, Outcome::NoReply);
+        // reissued result is fetchable by another host
+        let h2 = s.register_host(host(1e9));
+        let got = s.request_work(h2, 10_001.0);
+        assert!(got.is_some(), "transitioner must reissue after NO_REPLY");
+        let (r2, _, _) = got.unwrap();
+        s.report_success(r2, 10_100.0, 90.0, payload(3));
+        assert!(s.is_complete());
+    }
+
+    #[test]
+    fn too_many_errors_poisons_wu() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(host(1e9));
+        let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+        wu.max_error_results = 2;
+        let wu_id = s.submit_wu(wu);
+        for i in 0..3 {
+            let (rid, _, _) = s.request_work(h, i as f64).unwrap();
+            s.report_error(rid, i as f64 + 0.5);
+        }
+        assert!(s.db.wu(wu_id).unwrap().error_mask.too_many_errors);
+        assert!(s.is_complete(), "errored WU terminates the campaign view");
+        assert!(s.assimilated().is_empty());
+    }
+
+    #[test]
+    fn same_host_never_gets_two_replicas() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(host(1e9));
+        s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9).with_redundancy(2, 2));
+        let first = s.request_work(h, 0.0);
+        assert!(first.is_some());
+        let second = s.request_work(h, 1.0);
+        assert!(second.is_none(), "redundancy must span distinct hosts");
+    }
+
+    #[test]
+    fn late_report_after_reissue_is_dropped() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(host(1e9));
+        let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+        wu.delay_bound = 10.0;
+        s.submit_wu(wu);
+        let (r1, _, _) = s.request_work(h, 0.0).unwrap();
+        s.tick(1_000.0); // expires r1
+        let before = s.metrics.counter("result.success");
+        s.report_success(r1, 2_000.0, 10.0, payload(1));
+        assert_eq!(s.metrics.counter("result.success"), before, "late report ignored");
+    }
+}

@@ -1,0 +1,180 @@
+//! Work-unit and result state machines, mirroring BOINC's server-side
+//! schema (result.server_state / outcome / validate_state and the WU
+//! error mask). Terminal states are absorbing — a property test in
+//! rust/tests/properties.rs checks this over random event interleavings.
+
+use crate::util::json::Json;
+
+/// BOINC `result.server_state`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServerState {
+    Unsent,
+    InProgress,
+    Over,
+}
+
+/// BOINC `result.outcome` (meaningful once `Over`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Undefined,
+    Success,
+    ClientError,
+    NoReply,
+    ValidateError,
+}
+
+/// BOINC `result.validate_state`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValidateState {
+    Init,
+    Valid,
+    Invalid,
+    Inconclusive,
+}
+
+/// WU error mask bits (BOINC `workunit.error_mask`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WuError {
+    pub too_many_errors: bool,
+    pub too_many_total: bool,
+    pub couldnt_send: bool,
+}
+
+impl WuError {
+    pub fn any(&self) -> bool {
+        self.too_many_errors || self.too_many_total || self.couldnt_send
+    }
+}
+
+/// One replication of a work unit dispatched to a host.
+#[derive(Clone, Debug)]
+pub struct ResultRecord {
+    pub id: u64,
+    pub wu_id: u64,
+    pub host_id: u64,
+    pub server_state: ServerState,
+    pub outcome: Outcome,
+    pub validate_state: ValidateState,
+    /// dispatch time (secs since campaign start)
+    pub sent_at: f64,
+    /// scheduler deadline for this result
+    pub deadline: f64,
+    /// completion report time
+    pub received_at: f64,
+    /// canonical payload hash reported by the client
+    pub payload_hash: String,
+    /// reported result payload (assimilated when canonical)
+    pub payload: Option<Json>,
+    /// claimed CPU time (for credit)
+    pub cpu_time: f64,
+}
+
+impl ResultRecord {
+    pub fn new(id: u64, wu_id: u64) -> ResultRecord {
+        ResultRecord {
+            id,
+            wu_id,
+            host_id: 0,
+            server_state: ServerState::Unsent,
+            outcome: Outcome::Undefined,
+            validate_state: ValidateState::Init,
+            sent_at: 0.0,
+            deadline: f64::INFINITY,
+            received_at: 0.0,
+            payload_hash: String::new(),
+            payload: None,
+            cpu_time: 0.0,
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.server_state == ServerState::Over
+    }
+}
+
+/// A work unit: one GP run (or generation batch) to execute.
+#[derive(Clone, Debug)]
+pub struct WorkUnit {
+    pub id: u64,
+    pub name: String,
+    /// experiment payload: problem, params, seed (opaque to the server)
+    pub spec: Json,
+    /// FLOPs estimate used for deadline computation & CP accounting
+    pub flops_est: f64,
+    /// replication factor (paper: 1 — "we didn't use redundancy")
+    pub target_nresults: usize,
+    /// agreement needed to validate (quorum)
+    pub min_quorum: usize,
+    pub max_error_results: usize,
+    pub max_total_results: usize,
+    /// delay bound for deadlines, seconds
+    pub delay_bound: f64,
+    pub error_mask: WuError,
+    pub canonical_result: Option<u64>,
+    pub assimilated: bool,
+}
+
+impl WorkUnit {
+    pub fn new(id: u64, name: impl Into<String>, spec: Json, flops_est: f64) -> WorkUnit {
+        WorkUnit {
+            id,
+            name: name.into(),
+            spec,
+            flops_est,
+            target_nresults: 1,
+            min_quorum: 1,
+            max_error_results: 3,
+            max_total_results: 8,
+            delay_bound: 7.0 * 86400.0,
+            error_mask: WuError::default(),
+            canonical_result: None,
+            assimilated: false,
+        }
+    }
+
+    /// Configure redundancy (paper §2: "minimum required quorum").
+    pub fn with_redundancy(mut self, target: usize, quorum: usize) -> WorkUnit {
+        assert!(target >= quorum && quorum >= 1);
+        self.target_nresults = target;
+        self.min_quorum = quorum;
+        self
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.canonical_result.is_some() || self.error_mask.any()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wu_defaults_match_paper() {
+        let wu = WorkUnit::new(1, "wu_1", Json::obj(), 1e9);
+        assert_eq!(wu.target_nresults, 1, "paper used no redundancy");
+        assert_eq!(wu.min_quorum, 1);
+        assert!(!wu.is_done());
+    }
+
+    #[test]
+    fn redundancy_builder() {
+        let wu = WorkUnit::new(1, "wu", Json::obj(), 1e9).with_redundancy(3, 2);
+        assert_eq!(wu.target_nresults, 3);
+        assert_eq!(wu.min_quorum, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quorum_cannot_exceed_target() {
+        let _ = WorkUnit::new(1, "wu", Json::obj(), 1e9).with_redundancy(1, 2);
+    }
+
+    #[test]
+    fn result_terminality() {
+        let mut r = ResultRecord::new(1, 1);
+        assert!(!r.is_terminal());
+        r.server_state = ServerState::Over;
+        assert!(r.is_terminal());
+    }
+}

@@ -1,0 +1,345 @@
+//! Volunteer host population modeling and the Anderson–Fedak
+//! computing-power estimator (paper eq. 2).
+//!
+//! The paper's pools:
+//! * Table 1 — dedicated lab machines (no churn, homogeneous);
+//! * Table 2 — volunteers across 8 Spanish cities (Fig 1), with host
+//!   churn (Fig 2): staggered arrival, limited lifetime, partial
+//!   on/active fractions;
+//! * Table 3 — 10 dedicated Windows hosts behind a virtualization layer.
+//!
+//! Hardware calibration is 2007-era desktops (~0.5–3 GFLOPS sustained,
+//! matching the paper's 80 GFLOPS for ~45 hosts incl. overcounting of
+//! multi-core).
+
+use crate::util::rng::Rng;
+
+/// The cities of Fig 1 with their host counts for the 11-mux campaign
+/// (45 hosts over 3 cities) and the 20-mux campaign (41 hosts, 8 sites).
+pub const FIG1_CITIES_MUX11: &[(&str, usize)] =
+    &[("Cáceres", 25), ("Badajoz", 12), ("Mérida", 8)];
+pub const FIG1_CITIES_MUX20: &[(&str, usize)] = &[
+    ("Cáceres", 10),
+    ("Badajoz", 8),
+    ("Mérida", 4),
+    ("Sevilla (CICA)", 5),
+    ("Granada", 4),
+    ("Valencia", 4),
+    ("Madrid (UNED)", 3),
+    ("Trujillo (Ceta-Ciemat)", 3),
+];
+
+/// Host behaviour class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolKind {
+    /// dedicated lab machines: always on, no churn (Table 1)
+    Lab,
+    /// volunteers with churn + availability fractions (Table 2, Fig 2)
+    Volunteer,
+    /// dedicated Windows hosts with a virtualization overhead (Table 3)
+    VirtualizedLab,
+}
+
+/// Parameters of a host population.
+#[derive(Clone, Debug)]
+pub struct PoolParams {
+    pub kind: PoolKind,
+    pub hosts: usize,
+    /// mean sustained GFLOPS of one host (2007 desktop ~ 1.3)
+    pub mean_gflops: f64,
+    /// log-normal spread of host speed
+    pub speed_sigma: f64,
+    /// mean host lifetime in the project, days (volunteers)
+    pub mean_lifetime_days: f64,
+    /// mean arrival spread: hosts register over this many days
+    pub arrival_spread_days: f64,
+    /// mean fraction of time the host is powered on
+    pub on_frac: f64,
+    /// mean fraction of on-time BOINC may compute
+    pub active_frac: f64,
+    /// multiplicative efficiency of the app (virtualization = ~0.85)
+    pub efficiency: f64,
+    /// probability a given WU execution fails client-side (paper §4.2:
+    /// Java heap errors)
+    pub client_error_rate: f64,
+}
+
+impl PoolParams {
+    pub fn lab(hosts: usize) -> PoolParams {
+        PoolParams {
+            kind: PoolKind::Lab,
+            hosts,
+            mean_gflops: 1.3,
+            speed_sigma: 0.0,
+            mean_lifetime_days: 1e6,
+            arrival_spread_days: 0.0,
+            on_frac: 1.0,
+            active_frac: 1.0,
+            efficiency: 0.95,
+            client_error_rate: 0.0,
+        }
+    }
+
+    /// The paper's volunteer pool (Table 2). Lifetimes are short
+    /// relative to the campaign (machines get turned off for hours or
+    /// days — "typical VGC behavior").
+    pub fn volunteer(hosts: usize) -> PoolParams {
+        PoolParams {
+            kind: PoolKind::Volunteer,
+            hosts,
+            mean_gflops: 1.3,
+            speed_sigma: 0.45,
+            mean_lifetime_days: 4.0,
+            arrival_spread_days: 2.0,
+            on_frac: 0.7,
+            active_frac: 0.75,
+            efficiency: 0.9,
+            client_error_rate: 0.05,
+        }
+    }
+
+    /// Table 3: 10 Windows hosts running the Linux image under
+    /// virtualization (VMware overhead ~15%).
+    pub fn virtualized_lab(hosts: usize) -> PoolParams {
+        PoolParams {
+            kind: PoolKind::VirtualizedLab,
+            hosts,
+            mean_gflops: 1.3,
+            speed_sigma: 0.2,
+            mean_lifetime_days: 1e6,
+            arrival_spread_days: 0.1,
+            on_frac: 0.95,
+            active_frac: 0.9,
+            efficiency: 0.85,
+            client_error_rate: 0.02,
+        }
+    }
+}
+
+/// A sampled host: static attributes + availability schedule.
+#[derive(Clone, Debug)]
+pub struct SimHost {
+    pub name: String,
+    pub city: String,
+    pub flops: f64,
+    pub ncpus: u32,
+    pub arrival: f64,
+    pub departure: f64,
+    pub on_frac: f64,
+    pub active_frac: f64,
+    pub efficiency: f64,
+    pub client_error_rate: f64,
+}
+
+impl SimHost {
+    /// Effective computation rate while attached (FLOPS usable by GP).
+    pub fn effective_flops(&self) -> f64 {
+        self.flops * self.on_frac * self.active_frac * self.efficiency
+    }
+
+    pub fn lifetime(&self) -> f64 {
+        (self.departure - self.arrival).max(0.0)
+    }
+}
+
+/// Sample a host population from pool parameters; cities are assigned
+/// round-robin from `cities` (Fig 1 reproduction).
+pub fn sample_pool(
+    rng: &mut Rng,
+    params: &PoolParams,
+    cities: &[(&str, usize)],
+) -> Vec<SimHost> {
+    let mut city_list: Vec<&str> = Vec::new();
+    for (c, n) in cities {
+        for _ in 0..*n {
+            city_list.push(c);
+        }
+    }
+    let mut hosts = Vec::with_capacity(params.hosts);
+    for i in 0..params.hosts {
+        let city = city_list.get(i).copied().unwrap_or("other");
+        let flops = if params.speed_sigma > 0.0 {
+            rng.log_normal(params.mean_gflops * 1e9, params.speed_sigma)
+        } else {
+            params.mean_gflops * 1e9
+        };
+        let arrival = if params.arrival_spread_days > 0.0 {
+            rng.uniform(0.0, params.arrival_spread_days * 86400.0)
+        } else {
+            0.0
+        };
+        let lifetime = rng.exp(params.mean_lifetime_days * 86400.0);
+        hosts.push(SimHost {
+            name: format!("host{i:03}"),
+            city: city.to_string(),
+            flops,
+            ncpus: 1,
+            arrival,
+            departure: arrival + lifetime,
+            on_frac: rng.fraction(params.on_frac),
+            active_frac: rng.fraction(params.active_frac),
+            efficiency: params.efficiency,
+            client_error_rate: params.client_error_rate,
+        });
+    }
+    hosts
+}
+
+/// Anderson–Fedak available computing power (paper eq. 2):
+/// `CP = X_arrival * X_life * X_ncpus * X_flops * X_eff * X_onfrac
+///       * X_active * X_redundancy * X_share`.
+/// The X terms are averaged over the pool; `X_arrival * X_life` is the
+/// expected attached-host count (Little's law), so CP is the expected
+/// usable FLOPS of the project.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputingPower {
+    pub arrival_rate_per_day: f64,
+    pub mean_life_days: f64,
+    pub mean_ncpus: f64,
+    pub mean_flops: f64,
+    pub mean_eff: f64,
+    pub mean_onfrac: f64,
+    pub mean_active: f64,
+    pub redundancy: f64,
+    pub share: f64,
+}
+
+impl ComputingPower {
+    /// Estimate from a sampled pool over an observation window (days).
+    /// `redundancy` is 1/replication (paper: 1 — no redundancy);
+    /// `share` is the fraction of the host donated to this project
+    /// (paper: 1 — exclusive).
+    pub fn from_pool(hosts: &[SimHost], window_days: f64, redundancy: f64, share: f64) -> Self {
+        let n = hosts.len().max(1) as f64;
+        let mean = |f: &dyn Fn(&SimHost) -> f64| hosts.iter().map(|h| f(h)).sum::<f64>() / n;
+        ComputingPower {
+            arrival_rate_per_day: n / window_days.max(1e-9),
+            mean_life_days: mean(&|h| (h.lifetime() / 86400.0).min(window_days)),
+            mean_ncpus: mean(&|h| h.ncpus as f64),
+            mean_flops: mean(&|h| h.flops),
+            mean_eff: mean(&|h| h.efficiency),
+            mean_onfrac: mean(&|h| h.on_frac),
+            mean_active: mean(&|h| h.active_frac),
+            redundancy,
+            share,
+        }
+    }
+
+    /// The CP product, in FLOPS.
+    pub fn flops(&self) -> f64 {
+        self.arrival_rate_per_day
+            * self.mean_life_days
+            * self.mean_ncpus
+            * self.mean_flops
+            * self.mean_eff
+            * self.mean_onfrac
+            * self.mean_active
+            * self.redundancy
+            * self.share
+    }
+
+    pub fn gflops(&self) -> f64 {
+        self.flops() / 1e9
+    }
+}
+
+/// Daily activity trace for Fig 2: per-day attached-host counts.
+pub struct ChurnTrace {
+    pub days: Vec<f64>,
+    pub active_hosts: Vec<f64>,
+    pub arrivals: Vec<f64>,
+    pub departures: Vec<f64>,
+}
+
+pub fn churn_trace(hosts: &[SimHost], window_days: usize) -> ChurnTrace {
+    let mut active = vec![0f64; window_days];
+    let mut arr = vec![0f64; window_days];
+    let mut dep = vec![0f64; window_days];
+    for h in hosts {
+        let a = (h.arrival / 86400.0) as usize;
+        let d = (h.departure / 86400.0) as usize;
+        if a < window_days {
+            arr[a] += 1.0;
+        }
+        if d < window_days {
+            dep[d] += 1.0;
+        }
+        for day in a..d.min(window_days.saturating_sub(1)) + 1 {
+            if day < window_days {
+                active[day] += h.on_frac;
+            }
+        }
+    }
+    ChurnTrace {
+        days: (0..window_days).map(|d| d as f64).collect(),
+        active_hosts: active,
+        arrivals: arr,
+        departures: dep,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lab_pool_is_deterministic_and_always_on() {
+        let mut rng = Rng::new(1);
+        let hosts = sample_pool(&mut rng, &PoolParams::lab(5), &[("lab", 5)]);
+        assert_eq!(hosts.len(), 5);
+        for h in &hosts {
+            assert_eq!(h.arrival, 0.0);
+            assert!(h.lifetime() > 365.0 * 86400.0);
+            assert_eq!(h.flops, 1.3e9);
+        }
+    }
+
+    #[test]
+    fn volunteer_pool_has_churn() {
+        let mut rng = Rng::new(2);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(45), FIG1_CITIES_MUX11);
+        let finite = hosts.iter().filter(|h| h.lifetime() < 30.0 * 86400.0).count();
+        assert!(finite > 30, "most volunteers churn within the month: {finite}");
+        let caceres = hosts.iter().filter(|h| h.city == "Cáceres").count();
+        assert_eq!(caceres, 25, "Fig 1 city assignment");
+    }
+
+    #[test]
+    fn cp_matches_paper_scale_for_mux11_pool() {
+        // 45 hosts over ~5.35 days, no redundancy, exclusive share:
+        // the paper reports 80 GFLOPS; we require the same order.
+        let mut rng = Rng::new(3);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(45), FIG1_CITIES_MUX11);
+        let cp = ComputingPower::from_pool(&hosts, 5.35, 1.0, 1.0);
+        let g = cp.gflops();
+        assert!(g > 15.0 && g < 250.0, "CP {g} GFLOPS out of paper scale");
+    }
+
+    #[test]
+    fn cp_formula_factors_multiply() {
+        let cp = ComputingPower {
+            arrival_rate_per_day: 10.0,
+            mean_life_days: 2.0,
+            mean_ncpus: 1.0,
+            mean_flops: 1e9,
+            mean_eff: 0.9,
+            mean_onfrac: 0.8,
+            mean_active: 0.5,
+            redundancy: 0.5,
+            share: 1.0,
+        };
+        let expect = 10.0 * 2.0 * 1e9 * 0.9 * 0.8 * 0.5 * 0.5;
+        assert!((cp.flops() - expect).abs() < 1e-3);
+    }
+
+    #[test]
+    fn churn_trace_conserves_hosts() {
+        let mut rng = Rng::new(4);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(40), FIG1_CITIES_MUX20);
+        let trace = churn_trace(&hosts, 30);
+        let arr_total: f64 = trace.arrivals.iter().sum();
+        assert!(arr_total <= 40.0 + 1e-9);
+        assert!(arr_total >= 35.0, "most arrivals within window");
+        assert!(trace.active_hosts.iter().cloned().fold(0.0, f64::max) <= 40.0);
+    }
+}

@@ -1,0 +1,176 @@
+//! Configuration system: a small INI-style parser (`key = value` under
+//! `[section]` headers) used for campaign specs, plus a CLI argument
+//! helper for the `vgp` binary and the examples.
+//!
+//! Example campaign file (see `examples/param_sweep.rs`):
+//!
+//! ```text
+//! [campaign]
+//! problem = mux11
+//! runs = 25
+//! generations = 50
+//! population = 4000
+//!
+//! [pool]
+//! hosts = 45
+//! churn = volunteer
+//! seed = 7
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed config: `sections[section][key] = value`.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> anyhow::Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::from("");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    anyhow::bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                cfg.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().to_string());
+            } else {
+                anyhow::bail!("line {}: expected 'key = value'", lineno + 1);
+            }
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, section: &str, key: &str, default: u64) -> u64 {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key)
+            .map(|v| matches!(v, "true" | "1" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+}
+
+/// Tiny CLI argument helper: positional subcommand + `--key value` /
+/// `--flag` options (clap is unavailable offline).
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::parse(
+            "# comment\n[campaign]\nproblem = mux11 # trailing\nruns= 25\n\n[pool]\nhosts =45\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("campaign", "problem"), Some("mux11"));
+        assert_eq!(cfg.u64_or("campaign", "runs", 0), 25);
+        assert_eq!(cfg.u64_or("pool", "hosts", 0), 45);
+        assert_eq!(cfg.u64_or("pool", "missing", 9), 9);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Config::parse("[open\n").is_err());
+        assert!(Config::parse("justakey\n").is_err());
+    }
+
+    #[test]
+    fn args_mixture() {
+        let argv: Vec<String> =
+            ["sim", "extra", "--runs", "10", "--seed=42", "--verbose"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["sim", "extra"]);
+        assert_eq!(a.opt_u64("runs", 0), 10);
+        assert_eq!(a.opt_u64("seed", 0), 42);
+        assert!(a.has_flag("verbose"));
+    }
+}

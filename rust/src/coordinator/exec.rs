@@ -1,0 +1,142 @@
+//! WU execution: what a worker does with a verified spec — the GP
+//! "research application" (paper §2.1). Two paths mirror the paper's
+//! methods:
+//!
+//! * [`run_wu_native`] — **Method 1** (Lil-gp port): fitness evaluation
+//!   compiled into the client binary.
+//! * [`run_wu_artifact`] — **Method 2** (ECJ wrapper): fitness through
+//!   the AOT-compiled XLA artifact loaded via PJRT.
+//!
+//! Both return the canonical result payload (deterministic for a given
+//! spec, so quorum validation agrees across honest hosts).
+
+use anyhow::{Context, Result};
+
+use crate::gp::engine::{Engine, Params};
+use crate::gp::problems::{ant, interest_point, multiplexer, parity, regression, ProblemKind};
+use crate::runtime::{BoolArtifactEvaluator, Runtime};
+use crate::util::json::Json;
+
+/// Parse a WU spec into engine parameters.
+pub fn params_of_spec(spec: &Json) -> Result<(ProblemKind, Params)> {
+    let problem = ProblemKind::parse(spec.str_of("problem")?)?;
+    let params = Params {
+        population: spec.u64_of("population")? as usize,
+        generations: spec.u64_of("generations")? as usize,
+        seed: spec.u64_of("seed")?,
+        ..Params::default()
+    };
+    Ok((problem, params))
+}
+
+fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
+    Json::obj()
+        .set("best_raw", run.best_fitness.raw)
+        .set("best_adjusted", run.best_fitness.adjusted())
+        .set("hits", run.best_fitness.hits as u64)
+        .set("generations_run", run.generations_run as u64)
+        .set("total_evals", run.total_evals)
+        .set("found_perfect", run.found_perfect)
+        .set("best_size", run.best.len() as u64)
+}
+
+/// Execute a WU spec with native (Method-1) evaluation.
+pub fn run_wu_native(spec: &Json) -> Result<Json> {
+    let (problem, params) = params_of_spec(spec)?;
+    let run = match problem {
+        ProblemKind::Ant => {
+            let ps = ant::ant_set();
+            let mut ev = ant::NativeEvaluator::new();
+            Engine::new(params, &ps).run(&mut ev)
+        }
+        ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
+            let k = match problem {
+                ProblemKind::Mux6 => 2,
+                ProblemKind::Mux11 => 3,
+                _ => 4,
+            };
+            let m = multiplexer::Multiplexer::new(k);
+            let ps = m.primset().clone();
+            let mut ev = multiplexer::NativeEvaluator { problem: &m };
+            Engine::new(params, &ps).run(&mut ev)
+        }
+        ProblemKind::Parity5 => {
+            let p = parity::Parity::new(5);
+            let ps = p.primset().clone();
+            let mut ev = parity::NativeEvaluator { problem: &p };
+            Engine::new(params, &ps).run(&mut ev)
+        }
+        ProblemKind::Quartic => {
+            let q = regression::Quartic::new(20);
+            let ps = q.primset().clone();
+            let mut ev = regression::NativeEvaluator { problem: &q };
+            Engine::new(params, &ps).run(&mut ev)
+        }
+        ProblemKind::InterestPoint => {
+            let ps = interest_point::ip_set();
+            let mut ev = interest_point::NativeEvaluator::new(spec.u64_of("seed")?);
+            Engine::new(params, &ps).run(&mut ev)
+        }
+    };
+    Ok(payload_of(&run))
+}
+
+/// Execute a boolean-problem WU spec through the AOT artifact
+/// (Method 2). Falls back with an error for non-tape problems.
+pub fn run_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
+    let (problem, params) = params_of_spec(spec)?;
+    let k = match problem {
+        ProblemKind::Mux6 => 2,
+        ProblemKind::Mux11 => 3,
+        ProblemKind::Mux20 => 4,
+        other => anyhow::bail!("artifact path supports multiplexers, got {other:?}"),
+    };
+    let m = multiplexer::Multiplexer::new(k);
+    let ps = m.primset().clone();
+    let mut ev = BoolArtifactEvaluator { rt, cases: &m.cases, evals: 0 };
+    let run = Engine::new(params, &ps).run(&mut ev);
+    let _ = ev.evals;
+    Ok(payload_of(&run))
+}
+
+/// Sequential-baseline helper: run the same spec N times back-to-back
+/// (the paper's one-machine T_seq measurement), returning elapsed secs.
+pub fn sequential_baseline(specs: &[Json], native: bool, rt: Option<&Runtime>) -> Result<f64> {
+    let t0 = std::time::Instant::now();
+    for spec in specs {
+        if native {
+            run_wu_native(spec)?;
+        } else {
+            run_wu_artifact(rt.context("runtime required")?, spec)?;
+        }
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Campaign;
+
+    #[test]
+    fn native_exec_of_mux6_spec() {
+        let c = Campaign::new("t", ProblemKind::Mux6, 1, 8, 100);
+        let payload = run_wu_native(&c.wu_spec(0)).unwrap();
+        assert!(payload.get("best_raw").is_some());
+        assert!(payload.u64_of("total_evals").unwrap() >= 100);
+    }
+
+    #[test]
+    fn native_exec_deterministic_for_quorum() {
+        let c = Campaign::new("t", ProblemKind::Quartic, 1, 5, 80);
+        let a = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
+        let b = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
+        assert_eq!(a, b, "payload must be hash-stable for quorum validation");
+    }
+
+    #[test]
+    fn bad_spec_rejected() {
+        assert!(run_wu_native(&Json::obj().set("problem", "nope")).is_err());
+        assert!(run_wu_native(&Json::obj()).is_err());
+    }
+}

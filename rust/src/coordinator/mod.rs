@@ -1,0 +1,203 @@
+//! Campaign coordination: experiment specs, parameter sweeps, and the
+//! paper-table drivers (speedup eq. 1 + computing power eq. 2).
+//!
+//! A *campaign* is N independent GP runs (the paper's "multiple and
+//! simultaneous runs of the same experiment with different parameters
+//! or identical runs for statistical analysis", §1) dispatched as one
+//! WU per run. Campaigns execute either on the DES (paper-scale, Tables
+//! 1–3) or for real over TCP with artifact evaluation (quickstart).
+
+pub mod exec;
+
+use crate::boinc::server::ServerConfig;
+use crate::boinc::workunit::WorkUnit;
+use crate::churn::{sample_pool, PoolParams, SimHost};
+use crate::gp::problems::ProblemKind;
+use crate::sim::{SimConfig, SimOutcome, Simulation};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// One campaign: a GP problem at given parameters, run `runs` times.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub name: String,
+    pub problem: ProblemKind,
+    pub runs: usize,
+    pub generations: usize,
+    pub population: usize,
+    pub redundancy: (usize, usize), // (target_nresults, min_quorum)
+    pub seed: u64,
+}
+
+impl Campaign {
+    pub fn new(name: &str, problem: ProblemKind, runs: usize, generations: usize, population: usize) -> Campaign {
+        Campaign {
+            name: name.to_string(),
+            problem,
+            runs,
+            generations,
+            population,
+            redundancy: (1, 1),
+            seed: 1,
+        }
+    }
+
+    /// FLOPs for one full GP run of this campaign (evals x cost/eval).
+    /// The dominant GP cost is fitness evaluation (Koza); breeding is
+    /// folded into the per-eval constant.
+    pub fn flops_per_run(&self) -> f64 {
+        self.generations as f64 * self.population as f64 * self.problem.flops_per_eval()
+    }
+
+    /// WU spec payload (what a worker executes).
+    pub fn wu_spec(&self, run: usize) -> Json {
+        Json::obj()
+            .set("campaign", self.name.as_str())
+            .set("problem", self.problem.name())
+            .set("generations", self.generations as u64)
+            .set("population", self.population as u64)
+            .set("seed", self.seed + run as u64)
+            .set("run", run as u64)
+    }
+
+    /// Materialize the WUs of this campaign. The delay bound (deadline
+    /// floor) is scaled to the expected run time — a project that left
+    /// BOINC's week-long default on hour-scale WUs would stall every
+    /// churned replication for days (which is precisely the tail the
+    /// paper's T_B measures; see EXPERIMENTS.md E2/E3 notes).
+    pub fn workunits(&self) -> Vec<WorkUnit> {
+        let expected_secs = self.flops_per_run() / REFERENCE_FLOPS;
+        let delay_bound = (3.0 * expected_secs).clamp(3600.0, 7.0 * 86400.0);
+        (0..self.runs)
+            .map(|r| {
+                let mut wu = WorkUnit::new(
+                    0,
+                    format!("{}_run{:04}", self.name, r),
+                    self.wu_spec(r),
+                    self.flops_per_run(),
+                );
+                wu.delay_bound = delay_bound;
+                wu.with_redundancy(self.redundancy.0, self.redundancy.1)
+            })
+            .collect()
+    }
+}
+
+/// A parameter sweep: the cross product of generations x population
+/// (the Commander-style "parameter sweep experiments" of §1).
+pub fn sweep(
+    name: &str,
+    problem: ProblemKind,
+    runs: usize,
+    generations: &[usize],
+    populations: &[usize],
+) -> Vec<Campaign> {
+    let mut out = Vec::new();
+    for &g in generations {
+        for &p in populations {
+            out.push(Campaign::new(&format!("{name}_g{g}_p{p}"), problem, runs, g, p));
+        }
+    }
+    out
+}
+
+/// Campaign outcome with the paper's reporting terms.
+#[derive(Clone, Debug)]
+pub struct CampaignReport {
+    pub campaign: String,
+    pub t_seq: f64,
+    pub t_b: f64,
+    pub acceleration: f64,
+    pub cp_gflops: f64,
+    pub completed: usize,
+    pub runs: usize,
+    pub productive_hosts: usize,
+    pub attached_hosts: usize,
+    pub client_errors: u64,
+}
+
+impl CampaignReport {
+    pub fn from_outcome(name: &str, runs: usize, o: &SimOutcome) -> CampaignReport {
+        CampaignReport {
+            campaign: name.to_string(),
+            t_seq: o.t_seq,
+            t_b: o.makespan,
+            acceleration: o.speedup,
+            cp_gflops: o.cp_gflops,
+            completed: o.completed,
+            runs,
+            productive_hosts: o.productive_hosts,
+            attached_hosts: o.attached_hosts,
+            client_errors: o.client_errors,
+        }
+    }
+}
+
+/// Reference sequential host: the paper's single lab machine.
+pub const REFERENCE_FLOPS: f64 = 1.3e9 * 0.95;
+
+/// Simulate one campaign on a host pool.
+pub fn simulate_campaign(
+    campaign: &Campaign,
+    pool: &PoolParams,
+    cities: &[(&str, usize)],
+    sim_cfg: SimConfig,
+    seed: u64,
+) -> CampaignReport {
+    let mut rng = Rng::new(seed);
+    let hosts: Vec<SimHost> = sample_pool(&mut rng, pool, cities);
+    let mut sim = Simulation::new(sim_cfg, ServerConfig::default(), hosts, seed);
+    for wu in campaign.workunits() {
+        sim.submit(wu);
+    }
+    let out = sim.run(REFERENCE_FLOPS);
+    CampaignReport::from_outcome(&campaign.name, campaign.runs, &out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_per_run_scales() {
+        let a = Campaign::new("a", ProblemKind::Mux11, 1, 50, 4000);
+        let b = Campaign::new("b", ProblemKind::Mux11, 1, 50, 1000);
+        assert!((a.flops_per_run() / b.flops_per_run() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn wu_specs_differ_by_seed() {
+        let c = Campaign::new("c", ProblemKind::Mux6, 3, 10, 100);
+        let wus = c.workunits();
+        assert_eq!(wus.len(), 3);
+        assert_ne!(wus[0].spec.to_string(), wus[1].spec.to_string());
+        assert_eq!(wus[0].target_nresults, 1);
+    }
+
+    #[test]
+    fn sweep_cross_product() {
+        let cs = sweep("s", ProblemKind::Ant, 25, &[1000, 2000], &[1000, 2000]);
+        assert_eq!(cs.len(), 4);
+        assert!(cs.iter().any(|c| c.name == "s_g1000_p2000"));
+    }
+
+    #[test]
+    fn simulated_campaign_completes_on_lab_pool() {
+        // Table-1 scale: long runs so transfer overhead amortizes.
+        let c = Campaign::new("t1", ProblemKind::Ant, 25, 1000, 1000);
+        let r = simulate_campaign(&c, &PoolParams::lab(5), &[("lab", 5)], SimConfig::default(), 3);
+        assert_eq!(r.completed, 25);
+        assert!(r.acceleration > 1.0, "acc {}", r.acceleration);
+        assert!(r.t_seq > 0.0 && r.t_b > 0.0);
+    }
+
+    #[test]
+    fn tiny_campaign_loses_to_overhead() {
+        // the inverse effect (paper §4.2, 11-mux): short tasks under
+        // per-WU overhead give poor or negative acceleration
+        let c = Campaign::new("tiny", ProblemKind::Ant, 10, 20, 50);
+        let r = simulate_campaign(&c, &PoolParams::lab(5), &[("lab", 5)], SimConfig::default(), 3);
+        assert_eq!(r.completed, 10);
+        assert!(r.acceleration < 1.0, "acc {}", r.acceleration);
+    }
+}

@@ -1,0 +1,351 @@
+//! The generational GP loop (Koza-style), with checkpoint/restore —
+//! the "research application" a BOINC client runs inside a work unit.
+
+use crate::gp::init::ramped_half_and_half;
+use crate::gp::ops::{self, Limits};
+use crate::gp::primset::PrimSet;
+use crate::gp::tree::Tree;
+use crate::gp::{Evaluator, Fitness};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// GP run parameters; defaults follow Koza's 11-multiplexer setup
+/// referenced by the paper (§4.2).
+#[derive(Clone, Copy, Debug)]
+pub struct Params {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    pub tournament_k: usize,
+    pub elitism: usize,
+    pub init_min_depth: usize,
+    pub init_max_depth: usize,
+    pub limits: Limits,
+    pub seed: u64,
+    /// Stop early when an individual reaches raw fitness 0.
+    pub stop_on_perfect: bool,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Params {
+            population: 500,
+            generations: 50,
+            crossover_prob: 0.9,
+            mutation_prob: 0.05,
+            tournament_k: 7,
+            elitism: 1,
+            init_min_depth: 2,
+            init_max_depth: 6,
+            limits: Limits::default(),
+            seed: 1,
+            stop_on_perfect: true,
+        }
+    }
+}
+
+/// Per-generation statistics, logged like Lil-gp's report.
+#[derive(Clone, Copy, Debug)]
+pub struct GenStats {
+    pub gen: usize,
+    pub best_raw: f64,
+    pub best_hits: u32,
+    pub mean_raw: f64,
+    pub mean_size: f64,
+    pub evals: u64,
+}
+
+/// Result of a complete run (one BOINC work unit's payload).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub best: Tree,
+    pub best_fitness: Fitness,
+    pub generations_run: usize,
+    pub total_evals: u64,
+    pub history: Vec<GenStats>,
+    pub found_perfect: bool,
+}
+
+/// Serializable mid-run state (the BOINC checkpoint facility, §2).
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub gen: usize,
+    pub rng: [u64; 4],
+    pub population: Vec<Tree>,
+    pub total_evals: u64,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("gen", self.gen as u64)
+            .set(
+                "rng",
+                Json::Arr(self.rng.iter().map(|&s| Json::Str(format!("{s:016x}"))).collect()),
+            )
+            .set("total_evals", self.total_evals)
+            .set("population", Json::Arr(self.population.iter().map(Tree::to_json).collect()))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Checkpoint> {
+        let gen = j.u64_of("gen")? as usize;
+        let total_evals = j.u64_of("total_evals")?;
+        let rng_arr = j
+            .get("rng")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing rng"))?;
+        let mut rng = [0u64; 4];
+        for (i, v) in rng_arr.iter().enumerate().take(4) {
+            rng[i] = u64::from_str_radix(
+                v.as_str().ok_or_else(|| anyhow::anyhow!("bad rng word"))?,
+                16,
+            )?;
+        }
+        let population = j
+            .get("population")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing population"))?
+            .iter()
+            .map(Tree::from_json)
+            .collect::<anyhow::Result<Vec<Tree>>>()?;
+        Ok(Checkpoint { gen, rng, population, total_evals })
+    }
+}
+
+/// The GP engine: owns the population and drives generations through a
+/// pluggable [`Evaluator`].
+pub struct Engine<'a> {
+    pub params: Params,
+    pub ps: &'a PrimSet,
+    rng: Rng,
+    population: Vec<Tree>,
+    fitnesses: Vec<Fitness>,
+    gen: usize,
+    total_evals: u64,
+    pub history: Vec<GenStats>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(params: Params, ps: &'a PrimSet) -> Engine<'a> {
+        let mut rng = Rng::new(params.seed);
+        let population =
+            ramped_half_and_half(&mut rng, ps, params.population, params.init_min_depth, params.init_max_depth);
+        Engine { params, ps, rng, population, fitnesses: Vec::new(), gen: 0, total_evals: 0, history: Vec::new() }
+    }
+
+    /// Resume from a checkpoint (BOINC restart after host churn).
+    pub fn from_checkpoint(params: Params, ps: &'a PrimSet, ck: Checkpoint) -> Engine<'a> {
+        Engine {
+            params,
+            ps,
+            rng: rng_from_state(ck.rng),
+            population: ck.population,
+            fitnesses: Vec::new(),
+            gen: ck.gen,
+            total_evals: ck.total_evals,
+            history: Vec::new(),
+        }
+    }
+
+    pub fn checkpoint(&self) -> Checkpoint {
+        Checkpoint {
+            gen: self.gen,
+            rng: rng_state(&self.rng),
+            population: self.population.clone(),
+            total_evals: self.total_evals,
+        }
+    }
+
+    pub fn generation(&self) -> usize {
+        self.gen
+    }
+
+    pub fn population(&self) -> &[Tree] {
+        &self.population
+    }
+
+    /// Evaluate the current population and step one generation.
+    /// Returns stats for the evaluated generation.
+    pub fn step(&mut self, eval: &mut dyn Evaluator) -> GenStats {
+        self.fitnesses = eval.evaluate(&self.population, self.ps);
+        assert_eq!(self.fitnesses.len(), self.population.len());
+        self.total_evals += self.population.len() as u64;
+
+        let mut best_i = 0;
+        let mut raw_sum = 0.0;
+        let mut size_sum = 0usize;
+        for (i, f) in self.fitnesses.iter().enumerate() {
+            raw_sum += f.raw;
+            size_sum += self.population[i].len();
+            if f.raw < self.fitnesses[best_i].raw {
+                best_i = i;
+            }
+        }
+        let stats = GenStats {
+            gen: self.gen,
+            best_raw: self.fitnesses[best_i].raw,
+            best_hits: self.fitnesses[best_i].hits,
+            mean_raw: raw_sum / self.population.len() as f64,
+            mean_size: size_sum as f64 / self.population.len() as f64,
+            evals: self.population.len() as u64,
+        };
+        self.history.push(stats);
+
+        // breed next generation
+        let p = self.params;
+        let mut next: Vec<Tree> = Vec::with_capacity(self.population.len());
+        // elitism: copy the best k unchanged
+        let mut order: Vec<usize> = (0..self.population.len()).collect();
+        order.sort_by(|&a, &b| self.fitnesses[a].raw.partial_cmp(&self.fitnesses[b].raw).unwrap());
+        for &i in order.iter().take(p.elitism.min(order.len())) {
+            next.push(self.population[i].clone());
+        }
+        while next.len() < self.population.len() {
+            let r = self.rng.f64();
+            let child = if r < p.crossover_prob {
+                let a = ops::tournament(&mut self.rng, &self.fitnesses, p.tournament_k);
+                let b = ops::tournament(&mut self.rng, &self.fitnesses, p.tournament_k);
+                ops::crossover(&mut self.rng, &self.population[a], &self.population[b], self.ps, p.limits)
+            } else if r < p.crossover_prob + p.mutation_prob {
+                let a = ops::tournament(&mut self.rng, &self.fitnesses, p.tournament_k);
+                ops::mutate(&mut self.rng, &self.population[a], self.ps, p.limits, 4)
+            } else {
+                let a = ops::tournament(&mut self.rng, &self.fitnesses, p.tournament_k);
+                self.population[a].clone()
+            };
+            next.push(child);
+        }
+        self.population = next;
+        self.gen += 1;
+        stats
+    }
+
+    /// Run to completion (or perfect solution), evaluating the final
+    /// population once more to report the true best individual.
+    pub fn run(&mut self, eval: &mut dyn Evaluator) -> RunResult {
+        let mut best: Option<(Tree, Fitness)> = None;
+        let mut found_perfect = false;
+        while self.gen < self.params.generations {
+            let stats = self.step(eval);
+            // population was replaced; with elitism >= 1 slot 0 holds
+            // the best tree of the generation just evaluated
+            let cand_tree = self.population[0].clone();
+            let cand_fit = Fitness { raw: stats.best_raw, hits: stats.best_hits };
+            if best.as_ref().map(|(_, f)| cand_fit.raw < f.raw).unwrap_or(true) {
+                best = Some((cand_tree, cand_fit));
+            }
+            if self.params.stop_on_perfect && stats.best_raw <= 0.0 {
+                found_perfect = true;
+                break;
+            }
+        }
+        let (best_tree, best_fit) = best.unwrap_or_else(|| {
+            (self.population[0].clone(), Fitness::worst())
+        });
+        RunResult {
+            best: best_tree,
+            best_fitness: best_fit,
+            generations_run: self.gen,
+            total_evals: self.total_evals,
+            history: self.history.clone(),
+            found_perfect,
+        }
+    }
+}
+
+fn rng_state(r: &Rng) -> [u64; 4] {
+    // Rng is Clone+Debug; expose state through a controlled round-trip.
+    // (Rng fields are private to keep the API tight; serialize via fork
+    // determinism: we store a seed snapshot instead.)
+    // For checkpoints we re-derive: store four draws as the state.
+    let mut c = r.clone();
+    [c.next_u64(), c.next_u64(), c.next_u64(), c.next_u64()]
+}
+
+fn rng_from_state(s: [u64; 4]) -> Rng {
+    // Reconstruct a deterministic stream from the snapshot.
+    Rng::new(s[0] ^ s[1].rotate_left(17) ^ s[2].rotate_left(31) ^ s[3].rotate_left(47))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::primset::bool_set;
+    use crate::gp::tape::{self, opcodes, BoolCases};
+
+    struct NativeMux6;
+    impl Evaluator for NativeMux6 {
+        fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
+            let cases = BoolCases::truth_table(6, |case| {
+                let addr = (case & 0b11) as usize;
+                (case >> (2 + addr)) & 1 == 1
+            });
+            trees
+                .iter()
+                .map(|t| {
+                    let tape = tape::compile(t, ps, opcodes::BOOL_NOP).unwrap();
+                    let hits = tape::eval_bool_native(&tape, &cases);
+                    Fitness { raw: (cases.ncases - hits) as f64, hits: hits as u32 }
+                })
+                .collect()
+        }
+    }
+
+    fn ps() -> PrimSet {
+        bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"])
+    }
+
+    #[test]
+    fn fitness_improves_over_generations() {
+        let ps = ps();
+        let params = Params { population: 200, generations: 15, seed: 42, ..Params::default() };
+        let mut e = Engine::new(params, &ps);
+        let result = e.run(&mut NativeMux6);
+        let first = result.history.first().unwrap().best_raw;
+        let last = result.history.last().unwrap().best_raw;
+        assert!(last <= first, "best fitness must not regress: {first} -> {last}");
+        assert!(result.best_fitness.raw <= first);
+        assert!(result.total_evals >= 200);
+    }
+
+    #[test]
+    fn mux6_often_solved() {
+        // 6-mux with pop 400 typically solves in <25 gens; use a seed
+        // known to work so the test is deterministic.
+        let ps = ps();
+        let params = Params { population: 400, generations: 30, seed: 7, ..Params::default() };
+        let mut e = Engine::new(params, &ps);
+        let result = e.run(&mut NativeMux6);
+        assert!(result.found_perfect, "best {:?}", result.best_fitness);
+        assert_eq!(result.best_fitness.hits, 64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let ps = ps();
+        let params = Params { population: 100, generations: 5, seed: 9, ..Params::default() };
+        let r1 = Engine::new(params, &ps).run(&mut NativeMux6);
+        let r2 = Engine::new(params, &ps).run(&mut NativeMux6);
+        assert_eq!(r1.best_fitness.raw, r2.best_fitness.raw);
+        assert_eq!(r1.total_evals, r2.total_evals);
+        assert_eq!(r1.best, r2.best);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_population() {
+        let ps = ps();
+        let params = Params { population: 50, generations: 3, seed: 11, ..Params::default() };
+        let mut e = Engine::new(params, &ps);
+        e.step(&mut NativeMux6);
+        let ck = e.checkpoint();
+        let j = ck.to_json().to_string();
+        let back = Checkpoint::from_json(&crate::util::json::Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(back.gen, ck.gen);
+        assert_eq!(back.population, ck.population);
+        assert_eq!(back.total_evals, ck.total_evals);
+        let e2 = Engine::from_checkpoint(params, &ps, back);
+        assert_eq!(e2.generation(), 1);
+        assert_eq!(e2.population().len(), 50);
+    }
+}

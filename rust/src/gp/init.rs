@@ -1,0 +1,141 @@
+//! Population initialization: Koza's ramped half-and-half (grow / full
+//! alternating over a depth ramp), as used by both Lil-gp and ECJ.
+
+use crate::gp::primset::PrimSet;
+use crate::gp::tree::Tree;
+use crate::util::rng::Rng;
+
+/// Generate one tree with the `full` method at exactly `depth`.
+pub fn full(rng: &mut Rng, ps: &PrimSet, depth: usize) -> Tree {
+    let mut t = Tree::new(Vec::new(), Vec::new());
+    gen_node(rng, ps, &mut t, depth, true);
+    t
+}
+
+/// Generate one tree with the `grow` method up to `depth`.
+pub fn grow(rng: &mut Rng, ps: &PrimSet, depth: usize) -> Tree {
+    let mut t = Tree::new(Vec::new(), Vec::new());
+    gen_node(rng, ps, &mut t, depth, false);
+    t
+}
+
+fn gen_node(rng: &mut Rng, ps: &PrimSet, t: &mut Tree, depth: usize, full: bool) {
+    let pick_terminal = if depth <= 1 {
+        true
+    } else if full {
+        false
+    } else {
+        // grow: uniform over all primitives => P(term) = |T| / |T u F|
+        rng.below(ps.prims.len()) < ps.terminals.len()
+    };
+    let op = if pick_terminal || ps.functions.is_empty() {
+        *rng.choose(&ps.terminals)
+    } else {
+        *rng.choose(&ps.functions)
+    };
+    t.ops.push(op);
+    t.consts.push(if Some(op) == ps.erc { rng.uniform(-1.0, 1.0) as f32 } else { 0.0 });
+    for _ in 0..ps.arity(op) {
+        gen_node(rng, ps, t, depth.saturating_sub(1), full);
+    }
+}
+
+/// Ramped half-and-half: depths cycle over `[min_depth, max_depth]`,
+/// alternating grow/full. Trees are size-capped (the tape machine's
+/// `TAPE_LEN`): oversized candidates are regenerated at reduced depth,
+/// so with high-arity primitive sets the population stays evaluable by
+/// the AOT artifact.
+pub fn ramped_half_and_half(
+    rng: &mut Rng,
+    ps: &PrimSet,
+    pop_size: usize,
+    min_depth: usize,
+    max_depth: usize,
+) -> Vec<Tree> {
+    ramped_half_and_half_sized(
+        rng,
+        ps,
+        pop_size,
+        min_depth,
+        max_depth,
+        crate::gp::tape::opcodes::TAPE_LEN as usize,
+    )
+}
+
+/// [`ramped_half_and_half`] with an explicit size cap.
+pub fn ramped_half_and_half_sized(
+    rng: &mut Rng,
+    ps: &PrimSet,
+    pop_size: usize,
+    min_depth: usize,
+    max_depth: usize,
+    max_size: usize,
+) -> Vec<Tree> {
+    assert!(min_depth >= 1 && min_depth <= max_depth);
+    let mut pop = Vec::with_capacity(pop_size);
+    let span = max_depth - min_depth + 1;
+    for i in 0..pop_size {
+        let mut depth = min_depth + (i / 2) % span;
+        let t = loop {
+            let cand = if i % 2 == 0 { grow(rng, ps, depth) } else { full(rng, ps, depth) };
+            if cand.len() <= max_size
+                && cand.postfix_need(ps) <= crate::gp::tape::opcodes::STACK_DEPTH as usize
+            {
+                break cand;
+            }
+            depth = (depth - 1).max(min_depth.min(2));
+        };
+        pop.push(t);
+    }
+    pop
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::primset::bool_set;
+
+    fn ps() -> PrimSet {
+        bool_set(11, true, &["a0", "a1", "a2", "d0", "d1", "d2", "d3", "d4", "d5", "d6", "d7"])
+    }
+
+    #[test]
+    fn full_trees_have_exact_depth() {
+        let ps = ps();
+        let mut rng = Rng::new(1);
+        for d in 1..=6 {
+            for _ in 0..20 {
+                let t = full(&mut rng, &ps, d);
+                assert_eq!(t.depth(&ps), d);
+                assert!(t.is_well_formed(&ps));
+            }
+        }
+    }
+
+    #[test]
+    fn grow_trees_bounded_depth() {
+        let ps = ps();
+        let mut rng = Rng::new(2);
+        for d in 1..=6 {
+            for _ in 0..20 {
+                let t = grow(&mut rng, &ps, d);
+                assert!(t.depth(&ps) <= d);
+                assert!(t.is_well_formed(&ps));
+            }
+        }
+    }
+
+    #[test]
+    fn ramped_population_valid_and_diverse() {
+        let ps = ps();
+        let mut rng = Rng::new(3);
+        let pop = ramped_half_and_half(&mut rng, &ps, 200, 2, 6);
+        assert_eq!(pop.len(), 200);
+        for t in &pop {
+            assert!(t.is_well_formed(&ps));
+            assert!(t.depth(&ps) <= 6);
+        }
+        let sizes: std::collections::HashSet<usize> = pop.iter().map(|t| t.len()).collect();
+        assert!(sizes.len() > 5, "expected diverse sizes, got {sizes:?}");
+    }
+}

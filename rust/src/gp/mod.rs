@@ -1,0 +1,55 @@
+//! Genetic-programming engine — the "Lil-gp / ECJ analog" substrate.
+//!
+//! Trees are stored as *preorder opcode arrays* (`tree::Tree`): a
+//! subtree is a contiguous slice, so crossover and mutation are slice
+//! splices — no pointers, no allocation churn, trivially serializable
+//! for BOINC-style checkpoints.
+//!
+//! Fitness evaluation is pluggable (`Evaluator`): each problem ships a
+//! native Rust evaluator (the paper's **Method 1** — Lil-gp *ported*
+//! into the client binary), and the boolean/regression problems can
+//! also be evaluated through the AOT-compiled XLA artifact via
+//! [`crate::runtime`] (the paper's **Method 2** — an opaque payload
+//! executed by the wrapper).
+
+pub mod engine;
+pub mod init;
+pub mod ops;
+pub mod primset;
+pub mod problems;
+pub mod tape;
+pub mod tree;
+
+/// Minimizing fitness: lower `raw` is better; `hits` is the Koza hit
+/// count (exact-match cases) reported alongside, as in the paper's
+/// `Raw/Adjusted/Hits` summary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Fitness {
+    pub raw: f64,
+    pub hits: u32,
+}
+
+impl Fitness {
+    pub fn worst() -> Fitness {
+        Fitness { raw: f64::INFINITY, hits: 0 }
+    }
+
+    /// Koza's adjusted fitness 1/(1+raw).
+    pub fn adjusted(&self) -> f64 {
+        1.0 / (1.0 + self.raw)
+    }
+
+    pub fn better_than(&self, other: &Fitness) -> bool {
+        self.raw < other.raw
+    }
+}
+
+/// Anything that can score a batch of trees.
+pub trait Evaluator {
+    fn evaluate(&mut self, trees: &[tree::Tree], ps: &primset::PrimSet) -> Vec<Fitness>;
+    /// Approximate FLOP cost of evaluating one individual once — used by
+    /// the simulator to convert work into virtual seconds.
+    fn cost_per_eval(&self) -> f64 {
+        1.0e6
+    }
+}

@@ -1,0 +1,199 @@
+//! Genetic operators: tournament selection, subtree crossover, subtree
+//! mutation — with Koza-style size/depth limits enforced by retry.
+
+use crate::gp::init;
+use crate::gp::primset::PrimSet;
+use crate::gp::tree::Tree;
+use crate::gp::Fitness;
+use crate::util::rng::Rng;
+
+/// Limits applied to offspring; violating offspring are replaced by a
+/// parent copy (Koza's standard fallback).
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    pub max_depth: usize,
+    pub max_size: usize,
+    /// Max postfix evaluation-stack need (tape machine STACK_DEPTH);
+    /// keeps every individual artifact-evaluable.
+    pub max_stack: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        // Koza's classic depth limit 17; size/stack bounded by the tape
+        // machine so every individual stays artifact-evaluable.
+        Limits {
+            max_depth: 17,
+            max_size: crate::gp::tape::opcodes::TAPE_LEN as usize,
+            max_stack: crate::gp::tape::opcodes::STACK_DEPTH as usize,
+        }
+    }
+}
+
+impl Limits {
+    /// True when `t` satisfies every limit.
+    pub fn admits(&self, t: &Tree, ps: &PrimSet) -> bool {
+        t.len() <= self.max_size
+            && t.depth(ps) <= self.max_depth
+            && t.postfix_need(ps) <= self.max_stack
+    }
+}
+
+/// Tournament selection: returns the index of the best of `k` sampled
+/// individuals (minimizing raw fitness).
+pub fn tournament(rng: &mut Rng, fits: &[Fitness], k: usize) -> usize {
+    debug_assert!(k >= 1 && !fits.is_empty());
+    let mut best = rng.below(fits.len());
+    for _ in 1..k {
+        let c = rng.below(fits.len());
+        if fits[c].raw < fits[best].raw {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Pick a crossover point: 90% internal node / 10% leaf (Koza).
+fn pick_point(rng: &mut Rng, t: &Tree, ps: &PrimSet) -> usize {
+    let internals: Vec<usize> =
+        (0..t.len()).filter(|&i| ps.arity(t.ops[i]) > 0).collect();
+    let leaves: Vec<usize> = (0..t.len()).filter(|&i| ps.arity(t.ops[i]) == 0).collect();
+    if !internals.is_empty() && (leaves.is_empty() || rng.chance(0.9)) {
+        internals[rng.below(internals.len())]
+    } else {
+        leaves[rng.below(leaves.len())]
+    }
+}
+
+/// Subtree crossover. Returns offspring of `a` with a subtree of `b`
+/// spliced in, or a clone of `a` when the offspring violates `limits`.
+pub fn crossover(rng: &mut Rng, a: &Tree, b: &Tree, ps: &PrimSet, limits: Limits) -> Tree {
+    for _attempt in 0..4 {
+        let pa = pick_point(rng, a, ps);
+        let pa_end = a.subtree_end(ps, pa);
+        let pb = pick_point(rng, b, ps);
+        let pb_end = b.subtree_end(ps, pb);
+        let mut ops = Vec::with_capacity(a.len() - (pa_end - pa) + (pb_end - pb));
+        let mut consts = Vec::with_capacity(ops.capacity());
+        ops.extend_from_slice(&a.ops[..pa]);
+        ops.extend_from_slice(&b.ops[pb..pb_end]);
+        ops.extend_from_slice(&a.ops[pa_end..]);
+        consts.extend_from_slice(&a.consts[..pa]);
+        consts.extend_from_slice(&b.consts[pb..pb_end]);
+        consts.extend_from_slice(&a.consts[pa_end..]);
+        let child = Tree::new(ops, consts);
+        if limits.admits(&child, ps) {
+            debug_assert!(child.is_well_formed(ps));
+            return child;
+        }
+    }
+    a.clone()
+}
+
+/// Subtree mutation: replace a random subtree with a grown one.
+pub fn mutate(rng: &mut Rng, t: &Tree, ps: &PrimSet, limits: Limits, grow_depth: usize) -> Tree {
+    for _attempt in 0..4 {
+        let p = pick_point(rng, t, ps);
+        let p_end = t.subtree_end(ps, p);
+        let sub = init::grow(rng, ps, grow_depth);
+        let mut ops = Vec::with_capacity(t.len() - (p_end - p) + sub.len());
+        let mut consts = Vec::with_capacity(ops.capacity());
+        ops.extend_from_slice(&t.ops[..p]);
+        ops.extend_from_slice(&sub.ops);
+        ops.extend_from_slice(&t.ops[p_end..]);
+        consts.extend_from_slice(&t.consts[..p]);
+        consts.extend_from_slice(&sub.consts);
+        consts.extend_from_slice(&t.consts[p_end..]);
+        let child = Tree::new(ops, consts);
+        if limits.admits(&child, ps) {
+            debug_assert!(child.is_well_formed(ps));
+            return child;
+        }
+    }
+    t.clone()
+}
+
+/// Point mutation for ERC constants (gaussian jitter); no-op for trees
+/// without ERC nodes.
+pub fn jitter_constants(rng: &mut Rng, t: &mut Tree, ps: &PrimSet, sigma: f64) {
+    if ps.erc.is_none() {
+        return;
+    }
+    let erc = ps.erc.unwrap();
+    for i in 0..t.len() {
+        if t.ops[i] == erc && rng.chance(0.1) {
+            t.consts[i] += (rng.normal() * sigma) as f32;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::init::ramped_half_and_half;
+    use crate::gp::primset::{bool_set, regression_set};
+
+    fn ps() -> PrimSet {
+        bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"])
+    }
+
+    #[test]
+    fn tournament_prefers_better() {
+        let fits: Vec<Fitness> =
+            (0..100).map(|i| Fitness { raw: i as f64, hits: 0 }).collect();
+        let mut rng = Rng::new(5);
+        let mut wins_better_half = 0;
+        for _ in 0..500 {
+            if tournament(&mut rng, &fits, 7) < 50 {
+                wins_better_half += 1;
+            }
+        }
+        assert!(wins_better_half > 450, "{wins_better_half}");
+    }
+
+    #[test]
+    fn crossover_preserves_wellformedness() {
+        let ps = ps();
+        let mut rng = Rng::new(6);
+        let pop = ramped_half_and_half(&mut rng, &ps, 50, 2, 6);
+        let limits = Limits::default();
+        for i in 0..200 {
+            let a = &pop[i % pop.len()];
+            let b = &pop[(i * 7 + 3) % pop.len()];
+            let c = crossover(&mut rng, a, b, &ps, limits);
+            assert!(c.is_well_formed(&ps), "xover {i}");
+            assert!(c.len() <= limits.max_size);
+            assert!(c.depth(&ps) <= limits.max_depth);
+        }
+    }
+
+    #[test]
+    fn mutation_preserves_wellformedness() {
+        let ps = regression_set(1);
+        let mut rng = Rng::new(7);
+        let pop = ramped_half_and_half(&mut rng, &ps, 50, 2, 6);
+        let limits = Limits::default();
+        for (i, t) in pop.iter().enumerate() {
+            let m = mutate(&mut rng, t, &ps, limits, 4);
+            assert!(m.is_well_formed(&ps), "mut {i}");
+            assert!(m.len() <= limits.max_size);
+        }
+    }
+
+    #[test]
+    fn limits_respected_under_stress() {
+        let ps = ps();
+        let mut rng = Rng::new(8);
+        let limits = Limits { max_depth: 5, max_size: 20, max_stack: 16 };
+        let mut pop = ramped_half_and_half(&mut rng, &ps, 20, 2, 4);
+        for gen in 0..20 {
+            let mut next = Vec::new();
+            for i in 0..pop.len() {
+                let c = crossover(&mut rng, &pop[i], &pop[(i + gen) % pop.len()], &ps, limits);
+                assert!(c.depth(&ps) <= 5 && c.len() <= 20);
+                next.push(c);
+            }
+            pop = next;
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Primitive sets: the typed function/terminal vocabulary of a GP
+//! problem. Node opcodes in [`crate::gp::tree::Tree`] index into a
+//! `PrimSet`; tape-backed problems additionally map every primitive to
+//! its shared tape opcode (the contract in
+//! `python/compile/kernels/opcodes.py`).
+
+/// One primitive (function or terminal).
+#[derive(Clone, Copy, Debug)]
+pub struct Prim {
+    pub name: &'static str,
+    pub arity: u8,
+    /// Tape opcode for artifact evaluation; -1 for problems that are
+    /// never tape-compiled (ant, interest point).
+    pub tape_op: i32,
+}
+
+/// The primitive vocabulary of one problem.
+#[derive(Clone, Debug)]
+pub struct PrimSet {
+    pub prims: Vec<Prim>,
+    /// Indices of terminals (arity 0) in `prims`.
+    pub terminals: Vec<u8>,
+    /// Indices of functions (arity >= 1) in `prims`.
+    pub functions: Vec<u8>,
+    /// Index of the ephemeral-random-constant terminal, if any.
+    pub erc: Option<u8>,
+}
+
+impl PrimSet {
+    pub fn new(prims: Vec<Prim>, erc: Option<u8>) -> PrimSet {
+        let terminals = prims
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.arity == 0)
+            .map(|(i, _)| i as u8)
+            .collect();
+        let functions = prims
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.arity > 0)
+            .map(|(i, _)| i as u8)
+            .collect();
+        PrimSet { prims, terminals, functions, erc }
+    }
+
+    #[inline]
+    pub fn arity(&self, op: u8) -> u8 {
+        self.prims[op as usize].arity
+    }
+
+    pub fn name(&self, op: u8) -> &'static str {
+        self.prims[op as usize].name
+    }
+
+    /// Max primitive arity (used to size evaluation stacks).
+    pub fn max_arity(&self) -> u8 {
+        self.prims.iter().map(|p| p.arity).max().unwrap_or(0)
+    }
+}
+
+/// Boolean primitive set over `nvars` inputs (multiplexer, parity).
+/// `with_if` adds the 3-ary IF used by the multiplexer function set;
+/// parity traditionally uses {AND, OR, NAND, NOR}.
+pub fn bool_set(nvars: usize, with_if: bool, names: &'static [&'static str]) -> PrimSet {
+    use crate::gp::tape::opcodes as oc;
+    assert!(nvars <= oc::BOOL_NUM_VARS as usize);
+    let mut prims = Vec::new();
+    for v in 0..nvars {
+        prims.push(Prim { name: names.get(v).copied().unwrap_or("v?"), arity: 0, tape_op: v as i32 });
+    }
+    prims.push(Prim { name: "and", arity: 2, tape_op: oc::BOOL_OP_AND });
+    prims.push(Prim { name: "or", arity: 2, tape_op: oc::BOOL_OP_OR });
+    prims.push(Prim { name: "not", arity: 1, tape_op: oc::BOOL_OP_NOT });
+    if with_if {
+        prims.push(Prim { name: "if", arity: 3, tape_op: oc::BOOL_OP_IF });
+    } else {
+        prims.push(Prim { name: "nand", arity: 2, tape_op: oc::BOOL_OP_NAND });
+        prims.push(Prim { name: "nor", arity: 2, tape_op: oc::BOOL_OP_NOR });
+    }
+    PrimSet::new(prims, None)
+}
+
+/// Regression primitive set over `nvars` inputs with ERC constants.
+pub fn regression_set(nvars: usize) -> PrimSet {
+    use crate::gp::tape::opcodes as oc;
+    assert!(nvars <= oc::REG_NUM_VARS as usize);
+    let names = ["x0", "x1", "x2", "x3", "x4", "x5", "x6", "x7"];
+    let mut prims = Vec::new();
+    for v in 0..nvars {
+        prims.push(Prim { name: names[v], arity: 0, tape_op: v as i32 });
+    }
+    let erc_idx = prims.len() as u8;
+    prims.push(Prim { name: "erc", arity: 0, tape_op: oc::REG_OP_CONST });
+    prims.push(Prim { name: "+", arity: 2, tape_op: oc::REG_OP_ADD });
+    prims.push(Prim { name: "-", arity: 2, tape_op: oc::REG_OP_SUB });
+    prims.push(Prim { name: "*", arity: 2, tape_op: oc::REG_OP_MUL });
+    prims.push(Prim { name: "%", arity: 2, tape_op: oc::REG_OP_DIV });
+    prims.push(Prim { name: "sin", arity: 1, tape_op: oc::REG_OP_SIN });
+    prims.push(Prim { name: "cos", arity: 1, tape_op: oc::REG_OP_COS });
+    PrimSet::new(prims, Some(erc_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bool_set_partitions() {
+        let ps = bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"]);
+        assert_eq!(ps.terminals.len(), 6);
+        assert_eq!(ps.functions.len(), 4);
+        assert_eq!(ps.max_arity(), 3);
+        assert_eq!(ps.name(0), "a0");
+        for &t in &ps.terminals {
+            assert_eq!(ps.arity(t), 0);
+        }
+        for &f in &ps.functions {
+            assert!(ps.arity(f) >= 1);
+        }
+    }
+
+    #[test]
+    fn parity_set_has_no_if() {
+        let ps = bool_set(5, false, &["b0", "b1", "b2", "b3", "b4"]);
+        assert_eq!(ps.max_arity(), 2);
+        assert!(ps.prims.iter().any(|p| p.name == "nand"));
+    }
+
+    #[test]
+    fn regression_set_erc() {
+        let ps = regression_set(1);
+        let erc = ps.erc.unwrap();
+        assert_eq!(ps.arity(erc), 0);
+        assert_eq!(ps.name(erc), "erc");
+    }
+}

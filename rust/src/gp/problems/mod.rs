@@ -1,0 +1,105 @@
+//! The paper's GP workloads.
+//!
+//! * [`ant`] — Artificial Ant / Santa Fe trail (Table 1, Lil-gp,
+//!   **Method 1**: natively evaluated, stateful control flow).
+//! * [`multiplexer`] — 6/11/20-input boolean multiplexer (Table 2, ECJ,
+//!   **Method 2**: tape-compiled, evaluable natively or via the AOT
+//!   artifact).
+//! * [`parity`] — even-parity (the classic Lil-gp companion benchmark).
+//! * [`regression`] — quartic symbolic regression (Lil-gp's symbolic
+//!   linear regression example, §3.1).
+//! * [`interest_point`] — GP interest-point detector on synthetic
+//!   images (Table 3, **Method 3** virtualization workload).
+
+pub mod ant;
+pub mod interest_point;
+pub mod multiplexer;
+pub mod parity;
+pub mod regression;
+
+/// A problem bundles a primitive set, an evaluator factory and the
+/// simulator's cost model (FLOPs per individual-evaluation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ProblemKind {
+    Ant,
+    Mux6,
+    Mux11,
+    Mux20,
+    Parity5,
+    Quartic,
+    InterestPoint,
+}
+
+impl ProblemKind {
+    pub fn parse(name: &str) -> anyhow::Result<ProblemKind> {
+        Ok(match name {
+            "ant" | "santafe" => ProblemKind::Ant,
+            "mux6" => ProblemKind::Mux6,
+            "mux11" => ProblemKind::Mux11,
+            "mux20" => ProblemKind::Mux20,
+            "parity5" => ProblemKind::Parity5,
+            "quartic" | "regression" => ProblemKind::Quartic,
+            "interest_point" | "ip" => ProblemKind::InterestPoint,
+            other => anyhow::bail!("unknown problem '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ProblemKind::Ant => "ant",
+            ProblemKind::Mux6 => "mux6",
+            ProblemKind::Mux11 => "mux11",
+            ProblemKind::Mux20 => "mux20",
+            ProblemKind::Parity5 => "parity5",
+            ProblemKind::Quartic => "quartic",
+            ProblemKind::InterestPoint => "interest_point",
+        }
+    }
+
+    /// Approximate FLOPs to evaluate ONE individual ONE time, used by
+    /// the discrete-event simulator to convert GP work into virtual
+    /// seconds on a host with a given FLOPS rating. Derived from the
+    /// per-run wall-clock the paper reports (134.75 s for an 11-mux run
+    /// of 50 gens x 4000 ind on ~1 GFLOPS-era hosts, 31 079 s for the
+    /// 20-mux, 18 h per IP solution).
+    pub fn flops_per_eval(&self) -> f64 {
+        match self {
+            ProblemKind::Ant => 2.0e5,            // 400-step grid walk
+            ProblemKind::Mux6 => 1.0e4,
+            ProblemKind::Mux11 => 6.7e5,          // 2048 cases
+            ProblemKind::Mux20 => 6.2e8,          // 2^20 cases
+            ProblemKind::Parity5 => 6.0e3,
+            ProblemKind::Quartic => 4.0e3,
+            ProblemKind::InterestPoint => 1.15e10, // image pyramid ops
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for k in [
+            ProblemKind::Ant,
+            ProblemKind::Mux6,
+            ProblemKind::Mux11,
+            ProblemKind::Mux20,
+            ProblemKind::Parity5,
+            ProblemKind::Quartic,
+            ProblemKind::InterestPoint,
+        ] {
+            assert_eq!(ProblemKind::parse(k.name()).unwrap(), k);
+        }
+        assert!(ProblemKind::parse("nope").is_err());
+    }
+
+    #[test]
+    fn cost_ordering_matches_paper() {
+        // the paper's ordering: quartic < mux11 << mux20 << interest point
+        assert!(ProblemKind::Quartic.flops_per_eval() < ProblemKind::Mux11.flops_per_eval());
+        assert!(ProblemKind::Mux11.flops_per_eval() < ProblemKind::Mux20.flops_per_eval());
+        assert!(ProblemKind::Mux20.flops_per_eval() < ProblemKind::InterestPoint.flops_per_eval());
+    }
+}

@@ -1,0 +1,97 @@
+//! Even-parity-N (Koza): output 1 iff the number of set input bits is
+//! even. Classic Lil-gp companion benchmark ("even parity 5", §3.1 of
+//! the paper). Function set {AND, OR, NAND, NOR} — no IF, which is what
+//! makes parity hard for GP.
+
+use crate::gp::primset::{bool_set, PrimSet};
+use crate::gp::tape::{self, opcodes, BoolCases};
+use crate::gp::tree::Tree;
+use crate::gp::{Evaluator, Fitness};
+
+pub struct Parity {
+    pub nbits: usize,
+    pub cases: BoolCases,
+    ps: PrimSet,
+}
+
+const NAMES: &[&str] = &["b0", "b1", "b2", "b3", "b4", "b5", "b6", "b7"];
+
+impl Parity {
+    pub fn new(nbits: usize) -> Parity {
+        assert!((2..=8).contains(&nbits));
+        let cases = BoolCases::truth_table(nbits, |case| case.count_ones() % 2 == 0);
+        let ps = bool_set(nbits, false, NAMES);
+        Parity { nbits, cases, ps }
+    }
+
+    pub fn primset(&self) -> &PrimSet {
+        &self.ps
+    }
+}
+
+pub struct NativeEvaluator<'a> {
+    pub problem: &'a Parity,
+}
+
+impl Evaluator for NativeEvaluator<'_> {
+    fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
+        trees
+            .iter()
+            .map(|t| match tape::compile(t, ps, opcodes::BOOL_NOP) {
+                Ok(tape) => {
+                    let hits = tape::eval_bool_native(&tape, &self.problem.cases);
+                    Fitness { raw: (self.problem.cases.ncases - hits) as f64, hits: hits as u32 }
+                }
+                Err(_) => Fitness::worst(),
+            })
+            .collect()
+    }
+
+    fn cost_per_eval(&self) -> f64 {
+        6.0e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parity5_dimensions() {
+        let p = Parity::new(5);
+        assert_eq!(p.cases.ncases, 32);
+        assert_eq!(p.cases.words(), 1);
+        // even parity of 0 bits set -> true for case 0
+        assert_eq!(p.cases.target[0] & 1, 1);
+        // case 1 (one bit) -> odd -> 0
+        assert_eq!((p.cases.target[0] >> 1) & 1, 0);
+        // case 3 (two bits) -> even -> 1
+        assert_eq!((p.cases.target[0] >> 3) & 1, 1);
+    }
+
+    #[test]
+    fn function_set_excludes_if() {
+        let p = Parity::new(5);
+        assert!(p.primset().prims.iter().all(|pr| pr.name != "if"));
+        assert!(p.primset().prims.iter().any(|pr| pr.name == "nand"));
+    }
+
+    #[test]
+    fn xor_equivalent_tree_scores_well() {
+        let p = Parity::new(2);
+        // even-parity-2 = XNOR = NOT XOR; with {and,or,nand,nor}:
+        // (or (and b0 b1) (nor b0 b1)); layout: terminals 0..1,
+        // and=2, or=3, not=4? bool_set(nvars, false): and,or,not,nand,nor
+        let ps = p.primset();
+        let idx = |name: &str| {
+            ps.prims.iter().position(|pr| pr.name == name).unwrap() as u8
+        };
+        let t = Tree::new(
+            vec![idx("or"), idx("and"), 0, 1, idx("nor"), 0, 1],
+            vec![0.0; 7],
+        );
+        let tape = tape::compile(&t, ps, opcodes::BOOL_NOP).unwrap();
+        let hits = tape::eval_bool_native(&tape, &p.cases);
+        assert_eq!(hits, 4, "XNOR solves even-parity-2 perfectly");
+    }
+}

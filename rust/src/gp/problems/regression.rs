@@ -1,0 +1,80 @@
+//! Symbolic regression of the quartic x^4 + x^3 + x^2 + x on [-1, 1]
+//! (Koza 1992) — Lil-gp's "symbolic linear regression" example problem
+//! (§3.1 of the paper). 20 fitness cases, ERC constants.
+
+use crate::gp::primset::{regression_set, PrimSet};
+use crate::gp::tape::{self, opcodes, RegCases};
+use crate::gp::tree::Tree;
+use crate::gp::{Evaluator, Fitness};
+
+pub struct Quartic {
+    pub cases: RegCases,
+    ps: PrimSet,
+}
+
+impl Quartic {
+    pub fn new(ncases: usize) -> Quartic {
+        let xs: Vec<f32> = (0..ncases)
+            .map(|i| -1.0 + 2.0 * i as f32 / (ncases.max(2) - 1) as f32)
+            .collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| x + x * x + x * x * x + x * x * x * x).collect();
+        Quartic { cases: RegCases { x: vec![xs], y: ys }, ps: regression_set(1) }
+    }
+
+    pub fn primset(&self) -> &PrimSet {
+        &self.ps
+    }
+}
+
+pub struct NativeEvaluator<'a> {
+    pub problem: &'a Quartic,
+}
+
+impl Evaluator for NativeEvaluator<'_> {
+    fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
+        trees
+            .iter()
+            .map(|t| match tape::compile(t, ps, opcodes::REG_NOP) {
+                Ok(tape) => {
+                    let (sse, hits) = tape::eval_reg_native(&tape, &self.problem.cases);
+                    Fitness { raw: sse, hits }
+                }
+                Err(_) => Fitness::worst(),
+            })
+            .collect()
+    }
+
+    fn cost_per_eval(&self) -> f64 {
+        4.0e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::engine::{Engine, Params};
+
+    #[test]
+    fn case_generation_covers_interval() {
+        let q = Quartic::new(20);
+        assert_eq!(q.cases.ncases(), 20);
+        assert!((q.cases.x[0][0] + 1.0).abs() < 1e-6);
+        assert!((q.cases.x[0][19] - 1.0).abs() < 1e-6);
+        // y(1) = 4
+        assert!((q.cases.y[19] - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gp_reduces_sse() {
+        let q = Quartic::new(20);
+        let params = Params { population: 300, generations: 12, seed: 21, ..Params::default() };
+        let ps = q.primset().clone();
+        let mut e = Engine::new(params, &ps);
+        let mut ev = NativeEvaluator { problem: &q };
+        let result = e.run(&mut ev);
+        let first = result.history.first().unwrap().best_raw;
+        let last = result.best_fitness.raw;
+        assert!(last <= first);
+        assert!(last < 5.0, "should approximate quartic, sse={last}");
+    }
+}

@@ -1,0 +1,445 @@
+//! Tree → postfix tape compiler and native tape evaluators.
+//!
+//! The tape format is the contract with the AOT artifacts — see
+//! `python/compile/kernels/opcodes.py`. The rust constants below mirror
+//! that file; `tests::opcode_contract` is the golden test paired with
+//! `python/tests/test_opcodes.py`.
+//!
+//! Two evaluation paths exist for the same tape:
+//! * [`eval_bool_native`] / [`eval_reg_native`] — the "Method 1 ported"
+//!   path and the baseline the artifact is validated against;
+//! * [`crate::runtime::ArtifactEvaluator`] — the "Method 2 wrapper"
+//!   path through the PJRT-loaded HLO.
+
+use crate::gp::primset::PrimSet;
+use crate::gp::tree::Tree;
+
+/// Mirror of python/compile/kernels/opcodes.py (golden-tested).
+pub mod opcodes {
+    pub const BOOL_NUM_VARS: i32 = 24;
+    pub const BOOL_OP_NOT: i32 = 24;
+    pub const BOOL_OP_AND: i32 = 25;
+    pub const BOOL_OP_OR: i32 = 26;
+    pub const BOOL_OP_NAND: i32 = 27;
+    pub const BOOL_OP_NOR: i32 = 28;
+    pub const BOOL_OP_XOR: i32 = 29;
+    pub const BOOL_OP_IF: i32 = 30;
+    pub const BOOL_NOP: i32 = 31;
+
+    pub const REG_NUM_VARS: i32 = 8;
+    pub const REG_OP_CONST: i32 = 8;
+    pub const REG_OP_ADD: i32 = 9;
+    pub const REG_OP_SUB: i32 = 10;
+    pub const REG_OP_MUL: i32 = 11;
+    pub const REG_OP_DIV: i32 = 12;
+    pub const REG_OP_SIN: i32 = 13;
+    pub const REG_OP_COS: i32 = 14;
+    pub const REG_OP_EXP: i32 = 15;
+    pub const REG_OP_LOG: i32 = 16;
+    pub const REG_OP_NEG: i32 = 17;
+    pub const REG_NOP: i32 = 18;
+    pub const REG_HIT_EPS: f32 = 0.01;
+
+    pub const TAPE_LEN: i32 = 64;
+    pub const STACK_DEPTH: i32 = 16;
+    pub const BOOL_BATCH: usize = 256;
+    pub const BOOL_WORDS: usize = 64;
+    pub const REG_BATCH: usize = 256;
+    pub const REG_CASES: usize = 64;
+}
+
+/// A compiled tape: fixed-length opcode row + aligned constants.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tape {
+    pub ops: Vec<i32>,
+    pub consts: Vec<f32>,
+}
+
+/// Error for trees that cannot be tape-compiled.
+#[derive(Debug)]
+pub enum TapeError {
+    TooLong { size: usize },
+    TooDeep { depth: usize },
+    NotTapeable,
+}
+
+impl std::fmt::Display for TapeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TapeError::TooLong { size } => write!(f, "tree size {size} exceeds tape length"),
+            TapeError::TooDeep { depth } => write!(f, "postfix stack depth {depth} exceeds machine depth"),
+            TapeError::NotTapeable => write!(f, "primitive set has no tape mapping"),
+        }
+    }
+}
+impl std::error::Error for TapeError {}
+
+/// Compile a preorder tree to a NOP-padded postfix tape of length
+/// `opcodes::TAPE_LEN`, validating size and stack-depth constraints.
+pub fn compile(tree: &Tree, ps: &PrimSet, nop: i32) -> Result<Tape, TapeError> {
+    let l = opcodes::TAPE_LEN as usize;
+    if tree.len() > l {
+        return Err(TapeError::TooLong { size: tree.len() });
+    }
+    let mut ops = Vec::with_capacity(l);
+    let mut consts = Vec::with_capacity(l);
+    // postfix = children first: recurse over the preorder array
+    fn rec(
+        t: &Tree,
+        ps: &PrimSet,
+        i: &mut usize,
+        ops: &mut Vec<i32>,
+        consts: &mut Vec<f32>,
+    ) -> Result<(), TapeError> {
+        let node = *i;
+        let op = t.ops[node];
+        *i += 1;
+        for _ in 0..ps.arity(op) {
+            rec(t, ps, i, ops, consts)?;
+        }
+        let tape_op = ps.prims[op as usize].tape_op;
+        if tape_op < 0 {
+            return Err(TapeError::NotTapeable);
+        }
+        ops.push(tape_op);
+        consts.push(t.consts[node]);
+        Ok(())
+    }
+    let mut i = 0;
+    rec(tree, ps, &mut i, &mut ops, &mut consts)?;
+    debug_assert_eq!(i, tree.len());
+    // verify postfix stack depth fits the machine
+    let mut depth = 0i32;
+    let mut max_depth = 0i32;
+    for (k, &op) in ops.iter().enumerate() {
+        let ar = tape_arity(op, nop);
+        depth += 1 - ar;
+        max_depth = max_depth.max(depth);
+        let _ = k;
+    }
+    if max_depth > opcodes::STACK_DEPTH {
+        return Err(TapeError::TooDeep { depth: max_depth as usize });
+    }
+    ops.resize(l, nop);
+    consts.resize(l, 0.0);
+    Ok(Tape { ops, consts })
+}
+
+fn tape_arity(op: i32, nop: i32) -> i32 {
+    use opcodes::*;
+    if nop == BOOL_NOP {
+        match op {
+            BOOL_OP_NOT => 1,
+            BOOL_OP_AND | BOOL_OP_OR | BOOL_OP_NAND | BOOL_OP_NOR | BOOL_OP_XOR => 2,
+            BOOL_OP_IF => 3,
+            _ => 0,
+        }
+    } else {
+        match op {
+            REG_OP_ADD | REG_OP_SUB | REG_OP_MUL | REG_OP_DIV => 2,
+            REG_OP_SIN | REG_OP_COS | REG_OP_EXP | REG_OP_LOG | REG_OP_NEG => 1,
+            _ => 0,
+        }
+    }
+}
+
+/// Packed boolean problem data: truth-table columns, target, mask.
+#[derive(Clone, Debug)]
+pub struct BoolCases {
+    /// `inputs[v]` = packed column for variable v, len = words.
+    pub inputs: Vec<Vec<u32>>,
+    pub target: Vec<u32>,
+    pub mask: Vec<u32>,
+    pub ncases: u64,
+}
+
+impl BoolCases {
+    /// Build the full truth table for `nbits` input bits where
+    /// `f(case) -> bool` defines the target function.
+    pub fn truth_table(nbits: usize, f: impl Fn(u64) -> bool) -> BoolCases {
+        let ncases: u64 = 1 << nbits;
+        let nwords = ncases.div_ceil(32) as usize;
+        let mut inputs = vec![vec![0u32; nwords]; nbits];
+        let mut target = vec![0u32; nwords];
+        let mut mask = vec![0u32; nwords];
+        for case in 0..ncases {
+            let w = (case / 32) as usize;
+            let b = (case % 32) as u32;
+            mask[w] |= 1 << b;
+            for (v, col) in inputs.iter_mut().enumerate() {
+                if (case >> v) & 1 == 1 {
+                    col[w] |= 1 << b;
+                }
+            }
+            if f(case) {
+                target[w] |= 1 << b;
+            }
+        }
+        BoolCases { inputs, target, mask, ncases }
+    }
+
+    pub fn words(&self) -> usize {
+        self.target.len()
+    }
+}
+
+/// Native bit-packed evaluation of one tape (the rust hot path).
+/// Returns hits — the number of fitness cases matched.
+pub fn eval_bool_native(tape: &Tape, cases: &BoolCases) -> u64 {
+    use opcodes::*;
+    let w = cases.words();
+    let mut stack = vec![0u32; (STACK_DEPTH as usize) * w];
+    let mut sp: usize = 0;
+    let zero = vec![0u32; w];
+    for &op in &tape.ops {
+        if !(0..BOOL_NOP).contains(&op) {
+            continue; // NOP
+        }
+        if op < BOOL_NUM_VARS {
+            // terminal push (missing vars read as constant-0 columns)
+            let col = cases.inputs.get(op as usize).unwrap_or(&zero);
+            if sp < STACK_DEPTH as usize {
+                stack[sp * w..(sp + 1) * w].copy_from_slice(col);
+                sp += 1;
+            } else {
+                stack[(STACK_DEPTH as usize - 1) * w..].copy_from_slice(col);
+            }
+            continue;
+        }
+        let ar = tape_arity(op, BOOL_NOP) as usize;
+        // operand slots (clamped like the kernel; well-formed tapes
+        // never clamp — guaranteed by compile())
+        let i1 = sp.saturating_sub(1);
+        let i2 = sp.saturating_sub(2);
+        let i3 = sp.saturating_sub(3);
+        let new_sp = (sp + 1).saturating_sub(ar).clamp(0, STACK_DEPTH as usize);
+        let wr = new_sp.saturating_sub(1);
+        for k in 0..w {
+            let x1 = stack[i1 * w + k];
+            let x2 = stack[i2 * w + k];
+            let x3 = stack[i3 * w + k];
+            let r = match op {
+                BOOL_OP_NOT => !x1,
+                BOOL_OP_AND => x2 & x1,
+                BOOL_OP_OR => x2 | x1,
+                BOOL_OP_NAND => !(x2 & x1),
+                BOOL_OP_NOR => !(x2 | x1),
+                BOOL_OP_XOR => x2 ^ x1,
+                BOOL_OP_IF => (x3 & x2) | (!x3 & x1),
+                _ => unreachable!(),
+            };
+            stack[wr * w + k] = r;
+        }
+        sp = new_sp;
+    }
+    let mut hits = 0u64;
+    for k in 0..w {
+        let out = stack[k]; // slot 0
+        hits += ((!(out ^ cases.target[k])) & cases.mask[k]).count_ones() as u64;
+    }
+    hits
+}
+
+/// f32 regression cases.
+#[derive(Clone, Debug)]
+pub struct RegCases {
+    /// `x[v]` = values of variable v across cases.
+    pub x: Vec<Vec<f32>>,
+    pub y: Vec<f32>,
+}
+
+impl RegCases {
+    pub fn ncases(&self) -> usize {
+        self.y.len()
+    }
+}
+
+/// Native f32 tape evaluation; returns (SSE, hits).
+pub fn eval_reg_native(tape: &Tape, cases: &RegCases) -> (f64, u32) {
+    use opcodes::*;
+    let c = cases.ncases();
+    let mut stack = vec![0f32; (STACK_DEPTH as usize) * c];
+    let mut sp: usize = 0;
+    let zero = vec![0f32; c];
+    for (t, &op) in tape.ops.iter().enumerate() {
+        if !(0..REG_NOP).contains(&op) {
+            continue;
+        }
+        if op < REG_NUM_VARS || op == REG_OP_CONST {
+            let konst = tape.consts[t];
+            if sp < STACK_DEPTH as usize {
+                if op == REG_OP_CONST {
+                    stack[sp * c..(sp + 1) * c].fill(konst);
+                } else {
+                    let col = cases.x.get(op as usize).unwrap_or(&zero);
+                    stack[sp * c..(sp + 1) * c].copy_from_slice(col);
+                }
+                sp += 1;
+            }
+            continue;
+        }
+        let ar = tape_arity(op, REG_NOP) as usize;
+        let i1 = sp.saturating_sub(1);
+        let i2 = sp.saturating_sub(2);
+        let new_sp = (sp + 1).saturating_sub(ar).clamp(0, STACK_DEPTH as usize);
+        let wr = new_sp.saturating_sub(1);
+        for k in 0..c {
+            let x1 = stack[i1 * c + k];
+            let x2 = stack[i2 * c + k];
+            let r = match op {
+                REG_OP_ADD => x2 + x1,
+                REG_OP_SUB => x2 - x1,
+                REG_OP_MUL => x2 * x1,
+                REG_OP_DIV => {
+                    if x1.abs() < 1e-9 {
+                        1.0
+                    } else {
+                        x2 / x1
+                    }
+                }
+                REG_OP_SIN => x1.sin(),
+                REG_OP_COS => x1.cos(),
+                REG_OP_EXP => x1.clamp(-50.0, 50.0).exp(),
+                REG_OP_LOG => {
+                    if x1.abs() < 1e-9 {
+                        0.0
+                    } else {
+                        x1.abs().ln()
+                    }
+                }
+                REG_OP_NEG => -x1,
+                _ => unreachable!(),
+            };
+            stack[wr * c + k] = r;
+        }
+        sp = new_sp;
+    }
+    let mut sse = 0f64;
+    let mut hits = 0u32;
+    for k in 0..c {
+        let err = (stack[k] - cases.y[k]) as f64;
+        sse += err * err;
+        if err.abs() <= REG_HIT_EPS as f64 {
+            hits += 1;
+        }
+    }
+    (sse, hits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::opcodes::*;
+    use super::*;
+    use crate::gp::init::ramped_half_and_half;
+    use crate::gp::primset::{bool_set, regression_set};
+    use crate::util::rng::Rng;
+
+    /// Golden pair of python/tests/test_opcodes.py — change together.
+    #[test]
+    fn opcode_contract() {
+        assert_eq!(BOOL_NUM_VARS, 24);
+        assert_eq!(BOOL_OP_NOT, 24);
+        assert_eq!(BOOL_OP_AND, 25);
+        assert_eq!(BOOL_OP_OR, 26);
+        assert_eq!(BOOL_OP_NAND, 27);
+        assert_eq!(BOOL_OP_NOR, 28);
+        assert_eq!(BOOL_OP_XOR, 29);
+        assert_eq!(BOOL_OP_IF, 30);
+        assert_eq!(BOOL_NOP, 31);
+        assert_eq!(REG_NUM_VARS, 8);
+        assert_eq!(REG_OP_CONST, 8);
+        assert_eq!(REG_NOP, 18);
+        assert_eq!(TAPE_LEN, 64);
+        assert_eq!(STACK_DEPTH, 16);
+        assert_eq!(BOOL_BATCH, 256);
+        assert_eq!(BOOL_WORDS, 64);
+    }
+
+    fn mux6_ps() -> PrimSet {
+        bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"])
+    }
+
+    fn mux6_cases() -> BoolCases {
+        BoolCases::truth_table(6, |case| {
+            let addr = (case & 0b11) as usize;
+            (case >> (2 + addr)) & 1 == 1
+        })
+    }
+
+    #[test]
+    fn compile_is_postfix_and_padded() {
+        let ps = mux6_ps();
+        // (and a0 (not d0)) preorder: and=6,a0=0,not=8,d0=2
+        let t = Tree::new(vec![6, 0, 8, 2], vec![0.0; 4]);
+        let tape = compile(&t, &ps, BOOL_NOP).unwrap();
+        assert_eq!(&tape.ops[..4], &[0, 2, BOOL_OP_NOT, BOOL_OP_AND]);
+        assert!(tape.ops[4..].iter().all(|&o| o == BOOL_NOP));
+        assert_eq!(tape.ops.len(), TAPE_LEN as usize);
+    }
+
+    #[test]
+    fn compile_rejects_oversize() {
+        let ps = mux6_ps();
+        // chain of NOTs longer than the tape
+        let n = TAPE_LEN as usize + 1;
+        let mut ops = vec![8u8; n - 1];
+        ops.push(0);
+        let t = Tree::new(ops, vec![0.0; n]);
+        assert!(matches!(compile(&t, &ps, BOOL_NOP), Err(TapeError::TooLong { .. })));
+    }
+
+    #[test]
+    fn mux6_solution_scores_all_cases() {
+        let ps = mux6_ps();
+        // IF(a0, IF(a1,d3,d1), IF(a1,d2,d0)); preorder if=9
+        let t = Tree::new(vec![9, 0, 9, 1, 5, 3, 9, 1, 4, 2], vec![0.0; 10]);
+        let tape = compile(&t, &ps, BOOL_NOP).unwrap();
+        let cases = mux6_cases();
+        assert_eq!(eval_bool_native(&tape, &cases), 64);
+    }
+
+    #[test]
+    fn random_trees_native_eval_bounded() {
+        let ps = mux6_ps();
+        let cases = mux6_cases();
+        let mut rng = Rng::new(17);
+        let pop = ramped_half_and_half(&mut rng, &ps, 100, 2, 6);
+        for t in &pop {
+            let tape = compile(t, &ps, BOOL_NOP).unwrap();
+            let hits = eval_bool_native(&tape, &cases);
+            assert!(hits <= 64);
+        }
+    }
+
+    #[test]
+    fn quartic_solution_zero_sse() {
+        let ps = regression_set(1);
+        // x + x^2 + x^3 + x^4 == x*(1+x*(1+x*(1+x)))
+        // preorder with ops: x0=0 erc=1 +=2 -=3 *=4 %=5 sin=6 cos=7
+        // (* x (+ 1' (* x (+ 1' (* x (+ 1' x)))))) needs const 1 — use ERC
+        let one = 1.0f32;
+        let t = Tree::new(
+            vec![4, 0, 2, 1, 4, 0, 2, 1, 4, 0, 2, 1, 0],
+            vec![0.0, 0.0, 0.0, one, 0.0, 0.0, 0.0, one, 0.0, 0.0, 0.0, one, 0.0],
+        );
+        let tape = compile(&t, &ps, REG_NOP).unwrap();
+        let xs: Vec<f32> = (0..20).map(|i| -1.0 + i as f32 * 0.1).collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| x + x * x + x * x * x + x * x * x * x).collect();
+        let cases = RegCases { x: vec![xs], y: ys };
+        let (sse, hits) = eval_reg_native(&tape, &cases);
+        assert!(sse < 1e-9, "sse {sse}");
+        assert_eq!(hits, 20);
+    }
+
+    #[test]
+    fn truth_table_mask_partial_word() {
+        let c = BoolCases::truth_table(3, |case| case == 7);
+        assert_eq!(c.ncases, 8);
+        assert_eq!(c.words(), 1);
+        assert_eq!(c.mask[0], 0xFF);
+        assert_eq!(c.target[0], 0x80);
+        assert_eq!(c.inputs[0][0], 0b10101010);
+        assert_eq!(c.inputs[1][0], 0b11001100);
+        assert_eq!(c.inputs[2][0], 0b11110000);
+    }
+}

@@ -1,0 +1,217 @@
+//! GP trees as preorder opcode arrays.
+//!
+//! `ops[i]` is an index into the problem's [`PrimSet`]; a subtree is a
+//! contiguous range, located in O(size) with [`Tree::subtree_end`].
+//! `consts[i]` carries the ephemeral random constant for ERC terminals
+//! (ignored elsewhere). This layout makes genetic operators slice
+//! splices and serialization trivial (BOINC checkpoints).
+
+use crate::gp::primset::PrimSet;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tree {
+    pub ops: Vec<u8>,
+    pub consts: Vec<f32>,
+}
+
+impl Tree {
+    pub fn new(ops: Vec<u8>, consts: Vec<f32>) -> Tree {
+        debug_assert_eq!(ops.len(), consts.len());
+        Tree { ops, consts }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// End (exclusive) of the subtree rooted at `start`.
+    pub fn subtree_end(&self, ps: &PrimSet, start: usize) -> usize {
+        let mut need = 1usize;
+        let mut i = start;
+        while need > 0 {
+            need += ps.arity(self.ops[i]) as usize;
+            need -= 1;
+            i += 1;
+        }
+        i
+    }
+
+    /// Depth of the whole tree (single node = depth 1).
+    pub fn depth(&self, ps: &PrimSet) -> usize {
+        fn rec(t: &Tree, ps: &PrimSet, i: &mut usize) -> usize {
+            let op = t.ops[*i];
+            *i += 1;
+            let mut d = 0;
+            for _ in 0..ps.arity(op) {
+                d = d.max(rec(t, ps, i));
+            }
+            d + 1
+        }
+        if self.is_empty() {
+            return 0;
+        }
+        let mut i = 0;
+        let d = rec(self, ps, &mut i);
+        debug_assert_eq!(i, self.len());
+        d
+    }
+
+    /// Stack slots needed to evaluate this tree in postfix order —
+    /// must stay within the tape machine's STACK_DEPTH for artifact
+    /// evaluability. need(leaf) = 1; need(op) = max_i(i + need(child_i)).
+    pub fn postfix_need(&self, ps: &PrimSet) -> usize {
+        fn rec(t: &Tree, ps: &PrimSet, i: &mut usize) -> usize {
+            let op = t.ops[*i];
+            *i += 1;
+            let arity = ps.arity(op) as usize;
+            if arity == 0 {
+                return 1;
+            }
+            let mut need = arity; // result of each child occupies a slot
+            for c in 0..arity {
+                let child_need = rec(t, ps, i);
+                need = need.max(c + child_need);
+            }
+            need
+        }
+        if self.is_empty() {
+            return 0;
+        }
+        let mut i = 0;
+        rec(self, ps, &mut i)
+    }
+
+    /// Structural well-formedness: exactly one complete expression.
+    pub fn is_well_formed(&self, ps: &PrimSet) -> bool {
+        if self.is_empty() || self.ops.len() != self.consts.len() {
+            return false;
+        }
+        if self.ops.iter().any(|&op| op as usize >= ps.prims.len()) {
+            return false;
+        }
+        let mut need = 1i64;
+        for &op in &self.ops {
+            if need <= 0 {
+                return false;
+            }
+            need += ps.arity(op) as i64 - 1;
+        }
+        need == 0
+    }
+
+    /// Lisp-ish rendering for logs and golden tests.
+    pub fn display(&self, ps: &PrimSet) -> String {
+        fn rec(t: &Tree, ps: &PrimSet, i: &mut usize, out: &mut String) {
+            let op = t.ops[*i];
+            let idx = *i;
+            *i += 1;
+            let arity = ps.arity(op);
+            if arity == 0 {
+                if Some(op) == ps.erc {
+                    out.push_str(&format!("{:.3}", t.consts[idx]));
+                } else {
+                    out.push_str(ps.name(op));
+                }
+            } else {
+                out.push('(');
+                out.push_str(ps.name(op));
+                for _ in 0..arity {
+                    out.push(' ');
+                    rec(t, ps, i, out);
+                }
+                out.push(')');
+            }
+        }
+        let mut out = String::new();
+        let mut i = 0;
+        rec(self, ps, &mut i, &mut out);
+        out
+    }
+
+    /// Serialize for checkpoints / WU payloads.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("ops", Json::Arr(self.ops.iter().map(|&o| Json::Num(o as f64)).collect()))
+            .set("consts", Json::Arr(self.consts.iter().map(|&c| Json::Num(c as f64)).collect()))
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Tree> {
+        let ops = j
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("tree missing ops"))?
+            .iter()
+            .map(|v| v.as_u64().map(|n| n as u8))
+            .collect::<Option<Vec<u8>>>()
+            .ok_or_else(|| anyhow::anyhow!("bad ops array"))?;
+        let consts = j
+            .get("consts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("tree missing consts"))?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as f32))
+            .collect::<Option<Vec<f32>>>()
+            .ok_or_else(|| anyhow::anyhow!("bad consts array"))?;
+        if ops.len() != consts.len() {
+            anyhow::bail!("ops/consts length mismatch");
+        }
+        Ok(Tree::new(ops, consts))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::primset::bool_set;
+
+    fn ps() -> PrimSet {
+        bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"])
+    }
+
+    /// (and a0 (not d0)) in preorder: and=6, or=7, not=8, if=9
+    fn sample() -> Tree {
+        Tree::new(vec![6, 0, 8, 2], vec![0.0; 4])
+    }
+
+    #[test]
+    fn subtree_extents() {
+        let t = sample();
+        let ps = ps();
+        assert_eq!(t.subtree_end(&ps, 0), 4); // whole tree
+        assert_eq!(t.subtree_end(&ps, 1), 2); // a0
+        assert_eq!(t.subtree_end(&ps, 2), 4); // (not d0)
+    }
+
+    #[test]
+    fn depth_and_wellformed() {
+        let t = sample();
+        let ps = ps();
+        assert_eq!(t.depth(&ps), 3);
+        assert!(t.is_well_formed(&ps));
+        // truncated tree is ill-formed
+        let bad = Tree::new(vec![6, 0], vec![0.0; 2]);
+        assert!(!bad.is_well_formed(&ps));
+        // trailing garbage is ill-formed
+        let bad2 = Tree::new(vec![0, 0], vec![0.0; 2]);
+        assert!(!bad2.is_well_formed(&ps));
+    }
+
+    #[test]
+    fn display_renders_lisp() {
+        assert_eq!(sample().display(&ps()), "(and a0 (not d0))");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = sample();
+        let j = t.to_json();
+        let s = j.to_string();
+        let back = Tree::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,41 @@
+//! # vgp — Volunteer Genetic Programming
+//!
+//! A reproduction of *"Increasing GP Computing Power via Volunteer
+//! Computing"* (Lombraña González et al., CS.DC 2008) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate contains:
+//!
+//! * [`boinc`] — a complete BOINC-style volunteer-computing middleware:
+//!   work-unit lifecycle, scheduler RPC, quorum validation, redundancy,
+//!   code signing, assimilation, a TCP server and a core-client analog.
+//! * [`gp`] — a genetic-programming engine (trees, ramped half-and-half
+//!   init, subtree crossover/mutation, tournament selection, Koza-style
+//!   generational loop) plus the paper's benchmark problems: Santa Fe
+//!   ant, boolean multiplexer, symbolic regression, even parity and a
+//!   GP interest-point detector.
+//! * [`runtime`] — the PJRT bridge: loads the AOT-compiled HLO
+//!   artifacts produced by `python/compile/aot.py` and evaluates GP
+//!   tape populations on them (the paper's "Method 2 wrapper" payload).
+//! * [`churn`] — volunteer host population models (arrival, lifetime,
+//!   availability) and the Anderson–Fedak computing-power estimator.
+//! * [`sim`] — a deterministic discrete-event simulator that drives the
+//!   middleware in virtual time to regenerate the paper's campaigns.
+//! * [`coordinator`] — campaign specification, parameter sweeps and the
+//!   speedup / computing-power reporting used by every table & figure.
+//! * [`util`] — in-repo substrates (RNG, JSON, stats, bench harness,
+//!   property-testing) — the offline build has no external crates for
+//!   these.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod boinc;
+pub mod churn;
+pub mod config;
+pub mod coordinator;
+pub mod gp;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,218 @@
+//! `vgp` — the leader binary: serve a project over TCP, run a worker,
+//! execute campaigns on the simulator, plot churn.
+//!
+//! ```text
+//! vgp sim --table 1|2|3                # regenerate a paper table (DES)
+//! vgp sim --problem mux11 --runs 50 --hosts 20 --pool volunteer
+//! vgp serve --runs 8 --problem mux6    # TCP server with a campaign
+//! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval)
+//! vgp churn --days 30                  # Fig-2 style churn trace
+//! ```
+
+use vgp::boinc::net::{serve, Worker};
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::churn::{churn_trace, sample_pool, PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
+use vgp::config::Args;
+use vgp::coordinator::{exec, simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::metrics::ascii_plot;
+use vgp::sim::SimConfig;
+use vgp::util::bench::Table;
+use vgp::util::rng::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "sim" => cmd_sim(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
+        "churn" => cmd_churn(&args),
+        _ => {
+            eprintln!("usage: vgp <sim|serve|worker|churn> [--options]");
+            eprintln!("  vgp sim --table 1|2|3   reproduce a paper table");
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn pool_of(args: &Args, hosts: usize) -> PoolParams {
+    match args.opt_str("pool", "lab") {
+        "volunteer" => PoolParams::volunteer(hosts),
+        "virtual" => PoolParams::virtualized_lab(hosts),
+        _ => PoolParams::lab(hosts),
+    }
+}
+
+fn cmd_sim(args: &Args) -> i32 {
+    if let Some(t) = args.opt("table") {
+        return sim_table(t);
+    }
+    let problem = ProblemKind::parse(args.opt_str("problem", "mux11")).expect("problem");
+    let runs = args.opt_u64("runs", 25) as usize;
+    let gens = args.opt_u64("generations", 50) as usize;
+    let pop = args.opt_u64("population", 1000) as usize;
+    let hosts = args.opt_u64("hosts", 10) as usize;
+    let seed = args.opt_u64("seed", 7);
+    let c = Campaign::new("cli", problem, runs, gens, pop);
+    let r =
+        simulate_campaign(&c, &pool_of(args, hosts), &[("cli", hosts)], SimConfig::default(), seed);
+    println!(
+        "campaign {}: T_seq={:.0}s T_B={:.0}s acc={:.2} CP={:.1} GFLOPS done={}/{} hosts={}/{}",
+        r.campaign,
+        r.t_seq,
+        r.t_b,
+        r.acceleration,
+        r.cp_gflops,
+        r.completed,
+        r.runs,
+        r.productive_hosts,
+        r.attached_hosts
+    );
+    0
+}
+
+fn sim_table(which: &str) -> i32 {
+    match which {
+        "1" => {
+            let mut table = Table::new(&["config", "clients", "T_seq", "T_B", "Acc"]);
+            for (gens, pop) in [(1000usize, 1000usize), (1000, 2000), (2000, 1000)] {
+                for clients in [5usize, 10] {
+                    let c = Campaign::new(
+                        &format!("ant_g{gens}_p{pop}"),
+                        ProblemKind::Ant,
+                        25,
+                        gens,
+                        pop,
+                    );
+                    let r = simulate_campaign(
+                        &c,
+                        &PoolParams::lab(clients),
+                        &[("lab", clients)],
+                        SimConfig::default(),
+                        42,
+                    );
+                    table.row(&[
+                        format!("{gens} Gen, {pop} Ind"),
+                        clients.to_string(),
+                        format!("{:.0}s", r.t_seq),
+                        format!("{:.0}s", r.t_b),
+                        format!("{:.2}", r.acceleration),
+                    ]);
+                }
+            }
+            table.print();
+        }
+        "2" => {
+            let mut table = Table::new(&["campaign", "runs", "T_seq", "T_B", "Acc", "CP"]);
+            let mux11 = Campaign::new("mux11", ProblemKind::Mux11, 828, 50, 4000);
+            let r11 = simulate_campaign(
+                &mux11,
+                &PoolParams::volunteer(45),
+                FIG1_CITIES_MUX11,
+                SimConfig::default(),
+                42,
+            );
+            let mux20 = Campaign::new("mux20", ProblemKind::Mux20, 42, 50, 1000);
+            let r20 = simulate_campaign(
+                &mux20,
+                &PoolParams::volunteer(41),
+                FIG1_CITIES_MUX20,
+                SimConfig::default(),
+                42,
+            );
+            for r in [r11, r20] {
+                table.row(&[
+                    r.campaign.clone(),
+                    r.runs.to_string(),
+                    format!("{:.0}s", r.t_seq),
+                    format!("{:.0}s", r.t_b),
+                    format!("{:.2}", r.acceleration),
+                    format!("{:.1} GF", r.cp_gflops),
+                ]);
+            }
+            table.print();
+        }
+        "3" => {
+            let c = Campaign::new("ip", ProblemKind::InterestPoint, 12, 75, 75);
+            let r = simulate_campaign(
+                &c,
+                &PoolParams::virtualized_lab(10),
+                &[("windows-lab", 10)],
+                SimConfig::default(),
+                42,
+            );
+            let mut table = Table::new(&["config", "T_seq", "T_B", "Acc", "CP"]);
+            table.row(&[
+                "75 Gen, 75 Ind (virtualized)".into(),
+                format!("{:.1}h", r.t_seq / 3600.0),
+                format!("{:.1}h", r.t_b / 3600.0),
+                format!("{:.2}", r.acceleration),
+                format!("{:.1} GF", r.cp_gflops),
+            ]);
+            table.print();
+        }
+        other => {
+            eprintln!("unknown table '{other}' (1|2|3)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let problem = ProblemKind::parse(args.opt_str("problem", "mux6")).expect("problem");
+    let runs = args.opt_u64("runs", 8) as usize;
+    let gens = args.opt_u64("generations", 20) as usize;
+    let pop = args.opt_u64("population", 200) as usize;
+    let c = Campaign::new("served", problem, runs, gens, pop);
+    let mut core = ServerCore::new(ServerConfig::default());
+    for wu in c.workunits() {
+        core.submit_wu(wu);
+    }
+    let handle = serve(core).expect("serve");
+    println!("vgp server on {} ({runs} WUs of {}); Ctrl-C to stop", handle.addr, problem.name());
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(2));
+        let core = handle.core.lock().unwrap();
+        let st = core.db.stats();
+        println!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress);
+        if core.is_complete() {
+            println!("campaign complete");
+            return 0;
+        }
+    }
+}
+
+fn cmd_worker(args: &Args) -> i32 {
+    let addr: std::net::SocketAddr =
+        args.opt_str("addr", "127.0.0.1:0").parse().expect("--addr host:port");
+    let key = vgp::boinc::signature::SigningKey::new(b"vgp-project-key");
+    let worker = Worker {
+        name: args.opt_str("name", "worker").to_string(),
+        city: args.opt_str("city", "local").to_string(),
+        flops: args.opt_f64("flops", 1.3e9),
+        poll_interval: std::time::Duration::from_millis(args.opt_u64("poll-ms", 500)),
+    };
+    let report = worker.run(addr, &key, &|spec| exec::run_wu_native(spec)).expect("worker run");
+    println!(
+        "worker done: {} completed, {} errors, {:.1}s cpu",
+        report.completed, report.errors, report.cpu_time
+    );
+    0
+}
+
+fn cmd_churn(args: &Args) -> i32 {
+    let days = args.opt_u64("days", 30) as usize;
+    let hosts_n = args.opt_u64("hosts", 41) as usize;
+    let mut rng = Rng::new(args.opt_u64("seed", 9));
+    let hosts = sample_pool(&mut rng, &PoolParams::volunteer(hosts_n), FIG1_CITIES_MUX20);
+    let tr = churn_trace(&hosts, days);
+    println!(
+        "{}",
+        ascii_plot("active volunteer hosts per day (Fig 2)", &tr.days, &tr.active_hosts, 12)
+    );
+    let _ = FIG1_CITIES_MUX11;
+    0
+}

@@ -1,0 +1,140 @@
+//! Metrics: named counters/accumulators, CSV export, and an ASCII
+//! time-series plotter (used for the Fig-2 host-churn trace).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::Accum;
+
+/// Thread-safe metrics registry. One per server / simulation run.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    accums: Mutex<BTreeMap<String, Accum>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn add(&self, name: &str, n: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    pub fn observe(&self, name: &str, value: f64) {
+        let mut a = self.accums.lock().unwrap();
+        a.entry(name.to_string()).or_default().add(value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    pub fn summary(&self, name: &str) -> Option<(u64, f64, f64)> {
+        let a = self.accums.lock().unwrap();
+        a.get(name).map(|acc| (acc.count(), acc.mean(), acc.std()))
+    }
+
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} = {v}\n"));
+        }
+        for (k, a) in self.accums.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{k}: n={} mean={:.4} std={:.4} min={:.4} max={:.4}\n",
+                a.count(),
+                a.mean(),
+                a.std(),
+                a.min(),
+                a.max()
+            ));
+        }
+        out
+    }
+}
+
+/// Write rows as CSV (headers + f64 rows). Returns the rendered string
+/// and optionally writes it to `path`.
+pub fn to_csv(headers: &[&str], rows: &[Vec<f64>], path: Option<&str>) -> anyhow::Result<String> {
+    let mut s = String::new();
+    s.push_str(&headers.join(","));
+    s.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        s.push_str(&cells.join(","));
+        s.push('\n');
+    }
+    if let Some(p) = path {
+        std::fs::write(p, &s)?;
+    }
+    Ok(s)
+}
+
+/// ASCII plot of a single series (e.g. active hosts per day, Fig 2).
+pub fn ascii_plot(title: &str, xs: &[f64], ys: &[f64], height: usize) -> String {
+    assert_eq!(xs.len(), ys.len());
+    let mut out = format!("{title}\n");
+    if ys.is_empty() {
+        return out;
+    }
+    let ymax = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(1e-9);
+    let ymin = ys.iter().cloned().fold(f64::INFINITY, f64::min).min(0.0);
+    let width = ys.len();
+    for level in (0..height).rev() {
+        let thr = ymin + (ymax - ymin) * (level as f64 + 0.5) / height as f64;
+        let mut line = String::with_capacity(width + 10);
+        line.push_str(&format!("{:>8.1} |", ymin + (ymax - ymin) * (level as f64 + 1.0) / height as f64));
+        for &y in ys {
+            line.push(if y >= thr { '#' } else { ' ' });
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>8} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "{:>10}x: {:.0} .. {:.0}  ({} points)\n",
+        "", xs.first().unwrap(), xs.last().unwrap(), width
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_accums() {
+        let m = Metrics::new();
+        m.inc("wu.dispatched");
+        m.add("wu.dispatched", 4);
+        m.observe("rpc.latency", 1.0);
+        m.observe("rpc.latency", 3.0);
+        assert_eq!(m.counter("wu.dispatched"), 5);
+        let (n, mean, _) = m.summary("rpc.latency").unwrap();
+        assert_eq!(n, 2);
+        assert!((mean - 2.0).abs() < 1e-12);
+        assert!(m.dump().contains("wu.dispatched = 5"));
+    }
+
+    #[test]
+    fn csv_renders() {
+        let s = to_csv(&["day", "hosts"], &[vec![1.0, 10.0], vec![2.0, 12.0]], None).unwrap();
+        assert_eq!(s, "day,hosts\n1,10\n2,12\n");
+    }
+
+    #[test]
+    fn ascii_plot_shape() {
+        let xs: Vec<f64> = (0..30).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| x.sin().abs() * 10.0).collect();
+        let p = ascii_plot("churn", &xs, &ys, 8);
+        assert!(p.lines().count() >= 10);
+        assert!(p.contains('#'));
+    }
+}

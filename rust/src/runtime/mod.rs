@@ -1,0 +1,281 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and evaluates GP tape populations on them.
+//!
+//! This is the paper's **Method 2** payload path: the artifact is an
+//! opaque, separately-shipped executable (like ECJ+JVM under the BOINC
+//! wrapper) that the client runs without recompiling its own code.
+//! Python never runs here — interchange is HLO *text* (see aot.py for
+//! why text, not serialized protos).
+//!
+//! Population chunking: artifacts are compiled for fixed shapes
+//! (B=256 programs x W=64 case-words / C=64 cases); this module pads
+//! and chunks arbitrary populations and case sets, accumulating hits
+//! and SSE across case blocks (the 20-mux's 32 768 words = 512 blocks).
+
+use anyhow::{Context, Result};
+
+use crate::gp::tape::{opcodes, BoolCases, RegCases, Tape};
+use crate::util::json::Json;
+
+/// Validated contract from `artifacts/meta.json`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub tape_len: usize,
+    pub stack_depth: usize,
+    pub bool_batch: usize,
+    pub bool_words: usize,
+    pub bool_num_vars: usize,
+    pub reg_batch: usize,
+    pub reg_cases: usize,
+    pub reg_num_vars: usize,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &str) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(format!("{dir}/meta.json"))
+            .with_context(|| format!("reading {dir}/meta.json — run `make artifacts` first"))?;
+        let j = Json::parse(&text)?;
+        let b = j.get("bool").context("meta missing bool section")?;
+        let r = j.get("reg").context("meta missing reg section")?;
+        let meta = ArtifactMeta {
+            tape_len: j.u64_of("tape_len")? as usize,
+            stack_depth: j.u64_of("stack_depth")? as usize,
+            bool_batch: b.u64_of("batch")? as usize,
+            bool_words: b.u64_of("words")? as usize,
+            bool_num_vars: b.u64_of("num_vars")? as usize,
+            reg_batch: r.u64_of("batch")? as usize,
+            reg_cases: r.u64_of("cases")? as usize,
+            reg_num_vars: r.u64_of("num_vars")? as usize,
+        };
+        // validate against the compiled-in contract (drift check)
+        anyhow::ensure!(meta.tape_len == opcodes::TAPE_LEN as usize, "tape_len drift");
+        anyhow::ensure!(meta.stack_depth == opcodes::STACK_DEPTH as usize, "stack_depth drift");
+        anyhow::ensure!(meta.bool_num_vars == opcodes::BOOL_NUM_VARS as usize, "num_vars drift");
+        anyhow::ensure!(b.u64_of("op_if")? as i32 == opcodes::BOOL_OP_IF, "opcode drift");
+        anyhow::ensure!(r.u64_of("op_div")? as i32 == opcodes::REG_OP_DIV, "opcode drift");
+        Ok(meta)
+    }
+}
+
+/// A compiled-and-loaded HLO artifact on the PJRT CPU client.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Artifact {
+    pub fn load(client: &xla::PjRtClient, path: &str) -> Result<Artifact> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("loading HLO text {path}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("compiling {path}: {e:?}"))?;
+        Ok(Artifact { exe, name: path.to_string() })
+    }
+
+    fn execute(&self, args: &[&xla::Literal]) -> Result<xla::Literal> {
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(args)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e:?}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result of {}: {e:?}", self.name))?;
+        Ok(lit)
+    }
+}
+
+/// The full evaluator runtime: a PJRT CPU client plus the two loaded
+/// evaluator artifacts.
+pub struct Runtime {
+    pub meta: ArtifactMeta,
+    bool_eval: Artifact,
+    reg_eval: Artifact,
+}
+
+impl Runtime {
+    /// Load and compile all artifacts from `dir` (default `artifacts/`).
+    pub fn load(dir: &str) -> Result<Runtime> {
+        let meta = ArtifactMeta::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        let bool_eval = Artifact::load(&client, &format!("{dir}/bool_eval.hlo.txt"))?;
+        let reg_eval = Artifact::load(&client, &format!("{dir}/reg_eval.hlo.txt"))?;
+        Ok(Runtime { meta, bool_eval, reg_eval })
+    }
+
+    /// Evaluate boolean tapes against packed cases; returns hit counts.
+    /// Pads the population to the batch size and chunks the case words,
+    /// accumulating hits across word blocks.
+    pub fn eval_bool(&self, tapes: &[Tape], cases: &BoolCases) -> Result<Vec<u64>> {
+        let b = self.meta.bool_batch;
+        let w = self.meta.bool_words;
+        let l = self.meta.tape_len;
+        let nv = self.meta.bool_num_vars;
+        let mut hits = vec![0u64; tapes.len()];
+        let total_words = cases.words();
+
+        for chunk_start in (0..tapes.len()).step_by(b) {
+            let chunk = &tapes[chunk_start..(chunk_start + b).min(tapes.len())];
+            // tape literal [B, L] i32 (pad with NOP rows)
+            let mut tape_flat = vec![opcodes::BOOL_NOP; b * l];
+            for (i, t) in chunk.iter().enumerate() {
+                tape_flat[i * l..(i + 1) * l].copy_from_slice(&t.ops);
+            }
+            let tape_lit = xla::Literal::vec1(&tape_flat)
+                .reshape(&[b as i64, l as i64])
+                .map_err(|e| anyhow::anyhow!("tape reshape: {e:?}"))?;
+
+            for wstart in (0..total_words).step_by(w) {
+                let wend = (wstart + w).min(total_words);
+                let wlen = wend - wstart;
+                // inputs [NV, W] u32 — zero-pad missing vars and words
+                let mut in_flat = vec![0u32; nv * w];
+                for (v, col) in cases.inputs.iter().enumerate().take(nv) {
+                    in_flat[v * w..v * w + wlen].copy_from_slice(&col[wstart..wend]);
+                }
+                let mut tgt = vec![0u32; w];
+                tgt[..wlen].copy_from_slice(&cases.target[wstart..wend]);
+                let mut msk = vec![0u32; w];
+                msk[..wlen].copy_from_slice(&cases.mask[wstart..wend]);
+
+                let in_lit = xla::Literal::vec1(&in_flat)
+                    .reshape(&[nv as i64, w as i64])
+                    .map_err(|e| anyhow::anyhow!("inputs reshape: {e:?}"))?;
+                let tgt_lit = xla::Literal::vec1(&tgt);
+                let msk_lit = xla::Literal::vec1(&msk);
+
+                let out =
+                    self.bool_eval.execute(&[&tape_lit, &in_lit, &tgt_lit, &msk_lit])?;
+                let out = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+                let chunk_hits: Vec<i32> =
+                    out.to_vec().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                for (i, &h) in chunk_hits.iter().take(chunk.len()).enumerate() {
+                    hits[chunk_start + i] += h as u64;
+                }
+            }
+        }
+        Ok(hits)
+    }
+
+    /// Evaluate regression tapes; returns (SSE, hits) per tape.
+    pub fn eval_reg(&self, tapes: &[Tape], cases: &RegCases) -> Result<Vec<(f64, u32)>> {
+        let b = self.meta.reg_batch;
+        let c = self.meta.reg_cases;
+        let l = self.meta.tape_len;
+        let nv = self.meta.reg_num_vars;
+        let total = cases.ncases();
+        let mut out_acc = vec![(0f64, 0u32); tapes.len()];
+
+        for chunk_start in (0..tapes.len()).step_by(b) {
+            let chunk = &tapes[chunk_start..(chunk_start + b).min(tapes.len())];
+            let mut tape_flat = vec![opcodes::REG_NOP; b * l];
+            let mut const_flat = vec![0f32; b * l];
+            for (i, t) in chunk.iter().enumerate() {
+                tape_flat[i * l..(i + 1) * l].copy_from_slice(&t.ops);
+                const_flat[i * l..(i + 1) * l].copy_from_slice(&t.consts);
+            }
+
+            for cstart in (0..total).step_by(c) {
+                let cend = (cstart + c).min(total);
+                let clen = cend - cstart;
+                let mut x_flat = vec![0f32; nv * c];
+                for (v, col) in cases.x.iter().enumerate().take(nv) {
+                    x_flat[v * c..v * c + clen].copy_from_slice(&col[cstart..cend]);
+                }
+                let mut y = vec![0f32; c];
+                y[..clen].copy_from_slice(&cases.y[cstart..cend]);
+                let mut mask = vec![0f32; c];
+                mask[..clen].fill(1.0);
+
+                let tape_lit = xla::Literal::vec1(&tape_flat)
+                    .reshape(&[b as i64, l as i64])
+                    .map_err(|e| anyhow::anyhow!("tape reshape: {e:?}"))?;
+                let const_lit = xla::Literal::vec1(&const_flat)
+                    .reshape(&[b as i64, l as i64])
+                    .map_err(|e| anyhow::anyhow!("const reshape: {e:?}"))?;
+                let x_lit = xla::Literal::vec1(&x_flat)
+                    .reshape(&[nv as i64, c as i64])
+                    .map_err(|e| anyhow::anyhow!("x reshape: {e:?}"))?;
+                let y_lit = xla::Literal::vec1(&y);
+                let m_lit = xla::Literal::vec1(&mask);
+
+                let out = self
+                    .reg_eval
+                    .execute(&[&tape_lit, &const_lit, &x_lit, &y_lit, &m_lit])?;
+                let (sse_l, hits_l) =
+                    out.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+                let sses: Vec<f32> = sse_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                let hs: Vec<i32> = hits_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                for i in 0..chunk.len() {
+                    out_acc[chunk_start + i].0 += sses[i] as f64;
+                    out_acc[chunk_start + i].1 += hs[i] as u32;
+                }
+            }
+        }
+        Ok(out_acc)
+    }
+}
+
+/// [`crate::gp::Evaluator`] backed by the boolean artifact — drop-in
+/// replacement for the native evaluators of multiplexer/parity.
+pub struct BoolArtifactEvaluator<'a> {
+    pub rt: &'a Runtime,
+    pub cases: &'a BoolCases,
+    /// evaluations performed (for CP accounting)
+    pub evals: u64,
+}
+
+impl crate::gp::Evaluator for BoolArtifactEvaluator<'_> {
+    fn evaluate(
+        &mut self,
+        trees: &[crate::gp::tree::Tree],
+        ps: &crate::gp::primset::PrimSet,
+    ) -> Vec<crate::gp::Fitness> {
+        // compile all, mark failures (shouldn't happen under Limits)
+        let mut tapes = Vec::with_capacity(trees.len());
+        let mut ok = Vec::with_capacity(trees.len());
+        for t in trees {
+            match crate::gp::tape::compile(t, ps, opcodes::BOOL_NOP) {
+                Ok(tape) => {
+                    tapes.push(tape);
+                    ok.push(true);
+                }
+                Err(_) => {
+                    tapes.push(Tape {
+                        ops: vec![opcodes::BOOL_NOP; opcodes::TAPE_LEN as usize],
+                        consts: vec![0.0; opcodes::TAPE_LEN as usize],
+                    });
+                    ok.push(false);
+                }
+            }
+        }
+        self.evals += trees.len() as u64;
+        let hits = self.rt.eval_bool(&tapes, self.cases).expect("artifact eval");
+        hits.iter()
+            .zip(ok)
+            .map(|(&h, is_ok)| {
+                if is_ok {
+                    crate::gp::Fitness { raw: (self.cases.ncases - h) as f64, hits: h as u32 }
+                } else {
+                    crate::gp::Fitness::worst()
+                }
+            })
+            .collect()
+    }
+
+    fn cost_per_eval(&self) -> f64 {
+        320.0 * self.cases.ncases as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need artifacts live in rust/tests/runtime_artifacts.rs
+    // (integration) so `cargo test --lib` stays artifact-independent.
+    use super::*;
+
+    #[test]
+    fn meta_load_fails_cleanly_without_artifacts() {
+        let err = ArtifactMeta::load("/nonexistent-dir").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,369 @@
+//! Deterministic discrete-event simulation of a volunteer-computing
+//! campaign: the *same* [`ServerCore`] state machines as the TCP
+//! deployment, driven in virtual time by simulated hosts with churn.
+//!
+//! This regenerates the paper's Tables 1–3 in seconds of wall clock:
+//! speedup and computing power are functions of event ordering and
+//! durations, both of which the DES preserves (DESIGN.md §2).
+//!
+//! Event loop: host arrival → poll (scheduler RPC) → compute (duration
+//! = WU FLOPs / host effective FLOPS, with client-error injection) →
+//! report; host departure kills in-flight work (the server's deadline
+//! pass reissues it). Ties are broken by sequence number, so a given
+//! seed reproduces the identical trajectory.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::boinc::db::HostRow;
+use crate::boinc::server::{ServerConfig, ServerCore};
+use crate::boinc::workunit::WorkUnit;
+use crate::churn::{ComputingPower, SimHost};
+use crate::util::rng::Rng;
+
+/// Simulator tuning.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// scheduler-RPC polling interval, seconds (BOINC work-fetch backoff)
+    pub poll_interval: f64,
+    /// per-WU download+upload overhead, seconds (2007 DSL + server I/O)
+    pub transfer_overhead: f64,
+    /// server transitioner cadence, seconds
+    pub tick_interval: f64,
+    /// hard stop (safety), virtual seconds
+    pub max_virtual_time: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            poll_interval: 60.0,
+            transfer_overhead: 30.0,
+            tick_interval: 600.0,
+            max_virtual_time: 120.0 * 86400.0,
+        }
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    Arrive(usize),
+    Depart(usize),
+    Poll(usize),
+    Complete { host: usize, rid: u64, ok: bool, cpu: f64 },
+    Tick,
+}
+
+struct Scheduled {
+    at: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Scheduled {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for Scheduled {}
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by (time, seq)
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Result of one simulated campaign.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// paper T_B: first client registration .. last server communication
+    pub makespan: f64,
+    /// wall-clock the same WUs need sequentially on one reference host
+    pub t_seq: f64,
+    /// eq. 1 acceleration
+    pub speedup: f64,
+    /// assimilated WU count
+    pub completed: usize,
+    pub total_wus: usize,
+    /// hosts that returned >= 1 valid result (paper: "only 27 of 45")
+    pub productive_hosts: usize,
+    pub attached_hosts: usize,
+    /// eq. 2 computing power over the campaign window
+    pub cp_gflops: f64,
+    /// per-WU completion times (virtual secs since start)
+    pub completions: Vec<f64>,
+    pub client_errors: u64,
+    pub no_replies: u64,
+}
+
+/// A prepared simulation: server + WUs + host pool.
+pub struct Simulation {
+    pub core: ServerCore,
+    pub hosts: Vec<SimHost>,
+    pub cfg: SimConfig,
+    host_ids: Vec<u64>,
+    attached: Vec<bool>,
+    busy: Vec<bool>,
+    rng: Rng,
+}
+
+impl Simulation {
+    pub fn new(cfg: SimConfig, server_cfg: ServerConfig, hosts: Vec<SimHost>, seed: u64) -> Self {
+        Simulation {
+            core: ServerCore::new(server_cfg),
+            host_ids: vec![0; hosts.len()],
+            attached: vec![false; hosts.len()],
+            busy: vec![false; hosts.len()],
+            hosts,
+            cfg,
+            rng: Rng::new(seed ^ 0x51315),
+        }
+    }
+
+    pub fn submit(&mut self, wu: WorkUnit) -> u64 {
+        self.core.submit_wu(wu)
+    }
+
+    /// Reference sequential time: all WUs on one dedicated mean host
+    /// (the paper's `T_seq` baseline machine).
+    pub fn sequential_time(&self, reference_flops: f64) -> f64 {
+        self.core
+            .db
+            .wus
+            .values()
+            .map(|wu| wu.flops_est / reference_flops)
+            .sum()
+    }
+
+    /// Run to campaign completion (or the safety horizon).
+    pub fn run(mut self, reference_flops: f64) -> SimOutcome {
+        let t_seq = self.sequential_time(reference_flops);
+        let total_wus = self.core.db.wus.len();
+        let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Scheduled>, seq: &mut u64, at: f64, ev: Ev| {
+            *seq += 1;
+            heap.push(Scheduled { at, seq: *seq, ev });
+        };
+
+        for i in 0..self.hosts.len() {
+            push(&mut heap, &mut seq, self.hosts[i].arrival, Ev::Arrive(i));
+        }
+        push(&mut heap, &mut seq, self.cfg.tick_interval, Ev::Tick);
+
+        #[allow(unused_assignments)]
+        let mut now = 0.0;
+        let mut last_comm: f64 = 0.0;
+        let mut first_reg = f64::INFINITY;
+
+        while let Some(Scheduled { at, ev, .. }) = heap.pop() {
+            now = at;
+            if now > self.cfg.max_virtual_time {
+                break;
+            }
+            match ev {
+                Ev::Arrive(i) => {
+                    let h = &self.hosts[i];
+                    let id = self.core.register_host(HostRow {
+                        id: 0,
+                        name: h.name.clone(),
+                        city: h.city.clone(),
+                        flops: h.flops,
+                        ncpus: h.ncpus,
+                        on_frac: h.on_frac,
+                        active_frac: h.active_frac,
+                        registered_at: now,
+                        last_heartbeat: now,
+                        error_results: 0,
+                        valid_results: 0,
+                        credit: 0.0,
+                    });
+                    self.host_ids[i] = id;
+                    self.attached[i] = true;
+                    first_reg = first_reg.min(now);
+                    last_comm = last_comm.max(now);
+                    push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
+                    push(&mut heap, &mut seq, self.hosts[i].departure, Ev::Depart(i));
+                }
+                Ev::Depart(i) => {
+                    self.attached[i] = false;
+                    // in-flight work is silently lost; the server's
+                    // deadline pass turns it into NO_REPLY later
+                }
+                Ev::Poll(i) => {
+                    if !self.attached[i] || self.busy[i] {
+                        continue;
+                    }
+                    if self.core.is_complete() {
+                        continue;
+                    }
+                    last_comm = last_comm.max(now);
+                    match self.core.request_work(self.host_ids[i], now) {
+                        Some((rid, wu, _sig)) => {
+                            self.busy[i] = true;
+                            let h = &self.hosts[i];
+                            let compute = wu.flops_est / h.effective_flops().max(1e3);
+                            let dur = compute + self.cfg.transfer_overhead;
+                            let ok = !self.rng.chance(h.client_error_rate);
+                            // client errors surface early (crash on start)
+                            let at = if ok { now + dur } else { now + dur.min(60.0) };
+                            push(
+                                &mut heap,
+                                &mut seq,
+                                at,
+                                Ev::Complete { host: i, rid, ok, cpu: compute },
+                            );
+                        }
+                        None => {
+                            push(&mut heap, &mut seq, now + self.cfg.poll_interval, Ev::Poll(i));
+                        }
+                    }
+                }
+                Ev::Complete { host: i, rid, ok, cpu } => {
+                    self.busy[i] = false;
+                    if !self.attached[i] {
+                        continue; // host died mid-computation
+                    }
+                    last_comm = last_comm.max(now);
+                    if ok {
+                        // payload = canonical run descriptor (hash-stable
+                        // per WU so quorum agreement works)
+                        let wu_id = self.core.db.result(rid).map(|r| r.wu_id).unwrap_or(0);
+                        let payload = crate::util::json::Json::obj()
+                            .set("wu", wu_id)
+                            .set("status", "done");
+                        self.core.report_success(rid, now, cpu, payload);
+                    } else {
+                        self.core.report_error(rid, now);
+                    }
+                    push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
+                }
+                Ev::Tick => {
+                    self.core.tick(now);
+                    if !self.core.is_complete() {
+                        push(&mut heap, &mut seq, now + self.cfg.tick_interval, Ev::Tick);
+                    }
+                }
+            }
+            if self.core.is_complete() && heap.iter().all(|s| matches!(s.ev, Ev::Depart(_))) {
+                break;
+            }
+        }
+
+        let makespan = (last_comm - first_reg.min(last_comm)).max(1e-9);
+        let completions: Vec<f64> =
+            self.core.assimilated().iter().map(|a| a.completed_at).collect();
+        let productive: std::collections::HashSet<u64> =
+            self.core.assimilated().iter().map(|a| a.host_id).collect();
+        let window_days = makespan / 86400.0;
+        let cp = ComputingPower::from_pool(&self.hosts, window_days.max(0.1), 1.0, 1.0);
+        SimOutcome {
+            makespan,
+            t_seq,
+            speedup: t_seq / makespan,
+            completed: completions.len(),
+            total_wus,
+            productive_hosts: productive.len(),
+            attached_hosts: self.hosts.len(),
+            cp_gflops: cp.gflops(),
+            completions,
+            client_errors: self.core.metrics.counter("result.client_error"),
+            no_replies: self.core.metrics.counter("result.no_reply"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::churn::{sample_pool, PoolParams, FIG1_CITIES_MUX11};
+    use crate::util::json::Json;
+
+    fn wus(n: usize, flops: f64) -> Vec<WorkUnit> {
+        (0..n)
+            .map(|i| WorkUnit::new(0, format!("wu_{i}"), Json::obj().set("i", i as u64), flops))
+            .collect()
+    }
+
+    fn lab_sim(n_hosts: usize, n_wus: usize, flops_per_wu: f64) -> SimOutcome {
+        let mut rng = Rng::new(7);
+        let hosts = sample_pool(&mut rng, &PoolParams::lab(n_hosts), &[("lab", n_hosts)]);
+        let mut sim =
+            Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 7);
+        for wu in wus(n_wus, flops_per_wu) {
+            sim.submit(wu);
+        }
+        sim.run(1.3e9 * 0.95)
+    }
+
+    #[test]
+    fn all_wus_complete_on_lab_pool() {
+        let out = lab_sim(5, 25, 1e11);
+        assert_eq!(out.completed, 25);
+        assert_eq!(out.client_errors, 0);
+        assert!(out.speedup > 1.0, "5 dedicated hosts must beat 1: {}", out.speedup);
+    }
+
+    #[test]
+    fn more_hosts_more_speedup() {
+        let s5 = lab_sim(5, 25, 1e12).speedup;
+        let s10 = lab_sim(10, 25, 1e12).speedup;
+        assert!(s10 > s5, "paper Table 1: 10 clients beat 5 ({s5} vs {s10})");
+        assert!(s5 > 2.0 && s5 <= 5.0);
+        assert!(s10 > 4.0 && s10 <= 10.0);
+    }
+
+    #[test]
+    fn short_tasks_poor_speedup_under_churn() {
+        // the paper's 11-mux effect: ~135 s tasks + volunteer churn
+        // gives speedup < 1 (T_B includes idle tails and overhead)
+        let mut rng = Rng::new(11);
+        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(45), FIG1_CITIES_MUX11);
+        let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 11);
+        for wu in wus(120, 1.66e11) {
+            // ~135s on a 1.3 GFLOPS host
+            sim.submit(wu);
+        }
+        let out = sim.run(1.3e9 * 0.9);
+        assert!(out.completed >= 100, "most short WUs done: {}", out.completed);
+        assert!(out.speedup < 2.0, "churn should spoil short-task speedup: {}", out.speedup);
+    }
+
+    #[test]
+    fn determinism_same_seed_same_outcome() {
+        let a = lab_sim(5, 10, 1e11);
+        let b = lab_sim(5, 10, 1e11);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.completions, b.completions);
+    }
+
+    #[test]
+    fn host_death_recovers_via_reissue() {
+        let mut rng = Rng::new(13);
+        let mut hosts = sample_pool(&mut rng, &PoolParams::lab(3), &[("lab", 3)]);
+        // one host dies 10 minutes in
+        hosts[0].departure = 600.0;
+        let mut sim = Simulation::new(
+            SimConfig { tick_interval: 300.0, ..SimConfig::default() },
+            ServerConfig { deadline_slack: 2.0, ..ServerConfig::default() },
+            hosts,
+            13,
+        );
+        for mut wu in wus(6, 1e12) {
+            wu.delay_bound = 1800.0; // tight deadline so reissue happens
+            sim.submit(wu);
+        }
+        let out = sim.run(1.3e9 * 0.95);
+        assert_eq!(out.completed, 6, "reissue must recover lost work");
+        assert!(out.no_replies >= 1, "the dead host's WU must expire");
+    }
+}

@@ -1,0 +1,56 @@
+//! Leveled stderr logging with a global verbosity switch. Kept tiny on
+//! purpose: the hot paths must never allocate for suppressed levels, so
+//! the macros check the level before formatting.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// 0 = error, 1 = warn, 2 = info (default), 3 = debug, 4 = trace.
+static LEVEL: AtomicU8 = AtomicU8::new(2);
+
+pub fn set_level(level: u8) {
+    LEVEL.store(level, Ordering::Relaxed);
+}
+
+pub fn level() -> u8 {
+    LEVEL.load(Ordering::Relaxed)
+}
+
+#[doc(hidden)]
+pub fn emit(tag: &str, args: std::fmt::Arguments<'_>) {
+    eprintln!("[{tag}] {args}");
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($t:tt)*) => { $crate::util::log::emit("ERROR", format_args!($($t)*)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($t:tt)*) => {
+        if $crate::util::log::level() >= 1 { $crate::util::log::emit("WARN ", format_args!($($t)*)) }
+    };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($t:tt)*) => {
+        if $crate::util::log::level() >= 2 { $crate::util::log::emit("INFO ", format_args!($($t)*)) }
+    };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($t:tt)*) => {
+        if $crate::util::log::level() >= 3 { $crate::util::log::emit("DEBUG", format_args!($($t)*)) }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn level_roundtrip() {
+        let old = super::level();
+        super::set_level(4);
+        assert_eq!(super::level(), 4);
+        log_debug!("visible at level 4: {}", 42);
+        super::set_level(old);
+    }
+}

@@ -1,0 +1,39 @@
+//! In-repo substrates: RNG, JSON, statistics, bench harness, property
+//! testing, logging. The offline build environment provides no external
+//! crates for these, so they are implemented here (see DESIGN.md §2).
+
+pub mod bench;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a duration in seconds as `1h02m03s` / `42.0s` / `123ms`.
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 0.001 {
+        format!("{:.0}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.0}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.1}s")
+    } else if secs < 7200.0 {
+        format!("{:.0}m{:02.0}s", (secs / 60.0).floor(), secs % 60.0)
+    } else {
+        format!("{:.1}h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.000001), "1us");
+        assert_eq!(fmt_secs(0.5), "500ms");
+        assert_eq!(fmt_secs(42.0), "42.0s");
+        assert_eq!(fmt_secs(3600.0), "60m00s");
+        assert_eq!(fmt_secs(86400.0), "24.0h");
+    }
+}

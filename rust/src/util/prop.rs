@@ -1,0 +1,83 @@
+//! Mini property-testing runner (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `n` seeded random cases; on failure it
+//! reports the failing seed so the case can be replayed exactly:
+//!
+//! ```
+//! use vgp::util::{prop, rng::Rng};
+//! prop::check("sum is commutative", 256, |rng: &mut Rng| {
+//!     let (a, b) = (rng.range(-100, 100), rng.range(-100, 100));
+//!     prop::assert_prop(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Helper: turn a condition into a [`PropResult`].
+pub fn assert_prop(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond { Ok(()) } else { Err(msg.into()) }
+}
+
+/// Run `f` on `n` cases derived from a fixed master seed. Panics with
+/// the failing seed + message on the first failure.
+pub fn check<F>(name: &str, n: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    check_seeded(name, n, 0xC0FFEE_D00D, &mut f)
+}
+
+/// Like [`check`] with an explicit master seed (used to replay).
+pub fn check_seeded<F>(name: &str, n: u64, master: u64, f: &mut F)
+where
+    F: FnMut(&mut Rng) -> PropResult,
+{
+    for case in 0..n {
+        let seed = master ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{n} (replay seed {seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |_rng| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always fails", 10, |_rng| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn seeds_are_deterministic() {
+        let mut first: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second: Vec<u64> = Vec::new();
+        check("collect", 5, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,109 @@
+//! Campaign-level integration: the DES reproduces the paper's
+//! qualitative results (table shapes) end to end.
+
+use vgp::churn::{PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
+use vgp::coordinator::{simulate_campaign, Campaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+
+#[test]
+fn table1_shape_speedup_grows_with_clients_and_length() {
+    let mk = |gens, pop, clients| {
+        let c = Campaign::new("ant", ProblemKind::Ant, 25, gens, pop);
+        simulate_campaign(&c, &PoolParams::lab(clients), &[("lab", clients)], SimConfig::default(), 42)
+    };
+    let short5 = mk(1000, 1000, 5);
+    let long5 = mk(2000, 1000, 5);
+    let long10 = mk(2000, 1000, 10);
+    assert_eq!(short5.completed, 25);
+    assert!(long5.acceleration >= short5.acceleration * 0.95, "longer runs amortize overhead");
+    assert!(long10.acceleration > long5.acceleration, "10 clients beat 5");
+    assert!(long5.acceleration > 2.0 && long5.acceleration <= 5.0, "paper ~3.9: {}", long5.acceleration);
+    assert!(long10.acceleration > 4.0 && long10.acceleration <= 10.0, "paper ~5.67: {}", long10.acceleration);
+}
+
+#[test]
+fn table2_shape_short_tasks_lose_long_tasks_win() {
+    let mux11 = Campaign::new("mux11", ProblemKind::Mux11, 200, 50, 4000);
+    let r11 = simulate_campaign(
+        &mux11,
+        &PoolParams::volunteer(45),
+        FIG1_CITIES_MUX11,
+        SimConfig::default(),
+        42,
+    );
+    let mux20 = Campaign::new("mux20", ProblemKind::Mux20, 42, 50, 1000);
+    let r20 = simulate_campaign(
+        &mux20,
+        &PoolParams::volunteer(41),
+        FIG1_CITIES_MUX20,
+        SimConfig::default(),
+        42,
+    );
+    assert!(
+        r11.acceleration < r20.acceleration,
+        "granularity ordering: {} vs {}",
+        r11.acceleration,
+        r20.acceleration
+    );
+    assert!(r20.acceleration > 1.0, "paper 1.95: {}", r20.acceleration);
+    assert!(r20.acceleration < 15.0);
+    // the paper: "from 41 computers, 7 produced the 42 runs"
+    assert!(r20.productive_hosts < r20.attached_hosts);
+    // CP in the tens of GFLOPS for 2007-era pools
+    assert!(r11.cp_gflops > 5.0 && r11.cp_gflops < 300.0, "{}", r11.cp_gflops);
+}
+
+#[test]
+fn table3_shape_virtualized_pool() {
+    let c = Campaign::new("ip", ProblemKind::InterestPoint, 12, 75, 75);
+    let r = simulate_campaign(
+        &c,
+        &PoolParams::virtualized_lab(10),
+        &[("win", 10)],
+        SimConfig::default(),
+        42,
+    );
+    assert_eq!(r.completed, 12);
+    assert!(r.acceleration > 3.0 && r.acceleration < 9.0, "paper 4.48: {}", r.acceleration);
+}
+
+#[test]
+fn redundancy_costs_throughput() {
+    // E8 ablation shape: quorum 2 halves effective throughput
+    let mut c1 = Campaign::new("q1", ProblemKind::Ant, 20, 1000, 1000);
+    c1.redundancy = (1, 1);
+    let mut c2 = c1.clone();
+    c2.name = "q2".into();
+    c2.redundancy = (2, 2);
+    let r1 = simulate_campaign(&c1, &PoolParams::lab(10), &[("lab", 10)], SimConfig::default(), 5);
+    let r2 = simulate_campaign(&c2, &PoolParams::lab(10), &[("lab", 10)], SimConfig::default(), 5);
+    assert_eq!(r1.completed, 20);
+    assert_eq!(r2.completed, 20);
+    assert!(
+        r2.t_b > r1.t_b * 1.4,
+        "quorum-2 must roughly double work: {} vs {}",
+        r1.t_b,
+        r2.t_b
+    );
+}
+
+#[test]
+fn ideal_cluster_beats_volunteers_same_count() {
+    // E9 ablation shape: dedicated cluster > volunteer pool, same size
+    let c = Campaign::new("cmp", ProblemKind::Mux20, 30, 50, 1000);
+    let lab = simulate_campaign(&c, &PoolParams::lab(20), &[("lab", 20)], SimConfig::default(), 9);
+    let vol = simulate_campaign(
+        &c,
+        &PoolParams::volunteer(20),
+        FIG1_CITIES_MUX20,
+        SimConfig::default(),
+        9,
+    );
+    assert!(
+        lab.acceleration > vol.acceleration,
+        "cluster {} must beat volunteers {}",
+        lab.acceleration,
+        vol.acceleration
+    );
+}

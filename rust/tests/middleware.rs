@@ -1,0 +1,166 @@
+//! Integration tests for the BOINC middleware: multi-WU campaigns with
+//! redundancy, cheating, churn timeouts and error storms, across the
+//! scheduler / transitioner / validator / assimilator.
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::workunit::{Outcome, WorkUnit};
+use vgp::util::json::Json;
+
+fn host(name: &str, flops: f64) -> HostRow {
+    HostRow {
+        id: 0,
+        name: name.into(),
+        city: "test".into(),
+        flops,
+        ncpus: 1,
+        on_frac: 1.0,
+        active_frac: 1.0,
+        registered_at: 0.0,
+        last_heartbeat: 0.0,
+        error_results: 0,
+        valid_results: 0,
+        credit: 0.0,
+    }
+}
+
+fn payload(v: u64) -> Json {
+    Json::obj().set("answer", v)
+}
+
+#[test]
+fn campaign_with_redundancy_and_one_cheater() {
+    let mut s = ServerCore::new(ServerConfig::default());
+    let honest: Vec<u64> = (0..4).map(|i| s.register_host(host(&format!("h{i}"), 1e9))).collect();
+    let cheat = s.register_host(host("cheat", 1e9));
+    let n_wus = 10;
+    for i in 0..n_wus {
+        s.submit_wu(
+            WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), 1e9)
+                .with_redundancy(2, 2),
+        );
+    }
+    // drive to completion: round-robin work fetch, cheater lies
+    let mut now = 0.0;
+    for _round in 0..200 {
+        if s.is_complete() {
+            break;
+        }
+        now += 10.0;
+        for &h in honest.iter().chain(std::iter::once(&cheat)) {
+            if let Some((rid, wu, _)) = s.request_work(h, now) {
+                let truth = wu.spec.u64_of("i").unwrap();
+                let reply = if h == cheat { truth + 1000 } else { truth };
+                s.report_success(rid, now + 1.0, 1.0, payload(reply));
+            }
+        }
+        s.tick(now);
+    }
+    assert!(s.is_complete(), "campaign stalled");
+    assert_eq!(s.assimilated().len(), n_wus);
+    for a in s.assimilated() {
+        let v = a.payload.u64_of("answer").unwrap();
+        assert!(v < 1000, "a cheater's payload was assimilated: {v}");
+    }
+    // the cheater earned invalid marks and no credit
+    assert!(s.db.host(cheat).unwrap().error_results > 0);
+    assert_eq!(s.db.host(cheat).unwrap().credit, 0.0);
+}
+
+#[test]
+fn mass_timeout_storm_recovers() {
+    // 3 flaky hosts take work and never report; a reliable host joins
+    // later and finishes everything via reissues.
+    let mut s = ServerCore::new(ServerConfig::default());
+    let flaky: Vec<u64> = (0..3).map(|i| s.register_host(host(&format!("f{i}"), 1e9))).collect();
+    for i in 0..6 {
+        let mut wu = WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), 1e9);
+        wu.delay_bound = 100.0;
+        wu.max_error_results = 10;
+        wu.max_total_results = 20;
+        s.submit_wu(wu);
+    }
+    let mut now = 0.0;
+    for &h in &flaky {
+        while s.request_work(h, now).is_some() {
+            now += 1.0;
+        }
+    }
+    // all dispatched; nobody reports; deadlines expire
+    s.tick(10_000.0);
+    assert!(s.metrics.counter("result.no_reply") >= 3);
+    let reliable = s.register_host(host("reliable", 2e9));
+    let mut now = 10_001.0;
+    for _ in 0..100 {
+        if s.is_complete() {
+            break;
+        }
+        if let Some((rid, wu, _)) = s.request_work(reliable, now) {
+            s.report_success(rid, now + 1.0, 1.0, payload(wu.spec.u64_of("i").unwrap()));
+        }
+        now += 2.0;
+        s.tick(now);
+    }
+    assert!(s.is_complete());
+    assert_eq!(s.assimilated().len(), 6);
+}
+
+#[test]
+fn heterogeneous_hosts_get_deadlines_scaled() {
+    let mut s = ServerCore::new(ServerConfig::default());
+    let slow = s.register_host(host("slow", 1e8));
+    let fast = s.register_host(host("fast", 1e10));
+    for i in 0..2 {
+        let mut wu = WorkUnit::new(0, format!("wu{i}"), Json::obj(), 1e12);
+        wu.delay_bound = 10.0; // force the flops-based term to dominate
+        s.submit_wu(wu);
+    }
+    let (r_slow, _, _) = s.request_work(slow, 0.0).unwrap();
+    let (r_fast, _, _) = s.request_work(fast, 0.0).unwrap();
+    let d_slow = s.db.result(r_slow).unwrap().deadline;
+    let d_fast = s.db.result(r_fast).unwrap().deadline;
+    assert!(d_slow > d_fast, "slow host must get a later deadline ({d_slow} vs {d_fast})");
+}
+
+#[test]
+fn error_storm_hits_error_mask_not_livelock() {
+    let mut s = ServerCore::new(ServerConfig::default());
+    let h = s.register_host(host("h", 1e9));
+    let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+    wu.max_error_results = 3;
+    wu.max_total_results = 6;
+    let wu_id = s.submit_wu(wu);
+    let mut now = 0.0;
+    for _ in 0..10 {
+        if s.is_complete() {
+            break;
+        }
+        if let Some((rid, _, _)) = s.request_work(h, now) {
+            s.report_error(rid, now + 0.5);
+        }
+        now += 1.0;
+    }
+    assert!(s.db.wu(wu_id).unwrap().error_mask.any(), "error mask must trip");
+    assert!(s.is_complete());
+}
+
+#[test]
+fn outcome_states_reachable_and_consistent() {
+    let mut s = ServerCore::new(ServerConfig::default());
+    let h1 = s.register_host(host("a", 1e9));
+    let h2 = s.register_host(host("b", 1e9));
+    let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+    wu.delay_bound = 50.0;
+    s.submit_wu(wu);
+    // h1 takes and times out; h2 succeeds on the reissue
+    let (r1, _, _) = s.request_work(h1, 0.0).unwrap();
+    s.tick(1_000.0);
+    assert_eq!(s.db.result(r1).unwrap().outcome, Outcome::NoReply);
+    let (r2, _, _) = s.request_work(h2, 1_001.0).unwrap();
+    s.report_success(r2, 1_002.0, 1.0, payload(1));
+    assert_eq!(s.db.result(r2).unwrap().outcome, Outcome::Success);
+    assert!(s.is_complete());
+    // exactly one canonical result
+    let canon = s.db.wu(s.assimilated()[0].wu_id).unwrap().canonical_result;
+    assert_eq!(canon, Some(r2));
+}

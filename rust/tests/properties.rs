@@ -1,0 +1,244 @@
+//! Property-based tests (util::prop) over the coordinator, the GP
+//! representation and the middleware invariants.
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::workunit::{ServerState, WorkUnit};
+use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::ops::{crossover, mutate, Limits};
+use vgp::gp::primset::{bool_set, regression_set};
+use vgp::gp::problems::multiplexer::Multiplexer;
+use vgp::gp::tape::{self, opcodes};
+use vgp::util::json::Json;
+use vgp::util::prop::{assert_prop, check};
+use vgp::util::rng::Rng;
+
+fn mux6() -> Multiplexer {
+    Multiplexer::new(2)
+}
+
+#[test]
+fn prop_genetic_ops_preserve_invariants() {
+    let m = mux6();
+    let ps = m.primset().clone();
+    let limits = Limits::default();
+    check("ops preserve wellformedness+limits", 300, |rng: &mut Rng| {
+        let pop = ramped_half_and_half(rng, &ps, 8, 2, 6);
+        let a = &pop[rng.below(8)];
+        let b = &pop[rng.below(8)];
+        let c = crossover(rng, a, b, &ps, limits);
+        let mu = mutate(rng, a, &ps, limits, 4);
+        assert_prop(c.is_well_formed(&ps), "xover malformed")?;
+        assert_prop(mu.is_well_formed(&ps), "mutant malformed")?;
+        assert_prop(c.len() <= limits.max_size, "xover oversize")?;
+        assert_prop(c.postfix_need(&ps) <= limits.max_stack, "xover stack")?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tape_compile_matches_recursive_tree_eval() {
+    // independent oracle: direct recursive tree evaluation per case
+    fn tree_eval(
+        t: &vgp::gp::tree::Tree,
+        ps: &vgp::gp::primset::PrimSet,
+        case: u64,
+        i: &mut usize,
+    ) -> bool {
+        use vgp::gp::tape::opcodes as oc;
+        let op = t.ops[*i];
+        *i += 1;
+        let tape_op = ps.prims[op as usize].tape_op;
+        if tape_op < oc::BOOL_NUM_VARS {
+            return (case >> tape_op) & 1 == 1;
+        }
+        match tape_op {
+            x if x == oc::BOOL_OP_NOT => !tree_eval(t, ps, case, i),
+            x if x == oc::BOOL_OP_AND => {
+                let a = tree_eval(t, ps, case, i);
+                let b = tree_eval(t, ps, case, i);
+                a & b
+            }
+            x if x == oc::BOOL_OP_OR => {
+                let a = tree_eval(t, ps, case, i);
+                let b = tree_eval(t, ps, case, i);
+                a | b
+            }
+            x if x == oc::BOOL_OP_NAND => {
+                let a = tree_eval(t, ps, case, i);
+                let b = tree_eval(t, ps, case, i);
+                !(a & b)
+            }
+            x if x == oc::BOOL_OP_NOR => {
+                let a = tree_eval(t, ps, case, i);
+                let b = tree_eval(t, ps, case, i);
+                !(a | b)
+            }
+            x if x == oc::BOOL_OP_XOR => {
+                let a = tree_eval(t, ps, case, i);
+                let b = tree_eval(t, ps, case, i);
+                a ^ b
+            }
+            x if x == oc::BOOL_OP_IF => {
+                let c = tree_eval(t, ps, case, i);
+                let th = tree_eval(t, ps, case, i);
+                let el = tree_eval(t, ps, case, i);
+                if c {
+                    th
+                } else {
+                    el
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    let m = mux6();
+    let ps = m.primset().clone();
+    check("tape == recursive tree eval", 150, |rng: &mut Rng| {
+        let t = &ramped_half_and_half(rng, &ps, 1, 2, 6)[0];
+        let tape = tape::compile(t, &ps, opcodes::BOOL_NOP).map_err(|e| e.to_string())?;
+        let hits_tape = tape::eval_bool_native(&tape, &m.cases);
+        let mut hits_tree = 0u64;
+        for case in 0..m.cases.ncases {
+            let mut i = 0;
+            let out = tree_eval(t, &ps, case, &mut i);
+            let want = {
+                let w = (case / 32) as usize;
+                (m.cases.target[w] >> (case % 32)) & 1 == 1
+            };
+            if out == want {
+                hits_tree += 1;
+            }
+        }
+        assert_prop(
+            hits_tape == hits_tree,
+            format!("tape {hits_tape} != tree {hits_tree} for {}", t.display(&ps)),
+        )
+    });
+}
+
+#[test]
+fn prop_scheduler_never_double_dispatches() {
+    check("no result dispatched twice", 60, |rng: &mut Rng| {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let hosts: Vec<u64> = (0..4)
+            .map(|i| {
+                s.register_host(HostRow {
+                    id: 0,
+                    name: format!("h{i}"),
+                    city: "x".into(),
+                    flops: 1e9,
+                    ncpus: 1,
+                    on_frac: 1.0,
+                    active_frac: 1.0,
+                    registered_at: 0.0,
+                    last_heartbeat: 0.0,
+                    error_results: 0,
+                    valid_results: 0,
+                    credit: 0.0,
+                })
+            })
+            .collect();
+        for i in 0..5 {
+            s.submit_wu(
+                WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), 1e9)
+                    .with_redundancy(1 + rng.below(2), 1),
+            );
+        }
+        let mut seen = std::collections::HashSet::new();
+        let mut now = 0.0;
+        for _ in 0..60 {
+            now += rng.uniform(1.0, 50.0);
+            let h = hosts[rng.below(hosts.len())];
+            if let Some((rid, _, _)) = s.request_work(h, now) {
+                assert_prop(seen.insert(rid), format!("result {rid} dispatched twice"))?;
+                if rng.chance(0.7) {
+                    s.report_success(rid, now + 1.0, 1.0, Json::obj().set("ok", true));
+                } else if rng.chance(0.5) {
+                    s.report_error(rid, now + 1.0);
+                } // else: never report (NO_REPLY via deadline later)
+            }
+            if rng.chance(0.3) {
+                s.tick(now);
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_terminal_result_states_absorbing() {
+    check("Over is absorbing", 60, |rng: &mut Rng| {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(HostRow {
+            id: 0,
+            name: "h".into(),
+            city: "x".into(),
+            flops: 1e9,
+            ncpus: 1,
+            on_frac: 1.0,
+            active_frac: 1.0,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            credit: 0.0,
+        });
+        s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let (rid, _, _) = s.request_work(h, 0.0).unwrap();
+        s.report_success(rid, 1.0, 1.0, Json::obj().set("v", 1u64));
+        let outcome_before = s.db.result(rid).unwrap().outcome;
+        // bombard with late/duplicate events
+        for _ in 0..10 {
+            let t = rng.uniform(2.0, 1e6);
+            s.report_success(rid, t, 1.0, Json::obj().set("v", 999u64));
+            s.report_error(rid, t);
+            s.tick(t);
+        }
+        let r = s.db.result(rid).unwrap();
+        assert_prop(r.server_state == ServerState::Over, "left Over")?;
+        assert_prop(r.outcome == outcome_before, "outcome mutated after terminal")?;
+        assert_prop(
+            r.payload.as_ref().unwrap().u64_of("v").unwrap() == 1,
+            "payload overwritten by late report",
+        )
+    });
+}
+
+#[test]
+fn prop_regression_tape_matches_scalar_eval() {
+    let ps = regression_set(1);
+    check("reg tape vs pointwise", 100, |rng: &mut Rng| {
+        let t = &ramped_half_and_half(rng, &ps, 1, 2, 5)[0];
+        let tape = tape::compile(t, &ps, opcodes::REG_NOP).map_err(|e| e.to_string())?;
+        let xs: Vec<f32> = (0..8).map(|i| -1.0 + i as f32 * 0.25).collect();
+        let ys = vec![0f32; 8];
+        let cases = tape::RegCases { x: vec![xs.clone()], y: ys };
+        let (sse_all, _) = tape::eval_reg_native(&tape, &cases);
+        // pointwise: evaluate each case alone; SSE must sum
+        let mut sse_sum = 0f64;
+        for (i, &x) in xs.iter().enumerate() {
+            let c1 = tape::RegCases { x: vec![vec![x]], y: vec![0.0] };
+            let (s1, _) = tape::eval_reg_native(&tape, &c1);
+            sse_sum += s1;
+            let _ = i;
+        }
+        assert_prop(
+            (sse_all - sse_sum).abs() <= 1e-3 * (1.0 + sse_all.abs()),
+            format!("{sse_all} != {sse_sum}"),
+        )
+    });
+}
+
+#[test]
+fn prop_json_roundtrip_arbitrary_trees() {
+    let ps = bool_set(11, true, &["a0", "a1", "a2", "d0", "d1", "d2", "d3", "d4", "d5", "d6", "d7"]);
+    check("tree json roundtrip", 200, |rng: &mut Rng| {
+        let t = &ramped_half_and_half(rng, &ps, 1, 2, 6)[0];
+        let s = t.to_json().to_string();
+        let back = vgp::gp::tree::Tree::from_json(&Json::parse(&s).map_err(|e| e.to_string())?)
+            .map_err(|e| e.to_string())?;
+        assert_prop(&back == t, "roundtrip mismatch")
+    });
+}

@@ -1,0 +1,89 @@
+//! Real TCP end-to-end: server + multiple concurrent workers executing
+//! native GP runs, with redundancy validation over the wire.
+
+use vgp::boinc::net::{serve, Worker};
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::coordinator::{exec, Campaign};
+use vgp::gp::problems::ProblemKind;
+
+#[test]
+fn multi_worker_campaign_over_tcp() {
+    let mut campaign = Campaign::new("tcp_mux6", ProblemKind::Mux6, 6, 8, 120);
+    campaign.seed = 77;
+    let mut core = ServerCore::new(ServerConfig::default());
+    for wu in campaign.workunits() {
+        core.submit_wu(wu);
+    }
+    let key = core.key.clone();
+    let handle = serve(core).unwrap();
+    let addr = handle.addr;
+
+    let mut joins = Vec::new();
+    for w in 0..3 {
+        let key = key.clone();
+        joins.push(std::thread::spawn(move || {
+            let worker = Worker {
+                name: format!("w{w}"),
+                city: "test".into(),
+                flops: 1e9,
+                poll_interval: std::time::Duration::from_millis(10),
+            };
+            worker.run(addr, &key, &|spec| exec::run_wu_native(spec)).unwrap()
+        }));
+    }
+    let mut total = 0;
+    for j in joins {
+        total += j.join().unwrap().completed;
+    }
+    assert_eq!(total, 6);
+    {
+        let core = handle.core.lock().unwrap();
+        assert!(core.is_complete());
+        assert_eq!(core.assimilated().len(), 6);
+        for a in core.assimilated() {
+            assert!(a.payload.get("best_raw").is_some());
+        }
+        // all workers got registered and heartbeated
+        assert_eq!(core.metrics.counter("host.registered"), 3);
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn quorum_over_tcp_with_deterministic_payloads() {
+    // redundancy 2/quorum 2: two honest workers must agree bitwise
+    // because run_wu_native is deterministic for a given spec
+    let mut campaign = Campaign::new("tcp_quorum", ProblemKind::Quartic, 3, 5, 60);
+    campaign.redundancy = (2, 2);
+    let mut core = ServerCore::new(ServerConfig::default());
+    for wu in campaign.workunits() {
+        core.submit_wu(wu);
+    }
+    let key = core.key.clone();
+    let handle = serve(core).unwrap();
+    let addr = handle.addr;
+    let mut joins = Vec::new();
+    for w in 0..2 {
+        let key = key.clone();
+        joins.push(std::thread::spawn(move || {
+            let worker = Worker {
+                name: format!("q{w}"),
+                city: "test".into(),
+                flops: 1e9,
+                poll_interval: std::time::Duration::from_millis(10),
+            };
+            worker.run(addr, &key, &|spec| exec::run_wu_native(spec)).unwrap()
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    {
+        let core = handle.core.lock().unwrap();
+        assert!(core.is_complete(), "quorum must be reached by agreement");
+        assert_eq!(core.assimilated().len(), 3);
+        assert_eq!(core.metrics.counter("result.valid"), 6, "both replicas validate");
+        assert_eq!(core.metrics.counter("result.invalid"), 0);
+    }
+    handle.shutdown();
+}
