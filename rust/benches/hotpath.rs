@@ -1,5 +1,7 @@
 //! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md):
 //! * native bit-packed tape evaluation (progs x cases /s)
+//! * batched multi-thread evaluation (gp::eval) at 1/2/4/8 threads,
+//!   with the 4-thread-vs-1 speedup printed (acceptance: >= 2x)
 //! * AOT-artifact evaluation via PJRT (same metric, Method-2 path)
 //! * tape compilation
 //! * scheduler RPC throughput
@@ -11,6 +13,7 @@ use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::boinc::workunit::WorkUnit;
 use vgp::churn::{sample_pool, PoolParams};
 use vgp::coordinator::REFERENCE_FLOPS;
+use vgp::gp::eval::BatchEvaluator;
 use vgp::gp::init::ramped_half_and_half;
 use vgp::gp::ops::{crossover, Limits};
 use vgp::gp::problems::multiplexer::Multiplexer;
@@ -38,6 +41,27 @@ fn main() {
         }
         std::hint::black_box(acc);
     });
+
+    // ---- batched parallel eval: same workload through gp::eval
+    let ps = m.primset().clone();
+    let mut throughputs: Vec<(usize, f64)> = Vec::new();
+    for threads in [1usize, 2, 4, 8] {
+        let mut ev = BatchEvaluator::new(threads);
+        let res = b.run_throughput(
+            &format!("batch eval, {threads} thread(s) (256 prog x 2048 cases)"),
+            progs_cases,
+            "prog*case",
+            || {
+                let fits = ev.evaluate_bool(&pop, &ps, &m.cases);
+                std::hint::black_box(&fits);
+            },
+        );
+        throughputs.push((threads, res.per_sec()));
+    }
+    let t1 = throughputs[0].1;
+    for &(threads, rate) in &throughputs[1..] {
+        println!("      batch eval speedup @{threads} threads vs 1: {:.2}x", rate / t1);
+    }
 
     // ---- artifact eval (if built)
     if std::path::Path::new("artifacts/meta.json").exists() {

@@ -62,6 +62,10 @@ pub struct PoolParams {
     /// probability a given WU execution fails client-side (paper §4.2:
     /// Java heap errors)
     pub client_error_rate: f64,
+    /// cores per host; the DES scales a host's WU throughput by this
+    /// (2007-era pools were effectively single-core — BOINC's
+    /// overcounting of multi-core is the paper's 80-GFLOPS footnote)
+    pub ncpus: u32,
 }
 
 impl PoolParams {
@@ -77,7 +81,14 @@ impl PoolParams {
             active_frac: 1.0,
             efficiency: 0.95,
             client_error_rate: 0.0,
+            ncpus: 1,
         }
+    }
+
+    /// Same pool with multi-core hosts (the `ncpus` column of eq. 2).
+    pub fn with_ncpus(mut self, ncpus: u32) -> PoolParams {
+        self.ncpus = ncpus.max(1);
+        self
     }
 
     /// The paper's volunteer pool (Table 2). Lifetimes are short
@@ -95,6 +106,7 @@ impl PoolParams {
             active_frac: 0.75,
             efficiency: 0.9,
             client_error_rate: 0.05,
+            ncpus: 1,
         }
     }
 
@@ -112,6 +124,7 @@ impl PoolParams {
             active_frac: 0.9,
             efficiency: 0.85,
             client_error_rate: 0.02,
+            ncpus: 1,
         }
     }
 }
@@ -132,9 +145,18 @@ pub struct SimHost {
 }
 
 impl SimHost {
-    /// Effective computation rate while attached (FLOPS usable by GP).
+    /// Effective computation rate of ONE core while attached (FLOPS
+    /// usable by GP).
     pub fn effective_flops(&self) -> f64 {
         self.flops * self.on_frac * self.active_frac * self.efficiency
+    }
+
+    /// Whole-host WU throughput: BOINC runs one task per core, and the
+    /// batched evaluator (gp::eval) lets a single task use every core,
+    /// so either way an `ncpus`-core host drains work `ncpus`× faster.
+    /// This is the rate the DES uses for compute durations.
+    pub fn throughput_flops(&self) -> f64 {
+        self.effective_flops() * self.ncpus.max(1) as f64
     }
 
     pub fn lifetime(&self) -> f64 {
@@ -173,7 +195,7 @@ pub fn sample_pool(
             name: format!("host{i:03}"),
             city: city.to_string(),
             flops,
-            ncpus: 1,
+            ncpus: params.ncpus.max(1),
             arrival,
             departure: arrival + lifetime,
             on_frac: rng.fraction(params.on_frac),
@@ -302,6 +324,19 @@ mod tests {
         assert!(finite > 30, "most volunteers churn within the month: {finite}");
         let caceres = hosts.iter().filter(|h| h.city == "Cáceres").count();
         assert_eq!(caceres, 25, "Fig 1 city assignment");
+    }
+
+    #[test]
+    fn ncpus_scales_throughput_and_samples_into_hosts() {
+        let mut rng = Rng::new(8);
+        let hosts = sample_pool(&mut rng, &PoolParams::lab(3).with_ncpus(4), &[("lab", 3)]);
+        for h in &hosts {
+            assert_eq!(h.ncpus, 4);
+            assert!((h.throughput_flops() - 4.0 * h.effective_flops()).abs() < 1e-6);
+        }
+        // eq. 2 sees the cores too
+        let cp = ComputingPower::from_pool(&hosts, 1.0, 1.0, 1.0);
+        assert!((cp.mean_ncpus - 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -10,12 +10,18 @@
 //! runs = 25
 //! generations = 50
 //! population = 4000
+//! threads = 4        # worker-side eval threads (gp::eval batch pool)
 //!
 //! [pool]
 //! hosts = 45
+//! ncpus = 2          # cores per simulated host (scales throughput)
 //! churn = volunteer
 //! seed = 7
 //! ```
+//!
+//! `Campaign::from_config` (coordinator) consumes the `[campaign]`
+//! section, including the `threads` knob that is forwarded into every
+//! WU spec.
 
 use std::collections::BTreeMap;
 

@@ -29,7 +29,16 @@ pub fn params_of_spec(spec: &Json) -> Result<(ProblemKind, Params)> {
     Ok((problem, params))
 }
 
-fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
+/// Worker-side evaluation thread count for a WU spec (defaults to 1).
+/// Any value is safe: the batched evaluators are bit-identical across
+/// thread counts, so quorum payloads never depend on this knob.
+pub fn threads_of_spec(spec: &Json) -> usize {
+    spec.get("threads").and_then(Json::as_u64).unwrap_or(1).max(1) as usize
+}
+
+/// Canonical result payload for a finished run (what quorum validation
+/// hashes; deterministic for a given spec).
+pub fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
     Json::obj()
         .set("best_raw", run.best_fitness.raw)
         .set("best_adjusted", run.best_fitness.adjusted())
@@ -40,13 +49,16 @@ fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
         .set("best_size", run.best.len() as u64)
 }
 
-/// Execute a WU spec with native (Method-1) evaluation.
+/// Execute a WU spec with native (Method-1) evaluation. The spec's
+/// `threads` knob fans fitness evaluation across that many cores via
+/// the batched evaluators — payloads stay byte-identical regardless.
 pub fn run_wu_native(spec: &Json) -> Result<Json> {
     let (problem, params) = params_of_spec(spec)?;
+    let threads = threads_of_spec(spec);
     let run = match problem {
         ProblemKind::Ant => {
             let ps = ant::ant_set();
-            let mut ev = ant::NativeEvaluator::new();
+            let mut ev = ant::NativeEvaluator::with_threads(threads);
             Engine::new(params, &ps).run(&mut ev)
         }
         ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
@@ -57,24 +69,25 @@ pub fn run_wu_native(spec: &Json) -> Result<Json> {
             };
             let m = multiplexer::Multiplexer::new(k);
             let ps = m.primset().clone();
-            let mut ev = multiplexer::NativeEvaluator { problem: &m };
+            let mut ev = multiplexer::NativeEvaluator::with_threads(&m, threads);
             Engine::new(params, &ps).run(&mut ev)
         }
         ProblemKind::Parity5 => {
             let p = parity::Parity::new(5);
             let ps = p.primset().clone();
-            let mut ev = parity::NativeEvaluator { problem: &p };
+            let mut ev = parity::NativeEvaluator::with_threads(&p, threads);
             Engine::new(params, &ps).run(&mut ev)
         }
         ProblemKind::Quartic => {
             let q = regression::Quartic::new(20);
             let ps = q.primset().clone();
-            let mut ev = regression::NativeEvaluator { problem: &q };
+            let mut ev = regression::NativeEvaluator::with_threads(&q, threads);
             Engine::new(params, &ps).run(&mut ev)
         }
         ProblemKind::InterestPoint => {
             let ps = interest_point::ip_set();
-            let mut ev = interest_point::NativeEvaluator::new(spec.u64_of("seed")?);
+            let mut ev =
+                interest_point::NativeEvaluator::with_threads(spec.u64_of("seed")?, threads);
             Engine::new(params, &ps).run(&mut ev)
         }
     };
@@ -132,6 +145,20 @@ mod tests {
         let a = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
         let b = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
         assert_eq!(a, b, "payload must be hash-stable for quorum validation");
+    }
+
+    #[test]
+    fn payload_identical_across_thread_counts() {
+        // quorum validation hashes payloads across heterogeneous
+        // volunteers: the threads knob must never change the bytes
+        let mut c = Campaign::new("t", ProblemKind::Mux6, 1, 6, 120);
+        let base = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
+        c.threads = 4;
+        let spec = c.wu_spec(0);
+        assert_eq!(spec.u64_of("threads").unwrap(), 4);
+        // strip the spec difference: payload must match the 1-thread run
+        let threaded = run_wu_native(&spec).unwrap().to_string();
+        assert_eq!(base, threaded, "payload hash must be thread-count independent");
     }
 
     #[test]

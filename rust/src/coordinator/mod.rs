@@ -27,6 +27,10 @@ pub struct Campaign {
     pub population: usize,
     pub redundancy: (usize, usize), // (target_nresults, min_quorum)
     pub seed: u64,
+    /// Worker-side evaluation threads per WU (gp::eval batch pool);
+    /// payloads are bit-identical for any value, so heterogeneous
+    /// volunteer core counts never break quorum agreement.
+    pub threads: usize,
 }
 
 impl Campaign {
@@ -39,7 +43,28 @@ impl Campaign {
             population,
             redundancy: (1, 1),
             seed: 1,
+            threads: 1,
         }
+    }
+
+    /// Build a campaign from an INI `[campaign]` section (see the
+    /// `config` module docs for the file shape).
+    pub fn from_config(cfg: &crate::config::Config) -> anyhow::Result<Campaign> {
+        let problem = ProblemKind::parse(cfg.str_or("campaign", "problem", "mux6"))?;
+        let mut c = Campaign::new(
+            cfg.str_or("campaign", "name", "campaign"),
+            problem,
+            cfg.u64_or("campaign", "runs", 25) as usize,
+            cfg.u64_or("campaign", "generations", 50) as usize,
+            cfg.u64_or("campaign", "population", 1000) as usize,
+        );
+        c.seed = cfg.u64_or("campaign", "seed", 1);
+        c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
+        c.redundancy = (
+            cfg.u64_or("campaign", "target_nresults", 1) as usize,
+            cfg.u64_or("campaign", "min_quorum", 1) as usize,
+        );
+        Ok(c)
     }
 
     /// FLOPs for one full GP run of this campaign (evals x cost/eval).
@@ -58,6 +83,7 @@ impl Campaign {
             .set("population", self.population as u64)
             .set("seed", self.seed + run as u64)
             .set("run", run as u64)
+            .set("threads", self.threads as u64)
     }
 
     /// Materialize the WUs of this campaign. The delay bound (deadline
@@ -172,6 +198,20 @@ mod tests {
         assert_eq!(wus.len(), 3);
         assert_ne!(wus[0].spec.to_string(), wus[1].spec.to_string());
         assert_eq!(wus[0].target_nresults, 1);
+    }
+
+    #[test]
+    fn campaign_from_config_reads_threads() {
+        let cfg = crate::config::Config::parse(
+            "[campaign]\nproblem = mux11\nruns = 3\ngenerations = 10\npopulation = 200\nthreads = 4\nseed = 9\n",
+        )
+        .unwrap();
+        let c = Campaign::from_config(&cfg).unwrap();
+        assert_eq!(c.problem, ProblemKind::Mux11);
+        assert_eq!(c.runs, 3);
+        assert_eq!(c.threads, 4);
+        assert_eq!(c.wu_spec(0).u64_of("threads").unwrap(), 4);
+        assert_eq!(c.wu_spec(1).u64_of("seed").unwrap(), 10);
     }
 
     #[test]

@@ -68,24 +68,39 @@ pub struct RunResult {
 }
 
 /// Serializable mid-run state (the BOINC checkpoint facility, §2).
+///
+/// `rng` is the **exact** xoshiro256** state (not a re-derived seed)
+/// and `best` carries the best-so-far individual, so a resumed run is
+/// bit-identical to an uninterrupted one — the property quorum
+/// validation and resume-after-churn both depend on.
 #[derive(Clone, Debug)]
 pub struct Checkpoint {
     pub gen: usize,
     pub rng: [u64; 4],
     pub population: Vec<Tree>,
     pub total_evals: u64,
+    pub best: Option<(Tree, Fitness)>,
 }
 
 impl Checkpoint {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("gen", self.gen as u64)
             .set(
                 "rng",
                 Json::Arr(self.rng.iter().map(|&s| Json::Str(format!("{s:016x}"))).collect()),
             )
             .set("total_evals", self.total_evals)
-            .set("population", Json::Arr(self.population.iter().map(Tree::to_json).collect()))
+            .set("population", Json::Arr(self.population.iter().map(Tree::to_json).collect()));
+        if let Some((tree, fit)) = &self.best {
+            // raw is stored as f64 bits so the round-trip is exact
+            // (and survives non-finite values like Fitness::worst)
+            j = j
+                .set("best_tree", tree.to_json())
+                .set("best_raw_bits", format!("{:016x}", fit.raw.to_bits()))
+                .set("best_hits", fit.hits as u64);
+        }
+        j
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Checkpoint> {
@@ -109,7 +124,16 @@ impl Checkpoint {
             .iter()
             .map(Tree::from_json)
             .collect::<anyhow::Result<Vec<Tree>>>()?;
-        Ok(Checkpoint { gen, rng, population, total_evals })
+        let best = match j.get("best_tree") {
+            Some(tj) => {
+                let tree = Tree::from_json(tj)?;
+                let raw_bits = u64::from_str_radix(j.str_of("best_raw_bits")?, 16)?;
+                let hits = j.u64_of("best_hits")? as u32;
+                Some((tree, Fitness { raw: f64::from_bits(raw_bits), hits }))
+            }
+            None => None,
+        };
+        Ok(Checkpoint { gen, rng, population, total_evals, best })
     }
 }
 
@@ -123,6 +147,7 @@ pub struct Engine<'a> {
     fitnesses: Vec<Fitness>,
     gen: usize,
     total_evals: u64,
+    best: Option<(Tree, Fitness)>,
     pub history: Vec<GenStats>,
 }
 
@@ -131,7 +156,17 @@ impl<'a> Engine<'a> {
         let mut rng = Rng::new(params.seed);
         let population =
             ramped_half_and_half(&mut rng, ps, params.population, params.init_min_depth, params.init_max_depth);
-        Engine { params, ps, rng, population, fitnesses: Vec::new(), gen: 0, total_evals: 0, history: Vec::new() }
+        Engine {
+            params,
+            ps,
+            rng,
+            population,
+            fitnesses: Vec::new(),
+            gen: 0,
+            total_evals: 0,
+            best: None,
+            history: Vec::new(),
+        }
     }
 
     /// Resume from a checkpoint (BOINC restart after host churn).
@@ -139,11 +174,12 @@ impl<'a> Engine<'a> {
         Engine {
             params,
             ps,
-            rng: rng_from_state(ck.rng),
+            rng: Rng::from_state(ck.rng),
             population: ck.population,
             fitnesses: Vec::new(),
             gen: ck.gen,
             total_evals: ck.total_evals,
+            best: ck.best,
             history: Vec::new(),
         }
     }
@@ -151,10 +187,16 @@ impl<'a> Engine<'a> {
     pub fn checkpoint(&self) -> Checkpoint {
         Checkpoint {
             gen: self.gen,
-            rng: rng_state(&self.rng),
+            rng: self.rng.state(),
             population: self.population.clone(),
             total_evals: self.total_evals,
+            best: self.best.clone(),
         }
+    }
+
+    /// Best (tree, fitness) seen across all evaluated generations.
+    pub fn best(&self) -> Option<&(Tree, Fitness)> {
+        self.best.as_ref()
     }
 
     pub fn generation(&self) -> usize {
@@ -192,6 +234,13 @@ impl<'a> Engine<'a> {
         };
         self.history.push(stats);
 
+        // track the best (tree, fitness) pair before breeding replaces
+        // the population (strictly-better keeps the first winner, so
+        // the choice is deterministic and checkpoint-stable)
+        if self.best.as_ref().map(|(_, f)| self.fitnesses[best_i].raw < f.raw).unwrap_or(true) {
+            self.best = Some((self.population[best_i].clone(), self.fitnesses[best_i]));
+        }
+
         // breed next generation
         let p = self.params;
         let mut next: Vec<Tree> = Vec::with_capacity(self.population.len());
@@ -221,28 +270,39 @@ impl<'a> Engine<'a> {
         stats
     }
 
-    /// Run to completion (or perfect solution), evaluating the final
-    /// population once more to report the true best individual.
+    /// Run to completion (or perfect solution), reporting the best
+    /// individual tracked across every evaluated generation by
+    /// [`Engine::step`] — correct for `elitism == 0` (where the bred
+    /// population's slot 0 is an arbitrary child) and when resuming a
+    /// checkpoint of an already-finished run (where no further step
+    /// happens but the checkpoint carries the best pair).
     pub fn run(&mut self, eval: &mut dyn Evaluator) -> RunResult {
-        let mut best: Option<(Tree, Fitness)> = None;
-        let mut found_perfect = false;
-        while self.gen < self.params.generations {
+        let mut found_perfect = self.params.stop_on_perfect
+            && self.best.as_ref().map(|(_, f)| f.raw <= 0.0).unwrap_or(false);
+        while !found_perfect && self.gen < self.params.generations {
             let stats = self.step(eval);
-            // population was replaced; with elitism >= 1 slot 0 holds
-            // the best tree of the generation just evaluated
-            let cand_tree = self.population[0].clone();
-            let cand_fit = Fitness { raw: stats.best_raw, hits: stats.best_hits };
-            if best.as_ref().map(|(_, f)| cand_fit.raw < f.raw).unwrap_or(true) {
-                best = Some((cand_tree, cand_fit));
-            }
             if self.params.stop_on_perfect && stats.best_raw <= 0.0 {
                 found_perfect = true;
-                break;
             }
         }
-        let (best_tree, best_fit) = best.unwrap_or_else(|| {
-            (self.population[0].clone(), Fitness::worst())
-        });
+        let (best_tree, best_fit) = match &self.best {
+            Some((tree, fit)) => (tree.clone(), *fit),
+            None => {
+                // zero-generation run: evaluate the initial population
+                // once so the reported best is real, not a placeholder
+                let fits = eval.evaluate(&self.population, self.ps);
+                self.total_evals += self.population.len() as u64;
+                let mut best_i = 0;
+                for (i, f) in fits.iter().enumerate() {
+                    if f.raw < fits[best_i].raw {
+                        best_i = i;
+                    }
+                }
+                let fit = fits[best_i];
+                self.best = Some((self.population[best_i].clone(), fit));
+                (self.population[best_i].clone(), fit)
+            }
+        };
         RunResult {
             best: best_tree,
             best_fitness: best_fit,
@@ -252,20 +312,6 @@ impl<'a> Engine<'a> {
             found_perfect,
         }
     }
-}
-
-fn rng_state(r: &Rng) -> [u64; 4] {
-    // Rng is Clone+Debug; expose state through a controlled round-trip.
-    // (Rng fields are private to keep the API tight; serialize via fork
-    // determinism: we store a seed snapshot instead.)
-    // For checkpoints we re-derive: store four draws as the state.
-    let mut c = r.clone();
-    [c.next_u64(), c.next_u64(), c.next_u64(), c.next_u64()]
-}
-
-fn rng_from_state(s: [u64; 4]) -> Rng {
-    // Reconstruct a deterministic stream from the snapshot.
-    Rng::new(s[0] ^ s[1].rotate_left(17) ^ s[2].rotate_left(31) ^ s[3].rotate_left(47))
 }
 
 #[cfg(test)]
@@ -330,6 +376,70 @@ mod tests {
         assert_eq!(r1.best_fitness.raw, r2.best_fitness.raw);
         assert_eq!(r1.total_evals, r2.total_evals);
         assert_eq!(r1.best, r2.best);
+    }
+
+    #[test]
+    fn zero_elitism_reports_a_tree_that_earns_its_fitness() {
+        let ps = ps();
+        let params = Params {
+            population: 150,
+            generations: 8,
+            elitism: 0,
+            seed: 13,
+            stop_on_perfect: false,
+            ..Params::default()
+        };
+        let mut e = Engine::new(params, &ps);
+        let result = e.run(&mut NativeMux6);
+        // the returned tree must reproduce the claimed fitness exactly
+        let fits = NativeMux6.evaluate(std::slice::from_ref(&result.best), &ps);
+        assert_eq!(fits[0].raw, result.best_fitness.raw, "best tree does not match its fitness");
+        assert_eq!(fits[0].hits, result.best_fitness.hits);
+        // and it must be the best raw seen across the whole history
+        let hist_best =
+            result.history.iter().map(|s| s.best_raw).fold(f64::INFINITY, f64::min);
+        assert_eq!(result.best_fitness.raw, hist_best);
+    }
+
+    #[test]
+    fn resuming_finished_run_keeps_true_best() {
+        let ps = ps();
+        let params = Params { population: 100, generations: 4, seed: 17, stop_on_perfect: false, ..Params::default() };
+        let mut e = Engine::new(params, &ps);
+        let r1 = e.run(&mut NativeMux6);
+        // resume the finished run from its checkpoint: no extra evals,
+        // same best (was: population[0] + Fitness::worst)
+        let mut e2 = Engine::from_checkpoint(params, &ps, e.checkpoint());
+        let r2 = e2.run(&mut NativeMux6);
+        assert_eq!(r2.best, r1.best);
+        assert_eq!(r2.best_fitness.raw, r1.best_fitness.raw);
+        assert_eq!(r2.total_evals, r1.total_evals);
+        assert!(r2.best_fitness.raw.is_finite());
+    }
+
+    #[test]
+    fn checkpoint_json_preserves_exact_rng_and_best() {
+        let ps = ps();
+        let params = Params { population: 60, generations: 5, seed: 29, ..Params::default() };
+        let mut e = Engine::new(params, &ps);
+        e.step(&mut NativeMux6);
+        e.step(&mut NativeMux6);
+        let ck = e.checkpoint();
+        let s = ck.to_json().to_string();
+        let back = Checkpoint::from_json(&crate::util::json::Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back.rng, ck.rng, "rng state must round-trip exactly");
+        let (t1, f1) = ck.best.as_ref().unwrap();
+        let (t2, f2) = back.best.as_ref().unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(f1.raw.to_bits(), f2.raw.to_bits());
+        assert_eq!(f1.hits, f2.hits);
+        // the serialized rng is the live engine state, not a lossy
+        // re-seed: a generator restored from it continues the stream
+        let mut restored = Rng::from_state(back.rng);
+        let mut live = Rng::from_state(e.checkpoint().rng);
+        for _ in 0..16 {
+            assert_eq!(restored.next_u64(), live.next_u64());
+        }
     }
 
     #[test]

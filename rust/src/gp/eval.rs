@@ -1,0 +1,328 @@
+//! Batched, multi-threaded population evaluation — the client-side hot
+//! path that lets one simulated host exploit its `ncpus` the way real
+//! volunteer hardware does (paper §2: BOINC schedules one task per
+//! core; here the cores cooperate on one population instead).
+//!
+//! Three pieces:
+//!
+//! * [`TapeArena`] — a population's trees compiled to postfix tapes
+//!   **once per generation** into one flat, reusable buffer (no
+//!   per-tree `Vec` churn; compilation itself is iterative via
+//!   [`tape::compile_into`]).
+//! * [`par_map_scratch`] — a scoped `std::thread` fan-out over item
+//!   indices with one scratch state per worker and **deterministic
+//!   result ordering** (static contiguous chunking; chunk results are
+//!   concatenated in chunk order).
+//! * [`BatchEvaluator`] — ties the two together for the three tape
+//!   problem families (packed boolean, f32 regression) and for
+//!   arbitrary tree-walk fitness closures (ant, interest point).
+//!
+//! # Determinism contract
+//!
+//! For a given population, primitive set and case set, every entry
+//! point in this module returns results **bit-identical** to the
+//! sequential per-tree evaluators (`tape::eval_bool_native`,
+//! `tape::eval_reg_native`, or the closure run in a plain loop),
+//! regardless of the configured thread count. Work is partitioned by
+//! index, each item's computation touches only its own scratch, and
+//! no reduction reorders floating-point accumulation across items.
+//! This is what keeps WU result payloads hash-stable for BOINC-style
+//! quorum validation (paper §2) no matter how many cores a volunteer
+//! donates: a 1-thread laptop and an 8-thread workstation produce the
+//! same canonical payload byte-for-byte.
+
+use crate::gp::primset::PrimSet;
+use crate::gp::tape::{self, opcodes, BoolCases, BoolScratch, RegCases, RegScratch};
+use crate::gp::tree::Tree;
+use crate::gp::Fitness;
+
+const TAPE_LEN: usize = opcodes::TAPE_LEN as usize;
+
+/// A population's compiled tapes in one flat reusable allocation:
+/// `ops[i*TAPE_LEN..]` / `consts[i*TAPE_LEN..]` hold tree `i`'s tape,
+/// `ok[i]` records whether it compiled (oversize/too-deep trees are
+/// flagged and scored [`Fitness::worst`] instead of evaluated).
+#[derive(Debug, Default)]
+pub struct TapeArena {
+    ops: Vec<i32>,
+    consts: Vec<f32>,
+    ok: Vec<bool>,
+    len: usize,
+}
+
+impl TapeArena {
+    pub fn new() -> TapeArena {
+        TapeArena::default()
+    }
+
+    /// Compile every tree, reusing the arena's buffers from the
+    /// previous generation (buffers only grow; no per-tree allocation).
+    pub fn compile_population(&mut self, trees: &[Tree], ps: &PrimSet, nop: i32) {
+        self.len = trees.len();
+        self.ops.resize(trees.len() * TAPE_LEN, nop);
+        self.consts.resize(trees.len() * TAPE_LEN, 0.0);
+        self.ok.resize(trees.len(), false);
+        for (i, tree) in trees.iter().enumerate() {
+            let res = tape::compile_into(
+                tree,
+                ps,
+                nop,
+                &mut self.ops[i * TAPE_LEN..(i + 1) * TAPE_LEN],
+                &mut self.consts[i * TAPE_LEN..(i + 1) * TAPE_LEN],
+            );
+            self.ok[i] = res.is_ok();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn is_ok(&self, i: usize) -> bool {
+        self.ok[i]
+    }
+
+    pub fn ops_of(&self, i: usize) -> &[i32] {
+        &self.ops[i * TAPE_LEN..(i + 1) * TAPE_LEN]
+    }
+
+    pub fn consts_of(&self, i: usize) -> &[f32] {
+        &self.consts[i * TAPE_LEN..(i + 1) * TAPE_LEN]
+    }
+}
+
+/// Deterministic parallel map over `0..n` with per-worker scratch.
+///
+/// Items are split into at most `threads` contiguous chunks; each
+/// worker builds one scratch with `make_scratch`, maps its chunk in
+/// index order, and the chunk outputs are concatenated in chunk order
+/// — so the result is identical to the sequential map for any thread
+/// count (see the module's determinism contract).
+pub fn par_map_scratch<S, R, MS, F>(threads: usize, n: usize, make_scratch: MS, f: F) -> Vec<R>
+where
+    R: Send,
+    MS: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> R + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        let mut scratch = make_scratch();
+        return (0..n).map(|i| f(&mut scratch, i)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for worker in 0..threads {
+            let lo = worker * chunk;
+            let hi = ((worker + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            let make_scratch = &make_scratch;
+            handles.push(scope.spawn(move || {
+                let mut scratch = make_scratch();
+                (lo..hi).map(|i| f(&mut scratch, i)).collect::<Vec<R>>()
+            }));
+        }
+        let mut out = Vec::with_capacity(n);
+        for handle in handles {
+            out.extend(handle.join().expect("evaluation worker panicked"));
+        }
+        out
+    })
+}
+
+/// Batched population evaluator: compile once per generation into a
+/// reusable [`TapeArena`], evaluate with per-thread scratch across a
+/// scoped worker pool. The problem `NativeEvaluator`s all delegate
+/// here; construct them `with_threads(..)` to use more than one core.
+#[derive(Debug, Default)]
+pub struct BatchEvaluator {
+    threads: usize,
+    arena: TapeArena,
+    /// individual evaluations performed (for CP accounting)
+    pub evals: u64,
+}
+
+impl BatchEvaluator {
+    pub fn new(threads: usize) -> BatchEvaluator {
+        BatchEvaluator { threads: threads.max(1), arena: TapeArena::new(), evals: 0 }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
+    }
+
+    /// Score a population on packed boolean cases (multiplexer, parity).
+    pub fn evaluate_bool(
+        &mut self,
+        trees: &[Tree],
+        ps: &PrimSet,
+        cases: &BoolCases,
+    ) -> Vec<Fitness> {
+        self.arena.compile_population(trees, ps, opcodes::BOOL_NOP);
+        self.evals += trees.len() as u64;
+        let arena = &self.arena;
+        let words = cases.words();
+        par_map_scratch(
+            self.threads,
+            trees.len(),
+            || BoolScratch::new(words),
+            |scratch, i| {
+                if !arena.is_ok(i) {
+                    return Fitness::worst();
+                }
+                let hits = tape::eval_bool_with(arena.ops_of(i), cases, scratch);
+                Fitness { raw: (cases.ncases - hits) as f64, hits: hits as u32 }
+            },
+        )
+    }
+
+    /// Score a population on f32 regression cases (quartic).
+    pub fn evaluate_reg(&mut self, trees: &[Tree], ps: &PrimSet, cases: &RegCases) -> Vec<Fitness> {
+        self.arena.compile_population(trees, ps, opcodes::REG_NOP);
+        self.evals += trees.len() as u64;
+        let arena = &self.arena;
+        let ncases = cases.ncases();
+        par_map_scratch(
+            self.threads,
+            trees.len(),
+            || RegScratch::new(ncases),
+            |scratch, i| {
+                if !arena.is_ok(i) {
+                    return Fitness::worst();
+                }
+                let (sse, hits) =
+                    tape::eval_reg_with(arena.ops_of(i), arena.consts_of(i), cases, scratch);
+                Fitness { raw: sse, hits }
+            },
+        )
+    }
+
+    /// Fan an arbitrary per-tree fitness closure across the pool (the
+    /// non-tape problems: ant world walks, image-operator detectors).
+    /// `f` must be a pure function of its arguments for the
+    /// determinism contract to hold.
+    pub fn evaluate_with<F>(&mut self, trees: &[Tree], ps: &PrimSet, f: F) -> Vec<Fitness>
+    where
+        F: Fn(&Tree, &PrimSet) -> Fitness + Sync,
+    {
+        self.evals += trees.len() as u64;
+        par_map_scratch(self.threads, trees.len(), || (), |_, i| f(&trees[i], ps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::init::ramped_half_and_half;
+    use crate::gp::primset::{bool_set, regression_set};
+    use crate::util::rng::Rng;
+
+    fn mux6_ps() -> PrimSet {
+        bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"])
+    }
+
+    fn mux6_cases() -> BoolCases {
+        BoolCases::truth_table(6, |case| {
+            let addr = (case & 0b11) as usize;
+            (case >> (2 + addr)) & 1 == 1
+        })
+    }
+
+    #[test]
+    fn par_map_preserves_order_for_any_thread_count() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let out = par_map_scratch(threads, 100, || (), |_, i| i * i);
+            assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_handles_empty_and_tiny_inputs() {
+        assert_eq!(par_map_scratch(4, 0, || (), |_, i| i), Vec::<usize>::new());
+        assert_eq!(par_map_scratch(4, 1, || (), |_, i| i), vec![0]);
+        assert_eq!(par_map_scratch(4, 3, || (), |_, i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn arena_reuse_across_generations_is_clean() {
+        let ps = mux6_ps();
+        let cases = mux6_cases();
+        let mut rng = Rng::new(5);
+        let mut arena = TapeArena::new();
+        // big generation, then a smaller one: stale tail must not leak
+        for pop_size in [80usize, 20, 50] {
+            let pop = ramped_half_and_half(&mut rng, &ps, pop_size, 2, 6);
+            arena.compile_population(&pop, &ps, opcodes::BOOL_NOP);
+            assert_eq!(arena.len(), pop_size);
+            let mut scratch = BoolScratch::new(cases.words());
+            for (i, tree) in pop.iter().enumerate() {
+                assert!(arena.is_ok(i));
+                let expect =
+                    tape::eval_bool_native(&tape::compile(tree, &ps, opcodes::BOOL_NOP).unwrap(), &cases);
+                assert_eq!(tape::eval_bool_with(arena.ops_of(i), &cases, &mut scratch), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn bool_batch_matches_sequential_across_threads() {
+        let ps = mux6_ps();
+        let cases = mux6_cases();
+        let mut rng = Rng::new(11);
+        let pop = ramped_half_and_half(&mut rng, &ps, 97, 2, 6);
+        let mut ev1 = BatchEvaluator::new(1);
+        let baseline = ev1.evaluate_bool(&pop, &ps, &cases);
+        for threads in [2usize, 4, 8] {
+            let mut ev = BatchEvaluator::new(threads);
+            let got = ev.evaluate_bool(&pop, &ps, &cases);
+            assert_eq!(got.len(), baseline.len());
+            for (a, b) in got.iter().zip(&baseline) {
+                assert_eq!(a.raw.to_bits(), b.raw.to_bits(), "threads={threads}");
+                assert_eq!(a.hits, b.hits);
+            }
+        }
+    }
+
+    #[test]
+    fn reg_batch_matches_sequential_across_threads() {
+        let ps = regression_set(1);
+        let xs: Vec<f32> = (0..20).map(|i| -1.0 + i as f32 * 0.1).collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| x * x - x).collect();
+        let cases = RegCases { x: vec![xs], y: ys };
+        let mut rng = Rng::new(13);
+        let pop = ramped_half_and_half(&mut rng, &ps, 61, 2, 5);
+        let mut ev1 = BatchEvaluator::new(1);
+        let baseline = ev1.evaluate_reg(&pop, &ps, &cases);
+        for threads in [2usize, 8] {
+            let mut ev = BatchEvaluator::new(threads);
+            let got = ev.evaluate_reg(&pop, &ps, &cases);
+            for (a, b) in got.iter().zip(&baseline) {
+                assert_eq!(a.raw.to_bits(), b.raw.to_bits(), "threads={threads}");
+                assert_eq!(a.hits, b.hits);
+            }
+        }
+    }
+
+    #[test]
+    fn evals_counter_accumulates() {
+        let ps = mux6_ps();
+        let cases = mux6_cases();
+        let mut rng = Rng::new(17);
+        let pop = ramped_half_and_half(&mut rng, &ps, 30, 2, 4);
+        let mut ev = BatchEvaluator::new(2);
+        ev.evaluate_bool(&pop, &ps, &cases);
+        ev.evaluate_bool(&pop, &ps, &cases);
+        assert_eq!(ev.evals, 60);
+    }
+}

@@ -11,8 +11,15 @@
 //! also be evaluated through the AOT-compiled XLA artifact via
 //! [`crate::runtime`] (the paper's **Method 2** — an opaque payload
 //! executed by the wrapper).
+//!
+//! The native evaluators share one hot path: [`eval::BatchEvaluator`]
+//! compiles each generation into a reusable tape arena and fans
+//! evaluation across a scoped thread pool with a thread-count-
+//! independent (bit-identical) result contract — see the `eval`
+//! module docs.
 
 pub mod engine;
+pub mod eval;
 pub mod init;
 pub mod ops;
 pub mod primset;

@@ -9,6 +9,7 @@
 //! (tree executions x 400 time steps) is identical, which is what the
 //! paper's timing experiments measure.
 
+use crate::gp::eval::BatchEvaluator;
 use crate::gp::primset::{Prim, PrimSet};
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
@@ -220,14 +221,21 @@ pub fn run_ant(tree: &Tree, ps: &PrimSet, trail: &[(u8, u8)]) -> u32 {
     world.eaten
 }
 
+/// Native evaluator; ant programs are stateful tree walks (no tape),
+/// so they ride [`BatchEvaluator::evaluate_with`] for the thread
+/// fan-out only.
 pub struct NativeEvaluator {
     pub trail: Vec<(u8, u8)>,
-    ps_check: (),
+    batch: BatchEvaluator,
 }
 
 impl NativeEvaluator {
     pub fn new() -> NativeEvaluator {
-        NativeEvaluator { trail: santa_fe_trail(), ps_check: () }
+        Self::with_threads(1)
+    }
+
+    pub fn with_threads(threads: usize) -> NativeEvaluator {
+        NativeEvaluator { trail: santa_fe_trail(), batch: BatchEvaluator::new(threads) }
     }
 }
 
@@ -239,14 +247,11 @@ impl Default for NativeEvaluator {
 
 impl Evaluator for NativeEvaluator {
     fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
-        let _ = self.ps_check;
-        trees
-            .iter()
-            .map(|t| {
-                let eaten = run_ant(t, ps, &self.trail);
-                Fitness { raw: (FOOD_PELLETS as u32 - eaten) as f64, hits: eaten }
-            })
-            .collect()
+        let trail = &self.trail;
+        self.batch.evaluate_with(trees, ps, |t, ps| {
+            let eaten = run_ant(t, ps, trail);
+            Fitness { raw: (FOOD_PELLETS as u32 - eaten) as f64, hits: eaten }
+        })
     }
 
     fn cost_per_eval(&self) -> f64 {

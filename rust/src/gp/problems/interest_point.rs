@@ -9,6 +9,7 @@
 //! per individual, hours per run at paper scale), which is what Table 3
 //! measures through the virtualization layer.
 
+use crate::gp::eval::BatchEvaluator;
 use crate::gp::primset::{Prim, PrimSet};
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
@@ -207,28 +208,32 @@ pub fn repeatability(tree: &Tree, ps: &PrimSet, base: &Image, dx: usize, dy: usi
     matched as f64 / p1.len() as f64
 }
 
+/// Native evaluator; detector trees convolve whole images (no tape),
+/// so they ride [`BatchEvaluator::evaluate_with`] for the thread
+/// fan-out — the paper's most eval-bound workload (18 h/solution).
 pub struct NativeEvaluator {
     pub base: Image,
+    batch: BatchEvaluator,
 }
 
 impl NativeEvaluator {
     pub fn new(seed: u64) -> NativeEvaluator {
-        NativeEvaluator { base: synth_image(seed) }
+        Self::with_threads(seed, 1)
+    }
+
+    pub fn with_threads(seed: u64, threads: usize) -> NativeEvaluator {
+        NativeEvaluator { base: synth_image(seed), batch: BatchEvaluator::new(threads) }
     }
 }
 
 impl Evaluator for NativeEvaluator {
     fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
-        trees
-            .iter()
-            .map(|t| {
-                // average repeatability over two displacements
-                let r = (repeatability(t, ps, &self.base, 3, 0)
-                    + repeatability(t, ps, &self.base, 0, 3))
-                    / 2.0;
-                Fitness { raw: 1.0 - r, hits: (r * 100.0) as u32 }
-            })
-            .collect()
+        let base = &self.base;
+        self.batch.evaluate_with(trees, ps, |t, ps| {
+            // average repeatability over two displacements
+            let r = (repeatability(t, ps, base, 3, 0) + repeatability(t, ps, base, 0, 3)) / 2.0;
+            Fitness { raw: 1.0 - r, hits: (r * 100.0) as u32 }
+        })
     }
 
     fn cost_per_eval(&self) -> f64 {

@@ -9,6 +9,7 @@
 //! Case packing follows the shared tape contract (32 cases/u32 word,
 //! LSB first); the 20-mux needs 32 768 words, chunked by the evaluator.
 
+use crate::gp::eval::BatchEvaluator;
 use crate::gp::primset::{bool_set, PrimSet};
 use crate::gp::tape::{self, opcodes, BoolCases, Tape};
 use crate::gp::tree::Tree;
@@ -64,23 +65,26 @@ impl Multiplexer {
     }
 }
 
-/// Native (Method-1 style) evaluator.
+/// Native (Method-1 style) evaluator, batched through
+/// [`BatchEvaluator`] (tape arena + scoped thread pool).
 pub struct NativeEvaluator<'a> {
     pub problem: &'a Multiplexer,
+    batch: BatchEvaluator,
+}
+
+impl<'a> NativeEvaluator<'a> {
+    pub fn new(problem: &'a Multiplexer) -> NativeEvaluator<'a> {
+        Self::with_threads(problem, 1)
+    }
+
+    pub fn with_threads(problem: &'a Multiplexer, threads: usize) -> NativeEvaluator<'a> {
+        NativeEvaluator { problem, batch: BatchEvaluator::new(threads) }
+    }
 }
 
 impl Evaluator for NativeEvaluator<'_> {
     fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
-        trees
-            .iter()
-            .map(|t| match tape::compile(t, ps, opcodes::BOOL_NOP) {
-                Ok(tape) => {
-                    let hits = tape::eval_bool_native(&tape, &self.problem.cases);
-                    Fitness { raw: (self.problem.cases.ncases - hits) as f64, hits: hits as u32 }
-                }
-                Err(_) => Fitness::worst(),
-            })
-            .collect()
+        self.batch.evaluate_bool(trees, ps, &self.problem.cases)
     }
 
     fn cost_per_eval(&self) -> f64 {
@@ -133,7 +137,7 @@ mod tests {
         let m = Multiplexer::new(3);
         let mut rng = Rng::new(4);
         let pop = ramped_half_and_half(&mut rng, m.primset(), 64, 2, 6);
-        let mut ev = NativeEvaluator { problem: &m };
+        let mut ev = NativeEvaluator::new(&m);
         let ps = m.primset().clone();
         let fits = ev.evaluate(&pop, &ps);
         for f in fits {

@@ -3,8 +3,9 @@
 //! the paper). Function set {AND, OR, NAND, NOR} — no IF, which is what
 //! makes parity hard for GP.
 
+use crate::gp::eval::BatchEvaluator;
 use crate::gp::primset::{bool_set, PrimSet};
-use crate::gp::tape::{self, opcodes, BoolCases};
+use crate::gp::tape::BoolCases;
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
 
@@ -29,22 +30,25 @@ impl Parity {
     }
 }
 
+/// Native evaluator, batched through [`BatchEvaluator`].
 pub struct NativeEvaluator<'a> {
     pub problem: &'a Parity,
+    batch: BatchEvaluator,
+}
+
+impl<'a> NativeEvaluator<'a> {
+    pub fn new(problem: &'a Parity) -> NativeEvaluator<'a> {
+        Self::with_threads(problem, 1)
+    }
+
+    pub fn with_threads(problem: &'a Parity, threads: usize) -> NativeEvaluator<'a> {
+        NativeEvaluator { problem, batch: BatchEvaluator::new(threads) }
+    }
 }
 
 impl Evaluator for NativeEvaluator<'_> {
     fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
-        trees
-            .iter()
-            .map(|t| match tape::compile(t, ps, opcodes::BOOL_NOP) {
-                Ok(tape) => {
-                    let hits = tape::eval_bool_native(&tape, &self.problem.cases);
-                    Fitness { raw: (self.problem.cases.ncases - hits) as f64, hits: hits as u32 }
-                }
-                Err(_) => Fitness::worst(),
-            })
-            .collect()
+        self.batch.evaluate_bool(trees, ps, &self.problem.cases)
     }
 
     fn cost_per_eval(&self) -> f64 {
@@ -55,6 +59,7 @@ impl Evaluator for NativeEvaluator<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::gp::tape::{self, opcodes};
 
     #[test]
     fn parity5_dimensions() {

@@ -2,8 +2,9 @@
 //! (Koza 1992) — Lil-gp's "symbolic linear regression" example problem
 //! (§3.1 of the paper). 20 fitness cases, ERC constants.
 
+use crate::gp::eval::BatchEvaluator;
 use crate::gp::primset::{regression_set, PrimSet};
-use crate::gp::tape::{self, opcodes, RegCases};
+use crate::gp::tape::RegCases;
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
 
@@ -26,22 +27,25 @@ impl Quartic {
     }
 }
 
+/// Native evaluator, batched through [`BatchEvaluator`].
 pub struct NativeEvaluator<'a> {
     pub problem: &'a Quartic,
+    batch: BatchEvaluator,
+}
+
+impl<'a> NativeEvaluator<'a> {
+    pub fn new(problem: &'a Quartic) -> NativeEvaluator<'a> {
+        Self::with_threads(problem, 1)
+    }
+
+    pub fn with_threads(problem: &'a Quartic, threads: usize) -> NativeEvaluator<'a> {
+        NativeEvaluator { problem, batch: BatchEvaluator::new(threads) }
+    }
 }
 
 impl Evaluator for NativeEvaluator<'_> {
     fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
-        trees
-            .iter()
-            .map(|t| match tape::compile(t, ps, opcodes::REG_NOP) {
-                Ok(tape) => {
-                    let (sse, hits) = tape::eval_reg_native(&tape, &self.problem.cases);
-                    Fitness { raw: sse, hits }
-                }
-                Err(_) => Fitness::worst(),
-            })
-            .collect()
+        self.batch.evaluate_reg(trees, ps, &self.problem.cases)
     }
 
     fn cost_per_eval(&self) -> f64 {
@@ -70,7 +74,7 @@ mod tests {
         let params = Params { population: 300, generations: 12, seed: 21, ..Params::default() };
         let ps = q.primset().clone();
         let mut e = Engine::new(params, &ps);
-        let mut ev = NativeEvaluator { problem: &q };
+        let mut ev = NativeEvaluator::new(&q);
         let result = e.run(&mut ev);
         let first = result.history.first().unwrap().best_raw;
         let last = result.best_fitness.raw;

@@ -61,6 +61,10 @@ pub enum TapeError {
     TooLong { size: usize },
     TooDeep { depth: usize },
     NotTapeable,
+    /// The preorder array is not exactly one complete expression
+    /// (truncated subtree or trailing garbage — e.g. a corrupted
+    /// checkpoint; `Tree::from_json` does not validate shape).
+    Malformed,
 }
 
 impl std::fmt::Display for TapeError {
@@ -69,6 +73,7 @@ impl std::fmt::Display for TapeError {
             TapeError::TooLong { size } => write!(f, "tree size {size} exceeds tape length"),
             TapeError::TooDeep { depth } => write!(f, "postfix stack depth {depth} exceeds machine depth"),
             TapeError::NotTapeable => write!(f, "primitive set has no tape mapping"),
+            TapeError::Malformed => write!(f, "tree is not one complete expression"),
         }
     }
 }
@@ -78,51 +83,89 @@ impl std::error::Error for TapeError {}
 /// `opcodes::TAPE_LEN`, validating size and stack-depth constraints.
 pub fn compile(tree: &Tree, ps: &PrimSet, nop: i32) -> Result<Tape, TapeError> {
     let l = opcodes::TAPE_LEN as usize;
+    let mut ops = vec![nop; l];
+    let mut consts = vec![0.0f32; l];
+    compile_into(tree, ps, nop, &mut ops, &mut consts)?;
+    Ok(Tape { ops, consts })
+}
+
+/// Compile into caller-provided `TAPE_LEN` slices without allocating —
+/// the [`crate::gp::eval::TapeArena`] hot path. Iterative (no
+/// recursion): a pending-parents stack tracks, for each function node,
+/// how many of its child subtrees are still unemitted; a node is
+/// emitted in postfix position as soon as its last child completes.
+/// On `Err` the slice contents are unspecified; callers must treat the
+/// slot as invalid (the arena flags it and never evaluates it).
+pub fn compile_into(
+    tree: &Tree,
+    ps: &PrimSet,
+    nop: i32,
+    ops: &mut [i32],
+    consts: &mut [f32],
+) -> Result<(), TapeError> {
+    let l = opcodes::TAPE_LEN as usize;
+    debug_assert!(ops.len() == l && consts.len() == l);
     if tree.len() > l {
         return Err(TapeError::TooLong { size: tree.len() });
     }
-    let mut ops = Vec::with_capacity(l);
-    let mut consts = Vec::with_capacity(l);
-    // postfix = children first: recurse over the preorder array
-    fn rec(
-        t: &Tree,
-        ps: &PrimSet,
-        i: &mut usize,
-        ops: &mut Vec<i32>,
-        consts: &mut Vec<f32>,
-    ) -> Result<(), TapeError> {
-        let node = *i;
-        let op = t.ops[node];
-        *i += 1;
-        for _ in 0..ps.arity(op) {
-            rec(t, ps, i, ops, consts)?;
-        }
-        let tape_op = ps.prims[op as usize].tape_op;
-        if tape_op < 0 {
-            return Err(TapeError::NotTapeable);
-        }
-        ops.push(tape_op);
-        consts.push(t.consts[node]);
-        Ok(())
-    }
-    let mut i = 0;
-    rec(tree, ps, &mut i, &mut ops, &mut consts)?;
-    debug_assert_eq!(i, tree.len());
-    // verify postfix stack depth fits the machine
-    let mut depth = 0i32;
+    let mut out = 0usize; // next postfix slot
+    let mut depth = 0i32; // live postfix stack depth
     let mut max_depth = 0i32;
-    for (k, &op) in ops.iter().enumerate() {
-        let ar = tape_arity(op, nop);
-        depth += 1 - ar;
-        max_depth = max_depth.max(depth);
-        let _ = k;
+    let mut pending: Vec<(usize, u8)> = Vec::with_capacity(16); // (node, children left)
+    for node in 0..tree.len() {
+        // opcode range is not validated by Tree::from_json — reject
+        // here rather than index out of bounds on a corrupt checkpoint
+        if tree.ops[node] as usize >= ps.prims.len() {
+            return Err(TapeError::Malformed);
+        }
+        let arity = ps.arity(tree.ops[node]);
+        if arity > 0 {
+            pending.push((node, arity));
+            continue;
+        }
+        // a leaf completes a subtree: emit it, then every parent whose
+        // last child just finished, walking up the pending stack
+        let mut emit = node;
+        loop {
+            let tape_op = ps.prims[tree.ops[emit] as usize].tape_op;
+            if tape_op < 0 {
+                return Err(TapeError::NotTapeable);
+            }
+            depth += 1 - tape_arity(tape_op, nop);
+            max_depth = max_depth.max(depth);
+            ops[out] = tape_op;
+            consts[out] = tree.consts[emit];
+            out += 1;
+            match pending.last_mut() {
+                Some((parent, left)) => {
+                    *left -= 1;
+                    if *left == 0 {
+                        emit = *parent;
+                        pending.pop();
+                    } else {
+                        break;
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+    // exactly one complete expression leaves no pending parents and a
+    // net postfix depth of 1 — reject anything else (truncated trees,
+    // trailing garbage, empty arrays) instead of emitting a tape that
+    // would score as a plausible constant program
+    if !pending.is_empty() || depth != 1 {
+        return Err(TapeError::Malformed);
     }
     if max_depth > opcodes::STACK_DEPTH {
         return Err(TapeError::TooDeep { depth: max_depth as usize });
     }
-    ops.resize(l, nop);
-    consts.resize(l, 0.0);
-    Ok(Tape { ops, consts })
+    // NOP-pad the tail (also clears stale arena contents on reuse)
+    for slot in out..l {
+        ops[slot] = nop;
+        consts[slot] = 0.0;
+    }
+    Ok(())
 }
 
 fn tape_arity(op: i32, nop: i32) -> i32 {
@@ -183,27 +226,64 @@ impl BoolCases {
     }
 }
 
+/// Reusable per-thread scratch for [`eval_bool_with`]: the stack and
+/// zero-column buffers that used to be allocated on every call.
+#[derive(Clone, Debug)]
+pub struct BoolScratch {
+    stack: Vec<u32>,
+    zero: Vec<u32>,
+    words: usize,
+}
+
+impl BoolScratch {
+    pub fn new(words: usize) -> BoolScratch {
+        BoolScratch {
+            stack: vec![0u32; (opcodes::STACK_DEPTH as usize) * words],
+            zero: vec![0u32; words],
+            words,
+        }
+    }
+
+    fn ensure(&mut self, words: usize) {
+        if self.words != words {
+            *self = BoolScratch::new(words);
+        }
+    }
+}
+
 /// Native bit-packed evaluation of one tape (the rust hot path).
 /// Returns hits — the number of fitness cases matched.
 pub fn eval_bool_native(tape: &Tape, cases: &BoolCases) -> u64 {
+    let mut scratch = BoolScratch::new(cases.words());
+    eval_bool_with(&tape.ops, cases, &mut scratch)
+}
+
+/// Scratch-buffer core of [`eval_bool_native`]: evaluates a tape's
+/// opcode row against packed cases with zero allocation (the scratch
+/// is reused across the whole batch by [`crate::gp::eval`]).
+pub fn eval_bool_with(tape_ops: &[i32], cases: &BoolCases, scratch: &mut BoolScratch) -> u64 {
     use opcodes::*;
     let w = cases.words();
-    let mut stack = vec![0u32; (STACK_DEPTH as usize) * w];
+    scratch.ensure(w);
+    let stack = &mut scratch.stack;
+    let zero = &scratch.zero;
+    // answer slot: zeroed so programs that never write it (ill-formed
+    // or all-NOP tapes) read the same value on a reused scratch as on
+    // a fresh one — the determinism contract of gp::eval
+    stack[..w].fill(0);
     let mut sp: usize = 0;
-    let zero = vec![0u32; w];
-    for &op in &tape.ops {
+    for &op in tape_ops {
         if !(0..BOOL_NOP).contains(&op) {
             continue; // NOP
         }
         if op < BOOL_NUM_VARS {
-            // terminal push (missing vars read as constant-0 columns)
-            let col = cases.inputs.get(op as usize).unwrap_or(&zero);
-            if sp < STACK_DEPTH as usize {
-                stack[sp * w..(sp + 1) * w].copy_from_slice(col);
-                sp += 1;
-            } else {
-                stack[(STACK_DEPTH as usize - 1) * w..].copy_from_slice(col);
-            }
+            // terminal push (missing vars read as constant-0 columns);
+            // a full stack clamps by overwriting the top slot, exactly
+            // like the kernel (python/compile/kernels/ref.py)
+            let col = cases.inputs.get(op as usize).unwrap_or(zero);
+            let slot = sp.min(STACK_DEPTH as usize - 1);
+            stack[slot * w..(slot + 1) * w].copy_from_slice(col);
+            sp = (sp + 1).min(STACK_DEPTH as usize);
             continue;
         }
         let ar = tape_arity(op, BOOL_NOP) as usize;
@@ -254,28 +334,67 @@ impl RegCases {
     }
 }
 
+/// Reusable per-thread scratch for [`eval_reg_with`].
+#[derive(Clone, Debug)]
+pub struct RegScratch {
+    stack: Vec<f32>,
+    zero: Vec<f32>,
+    ncases: usize,
+}
+
+impl RegScratch {
+    pub fn new(ncases: usize) -> RegScratch {
+        RegScratch {
+            stack: vec![0f32; (opcodes::STACK_DEPTH as usize) * ncases],
+            zero: vec![0f32; ncases],
+            ncases,
+        }
+    }
+
+    fn ensure(&mut self, ncases: usize) {
+        if self.ncases != ncases {
+            *self = RegScratch::new(ncases);
+        }
+    }
+}
+
 /// Native f32 tape evaluation; returns (SSE, hits).
 pub fn eval_reg_native(tape: &Tape, cases: &RegCases) -> (f64, u32) {
+    let mut scratch = RegScratch::new(cases.ncases());
+    eval_reg_with(&tape.ops, &tape.consts, cases, &mut scratch)
+}
+
+/// Scratch-buffer core of [`eval_reg_native`]. Stack-overflow pushes
+/// clamp by overwriting the top slot — the same semantics as
+/// [`eval_bool_with`] and the kernel in `python/compile/kernels/ref.py`
+/// (they previously disagreed: the reg path silently dropped pushes).
+pub fn eval_reg_with(
+    tape_ops: &[i32],
+    tape_consts: &[f32],
+    cases: &RegCases,
+    scratch: &mut RegScratch,
+) -> (f64, u32) {
     use opcodes::*;
     let c = cases.ncases();
-    let mut stack = vec![0f32; (STACK_DEPTH as usize) * c];
+    scratch.ensure(c);
+    let stack = &mut scratch.stack;
+    let zero = &scratch.zero;
+    stack[..c].fill(0.0); // see eval_bool_with: deterministic answer slot
     let mut sp: usize = 0;
-    let zero = vec![0f32; c];
-    for (t, &op) in tape.ops.iter().enumerate() {
+    for (t, &op) in tape_ops.iter().enumerate() {
         if !(0..REG_NOP).contains(&op) {
             continue;
         }
         if op < REG_NUM_VARS || op == REG_OP_CONST {
-            let konst = tape.consts[t];
-            if sp < STACK_DEPTH as usize {
-                if op == REG_OP_CONST {
-                    stack[sp * c..(sp + 1) * c].fill(konst);
-                } else {
-                    let col = cases.x.get(op as usize).unwrap_or(&zero);
-                    stack[sp * c..(sp + 1) * c].copy_from_slice(col);
-                }
-                sp += 1;
+            let konst = tape_consts[t];
+            let slot = sp.min(STACK_DEPTH as usize - 1);
+            if op == REG_OP_CONST {
+                stack[slot * c..(slot + 1) * c].fill(konst);
+            } else {
+                let col = cases.x.get(op as usize).unwrap_or(zero);
+                stack[slot * c..(slot + 1) * c].copy_from_slice(col);
             }
+            sp = (sp + 1).min(STACK_DEPTH as usize);
             continue;
         }
         let ar = tape_arity(op, REG_NOP) as usize;
@@ -429,6 +548,95 @@ mod tests {
         let (sse, hits) = eval_reg_native(&tape, &cases);
         assert!(sse < 1e-9, "sse {sse}");
         assert_eq!(hits, 20);
+    }
+
+    #[test]
+    fn compile_into_matches_compile_and_reuses_slots() {
+        let ps = mux6_ps();
+        let mut rng = Rng::new(23);
+        let pop = ramped_half_and_half(&mut rng, &ps, 50, 2, 6);
+        // dirty buffers: compile_into must fully overwrite/pad
+        let l = TAPE_LEN as usize;
+        let mut ops = vec![7i32; l];
+        let mut consts = vec![9.9f32; l];
+        for t in &pop {
+            let tape = compile(t, &ps, BOOL_NOP).unwrap();
+            compile_into(t, &ps, BOOL_NOP, &mut ops, &mut consts).unwrap();
+            assert_eq!(ops, tape.ops);
+            assert_eq!(consts, tape.consts);
+        }
+    }
+
+    #[test]
+    fn iterative_compile_handles_deep_chains() {
+        // 63-deep NOT chain: would blow a per-node recursion budget in
+        // pathological settings; the iterative compiler must handle it
+        let ps = mux6_ps();
+        let n = TAPE_LEN as usize;
+        let mut ops = vec![8u8; n - 1]; // not
+        ops.push(0); // a0
+        let t = Tree::new(ops, vec![0.0; n]);
+        let tape = compile(&t, &ps, BOOL_NOP).unwrap();
+        assert_eq!(tape.ops[0], 0); // postfix: terminal first
+        assert!(tape.ops[1..n].iter().all(|&o| o == BOOL_OP_NOT));
+    }
+
+    #[test]
+    fn compile_rejects_malformed_trees() {
+        // corrupted-checkpoint shapes: Tree::from_json does not
+        // validate, so the compiler must (release builds included)
+        let ps = mux6_ps();
+        // truncated: AND with no children
+        let t = Tree::new(vec![6], vec![0.0]);
+        assert!(matches!(compile(&t, &ps, BOOL_NOP), Err(TapeError::Malformed)));
+        // trailing garbage: two complete terminals
+        let t = Tree::new(vec![0, 0], vec![0.0; 2]);
+        assert!(matches!(compile(&t, &ps, BOOL_NOP), Err(TapeError::Malformed)));
+        // out-of-range opcode (must not panic in ps.arity)
+        let t = Tree::new(vec![200], vec![0.0]);
+        assert!(matches!(compile(&t, &ps, BOOL_NOP), Err(TapeError::Malformed)));
+        // empty
+        let t = Tree::new(vec![], vec![]);
+        assert!(matches!(compile(&t, &ps, BOOL_NOP), Err(TapeError::Malformed)));
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_to_fresh() {
+        let ps = mux6_ps();
+        let cases = mux6_cases();
+        let mut rng = Rng::new(31);
+        let pop = ramped_half_and_half(&mut rng, &ps, 64, 2, 6);
+        let mut scratch = BoolScratch::new(cases.words());
+        for t in &pop {
+            let tape = compile(t, &ps, BOOL_NOP).unwrap();
+            let fresh = eval_bool_native(&tape, &cases);
+            let reused = eval_bool_with(&tape.ops, &cases, &mut scratch);
+            assert_eq!(fresh, reused);
+        }
+    }
+
+    #[test]
+    fn reg_overflow_push_clamps_like_bool_and_kernel() {
+        // 17 CONST pushes (one past STACK_DEPTH) then 15 ADDs reduce to
+        // one value in slot 0. Clamp semantics (kernel/bool): the 17th
+        // push overwrites the top slot, so the result is
+        // c16 + (c0 + .. + c14) = 16 + 105 = 121. The old drop
+        // semantics would give c0 + .. + c15 = 120.
+        let l = TAPE_LEN as usize;
+        let mut ops = vec![REG_NOP; l];
+        let mut consts = vec![0f32; l];
+        for i in 0..17 {
+            ops[i] = REG_OP_CONST;
+            consts[i] = i as f32;
+        }
+        for slot in ops.iter_mut().skip(17).take(15) {
+            *slot = REG_OP_ADD;
+        }
+        let tape = Tape { ops, consts };
+        let cases = RegCases { x: vec![vec![0.0]], y: vec![121.0] };
+        let (sse, hits) = eval_reg_native(&tape, &cases);
+        assert!(sse < 1e-6, "clamp semantics must yield 121, sse={sse}");
+        assert_eq!(hits, 1);
     }
 
     #[test]

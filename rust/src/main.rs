@@ -3,16 +3,21 @@
 //!
 //! ```text
 //! vgp sim --table 1|2|3                # regenerate a paper table (DES)
-//! vgp sim --problem mux11 --runs 50 --hosts 20 --pool volunteer
-//! vgp serve --runs 8 --problem mux6    # TCP server with a campaign
+//! vgp sim --problem mux11 --runs 50 --hosts 20 --pool volunteer --ncpus 4
+//! vgp sim --config campaign.ini        # [campaign]/[pool] INI file
+//! vgp serve --runs 8 --problem mux6 --threads 4   # TCP server campaign
 //! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval)
 //! vgp churn --days 30                  # Fig-2 style churn trace
 //! ```
+//!
+//! `--threads N` fans each WU's fitness evaluation across N cores
+//! (gp::eval batch pool; payloads stay bit-identical), `--ncpus N`
+//! gives every simulated host N cores of virtual throughput.
 
 use vgp::boinc::net::{serve, Worker};
 use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::churn::{churn_trace, sample_pool, PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
-use vgp::config::Args;
+use vgp::config::{Args, Config};
 use vgp::coordinator::{exec, simulate_campaign, Campaign};
 use vgp::gp::problems::ProblemKind;
 use vgp::metrics::ascii_plot;
@@ -37,17 +42,38 @@ fn main() {
     std::process::exit(code);
 }
 
-fn pool_of(args: &Args, hosts: usize) -> PoolParams {
-    match args.opt_str("pool", "lab") {
+fn pool_from(kind: &str, hosts: usize, ncpus: u32) -> PoolParams {
+    let pool = match kind {
         "volunteer" => PoolParams::volunteer(hosts),
         "virtual" => PoolParams::virtualized_lab(hosts),
         _ => PoolParams::lab(hosts),
-    }
+    };
+    pool.with_ncpus(ncpus)
+}
+
+fn pool_of(args: &Args, hosts: usize) -> PoolParams {
+    pool_from(args.opt_str("pool", "lab"), hosts, args.opt_u64("ncpus", 1) as u32)
 }
 
 fn cmd_sim(args: &Args) -> i32 {
     if let Some(t) = args.opt("table") {
         return sim_table(t);
+    }
+    // --config FILE: campaign from [campaign], pool from [pool]
+    // (the INI route documented in the config module)
+    if let Some(path) = args.opt("config") {
+        let cfg = Config::load(path).expect("config file");
+        let c = Campaign::from_config(&cfg).expect("campaign section");
+        let hosts = cfg.u64_or("pool", "hosts", 10) as usize;
+        let pool = pool_from(
+            cfg.str_or("pool", "churn", "lab"),
+            hosts,
+            cfg.u64_or("pool", "ncpus", 1) as u32,
+        );
+        let seed = cfg.u64_or("pool", "seed", 7);
+        let r = simulate_campaign(&c, &pool, &[("cfg", hosts)], SimConfig::default(), seed);
+        print_report(&r);
+        return 0;
     }
     let problem = ProblemKind::parse(args.opt_str("problem", "mux11")).expect("problem");
     let runs = args.opt_u64("runs", 25) as usize;
@@ -55,9 +81,24 @@ fn cmd_sim(args: &Args) -> i32 {
     let pop = args.opt_u64("population", 1000) as usize;
     let hosts = args.opt_u64("hosts", 10) as usize;
     let seed = args.opt_u64("seed", 7);
-    let c = Campaign::new("cli", problem, runs, gens, pop);
+    let mut c = Campaign::new("cli", problem, runs, gens, pop);
+    c.threads = args.opt_u64("threads", 1).max(1) as usize;
+    if c.threads > 1 {
+        // the DES models durations from FLOPs/host-rate; worker thread
+        // fan-out only applies when WUs are actually executed (serve/
+        // worker). Scale virtual hosts with --ncpus instead.
+        println!(
+            "note: --threads affects real WU execution (vgp serve/worker), not DES \
+             durations; use --ncpus to give simulated hosts more cores"
+        );
+    }
     let r =
         simulate_campaign(&c, &pool_of(args, hosts), &[("cli", hosts)], SimConfig::default(), seed);
+    print_report(&r);
+    0
+}
+
+fn print_report(r: &vgp::coordinator::CampaignReport) {
     println!(
         "campaign {}: T_seq={:.0}s T_B={:.0}s acc={:.2} CP={:.1} GFLOPS done={}/{} hosts={}/{}",
         r.campaign,
@@ -70,7 +111,6 @@ fn cmd_sim(args: &Args) -> i32 {
         r.productive_hosts,
         r.attached_hosts
     );
-    0
 }
 
 fn sim_table(which: &str) -> i32 {
@@ -166,7 +206,8 @@ fn cmd_serve(args: &Args) -> i32 {
     let runs = args.opt_u64("runs", 8) as usize;
     let gens = args.opt_u64("generations", 20) as usize;
     let pop = args.opt_u64("population", 200) as usize;
-    let c = Campaign::new("served", problem, runs, gens, pop);
+    let mut c = Campaign::new("served", problem, runs, gens, pop);
+    c.threads = args.opt_u64("threads", 1).max(1) as usize;
     let mut core = ServerCore::new(ServerConfig::default());
     for wu in c.workunits() {
         core.submit_wu(wu);

@@ -211,7 +211,10 @@ impl Simulation {
                         Some((rid, wu, _sig)) => {
                             self.busy[i] = true;
                             let h = &self.hosts[i];
-                            let compute = wu.flops_est / h.effective_flops().max(1e3);
+                            // ncpus scales virtual throughput: a multi-
+                            // core host drains its WU proportionally
+                            // faster (batched eval / one task per core)
+                            let compute = wu.flops_est / h.throughput_flops().max(1e3);
                             let dur = compute + self.cfg.transfer_overhead;
                             let ok = !self.rng.chance(h.client_error_rate);
                             // client errors surface early (crash on start)
@@ -336,6 +339,32 @@ mod tests {
         let out = sim.run(1.3e9 * 0.9);
         assert!(out.completed >= 100, "most short WUs done: {}", out.completed);
         assert!(out.speedup < 2.0, "churn should spoil short-task speedup: {}", out.speedup);
+    }
+
+    #[test]
+    fn multicore_hosts_drain_campaign_faster() {
+        let run = |ncpus: u32| {
+            let mut rng = Rng::new(21);
+            let hosts =
+                sample_pool(&mut rng, &PoolParams::lab(4).with_ncpus(ncpus), &[("lab", 4)]);
+            let mut sim =
+                Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 21);
+            for wu in wus(24, 1e12) {
+                sim.submit(wu);
+            }
+            sim.run(1.3e9 * 0.95)
+        };
+        let single = run(1);
+        let quad = run(4);
+        assert_eq!(single.completed, 24);
+        assert_eq!(quad.completed, 24);
+        assert!(
+            quad.makespan < single.makespan / 2.0,
+            "4-core hosts must drain much faster: {} vs {}",
+            quad.makespan,
+            single.makespan
+        );
+        assert!(quad.cp_gflops > single.cp_gflops * 2.0, "eq. 2 must see the cores");
     }
 
     #[test]

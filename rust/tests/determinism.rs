@@ -1,0 +1,187 @@
+//! Determinism acceptance tests (checkpointing + batched evaluation):
+//!
+//! * checkpoint → serialize → restore → run must be **bit-identical**
+//!   to an uninterrupted run (best tree, fitness bits, total_evals,
+//!   canonical payload string — what quorum validation hashes);
+//! * `gp::eval::BatchEvaluator` must equal the sequential per-tree
+//!   evaluators bitwise for random populations at 1, 2 and 8 threads.
+
+use vgp::coordinator::exec;
+use vgp::coordinator::Campaign;
+use vgp::gp::engine::{Checkpoint, Engine, Params, RunResult};
+use vgp::gp::eval::BatchEvaluator;
+use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::problems::multiplexer::Multiplexer;
+use vgp::gp::problems::{ant, ProblemKind};
+use vgp::gp::tape::{self, opcodes};
+use vgp::gp::Fitness;
+use vgp::util::json::Json;
+use vgp::util::prop::{assert_prop, check};
+use vgp::util::rng::Rng;
+
+fn assert_identical_runs(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.best, b.best, "{label}: best tree differs");
+    assert_eq!(
+        a.best_fitness.raw.to_bits(),
+        b.best_fitness.raw.to_bits(),
+        "{label}: best raw differs"
+    );
+    assert_eq!(a.best_fitness.hits, b.best_fitness.hits, "{label}: best hits differ");
+    assert_eq!(a.total_evals, b.total_evals, "{label}: total_evals differ");
+    assert_eq!(a.generations_run, b.generations_run, "{label}: generations differ");
+    assert_eq!(a.found_perfect, b.found_perfect, "{label}: found_perfect differs");
+    assert_eq!(
+        exec::payload_of(a).to_string(),
+        exec::payload_of(b).to_string(),
+        "{label}: canonical payload (quorum hash input) differs"
+    );
+}
+
+#[test]
+fn checkpoint_resume_is_bit_identical_to_uninterrupted_run() {
+    let m = Multiplexer::new(2);
+    let ps = m.primset().clone();
+    let params = Params {
+        population: 120,
+        generations: 7,
+        seed: 5,
+        stop_on_perfect: false,
+        ..Params::default()
+    };
+    let mut eval = vgp::gp::problems::multiplexer::NativeEvaluator::new(&m);
+    let mut uninterrupted = Engine::new(params, &ps);
+    let reference = uninterrupted.run(&mut eval);
+
+    // interrupt after every possible generation boundary
+    for stop_after in 1..7 {
+        let mut engine = Engine::new(params, &ps);
+        for _ in 0..stop_after {
+            engine.step(&mut eval);
+        }
+        let serialized = engine.checkpoint().to_json().to_string();
+        let restored = Checkpoint::from_json(&Json::parse(&serialized).unwrap()).unwrap();
+        let mut resumed = Engine::from_checkpoint(params, &ps, restored);
+        let result = resumed.run(&mut eval);
+        assert_identical_runs(&reference, &result, &format!("resume@gen{stop_after}"));
+    }
+}
+
+#[test]
+fn checkpoint_resume_identical_with_early_stop_and_elitism_zero() {
+    // stop_on_perfect on and elitism 0: the paths the old code got
+    // wrong (population[0] read, lossy rng reseed)
+    let m = Multiplexer::new(2);
+    let ps = m.primset().clone();
+    let params = Params {
+        population: 400,
+        generations: 30,
+        seed: 7,
+        elitism: 0,
+        ..Params::default()
+    };
+    let mut eval = vgp::gp::problems::multiplexer::NativeEvaluator::new(&m);
+    let mut uninterrupted = Engine::new(params, &ps);
+    let reference = uninterrupted.run(&mut eval);
+
+    for stop_after in [1usize, 3] {
+        if stop_after >= reference.generations_run {
+            continue;
+        }
+        let mut engine = Engine::new(params, &ps);
+        for _ in 0..stop_after {
+            engine.step(&mut eval);
+        }
+        let serialized = engine.checkpoint().to_json().to_string();
+        let restored = Checkpoint::from_json(&Json::parse(&serialized).unwrap()).unwrap();
+        let mut resumed = Engine::from_checkpoint(params, &ps, restored);
+        let result = resumed.run(&mut eval);
+        assert_identical_runs(&reference, &result, &format!("earlystop resume@gen{stop_after}"));
+    }
+}
+
+#[test]
+fn wu_payload_identical_across_worker_thread_counts() {
+    // end-to-end: the exec-layer payload for one WU spec is the quorum
+    // hash input; it must not depend on the worker's thread count
+    let mut campaign = Campaign::new("det", ProblemKind::Quartic, 1, 6, 100);
+    let baseline = exec::run_wu_native(&campaign.wu_spec(0)).unwrap().to_string();
+    for threads in [2usize, 8] {
+        campaign.threads = threads;
+        let payload = exec::run_wu_native(&campaign.wu_spec(0)).unwrap().to_string();
+        assert_eq!(baseline, payload, "threads={threads}");
+    }
+}
+
+#[test]
+fn batch_evaluator_matches_sequential_for_random_populations() {
+    let m = Multiplexer::new(3);
+    let ps = m.primset().clone();
+    check("batch == sequential at 1/2/8 threads", 20, |rng: &mut Rng| {
+        let pop = ramped_half_and_half(rng, &ps, 48, 2, 6);
+        let sequential: Vec<Fitness> = pop
+            .iter()
+            .map(|t| match tape::compile(t, &ps, opcodes::BOOL_NOP) {
+                Ok(tp) => {
+                    let hits = tape::eval_bool_native(&tp, &m.cases);
+                    Fitness { raw: (m.cases.ncases - hits) as f64, hits: hits as u32 }
+                }
+                Err(_) => Fitness::worst(),
+            })
+            .collect();
+        for threads in [1usize, 2, 8] {
+            let mut ev = BatchEvaluator::new(threads);
+            let got = ev.evaluate_bool(&pop, &ps, &m.cases);
+            assert_prop(got.len() == sequential.len(), "length mismatch")?;
+            for (i, (a, b)) in got.iter().zip(&sequential).enumerate() {
+                assert_prop(
+                    a.raw.to_bits() == b.raw.to_bits() && a.hits == b.hits,
+                    format!("tree {i} differs at {threads} threads"),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ant_engine_trajectory_identical_across_thread_counts() {
+    // full engine runs through the non-tape (closure) fan-out path
+    let ps = ant::ant_set();
+    let params = Params {
+        population: 80,
+        generations: 5,
+        seed: 3,
+        stop_on_perfect: false,
+        ..Params::default()
+    };
+    let mut ev1 = ant::NativeEvaluator::with_threads(1);
+    let r1 = Engine::new(params, &ps).run(&mut ev1);
+    let mut ev4 = ant::NativeEvaluator::with_threads(4);
+    let r4 = Engine::new(params, &ps).run(&mut ev4);
+    assert_identical_runs(&r1, &r4, "ant threads 1 vs 4");
+}
+
+#[test]
+fn resumed_engine_continues_rng_stream_not_a_reseed() {
+    // regression for the lossy rng_state/rng_from_state round-trip:
+    // stepping a restored engine must draw the same stream as the
+    // original (observable through identical bred populations)
+    let m = Multiplexer::new(2);
+    let ps = m.primset().clone();
+    let params =
+        Params { population: 60, generations: 6, seed: 11, stop_on_perfect: false, ..Params::default() };
+    let mut eval = vgp::gp::problems::multiplexer::NativeEvaluator::new(&m);
+
+    let mut original = Engine::new(params, &ps);
+    original.step(&mut eval);
+    let ck = original.checkpoint();
+    original.step(&mut eval);
+
+    let mut restored = Engine::from_checkpoint(params, &ps, ck);
+    restored.step(&mut eval);
+    assert_eq!(
+        original.population(),
+        restored.population(),
+        "one step after restore must breed the identical population"
+    );
+}

@@ -1,0 +1,122 @@
+//! Offline HMAC-SHA256 (RFC 2104) over the vendored `sha2`, exposing
+//! the `hmac` crate's `Mac` API shape:
+//! `Hmac::<Sha256>::new_from_slice(..)` / `update(..)` /
+//! `finalize().into_bytes()`.
+
+use std::marker::PhantomData;
+
+use sha2::{Digest, Sha256};
+
+const BLOCK: usize = 64;
+
+/// Key-length error (the RustCrypto name; HMAC accepts any length, so
+/// this shim never actually returns it).
+#[derive(Debug, Clone, Copy)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid HMAC key length")
+    }
+}
+impl std::error::Error for InvalidLength {}
+
+/// MAC output wrapper (mirrors `hmac::digest::CtOutput`).
+pub struct CtOutput {
+    bytes: [u8; 32],
+}
+
+impl CtOutput {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.bytes
+    }
+}
+
+/// The `Mac` trait shape (subset of the RustCrypto trait).
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> CtOutput;
+}
+
+/// HMAC over a hash function; this shim implements `D = Sha256` only.
+pub struct Hmac<D> {
+    inner: Sha256,
+    opad_key: [u8; BLOCK],
+    _digest: PhantomData<D>,
+}
+
+impl Mac for Hmac<Sha256> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        let mut k = [0u8; BLOCK];
+        if key.len() <= BLOCK {
+            k[..key.len()].copy_from_slice(key);
+        } else {
+            let digest = Sha256::digest(key);
+            k[..32].copy_from_slice(&digest);
+        }
+        let mut ipad = [0u8; BLOCK];
+        let mut opad = [0u8; BLOCK];
+        for i in 0..BLOCK {
+            ipad[i] = k[i] ^ 0x36;
+            opad[i] = k[i] ^ 0x5c;
+        }
+        let mut inner = Sha256::new();
+        inner.update(ipad);
+        Ok(Hmac { inner, opad_key: opad, _digest: PhantomData })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> CtOutput {
+        let inner_digest = self.inner.finalize();
+        let mut outer = Sha256::new();
+        outer.update(self.opad_key);
+        outer.update(inner_digest);
+        CtOutput { bytes: outer.finalize() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    fn mac(key: &[u8], msg: &[u8]) -> String {
+        let mut m = Hmac::<Sha256>::new_from_slice(key).unwrap();
+        m.update(msg);
+        hex(&m.finalize().into_bytes())
+    }
+
+    #[test]
+    fn rfc4231_case_1() {
+        // key = 20 x 0x0b, data = "Hi There"
+        assert_eq!(
+            mac(&[0x0b; 20], b"Hi There"),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn rfc4231_case_2() {
+        assert_eq!(
+            mac(b"Jefe", b"what do ya want for nothing?"),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn long_key_is_hashed_first() {
+        // RFC 4231 case 6: 131-byte key
+        let key = [0xaa_u8; 131];
+        assert_eq!(
+            mac(&key, b"Test Using Larger Than Block-Size Key - Hash Key First"),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+}
