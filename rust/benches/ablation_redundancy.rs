@@ -20,7 +20,7 @@ fn run(quorum: usize, cheat_frac: f64, seed: u64) -> (usize, usize, f64) {
             s.register_host(HostRow {
                 id: 0, name: format!("h{i}"), city: "x".into(), flops: 1e9, ncpus: 1,
                 on_frac: 1.0, active_frac: 1.0, registered_at: 0.0, last_heartbeat: 0.0,
-                error_results: 0, valid_results: 0, credit: 0.0,
+                error_results: 0, valid_results: 0, consecutive_errors: 0, last_error_at: 0.0, in_flight: 0, credit: 0.0,
             })
         })
         .collect();

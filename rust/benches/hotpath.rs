@@ -99,7 +99,7 @@ fn main() {
         let h = s.register_host(HostRow {
             id: 0, name: "h".into(), city: "x".into(), flops: 1e9, ncpus: 1,
             on_frac: 1.0, active_frac: 1.0, registered_at: 0.0, last_heartbeat: 0.0,
-            error_results: 0, valid_results: 0, credit: 0.0,
+            error_results: 0, valid_results: 0, consecutive_errors: 0, last_error_at: 0.0, in_flight: 0, credit: 0.0,
         });
         for i in 0..1000 {
             s.submit_wu(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e9));

@@ -23,6 +23,19 @@ pub struct HostRow {
     /// results returned that failed validation (reliability tracking)
     pub error_results: u64,
     pub valid_results: u64,
+    /// client errors in a row with no intervening success; the
+    /// scheduler stops feeding a host past
+    /// `ServerConfig::reliability_error_threshold` until a probation
+    /// period elapses and it earns a success (adaptive-replication
+    /// groundwork)
+    pub consecutive_errors: u64,
+    /// when the host last reported a client error (drives the
+    /// reliability probation window)
+    pub last_error_at: f64,
+    /// results currently InProgress on this host (maintained by the
+    /// ServerCore dispatch/report/expiry paths; the per-core task model
+    /// caps this at ncpus)
+    pub in_flight: u32,
     /// granted credit (cobblestones)
     pub credit: f64,
 }
@@ -191,6 +204,9 @@ mod tests {
             last_heartbeat: 0.0,
             error_results: 0,
             valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
             credit: 0.0,
         }
     }

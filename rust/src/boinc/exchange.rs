@@ -1,0 +1,403 @@
+//! `MigrationExchange` — the server-side migration broker for
+//! island-model campaigns ([`crate::gp::islands`]).
+//!
+//! It sits *behind the assimilator*: every canonical (quorum-validated)
+//! island payload is banked per `(deme, epoch)`, and a held next-epoch
+//! WU is released only when its dependencies are quorum-complete:
+//!
+//! * the deme's **own** previous-epoch checkpoint (hard dependency —
+//!   the population cannot be reconstructed without it), and
+//! * the **emigrant buffers** of its topology source demes (soft
+//!   dependency — a straggling source times out to an *empty*
+//!   immigrant set after `migration_timeout`, so churned volunteers
+//!   can delay an epoch but never deadlock it).
+//!
+//! A deme whose own WU dies (error mask: too many errors / timeouts)
+//! has its remaining epochs cancelled outright; neighbors then treat
+//! it like a timed-out source. The campaign therefore always reaches
+//! `ServerCore::is_complete`.
+//!
+//! # Determinism
+//!
+//! Banked state is the *content* of canonical payloads keyed by
+//! coordinates — never arrival order. Released specs concatenate
+//! source buffers in ascending deme order and all WU ids are
+//! pre-assigned at [`MigrationExchange::install`], so any interleaving
+//! of result arrivals (that doesn't cross a timeout boundary) produces
+//! byte-identical epoch specs, payloads and final campaign state.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use crate::gp::islands::Topology;
+use crate::util::json::Json;
+
+use super::server::ServerCore;
+use super::workunit::WorkUnit;
+
+/// Static shape of an island campaign, as the exchange sees it.
+#[derive(Clone, Debug)]
+pub struct ExchangeConfig {
+    pub demes: usize,
+    pub epochs: usize,
+    pub topology: Topology,
+    /// seconds after a deme's own checkpoint lands before missing
+    /// source-deme emigrants are written off as churned
+    pub migration_timeout: f64,
+}
+
+/// Observable exchange counters (campaign reporting + tests).
+#[derive(Clone, Debug, Default)]
+pub struct ExchangeStats {
+    /// canonical island payloads banked
+    pub banked: u64,
+    /// held WUs released (epoch > 0)
+    pub released: u64,
+    /// individual migrants placed into released specs
+    pub immigrants_delivered: u64,
+    /// releases that went out with an empty immigrant buffer
+    pub empty_releases: u64,
+    /// source demes written off by the migration timeout
+    pub timeouts: u64,
+    /// WUs cancelled because their deme's dependency chain died
+    pub cancelled: u64,
+}
+
+/// A deme-epoch's validated outcome: the checkpoint the next epoch
+/// resumes from and the emigrants its neighbors import.
+struct Bank {
+    checkpoint: Json,
+    emigrants: Vec<Json>,
+    banked_at: f64,
+}
+
+/// The migration broker. Owns no results — it reads the assimilator's
+/// output and drives held WUs through [`ServerCore::release_wu`] /
+/// [`ServerCore::cancel_wu`].
+pub struct MigrationExchange {
+    cfg: ExchangeConfig,
+    /// `[deme][epoch]` → WU id (pre-assigned at install)
+    wu_ids: Vec<Vec<u64>>,
+    /// WU id → (deme, epoch)
+    coords: HashMap<u64, (usize, usize)>,
+    banked: BTreeMap<(usize, usize), Bank>,
+    released: Vec<Vec<bool>>,
+    dead: Vec<Vec<bool>>,
+    /// (source deme, epoch) pairs already written off by the migration
+    /// timeout — dedups the `timeouts` stat when several dependents
+    /// (or several polls) observe the same straggler
+    written_off: BTreeSet<(usize, usize)>,
+    /// how far into `ServerCore::assimilated` we have scanned
+    scanned: usize,
+    pub stats: ExchangeStats,
+}
+
+impl MigrationExchange {
+    pub fn new(cfg: ExchangeConfig) -> MigrationExchange {
+        let (d, e) = (cfg.demes, cfg.epochs);
+        MigrationExchange {
+            cfg,
+            wu_ids: vec![vec![0; e]; d],
+            coords: HashMap::new(),
+            banked: BTreeMap::new(),
+            released: vec![vec![false; e]; d],
+            dead: vec![vec![false; e]; d],
+            written_off: BTreeSet::new(),
+            scanned: 0,
+            stats: ExchangeStats::default(),
+        }
+    }
+
+    /// Submit the campaign's WUs: epoch-0 WUs dispatch immediately,
+    /// later epochs are held until their dependencies complete. WU ids
+    /// are fixed here, so downstream state is arrival-order free.
+    pub fn install(&mut self, core: &mut ServerCore, wus: Vec<(usize, usize, WorkUnit)>) {
+        for (d, e, wu) in wus {
+            debug_assert_eq!(wu.held, e > 0, "epoch-0 ready, later epochs held");
+            let id = core.submit_wu(wu);
+            self.wu_ids[d][e] = id;
+            self.coords.insert(id, (d, e));
+            if e == 0 {
+                self.released[d][0] = true;
+            }
+        }
+    }
+
+    pub fn wu_id(&self, deme: usize, epoch: usize) -> u64 {
+        self.wu_ids[deme][epoch]
+    }
+
+    pub fn is_released(&self, deme: usize, epoch: usize) -> bool {
+        self.released[deme][epoch]
+    }
+
+    pub fn is_dead(&self, deme: usize, epoch: usize) -> bool {
+        self.dead[deme][epoch]
+    }
+
+    /// Drive the exchange: bank newly assimilated payloads, cancel dead
+    /// dependency chains, release every held WU whose dependencies are
+    /// quorum-complete (or timed out). Called after reports and on the
+    /// transitioner tick — both the DES and the TCP server loop do.
+    pub fn poll(&mut self, core: &mut ServerCore, now: f64) {
+        self.bank_new(core);
+        self.cancel_dead_chains(core);
+        self.release_ready(core, now);
+    }
+
+    // ------------------------------------------------------------ stages
+
+    fn bank_new(&mut self, core: &ServerCore) {
+        let assimilated = core.assimilated();
+        for a in &assimilated[self.scanned..] {
+            let Some(&(d, e)) = self.coords.get(&a.wu_id) else { continue };
+            let checkpoint = a.payload.get("checkpoint").cloned().unwrap_or(Json::Null);
+            let emigrants = a
+                .payload
+                .get("emigrants")
+                .and_then(Json::as_arr)
+                .map(|v| v.to_vec())
+                .unwrap_or_default();
+            self.banked.insert((d, e), Bank { checkpoint, emigrants, banked_at: a.completed_at });
+            self.stats.banked += 1;
+        }
+        self.scanned = assimilated.len();
+    }
+
+    /// A deme whose WU died (error mask) can never produce the
+    /// checkpoint its later epochs need: cancel the rest of its chain.
+    fn cancel_dead_chains(&mut self, core: &mut ServerCore) {
+        for d in 0..self.cfg.demes {
+            for e in 0..self.cfg.epochs {
+                if self.dead[d][e] {
+                    continue;
+                }
+                let errored = core
+                    .db
+                    .wu(self.wu_ids[d][e])
+                    .map(|w| w.error_mask.any())
+                    .unwrap_or(false);
+                if !errored {
+                    continue;
+                }
+                for e2 in e..self.cfg.epochs {
+                    if !self.dead[d][e2] {
+                        self.dead[d][e2] = true;
+                        if e2 > e {
+                            core.cancel_wu(self.wu_ids[d][e2]);
+                            self.stats.cancelled += 1;
+                            core.metrics.inc("exchange.cancelled");
+                        }
+                    }
+                }
+                break;
+            }
+        }
+    }
+
+    fn release_ready(&mut self, core: &mut ServerCore, now: f64) {
+        for e in 1..self.cfg.epochs {
+            for d in 0..self.cfg.demes {
+                if self.released[d][e] || self.dead[d][e] {
+                    continue;
+                }
+                // hard dependency: the deme's own previous checkpoint
+                let Some(own) = self.banked.get(&(d, e - 1)) else { continue };
+                let deadline = own.banked_at + self.cfg.migration_timeout;
+                let mut immigrants: Vec<Json> = Vec::new();
+                let mut timed_out: Vec<(usize, usize)> = Vec::new();
+                let mut ready = true;
+                for s in self.cfg.topology.sources(d, self.cfg.demes) {
+                    if let Some(bank) = self.banked.get(&(s, e - 1)) {
+                        immigrants.extend(bank.emigrants.iter().cloned());
+                    } else if self.dead[s][e - 1] {
+                        // churned-out source: nothing to import
+                    } else if now >= deadline {
+                        timed_out.push((s, e - 1));
+                    } else {
+                        ready = false;
+                        break;
+                    }
+                }
+                if !ready {
+                    continue;
+                }
+                // each straggling (source, epoch) counts once, however
+                // many dependents or polls observe it
+                for key in timed_out {
+                    if self.written_off.insert(key) {
+                        self.stats.timeouts += 1;
+                        core.metrics.inc("exchange.timeout");
+                    }
+                }
+                let id = self.wu_ids[d][e];
+                let Some(base) = core.db.wu(id).map(|w| w.spec.clone()) else { continue };
+                let n_imm = immigrants.len() as u64;
+                let spec = base
+                    .set("checkpoint", own.checkpoint.clone())
+                    .set("immigrants", Json::Arr(immigrants));
+                core.release_wu(id, spec);
+                self.released[d][e] = true;
+                self.stats.released += 1;
+                self.stats.immigrants_delivered += n_imm;
+                if n_imm == 0 {
+                    self.stats.empty_releases += 1;
+                }
+                core.metrics.inc("exchange.released");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boinc::db::HostRow;
+    use crate::boinc::server::ServerConfig;
+
+    fn host() -> HostRow {
+        HostRow {
+            id: 0,
+            name: "h".into(),
+            city: "lab".into(),
+            flops: 1e9,
+            ncpus: 4,
+            on_frac: 1.0,
+            active_frac: 1.0,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
+            credit: 0.0,
+        }
+    }
+
+    fn wu(d: usize, e: usize) -> WorkUnit {
+        let mut w = WorkUnit::new(
+            0,
+            format!("isl_d{d:02}_e{e:02}"),
+            Json::obj().set("deme", d as u64).set("epoch", e as u64),
+            1e9,
+        );
+        w.held = e > 0;
+        w
+    }
+
+    fn island_payload(d: usize, e: usize, n_emigrants: usize) -> Json {
+        let emigrants: Vec<Json> = (0..n_emigrants)
+            .map(|i| Json::obj().set("deme", d as u64).set("rank", i as u64))
+            .collect();
+        Json::obj()
+            .set("deme", d as u64)
+            .set("epoch", e as u64)
+            .set("checkpoint", Json::obj().set("gen", ((e + 1) * 3) as u64))
+            .set("emigrants", Json::Arr(emigrants))
+    }
+
+    fn campaign(demes: usize, epochs: usize) -> (ServerCore, MigrationExchange) {
+        let mut core = ServerCore::new(ServerConfig::default());
+        let mut ex = MigrationExchange::new(ExchangeConfig {
+            demes,
+            epochs,
+            topology: Topology::Ring,
+            migration_timeout: 1000.0,
+        });
+        let mut wus = Vec::new();
+        for e in 0..epochs {
+            for d in 0..demes {
+                wus.push((d, e, wu(d, e)));
+            }
+        }
+        ex.install(&mut core, wus);
+        (core, ex)
+    }
+
+    /// Fetch-and-succeed every dispatchable result, reporting payloads
+    /// generated per (deme, epoch).
+    fn drain(core: &mut ServerCore, ex: &mut MigrationExchange, host_id: u64, now: f64) -> usize {
+        let mut n = 0;
+        while let Some((rid, got, _)) = core.request_work(host_id, now) {
+            let d = got.spec.u64_of("deme").unwrap() as usize;
+            let e = got.spec.u64_of("epoch").unwrap() as usize;
+            core.report_success(rid, now, 1.0, island_payload(d, e, 2));
+            n += 1;
+        }
+        ex.poll(core, now);
+        n
+    }
+
+    #[test]
+    fn epochs_release_in_dependency_order() {
+        let (mut core, mut ex) = campaign(3, 3);
+        let h = core.register_host(host());
+        assert!(!ex.is_released(0, 1));
+        assert_eq!(drain(&mut core, &mut ex, h, 1.0), 3, "epoch 0 of every deme");
+        assert!((0..3).all(|d| ex.is_released(d, 1)), "epoch 1 released after quorum");
+        assert!(!ex.is_released(0, 2), "epoch 2 still waiting");
+        assert_eq!(drain(&mut core, &mut ex, h, 2.0), 3);
+        assert_eq!(drain(&mut core, &mut ex, h, 3.0), 3);
+        assert!(core.is_complete());
+        assert_eq!(ex.stats.released, 6);
+        assert_eq!(ex.stats.immigrants_delivered, 12, "ring: 2 migrants x 6 releases");
+        assert_eq!(ex.stats.timeouts, 0);
+        // released spec carries checkpoint + ring-source immigrants
+        let spec = &core.db.wu(ex.wu_id(0, 1)).unwrap().spec;
+        assert!(spec.get("checkpoint").is_some());
+        let imms = spec.get("immigrants").and_then(Json::as_arr).unwrap();
+        assert_eq!(imms.len(), 2);
+        assert_eq!(imms[0].u64_of("deme").unwrap(), 2, "deme 0 imports from deme N-1");
+    }
+
+    #[test]
+    fn straggler_times_out_to_empty_immigrants() {
+        let (mut core, mut ex) = campaign(2, 2);
+        let h = core.register_host(host());
+        // deme 0 finishes epoch 0; deme 1's WU stays in flight forever
+        let (rid0, got0, _) = core.request_work(h, 1.0).unwrap();
+        let (_rid1, _got1, _) = core.request_work(h, 1.0).unwrap();
+        assert_eq!(got0.spec.u64_of("deme").unwrap(), 0);
+        core.report_success(rid0, 2.0, 1.0, island_payload(0, 0, 2));
+        ex.poll(&mut core, 3.0);
+        assert!(!ex.is_released(0, 1), "source deme 1 neither banked nor timed out");
+        // well past banked_at + migration_timeout: written off
+        ex.poll(&mut core, 2.0 + 1000.0);
+        assert!(ex.is_released(0, 1), "timeout releases the dependent epoch");
+        assert_eq!(ex.stats.timeouts, 1);
+        assert_eq!(ex.stats.empty_releases, 1);
+        let spec = &core.db.wu(ex.wu_id(0, 1)).unwrap().spec;
+        assert_eq!(spec.get("immigrants").and_then(Json::as_arr).unwrap().len(), 0);
+        // deme 1 epoch 1 still waits on its own checkpoint (hard dep)
+        assert!(!ex.is_released(1, 1));
+    }
+
+    #[test]
+    fn dead_deme_chain_is_cancelled_not_deadlocked() {
+        let (mut core, mut ex) = campaign(2, 3);
+        let h = core.register_host(host());
+        let h_bad = core.register_host(host());
+        // deme 0 epoch 0 succeeds
+        let (rid0, _, _) = core.request_work(h, 1.0).unwrap();
+        core.report_success(rid0, 2.0, 1.0, island_payload(0, 0, 2));
+        // deme 1 epoch 0 errors out until the WU is poisoned
+        for i in 0..4 {
+            let (rid, _, _) = core.request_work(h_bad, 3.0 + i as f64).unwrap();
+            core.report_error(rid, 3.5 + i as f64);
+        }
+        assert!(core.db.wu(ex.wu_id(1, 0)).unwrap().error_mask.too_many_errors);
+        ex.poll(&mut core, 10.0);
+        assert!(ex.is_dead(1, 0));
+        assert!(ex.is_dead(1, 1) && ex.is_dead(1, 2), "chain cancelled");
+        assert_eq!(ex.stats.cancelled, 2);
+        // deme 0's dependent epochs release immediately with empty
+        // immigrants (dead source, no timeout wait)
+        assert!(ex.is_released(0, 1));
+        assert_eq!(ex.stats.timeouts, 0, "dead source is not a timeout");
+        // run deme 0 to completion: the campaign finishes
+        for now in [20.0, 30.0] {
+            drain(&mut core, &mut ex, h, now);
+        }
+        assert!(core.is_complete(), "cancelled chain must not deadlock the campaign");
+    }
+}

@@ -19,13 +19,20 @@
 //! * [`net`] — TCP front-end (`serve`) and a real worker client
 //!   (`Worker`) implementing fetch → compute → checkpoint → upload with
 //!   heartbeats.
+//! * [`exchange`] — the island-model migration broker: banks validated
+//!   emigrants per (deme, epoch) behind the assimilator and releases
+//!   dependency-gated next-epoch WUs (with straggler timeouts), turning
+//!   the server from a result sink into part of the GP population
+//!   structure.
 
 pub mod db;
+pub mod exchange;
 pub mod net;
 pub mod protocol;
 pub mod server;
 pub mod signature;
 pub mod workunit;
 
+pub use exchange::{ExchangeConfig, ExchangeStats, MigrationExchange};
 pub use server::{ServerConfig, ServerCore};
 pub use workunit::{Outcome, ResultRecord, ServerState, ValidateState, WorkUnit, WuError};

@@ -121,6 +121,9 @@ fn dispatch(core: &Arc<Mutex<ServerCore>>, req: Request, now: f64) -> Reply {
                 last_heartbeat: now,
                 error_results: 0,
                 valid_results: 0,
+                consecutive_errors: 0,
+                last_error_at: 0.0,
+                in_flight: 0,
                 credit: 0.0,
             });
             Reply::Registered { host_id: id }

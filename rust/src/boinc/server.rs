@@ -25,11 +25,25 @@ pub struct ServerConfig {
     pub credit_per_gflop: f64,
     /// hosts silent longer than this are considered dead by reports
     pub heartbeat_timeout: f64,
+    /// stop issuing work to a host after this many *consecutive*
+    /// client errors (cheap adaptive-replication: flaky hosts stop
+    /// burning replicas). After `reliability_probation` seconds of
+    /// quarantine the host gets one probe task at a time; a success
+    /// resets the counter, another error re-arms the quarantine.
+    pub reliability_error_threshold: u64,
+    /// quarantine length, seconds, once the error threshold trips
+    pub reliability_probation: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { deadline_slack: 3.0, credit_per_gflop: 1.0 / 3600.0, heartbeat_timeout: 86400.0 }
+        ServerConfig {
+            deadline_slack: 3.0,
+            credit_per_gflop: 1.0 / 3600.0,
+            heartbeat_timeout: 86400.0,
+            reliability_error_threshold: 5,
+            reliability_probation: 3600.0,
+        }
     }
 }
 
@@ -67,15 +81,52 @@ impl ServerCore {
     // ------------------------------------------------------------ intake
 
     /// Submit a work unit; the transitioner immediately creates its
-    /// initial replications.
+    /// initial replications — unless the WU is *held* (dependency-gated
+    /// island epochs), in which case replicas are deferred to
+    /// [`ServerCore::release_wu`].
     pub fn submit_wu(&mut self, wu: WorkUnit) -> u64 {
         let target = wu.target_nresults;
+        let held = wu.held;
         let id = self.db.insert_wu(wu);
-        for _ in 0..target {
-            self.db.insert_result(ResultRecord::new(0, id));
+        if !held {
+            for _ in 0..target {
+                self.db.insert_result(ResultRecord::new(0, id));
+            }
         }
         self.metrics.add("wu.submitted", 1);
         id
+    }
+
+    /// Release a held WU: patch its spec (the migration exchange fills
+    /// in the deme checkpoint + immigrant buffer once the epoch's
+    /// dependencies are quorum-complete) and create the initial
+    /// replications so the scheduler can dispatch it.
+    pub fn release_wu(&mut self, wu_id: u64, spec: Json) {
+        let target = {
+            let Some(w) = self.db.wu_mut(wu_id) else { return };
+            if !w.held {
+                return;
+            }
+            w.held = false;
+            w.spec = spec;
+            w.target_nresults
+        };
+        for _ in 0..target {
+            self.db.insert_result(ResultRecord::new(0, wu_id));
+        }
+        self.metrics.inc("wu.released");
+    }
+
+    /// Administratively terminate a WU that can never run (its island
+    /// dependency chain died): sets the couldnt_send error mask so the
+    /// campaign completes instead of deadlocking.
+    pub fn cancel_wu(&mut self, wu_id: u64) {
+        if let Some(w) = self.db.wu_mut(wu_id) {
+            if !w.is_done() {
+                w.error_mask.couldnt_send = true;
+                self.metrics.inc("wu.cancelled");
+            }
+        }
     }
 
     pub fn register_host(&mut self, host: HostRow) -> u64 {
@@ -97,7 +148,32 @@ impl ServerCore {
     /// the client must verify before running.
     pub fn request_work(&mut self, host_id: u64, now: f64) -> Option<(u64, WorkUnit, String)> {
         self.heartbeat(host_id, now);
-        let host_flops = self.db.host(host_id).map(|h| h.flops).unwrap_or(1e9);
+        let (host_flops, blocked, saturated) = match self.db.host(host_id) {
+            Some(h) => {
+                let quarantined = h.consecutive_errors >= self.cfg.reliability_error_threshold
+                    // post-probation, allow ONE probe task at a time:
+                    // a still-suspect host must prove itself before it
+                    // can fill all its cores again
+                    && (now < h.last_error_at + self.cfg.reliability_probation
+                        || h.in_flight > 0);
+                (h.flops, quarantined, h.in_flight >= h.ncpus.max(1))
+            }
+            None => (1e9, false, false),
+        };
+        // reliability gate: a host failing its last N tasks in a row is
+        // quarantined; after the probation window it gets one probe
+        // task at a time (success resets the counter, an error re-arms
+        // the quarantine)
+        if blocked {
+            self.metrics.inc("host.unreliable_refusal");
+            return None;
+        }
+        // per-core task model: one in-flight result per core (BOINC
+        // schedules one task per CPU), so multi-core volunteers queue
+        // up to ncpus concurrent WUs
+        if saturated {
+            return None;
+        }
         let rid = self.db.pop_unsent()?;
         let wu_id = self.db.result(rid).expect("result exists").wu_id;
         let wu = self.db.wu(wu_id).expect("wu exists").clone();
@@ -123,6 +199,9 @@ impl ServerCore {
             r.sent_at = now;
             r.deadline = deadline;
         }
+        if let Some(h) = self.db.host_mut(host_id) {
+            h.in_flight += 1;
+        }
         self.db.mark_in_progress(rid);
         self.metrics.inc("result.dispatched");
         let sig = self.key.sign(wu.spec.to_string().as_bytes());
@@ -133,7 +212,7 @@ impl ServerCore {
 
     /// Client reports success with a result payload.
     pub fn report_success(&mut self, rid: u64, now: f64, cpu_time: f64, payload: Json) {
-        let wu_id = {
+        let (wu_id, host_id) = {
             let Some(r) = self.db.result_mut(rid) else { return };
             if r.server_state != ServerState::InProgress {
                 return; // late report after deadline reissue — drop
@@ -144,8 +223,12 @@ impl ServerCore {
             r.cpu_time = cpu_time;
             r.payload_hash = sha256_hex(payload.to_string().as_bytes());
             r.payload = Some(payload);
-            r.wu_id
+            (r.wu_id, r.host_id)
         };
+        if let Some(h) = self.db.host_mut(host_id) {
+            h.consecutive_errors = 0; // success lifts the reliability block
+            h.in_flight = h.in_flight.saturating_sub(1);
+        }
         self.metrics.inc("result.success");
         self.transition_wu(wu_id, now);
         self.db.sweep_in_progress();
@@ -153,7 +236,7 @@ impl ServerCore {
 
     /// Client reports failure (the paper's Java-heap-size errors, §4.2).
     pub fn report_error(&mut self, rid: u64, now: f64) {
-        let wu_id = {
+        let (wu_id, host_id) = {
             let Some(r) = self.db.result_mut(rid) else { return };
             if r.server_state != ServerState::InProgress {
                 return;
@@ -161,8 +244,13 @@ impl ServerCore {
             r.server_state = ServerState::Over;
             r.outcome = Outcome::ClientError;
             r.received_at = now;
-            r.wu_id
+            (r.wu_id, r.host_id)
         };
+        if let Some(h) = self.db.host_mut(host_id) {
+            h.consecutive_errors += 1;
+            h.last_error_at = now;
+            h.in_flight = h.in_flight.saturating_sub(1);
+        }
         self.metrics.inc("result.client_error");
         self.transition_wu(wu_id, now);
         self.db.sweep_in_progress();
@@ -186,12 +274,15 @@ impl ServerCore {
             })
             .collect();
         for rid in expired {
-            let wu_id = {
+            let (wu_id, host_id) = {
                 let r = self.db.result_mut(rid).unwrap();
                 r.server_state = ServerState::Over;
                 r.outcome = Outcome::NoReply;
-                r.wu_id
+                (r.wu_id, r.host_id)
             };
+            if let Some(h) = self.db.host_mut(host_id) {
+                h.in_flight = h.in_flight.saturating_sub(1);
+            }
             self.metrics.inc("result.no_reply");
             self.transition_wu(wu_id, now);
         }
@@ -209,8 +300,10 @@ impl ServerCore {
             max_total_results: usize,
             flops_est: f64,
         }
+        // held WUs are dependency-gated: no replicas exist yet and the
+        // exchange owns their lifecycle until release
         let wu = match self.db.wu(wu_id) {
-            Some(w) if !w.is_done() => Policy {
+            Some(w) if !w.is_done() && !w.held => Policy {
                 min_quorum: w.min_quorum,
                 max_error_results: w.max_error_results,
                 max_total_results: w.max_total_results,
@@ -366,6 +459,9 @@ mod tests {
             last_heartbeat: 0.0,
             error_results: 0,
             valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
             credit: 0.0,
         }
     }
@@ -469,6 +565,119 @@ mod tests {
         assert!(first.is_some());
         let second = s.request_work(h, 1.0);
         assert!(second.is_none(), "redundancy must span distinct hosts");
+    }
+
+    #[test]
+    fn unreliable_host_quarantined_then_probed() {
+        let mut s = ServerCore::new(ServerConfig {
+            reliability_error_threshold: 2,
+            reliability_probation: 1000.0,
+            ..ServerConfig::default()
+        });
+        let mut dual = host(1e9);
+        dual.ncpus = 2;
+        let h = s.register_host(dual);
+        for i in 0..2 {
+            let mut wu = WorkUnit::new(0, format!("wu{i}"), Json::obj(), 1e9);
+            wu.max_error_results = 100;
+            wu.max_total_results = 100;
+            s.submit_wu(wu);
+        }
+        for i in 0..2 {
+            let (rid, _, _) = s.request_work(h, i as f64).unwrap();
+            s.report_error(rid, i as f64 + 0.5);
+        }
+        assert_eq!(s.db.host(h).unwrap().consecutive_errors, 2);
+        // quarantined even though work is available
+        assert!(s.request_work(h, 10.0).is_none(), "flaky host must be starved");
+        assert!(s.metrics.counter("host.unreliable_refusal") >= 1);
+        // probation over (last error at 1.5): ONE probe task goes out —
+        // a second concurrent fetch is refused even though the host has
+        // a free core and work exists
+        let (rid, _, _) = s.request_work(h, 1.5 + 1000.5).expect("probe after probation");
+        assert!(
+            s.request_work(h, 1.5 + 1000.6).is_none(),
+            "still-suspect host gets one probe at a time"
+        );
+        // a success resets the counter entirely; the host may then fill
+        // its cores again
+        s.report_success(rid, 1.5 + 1001.0, 1.0, payload(1));
+        assert_eq!(s.db.host(h).unwrap().consecutive_errors, 0);
+        assert!(s.request_work(h, 1.5 + 1002.0).is_some(), "block lifted after success");
+    }
+
+    #[test]
+    fn in_flight_counter_tracks_all_terminal_paths() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let mut multi = host(1e9);
+        multi.ncpus = 3;
+        let h = s.register_host(multi);
+        for i in 0..3 {
+            let mut wu = WorkUnit::new(0, format!("wu{i}"), Json::obj(), 1e9);
+            wu.delay_bound = 100.0;
+            s.submit_wu(wu);
+        }
+        let (ra, _, _) = s.request_work(h, 0.0).unwrap();
+        let (rb, _, _) = s.request_work(h, 0.0).unwrap();
+        let (_rc, _, _) = s.request_work(h, 0.0).unwrap();
+        assert_eq!(s.db.host(h).unwrap().in_flight, 3);
+        s.report_success(ra, 1.0, 1.0, payload(1));
+        assert_eq!(s.db.host(h).unwrap().in_flight, 2);
+        s.report_error(rb, 2.0);
+        assert_eq!(s.db.host(h).unwrap().in_flight, 1);
+        s.tick(10_000.0); // rc expires to NO_REPLY
+        assert_eq!(s.db.host(h).unwrap().in_flight, 0);
+    }
+
+    #[test]
+    fn ncpus_caps_concurrent_results_per_host() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let mut h2 = host(1e9);
+        h2.ncpus = 2;
+        let h = s.register_host(h2);
+        for i in 0..3 {
+            s.submit_wu(WorkUnit::new(0, format!("wu{i}"), Json::obj(), 1e9));
+        }
+        let a = s.request_work(h, 0.0);
+        let b = s.request_work(h, 1.0);
+        assert!(a.is_some() && b.is_some(), "a 2-core host queues two WUs");
+        assert!(s.request_work(h, 2.0).is_none(), "third concurrent WU refused");
+        let (rid, _, _) = a.unwrap();
+        s.report_success(rid, 3.0, 1.0, payload(1));
+        assert!(s.request_work(h, 4.0).is_some(), "slot freed after report");
+    }
+
+    #[test]
+    fn held_wu_released_with_patched_spec() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(host(1e9));
+        let mut wu = WorkUnit::new(0, "gated", Json::obj().set("epoch", 1u64), 1e9);
+        wu.held = true;
+        let id = s.submit_wu(wu);
+        assert!(s.request_work(h, 0.0).is_none(), "held WU must not dispatch");
+        assert!(!s.is_complete(), "held WU keeps the campaign open");
+        s.release_wu(id, Json::obj().set("epoch", 1u64).set("immigrants", Json::Arr(vec![])));
+        let (rid, got, _) = s.request_work(h, 1.0).expect("released WU dispatches");
+        assert_eq!(got.id, id);
+        assert!(got.spec.get("immigrants").is_some(), "release patches the spec");
+        s.report_success(rid, 3.0, 1.0, payload(2));
+        assert!(s.is_complete());
+        // double release is a no-op (no duplicate replicas appear)
+        s.release_wu(id, Json::obj());
+        assert!(s.request_work(h, 4.0).is_none());
+        assert_eq!(s.db.results_of_wu(id).len(), 1);
+    }
+
+    #[test]
+    fn cancel_wu_terminates_campaign_view() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let mut wu = WorkUnit::new(0, "doomed", Json::obj(), 1e9);
+        wu.held = true;
+        let id = s.submit_wu(wu);
+        assert!(!s.is_complete());
+        s.cancel_wu(id);
+        assert!(s.db.wu(id).unwrap().error_mask.couldnt_send);
+        assert!(s.is_complete(), "cancelled WU no longer blocks completion");
     }
 
     #[test]

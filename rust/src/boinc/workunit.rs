@@ -109,6 +109,13 @@ pub struct WorkUnit {
     pub max_total_results: usize,
     /// delay bound for deadlines, seconds
     pub delay_bound: f64,
+    /// Dependency gating (island epochs): a held WU is registered but
+    /// not yet dispatchable — no replications exist and the
+    /// transitioner ignores it until [`ServerCore::release_wu`] patches
+    /// its spec (checkpoint + immigrants) and creates the replicas.
+    ///
+    /// [`ServerCore::release_wu`]: super::server::ServerCore::release_wu
+    pub held: bool,
     pub error_mask: WuError,
     pub canonical_result: Option<u64>,
     pub assimilated: bool,
@@ -126,6 +133,7 @@ impl WorkUnit {
             max_error_results: 3,
             max_total_results: 8,
             delay_bound: 7.0 * 86400.0,
+            held: false,
             error_mask: WuError::default(),
             canonical_result: None,
             assimilated: false,

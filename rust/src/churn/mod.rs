@@ -151,10 +151,10 @@ impl SimHost {
         self.flops * self.on_frac * self.active_frac * self.efficiency
     }
 
-    /// Whole-host WU throughput: BOINC runs one task per core, and the
-    /// batched evaluator (gp::eval) lets a single task use every core,
-    /// so either way an `ncpus`-core host drains work `ncpus`× faster.
-    /// This is the rate the DES uses for compute durations.
+    /// Whole-host aggregate throughput (`ncpus` × per-core rate). The
+    /// DES now models cores individually — one concurrent WU per core
+    /// at [`SimHost::effective_flops`] — so this aggregate is for
+    /// capacity accounting (eq. 2 sanity checks), not durations.
     pub fn throughput_flops(&self) -> f64 {
         self.effective_flops() * self.ncpus.max(1) as f64
     }

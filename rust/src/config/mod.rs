@@ -14,7 +14,7 @@
 //!
 //! [pool]
 //! hosts = 45
-//! ncpus = 2          # cores per simulated host (scales throughput)
+//! ncpus = 2          # cores per simulated host (per-core WU queue)
 //! churn = volunteer
 //! seed = 7
 //! ```
@@ -22,6 +22,23 @@
 //! `Campaign::from_config` (coordinator) consumes the `[campaign]`
 //! section, including the `threads` knob that is forwarded into every
 //! WU spec.
+//!
+//! Adding a `demes` key selects the island-model path
+//! (`IslandCampaign::from_config`): one WU per (deme, epoch) with
+//! server-side migration. Island keys, all under `[campaign]`:
+//!
+//! ```text
+//! [campaign]
+//! problem = mux6
+//! demes = 4              # sub-populations
+//! epochs = 4             # migration rounds
+//! epoch_gens = 10        # generations per epoch (migration interval)
+//! population = 500       # individuals PER DEME
+//! migration_k = 2        # emigrants exported per deme per epoch
+//! topology = ring        # ring | all | none
+//! migration_timeout = 21600   # secs before a straggler deme is
+//!                             # written off (empty immigrant set)
+//! ```
 
 use std::collections::BTreeMap;
 

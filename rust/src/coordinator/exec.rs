@@ -13,7 +13,10 @@
 use anyhow::{Context, Result};
 
 use crate::gp::engine::{Engine, Params};
+use crate::gp::islands::{self, IslandSpec};
+use crate::gp::primset::PrimSet;
 use crate::gp::problems::{ant, interest_point, multiplexer, parity, regression, ProblemKind};
+use crate::gp::Evaluator;
 use crate::runtime::{BoolArtifactEvaluator, Runtime};
 use crate::util::json::Json;
 
@@ -49,17 +52,21 @@ pub fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
         .set("best_size", run.best.len() as u64)
 }
 
-/// Execute a WU spec with native (Method-1) evaluation. The spec's
-/// `threads` knob fans fitness evaluation across that many cores via
-/// the batched evaluators — payloads stay byte-identical regardless.
-pub fn run_wu_native(spec: &Json) -> Result<Json> {
-    let (problem, params) = params_of_spec(spec)?;
-    let threads = threads_of_spec(spec);
-    let run = match problem {
+/// Build a problem's primitive set and native (Method-1) evaluator and
+/// hand them to `f` — the one dispatch point shared by whole-run WUs,
+/// island epoch WUs and the sequential baseline. `seed` only matters
+/// for problems with sampled fitness cases (interest point).
+pub fn with_native_evaluator<R>(
+    problem: ProblemKind,
+    seed: u64,
+    threads: usize,
+    f: impl FnOnce(&PrimSet, &mut dyn Evaluator) -> R,
+) -> R {
+    match problem {
         ProblemKind::Ant => {
             let ps = ant::ant_set();
             let mut ev = ant::NativeEvaluator::with_threads(threads);
-            Engine::new(params, &ps).run(&mut ev)
+            f(&ps, &mut ev)
         }
         ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
             let k = match problem {
@@ -70,28 +77,61 @@ pub fn run_wu_native(spec: &Json) -> Result<Json> {
             let m = multiplexer::Multiplexer::new(k);
             let ps = m.primset().clone();
             let mut ev = multiplexer::NativeEvaluator::with_threads(&m, threads);
-            Engine::new(params, &ps).run(&mut ev)
+            f(&ps, &mut ev)
         }
         ProblemKind::Parity5 => {
             let p = parity::Parity::new(5);
             let ps = p.primset().clone();
             let mut ev = parity::NativeEvaluator::with_threads(&p, threads);
-            Engine::new(params, &ps).run(&mut ev)
+            f(&ps, &mut ev)
         }
         ProblemKind::Quartic => {
             let q = regression::Quartic::new(20);
             let ps = q.primset().clone();
             let mut ev = regression::NativeEvaluator::with_threads(&q, threads);
-            Engine::new(params, &ps).run(&mut ev)
+            f(&ps, &mut ev)
         }
         ProblemKind::InterestPoint => {
             let ps = interest_point::ip_set();
-            let mut ev =
-                interest_point::NativeEvaluator::with_threads(spec.u64_of("seed")?, threads);
-            Engine::new(params, &ps).run(&mut ev)
+            let mut ev = interest_point::NativeEvaluator::with_threads(seed, threads);
+            f(&ps, &mut ev)
         }
-    };
+    }
+}
+
+/// Execute a WU spec with native (Method-1) evaluation. The spec's
+/// `threads` knob fans fitness evaluation across that many cores via
+/// the batched evaluators — payloads stay byte-identical regardless.
+pub fn run_wu_native(spec: &Json) -> Result<Json> {
+    let (problem, params) = params_of_spec(spec)?;
+    let threads = threads_of_spec(spec);
+    let run =
+        with_native_evaluator(problem, params.seed, threads, |ps, ev| Engine::new(params, ps).run(ev));
     Ok(payload_of(&run))
+}
+
+/// Execute one island epoch WU (spec carries the deme checkpoint and
+/// immigrant buffer; see [`crate::gp::islands`]): resume or seed the
+/// deme, incorporate immigrants, evolve `epoch_gens` generations and
+/// return the canonical payload (next checkpoint + best-k emigrants).
+pub fn run_island_wu_native(spec: &Json) -> Result<Json> {
+    let ispec = IslandSpec::from_json(spec)?;
+    let problem = ProblemKind::parse(&ispec.problem)?;
+    with_native_evaluator(problem, ispec.seed, ispec.threads, |ps, ev| {
+        let mut engine = islands::epoch_engine(&ispec, ps)?;
+        islands::finish_epoch(&mut engine, &ispec, ev)
+    })
+}
+
+/// Dispatch on the spec shape: island epoch WUs carry deme coordinates,
+/// whole-run WUs don't. This is what a generic worker runs
+/// (`vgp worker` serves both campaign kinds with one binary).
+pub fn run_wu_auto(spec: &Json) -> Result<Json> {
+    if IslandSpec::is_island(spec) {
+        run_island_wu_native(spec)
+    } else {
+        run_wu_native(spec)
+    }
 }
 
 /// Execute a boolean-problem WU spec through the AOT artifact

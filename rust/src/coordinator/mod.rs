@@ -9,10 +9,13 @@
 
 pub mod exec;
 
-use crate::boinc::server::ServerConfig;
+use crate::boinc::exchange::{ExchangeConfig, ExchangeStats, MigrationExchange};
+use crate::boinc::server::{Assimilated, ServerConfig};
 use crate::boinc::workunit::WorkUnit;
 use crate::churn::{sample_pool, PoolParams, SimHost};
+use crate::gp::islands::Topology;
 use crate::gp::problems::ProblemKind;
+use crate::gp::tree::Tree;
 use crate::sim::{SimConfig, SimOutcome, Simulation};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -107,6 +110,217 @@ impl Campaign {
             })
             .collect()
     }
+}
+
+/// An island-model campaign: `demes` sub-populations × `epochs` rounds
+/// of `epoch_gens` generations, one WU per (deme, epoch) slice, with
+/// server-side migration between epochs (see [`crate::gp::islands`] and
+/// [`crate::boinc::exchange`]). Where [`Campaign`] is the paper's
+/// "N independent runs", this turns BOINC itself into the GP
+/// population structure.
+#[derive(Clone, Debug)]
+pub struct IslandCampaign {
+    pub name: String,
+    pub problem: ProblemKind,
+    pub demes: usize,
+    pub epochs: usize,
+    /// generations evolved per epoch (the migration interval)
+    pub epoch_gens: usize,
+    /// individuals per deme
+    pub population: usize,
+    /// emigrants each deme exports per epoch
+    pub migration_k: usize,
+    pub topology: Topology,
+    /// straggler write-off for the exchange, seconds
+    pub migration_timeout: f64,
+    pub redundancy: (usize, usize),
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl IslandCampaign {
+    pub fn new(
+        name: &str,
+        problem: ProblemKind,
+        demes: usize,
+        epochs: usize,
+        epoch_gens: usize,
+        population: usize,
+    ) -> IslandCampaign {
+        assert!(demes >= 1 && epochs >= 1 && epoch_gens >= 1 && population >= 1);
+        IslandCampaign {
+            name: name.to_string(),
+            problem,
+            demes,
+            epochs,
+            epoch_gens,
+            population,
+            migration_k: 2,
+            topology: Topology::Ring,
+            migration_timeout: 6.0 * 3600.0,
+            redundancy: (1, 1),
+            seed: 1,
+            threads: 1,
+        }
+    }
+
+    /// Island campaign from an INI `[campaign]` section (selected over
+    /// a plain [`Campaign`] when a `demes` key is present).
+    pub fn from_config(cfg: &crate::config::Config) -> anyhow::Result<IslandCampaign> {
+        let problem = ProblemKind::parse(cfg.str_or("campaign", "problem", "mux6"))?;
+        // clamp to 1: a zero in the file degrades to a single-deme /
+        // single-epoch campaign instead of tripping the invariant assert
+        let mut c = IslandCampaign::new(
+            cfg.str_or("campaign", "name", "islands"),
+            problem,
+            cfg.u64_or("campaign", "demes", 4).max(1) as usize,
+            cfg.u64_or("campaign", "epochs", 4).max(1) as usize,
+            cfg.u64_or("campaign", "epoch_gens", 10).max(1) as usize,
+            cfg.u64_or("campaign", "population", 500).max(1) as usize,
+        );
+        c.migration_k = cfg.u64_or("campaign", "migration_k", 2) as usize;
+        c.topology = Topology::parse(cfg.str_or("campaign", "topology", "ring"))?;
+        c.migration_timeout = cfg.f64_or("campaign", "migration_timeout", c.migration_timeout);
+        c.seed = cfg.u64_or("campaign", "seed", 1);
+        c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
+        c.redundancy = (
+            cfg.u64_or("campaign", "target_nresults", 1) as usize,
+            cfg.u64_or("campaign", "min_quorum", 1) as usize,
+        );
+        Ok(c)
+    }
+
+    /// FLOPs for one epoch WU of one deme.
+    pub fn flops_per_epoch(&self) -> f64 {
+        self.epoch_gens as f64 * self.population as f64 * self.problem.flops_per_eval()
+    }
+
+    /// Static spec of a (deme, epoch) WU. The exchange patches in
+    /// `checkpoint` + `immigrants` at release time (epoch 0 runs from
+    /// the deme seed and needs neither).
+    pub fn wu_spec(&self, deme: usize, epoch: usize) -> Json {
+        Json::obj()
+            .set("campaign", self.name.as_str())
+            .set("problem", self.problem.name())
+            .set("population", self.population as u64)
+            .set("seed", self.seed + deme as u64)
+            .set("threads", self.threads as u64)
+            .set("deme", deme as u64)
+            .set("demes", self.demes as u64)
+            .set("epoch", epoch as u64)
+            .set("epochs", self.epochs as u64)
+            .set("epoch_gens", self.epoch_gens as u64)
+            .set("migration_k", self.migration_k as u64)
+            .set("topology", self.topology.name())
+    }
+
+    /// All (deme, epoch, WU) triples, in exchange-install order: epoch
+    /// 0 dispatches immediately, later epochs are held until their
+    /// migration dependencies are quorum-complete.
+    pub fn workunits(&self) -> Vec<(usize, usize, WorkUnit)> {
+        let expected_secs = self.flops_per_epoch() / REFERENCE_FLOPS;
+        let delay_bound = (3.0 * expected_secs).clamp(3600.0, 7.0 * 86400.0);
+        let mut out = Vec::with_capacity(self.demes * self.epochs);
+        for epoch in 0..self.epochs {
+            for deme in 0..self.demes {
+                let mut wu = WorkUnit::new(
+                    0,
+                    format!("{}_d{:02}_e{:02}", self.name, deme, epoch),
+                    self.wu_spec(deme, epoch),
+                    self.flops_per_epoch(),
+                );
+                wu.delay_bound = delay_bound;
+                wu.held = epoch > 0;
+                out.push((deme, epoch, wu.with_redundancy(self.redundancy.0, self.redundancy.1)));
+            }
+        }
+        out
+    }
+
+    pub fn exchange_config(&self) -> ExchangeConfig {
+        ExchangeConfig {
+            demes: self.demes,
+            epochs: self.epochs,
+            topology: self.topology,
+            migration_timeout: self.migration_timeout,
+        }
+    }
+
+    /// Merge: the campaign's best individual across every assimilated
+    /// epoch payload. Pure function of payload *content* — ties on raw
+    /// fitness break by (deme, epoch), never by assimilation order.
+    pub fn merge_best(&self, assimilated: &[Assimilated]) -> Option<IslandBest> {
+        let mut best: Option<IslandBest> = None;
+        for a in assimilated {
+            let Some(bits) = a.payload.get("best_raw_bits").and_then(Json::as_str) else { continue };
+            let Ok(raw_bits) = u64::from_str_radix(bits, 16) else { continue };
+            let raw = f64::from_bits(raw_bits);
+            let (Some(deme), Some(epoch)) = (
+                a.payload.get("deme").and_then(Json::as_u64),
+                a.payload.get("epoch").and_then(Json::as_u64),
+            ) else {
+                continue;
+            };
+            let (deme, epoch) = (deme as usize, epoch as usize);
+            let better = match &best {
+                None => true,
+                Some(b) => raw < b.raw || (raw == b.raw && (deme, epoch) < (b.deme, b.epoch)),
+            };
+            if !better {
+                continue;
+            }
+            let Some(tree) = a.payload.get("best_tree").and_then(|t| Tree::from_json(t).ok()) else {
+                continue;
+            };
+            let hits = a.payload.get("hits").and_then(Json::as_u64).unwrap_or(0) as u32;
+            best = Some(IslandBest { deme, epoch, raw, hits, tree });
+        }
+        best
+    }
+}
+
+/// The merged winner of an island campaign.
+#[derive(Clone, Debug)]
+pub struct IslandBest {
+    pub deme: usize,
+    pub epoch: usize,
+    pub raw: f64,
+    pub hits: u32,
+    pub tree: Tree,
+}
+
+/// Outcome of a simulated island campaign: the DES outcome plus the
+/// migration ledger and the merged best individual.
+#[derive(Clone, Debug)]
+pub struct IslandReport {
+    pub campaign: String,
+    pub outcome: SimOutcome,
+    pub best: Option<IslandBest>,
+    pub stats: ExchangeStats,
+}
+
+/// Simulate an island campaign on a host pool. Unlike
+/// [`simulate_campaign`], WUs are *actually executed* (native GP) at
+/// completion time — the exchange needs real checkpoints and emigrants
+/// to route, so the DES carries payload content, not placeholders.
+pub fn simulate_island_campaign(
+    campaign: &IslandCampaign,
+    pool: &PoolParams,
+    cities: &[(&str, usize)],
+    sim_cfg: SimConfig,
+    seed: u64,
+) -> IslandReport {
+    let mut rng = Rng::new(seed);
+    let hosts: Vec<SimHost> = sample_pool(&mut rng, pool, cities);
+    let mut sim = Simulation::new(sim_cfg, ServerConfig::default(), hosts, seed);
+    let mut ex = MigrationExchange::new(campaign.exchange_config());
+    ex.install(&mut sim.core, campaign.workunits());
+    sim.attach_exchange(ex);
+    sim.set_executor(Box::new(exec::run_island_wu_native));
+    let outcome = sim.run_mut(REFERENCE_FLOPS);
+    let best = campaign.merge_best(sim.core.assimilated());
+    let stats = sim.exchange().map(|e| e.stats.clone()).unwrap_or_default();
+    IslandReport { campaign: campaign.name.clone(), outcome, best, stats }
 }
 
 /// A parameter sweep: the cross product of generations x population
@@ -212,6 +426,64 @@ mod tests {
         assert_eq!(c.threads, 4);
         assert_eq!(c.wu_spec(0).u64_of("threads").unwrap(), 4);
         assert_eq!(c.wu_spec(1).u64_of("seed").unwrap(), 10);
+    }
+
+    #[test]
+    fn island_workunits_hold_later_epochs() {
+        let c = IslandCampaign::new("isl", ProblemKind::Mux6, 3, 2, 5, 40);
+        let wus = c.workunits();
+        assert_eq!(wus.len(), 6);
+        for (d, e, wu) in &wus {
+            assert_eq!(wu.held, *e > 0, "only epoch 0 dispatches immediately");
+            assert_eq!(wu.spec.u64_of("deme").unwrap() as usize, *d);
+            assert_eq!(wu.spec.u64_of("epoch").unwrap() as usize, *e);
+            assert_eq!(wu.spec.u64_of("seed").unwrap(), 1 + *d as u64, "per-deme seed");
+            assert!(wu.spec.get("checkpoint").is_none(), "exchange patches state at release");
+        }
+        assert!((c.flops_per_epoch() - 5.0 * 40.0 * ProblemKind::Mux6.flops_per_eval()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn island_campaign_from_config() {
+        let cfg = crate::config::Config::parse(
+            "[campaign]\nproblem = mux6\ndemes = 5\nepochs = 3\nepoch_gens = 7\npopulation = 80\nmigration_k = 4\ntopology = all\nseed = 3\n",
+        )
+        .unwrap();
+        let c = IslandCampaign::from_config(&cfg).unwrap();
+        assert_eq!(c.demes, 5);
+        assert_eq!(c.epochs, 3);
+        assert_eq!(c.epoch_gens, 7);
+        assert_eq!(c.migration_k, 4);
+        assert_eq!(c.topology, crate::gp::islands::Topology::All);
+        assert_eq!(c.wu_spec(2, 1).u64_of("seed").unwrap(), 5);
+        assert_eq!(c.exchange_config().demes, 5);
+    }
+
+    #[test]
+    fn merge_best_is_content_ordered() {
+        use crate::boinc::server::Assimilated;
+        let c = IslandCampaign::new("isl", ProblemKind::Mux6, 2, 1, 1, 10);
+        let mk = |deme: u64, raw: f64, name: &str| Assimilated {
+            wu_id: deme,
+            wu_name: name.to_string(),
+            result_id: deme,
+            host_id: 1,
+            payload: Json::obj()
+                .set("deme", deme)
+                .set("epoch", 0u64)
+                .set("best_raw_bits", format!("{:016x}", raw.to_bits()))
+                .set("hits", 3u64)
+                .set("best_tree", crate::gp::tree::Tree::new(vec![0], vec![0.0]).to_json()),
+            completed_at: deme as f64,
+        };
+        // arrival order reversed must not change the winner; raw tie
+        // breaks toward the lower deme
+        let a = vec![mk(0, 2.0, "a"), mk(1, 2.0, "b")];
+        let b = vec![mk(1, 2.0, "b"), mk(0, 2.0, "a")];
+        assert_eq!(c.merge_best(&a).unwrap().deme, 0);
+        assert_eq!(c.merge_best(&b).unwrap().deme, 0);
+        let better = vec![mk(0, 2.0, "a"), mk(1, 1.0, "b")];
+        assert_eq!(c.merge_best(&better).unwrap().deme, 1);
     }
 
     #[test]

@@ -207,6 +207,16 @@ impl<'a> Engine<'a> {
         &self.population
     }
 
+    /// Fitnesses of the most recently evaluated generation — indexed
+    /// against the population *as it was entering* the last [`step`]
+    /// (the islands module snapshots that population to pick
+    /// emigrants). Empty before the first step.
+    ///
+    /// [`step`]: Engine::step
+    pub fn last_fitnesses(&self) -> &[Fitness] {
+        &self.fitnesses
+    }
+
     /// Evaluate the current population and step one generation.
     /// Returns stats for the evaluated generation.
     pub fn step(&mut self, eval: &mut dyn Evaluator) -> GenStats {

@@ -1,0 +1,396 @@
+//! Island-model GP: deme population structure over BOINC work units.
+//!
+//! The paper parallelizes GP at the granularity of *whole independent
+//! runs*; this module implements the richer topology its closing model
+//! invites: a campaign is split into `demes` sub-populations evolving
+//! for `epochs` rounds of `epoch_gens` generations each. One work unit
+//! executes one (deme, epoch) slice: it carries the deme's serialized
+//! [`Checkpoint`] (or just its seed on epoch 0) plus an *immigrant
+//! buffer* of migrants banked by the server-side exchange
+//! ([`crate::boinc::exchange`]), and returns the next checkpoint plus
+//! its own best-k *emigrants*.
+//!
+//! # Determinism contract
+//!
+//! Migration is a **pure function of validated payloads**, never of
+//! result-arrival order or thread count:
+//!
+//! * [`select_emigrants`] orders by `(raw fitness, population index)` —
+//!   no RNG, no time.
+//! * [`incorporate`] replaces the population *tail* (the slots furthest
+//!   from the elitism-protected head) in immigrant-buffer order; the
+//!   buffer itself is assembled by the exchange in ascending source-
+//!   deme order, so any arrival interleaving yields the same spec.
+//! * Epoch execution reuses [`Engine`]'s exact-state checkpoints and
+//!   the batched evaluators' bit-identical thread contract, so a WU
+//!   payload is byte-stable across volunteers and across mid-epoch
+//!   checkpoint/resume — the property BOINC quorum validation hashes.
+
+use anyhow::Result;
+
+use crate::gp::engine::{Checkpoint, Engine, Params};
+use crate::gp::primset::PrimSet;
+use crate::gp::tree::Tree;
+use crate::gp::{Evaluator, Fitness};
+use crate::util::json::Json;
+
+/// Migration topology: which demes feed immigrants into deme `d`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Directed ring: deme `d` imports from deme `(d-1) mod N`.
+    Ring,
+    /// Fully connected: deme `d` imports from every other deme.
+    All,
+    /// No migration (independent demes — the paper's baseline).
+    Isolated,
+}
+
+impl Topology {
+    pub fn parse(name: &str) -> Result<Topology> {
+        Ok(match name {
+            "ring" => Topology::Ring,
+            "all" => Topology::All,
+            "none" | "isolated" => Topology::Isolated,
+            other => anyhow::bail!("unknown topology '{other}' (ring|all|none)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Topology::Ring => "ring",
+            Topology::All => "all",
+            Topology::Isolated => "none",
+        }
+    }
+
+    /// Source demes whose epoch-`e` emigrants deme `d` imports at epoch
+    /// `e+1`, in ascending order (the exchange concatenates immigrant
+    /// buffers in exactly this order — arrival-order independence).
+    pub fn sources(&self, d: usize, demes: usize) -> Vec<usize> {
+        match self {
+            Topology::Ring if demes > 1 => vec![(d + demes - 1) % demes],
+            Topology::Ring => Vec::new(),
+            Topology::All => (0..demes).filter(|&s| s != d).collect(),
+            Topology::Isolated => Vec::new(),
+        }
+    }
+}
+
+/// One migrating individual: the tree, the fitness it earned in its
+/// home deme (raw stored as exact f64 bits), and where it came from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Migrant {
+    pub tree: Tree,
+    pub fitness: Fitness,
+    pub from_deme: usize,
+}
+
+impl Migrant {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("tree", self.tree.to_json())
+            .set("raw_bits", format!("{:016x}", self.fitness.raw.to_bits()))
+            .set("hits", self.fitness.hits as u64)
+            .set("deme", self.from_deme as u64)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Migrant> {
+        let tree = Tree::from_json(j.get("tree").ok_or_else(|| anyhow::anyhow!("migrant missing tree"))?)?;
+        let raw_bits = u64::from_str_radix(j.str_of("raw_bits")?, 16)?;
+        Ok(Migrant {
+            tree,
+            fitness: Fitness { raw: f64::from_bits(raw_bits), hits: j.u64_of("hits")? as u32 },
+            from_deme: j.u64_of("deme")? as usize,
+        })
+    }
+}
+
+/// Parsed island WU spec (the island analog of `exec::params_of_spec`).
+#[derive(Clone, Debug)]
+pub struct IslandSpec {
+    pub problem: String,
+    /// individuals per deme (not per campaign)
+    pub population: usize,
+    pub deme: usize,
+    pub demes: usize,
+    pub epoch: usize,
+    pub epochs: usize,
+    /// generations evolved per epoch (the migration interval)
+    pub epoch_gens: usize,
+    /// emigrants exported per epoch
+    pub migration_k: usize,
+    /// the deme's seed (campaign seed + deme index)
+    pub seed: u64,
+    pub threads: usize,
+    /// end-of-previous-epoch state; `None` only on epoch 0
+    pub checkpoint: Option<Checkpoint>,
+    /// banked migrants from the topology's source demes (may be empty
+    /// when a source churned out and the exchange timed it out)
+    pub immigrants: Vec<Migrant>,
+}
+
+impl IslandSpec {
+    /// Does a WU spec describe an island epoch (vs. a whole-run WU)?
+    pub fn is_island(spec: &Json) -> bool {
+        spec.get("deme").is_some() && spec.get("epoch_gens").is_some()
+    }
+
+    pub fn from_json(spec: &Json) -> Result<IslandSpec> {
+        let checkpoint = match spec.get("checkpoint") {
+            None | Some(Json::Null) => None,
+            Some(j) => Some(Checkpoint::from_json(j)?),
+        };
+        let immigrants = match spec.get("immigrants").and_then(Json::as_arr) {
+            Some(arr) => arr.iter().map(Migrant::from_json).collect::<Result<Vec<Migrant>>>()?,
+            None => Vec::new(),
+        };
+        let s = IslandSpec {
+            problem: spec.str_of("problem")?.to_string(),
+            population: spec.u64_of("population")? as usize,
+            deme: spec.u64_of("deme")? as usize,
+            demes: spec.u64_of("demes")? as usize,
+            epoch: spec.u64_of("epoch")? as usize,
+            epochs: spec.u64_of("epochs")? as usize,
+            epoch_gens: spec.u64_of("epoch_gens")? as usize,
+            migration_k: spec.u64_of("migration_k")? as usize,
+            seed: spec.u64_of("seed")?,
+            threads: spec.get("threads").and_then(Json::as_u64).unwrap_or(1).max(1) as usize,
+            checkpoint,
+            immigrants,
+        };
+        anyhow::ensure!(s.population > 0, "island spec: population must be > 0");
+        anyhow::ensure!(s.epoch_gens > 0, "island spec: epoch_gens must be > 0");
+        anyhow::ensure!(s.deme < s.demes, "island spec: deme {} out of range {}", s.deme, s.demes);
+        Ok(s)
+    }
+
+    /// Engine parameters for this deme. `stop_on_perfect` is off:
+    /// epochs must run their full generation budget so every deme's
+    /// payload (and therefore quorum hashing and the exchange's
+    /// dependency graph) is schedule-independent.
+    pub fn params(&self) -> Params {
+        Params {
+            population: self.population,
+            generations: self.epochs * self.epoch_gens,
+            seed: self.seed,
+            stop_on_perfect: false,
+            ..Params::default()
+        }
+    }
+
+    /// First generation of this epoch (where the spec checkpoint sits).
+    pub fn epoch_start_gen(&self) -> usize {
+        self.epoch * self.epoch_gens
+    }
+
+    /// Generation this epoch runs up to (exclusive target).
+    pub fn epoch_target_gen(&self) -> usize {
+        (self.epoch + 1) * self.epoch_gens
+    }
+}
+
+/// Deterministic emigrant selection: the best `k` of the last evaluated
+/// generation, ordered by `(raw fitness asc, population index asc)`.
+pub fn select_emigrants(pop: &[Tree], fits: &[Fitness], k: usize, deme: usize) -> Vec<Migrant> {
+    debug_assert_eq!(pop.len(), fits.len());
+    let mut order: Vec<usize> = (0..pop.len()).collect();
+    order.sort_by(|&a, &b| {
+        fits[a]
+            .raw
+            .partial_cmp(&fits[b].raw)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+        .into_iter()
+        .take(k)
+        .map(|i| Migrant { tree: pop[i].clone(), fitness: fits[i], from_deme: deme })
+        .collect()
+}
+
+/// Deterministic immigrant incorporation: immigrants replace the *tail*
+/// of the population in buffer order. The tail holds freshly bred
+/// children (never the elitism-copied head), so no RNG or fitness
+/// information is needed — incorporation is a pure splice. Returns how
+/// many individuals were replaced.
+pub fn incorporate(population: &mut [Tree], immigrants: &[Migrant]) -> usize {
+    let n = population.len();
+    let take = immigrants.len().min(n);
+    for (i, m) in immigrants.iter().take(take).enumerate() {
+        population[n - 1 - i] = m.tree.clone();
+    }
+    take
+}
+
+/// Build the engine for an island epoch: fresh on epoch 0, resumed from
+/// the spec checkpoint otherwise. Immigrants are incorporated exactly
+/// once — when the checkpoint sits at the epoch boundary. A *local*
+/// mid-epoch checkpoint (BOINC client restart after churn) has
+/// `gen > epoch_start_gen`, so resuming never re-applies them.
+pub fn epoch_engine<'a>(spec: &IslandSpec, ps: &'a PrimSet) -> Result<Engine<'a>> {
+    let params = spec.params();
+    match &spec.checkpoint {
+        None => {
+            anyhow::ensure!(spec.epoch == 0, "epoch {} island WU without checkpoint", spec.epoch);
+            Ok(Engine::new(params, ps))
+        }
+        Some(ck) => {
+            let mut ck = ck.clone();
+            if ck.gen == spec.epoch_start_gen() && !spec.immigrants.is_empty() {
+                incorporate(&mut ck.population, &spec.immigrants);
+            }
+            Ok(Engine::from_checkpoint(params, ps, ck))
+        }
+    }
+}
+
+/// Run the engine to the epoch's generation target and build the
+/// canonical result payload: the next-epoch [`Checkpoint`], the best-k
+/// emigrants of the last evaluated generation, and the deme's
+/// best-so-far individual. Byte-stable for a given spec (see module
+/// docs), so quorum replicas agree.
+pub fn finish_epoch(engine: &mut Engine, spec: &IslandSpec, eval: &mut dyn Evaluator) -> Result<Json> {
+    let target = spec.epoch_target_gen();
+    let mut last_eval: Option<(Vec<Tree>, Vec<Fitness>)> = None;
+    while engine.generation() < target {
+        let snapshot =
+            if engine.generation() + 1 == target { Some(engine.population().to_vec()) } else { None };
+        engine.step(eval);
+        if let Some(snap) = snapshot {
+            last_eval = Some((snap, engine.last_fitnesses().to_vec()));
+        }
+    }
+    let emigrants = match &last_eval {
+        Some((pop, fits)) => select_emigrants(pop, fits, spec.migration_k, spec.deme),
+        // Degenerate resume of an already-finished epoch: the pre-breed
+        // generation is gone, so score the checkpointed population once
+        // (deterministic, but costs extra evals — documented divergence).
+        None => {
+            let pop = engine.population().to_vec();
+            let fits = eval.evaluate(&pop, engine.ps);
+            select_emigrants(&pop, &fits, spec.migration_k, spec.deme)
+        }
+    };
+    let ck = engine.checkpoint();
+    let mut payload = Json::obj()
+        .set("deme", spec.deme as u64)
+        .set("epoch", spec.epoch as u64)
+        .set("generations_run", engine.generation() as u64)
+        .set("total_evals", ck.total_evals)
+        .set("checkpoint", ck.to_json())
+        .set("emigrants", Json::Arr(emigrants.iter().map(Migrant::to_json).collect()));
+    if let Some((tree, fit)) = engine.best() {
+        payload = payload
+            .set("best_tree", tree.to_json())
+            .set("best_raw", fit.raw)
+            .set("best_raw_bits", format!("{:016x}", fit.raw.to_bits()))
+            .set("hits", fit.hits as u64);
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::primset::bool_set;
+
+    fn ps() -> PrimSet {
+        bool_set(6, true, &["a0", "a1", "d0", "d1", "d2", "d3"])
+    }
+
+    fn tree(op: u8) -> Tree {
+        Tree::new(vec![op], vec![0.0])
+    }
+
+    #[test]
+    fn ring_sources_wrap() {
+        assert_eq!(Topology::Ring.sources(0, 4), vec![3]);
+        assert_eq!(Topology::Ring.sources(2, 4), vec![1]);
+        assert_eq!(Topology::Ring.sources(0, 1), Vec::<usize>::new());
+        assert_eq!(Topology::All.sources(1, 3), vec![0, 2]);
+        assert_eq!(Topology::Isolated.sources(1, 3), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        for t in [Topology::Ring, Topology::All, Topology::Isolated] {
+            assert_eq!(Topology::parse(t.name()).unwrap(), t);
+        }
+        assert!(Topology::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn migrant_json_roundtrip_exact_bits() {
+        let m = Migrant {
+            tree: tree(3),
+            fitness: Fitness { raw: 0.1 + 0.2, hits: 7 },
+            from_deme: 2,
+        };
+        let s = m.to_json().to_string();
+        let back = Migrant::from_json(&Json::parse(&s).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.fitness.raw.to_bits(), m.fitness.raw.to_bits());
+    }
+
+    #[test]
+    fn select_emigrants_orders_by_raw_then_index() {
+        let pop = vec![tree(0), tree(1), tree(2), tree(3)];
+        let fits = vec![
+            Fitness { raw: 5.0, hits: 0 },
+            Fitness { raw: 1.0, hits: 0 },
+            Fitness { raw: 1.0, hits: 0 },
+            Fitness { raw: 0.0, hits: 9 },
+        ];
+        let em = select_emigrants(&pop, &fits, 3, 7);
+        assert_eq!(em.len(), 3);
+        assert_eq!(em[0].tree, pop[3]);
+        assert_eq!(em[1].tree, pop[1], "raw tie broken by index");
+        assert_eq!(em[2].tree, pop[2]);
+        assert!(em.iter().all(|m| m.from_deme == 7));
+    }
+
+    #[test]
+    fn incorporate_replaces_tail_only() {
+        let mut pop = vec![tree(0), tree(1), tree(2), tree(3)];
+        let imms = vec![
+            Migrant { tree: tree(4), fitness: Fitness { raw: 0.0, hits: 0 }, from_deme: 1 },
+            Migrant { tree: tree(5), fitness: Fitness { raw: 1.0, hits: 0 }, from_deme: 1 },
+        ];
+        assert_eq!(incorporate(&mut pop, &imms), 2);
+        assert_eq!(pop[0], tree(0), "head (elites) untouched");
+        assert_eq!(pop[1], tree(1));
+        assert_eq!(pop[3], tree(4), "first immigrant takes the last slot");
+        assert_eq!(pop[2], tree(5));
+        // more immigrants than slots: clamps
+        let mut tiny = vec![tree(0)];
+        assert_eq!(incorporate(&mut tiny, &imms), 1);
+    }
+
+    #[test]
+    fn island_spec_roundtrips_through_json() {
+        let spec = Json::obj()
+            .set("problem", "mux6")
+            .set("population", 40u64)
+            .set("seed", 11u64)
+            .set("deme", 1u64)
+            .set("demes", 3u64)
+            .set("epoch", 0u64)
+            .set("epochs", 2u64)
+            .set("epoch_gens", 5u64)
+            .set("migration_k", 2u64);
+        assert!(IslandSpec::is_island(&spec));
+        let s = IslandSpec::from_json(&spec).unwrap();
+        assert_eq!(s.problem, "mux6");
+        assert_eq!(s.epoch_start_gen(), 0);
+        assert_eq!(s.epoch_target_gen(), 5);
+        assert_eq!(s.threads, 1);
+        assert!(s.checkpoint.is_none());
+        assert!(s.immigrants.is_empty());
+        assert!(!s.params().stop_on_perfect);
+        assert_eq!(s.params().generations, 10);
+        // epoch > 0 without a checkpoint cannot build an engine
+        let bad = spec.set("epoch", 1u64);
+        let s1 = IslandSpec::from_json(&bad).unwrap();
+        assert!(epoch_engine(&s1, &ps()).is_err());
+    }
+}

@@ -17,10 +17,16 @@
 //! evaluation across a scoped thread pool with a thread-count-
 //! independent (bit-identical) result contract — see the `eval`
 //! module docs.
+//!
+//! [`islands`] layers a deme population structure on top: one WU per
+//! (deme, epoch) slice, with emigrant/immigrant exchange brokered
+//! server-side by [`crate::boinc::exchange`] under the same
+//! bit-identical determinism contract.
 
 pub mod engine;
 pub mod eval;
 pub mod init;
+pub mod islands;
 pub mod ops;
 pub mod primset;
 pub mod problems;

@@ -5,20 +5,30 @@
 //! vgp sim --table 1|2|3                # regenerate a paper table (DES)
 //! vgp sim --problem mux11 --runs 50 --hosts 20 --pool volunteer --ncpus 4
 //! vgp sim --config campaign.ini        # [campaign]/[pool] INI file
+//! vgp sim --demes 4 --epochs 4 --epoch-gens 10 --topology ring
+//!                                      # island-model campaign (real GP
+//!                                      # execution + server migration)
 //! vgp serve --runs 8 --problem mux6 --threads 4   # TCP server campaign
-//! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval)
+//! vgp serve --demes 4 --epochs 3       # island campaign over TCP
+//! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval,
+//!                                      # runs both WU kinds)
 //! vgp churn --days 30                  # Fig-2 style churn trace
 //! ```
 //!
 //! `--threads N` fans each WU's fitness evaluation across N cores
 //! (gp::eval batch pool; payloads stay bit-identical), `--ncpus N`
-//! gives every simulated host N cores of virtual throughput.
+//! gives every simulated host N cores, each computing one queued WU
+//! (the DES per-core task model).
 
+use vgp::boinc::exchange::MigrationExchange;
 use vgp::boinc::net::{serve, Worker};
 use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::churn::{churn_trace, sample_pool, PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
 use vgp::config::{Args, Config};
-use vgp::coordinator::{exec, simulate_campaign, Campaign};
+use vgp::coordinator::{
+    exec, simulate_campaign, simulate_island_campaign, Campaign, IslandCampaign, IslandReport,
+};
+use vgp::gp::islands::Topology;
 use vgp::gp::problems::ProblemKind;
 use vgp::metrics::ascii_plot;
 use vgp::sim::SimConfig;
@@ -36,6 +46,7 @@ fn main() {
         _ => {
             eprintln!("usage: vgp <sim|serve|worker|churn> [--options]");
             eprintln!("  vgp sim --table 1|2|3   reproduce a paper table");
+            eprintln!("  vgp sim --demes 4 --epochs 4 --epoch-gens 10   island-model campaign");
             0
         }
     };
@@ -55,15 +66,36 @@ fn pool_of(args: &Args, hosts: usize) -> PoolParams {
     pool_from(args.opt_str("pool", "lab"), hosts, args.opt_u64("ncpus", 1) as u32)
 }
 
+/// One source of truth for the island-campaign flags shared by
+/// `vgp sim --demes` and `vgp serve --demes`.
+fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> IslandCampaign {
+    // clamp to 1 so `--demes 0` degrades to a single-deme campaign
+    // instead of tripping the IslandCampaign invariant assert
+    let mut c = IslandCampaign::new(
+        name,
+        problem,
+        args.opt_u64("demes", 4).max(1) as usize,
+        args.opt_u64("epochs", 4).max(1) as usize,
+        args.opt_u64("epoch-gens", 10).max(1) as usize,
+        args.opt_u64("population", 500).max(1) as usize,
+    );
+    c.migration_k = args.opt_u64("migration-k", 2) as usize;
+    c.topology = Topology::parse(args.opt_str("topology", "ring")).expect("topology");
+    c.migration_timeout = args.opt_f64("migration-timeout", c.migration_timeout);
+    c.seed = args.opt_u64("seed", 1);
+    c.threads = args.opt_u64("threads", 1).max(1) as usize;
+    c
+}
+
 fn cmd_sim(args: &Args) -> i32 {
     if let Some(t) = args.opt("table") {
         return sim_table(t);
     }
     // --config FILE: campaign from [campaign], pool from [pool]
-    // (the INI route documented in the config module)
+    // (the INI route documented in the config module); a `demes` key
+    // selects the island-model path
     if let Some(path) = args.opt("config") {
         let cfg = Config::load(path).expect("config file");
-        let c = Campaign::from_config(&cfg).expect("campaign section");
         let hosts = cfg.u64_or("pool", "hosts", 10) as usize;
         let pool = pool_from(
             cfg.str_or("pool", "churn", "lab"),
@@ -71,8 +103,31 @@ fn cmd_sim(args: &Args) -> i32 {
             cfg.u64_or("pool", "ncpus", 1) as u32,
         );
         let seed = cfg.u64_or("pool", "seed", 7);
+        if cfg.get("campaign", "demes").is_some() {
+            let c = IslandCampaign::from_config(&cfg).expect("campaign section");
+            let r = simulate_island_campaign(&c, &pool, &[("cfg", hosts)], SimConfig::default(), seed);
+            print_island_report(&r);
+            return 0;
+        }
+        let c = Campaign::from_config(&cfg).expect("campaign section");
         let r = simulate_campaign(&c, &pool, &[("cfg", hosts)], SimConfig::default(), seed);
         print_report(&r);
+        return 0;
+    }
+    // --demes N: island-model campaign (WUs are executed for real so
+    // the exchange can route checkpoints + emigrants between epochs)
+    if args.opt("demes").is_some() {
+        let problem = ProblemKind::parse(args.opt_str("problem", "mux6")).expect("problem");
+        let hosts = args.opt_u64("hosts", 10) as usize;
+        let c = island_campaign_from_args(args, "cli_islands", problem);
+        let r = simulate_island_campaign(
+            &c,
+            &pool_of(args, hosts),
+            &[("cli", hosts)],
+            SimConfig::default(),
+            args.opt_u64("seed", 7),
+        );
+        print_island_report(&r);
         return 0;
     }
     let problem = ProblemKind::parse(args.opt_str("problem", "mux11")).expect("problem");
@@ -96,6 +151,33 @@ fn cmd_sim(args: &Args) -> i32 {
         simulate_campaign(&c, &pool_of(args, hosts), &[("cli", hosts)], SimConfig::default(), seed);
     print_report(&r);
     0
+}
+
+fn print_island_report(r: &IslandReport) {
+    let o = &r.outcome;
+    println!(
+        "islands {}: T_B={:.0}s acc={:.2} done={}/{} | migrations: {} released, {} migrants, {} timeouts, {} cancelled",
+        r.campaign,
+        o.makespan,
+        o.speedup,
+        o.completed,
+        o.total_wus,
+        r.stats.released,
+        r.stats.immigrants_delivered,
+        r.stats.timeouts,
+        r.stats.cancelled
+    );
+    match &r.best {
+        Some(b) => println!(
+            "best: raw={} hits={} from deme {} epoch {} ({} nodes)",
+            b.raw,
+            b.hits,
+            b.deme,
+            b.epoch,
+            b.tree.len()
+        ),
+        None => println!("best: none (campaign produced no validated payloads)"),
+    }
 }
 
 fn print_report(r: &vgp::coordinator::CampaignReport) {
@@ -203,11 +285,46 @@ fn sim_table(which: &str) -> i32 {
 
 fn cmd_serve(args: &Args) -> i32 {
     let problem = ProblemKind::parse(args.opt_str("problem", "mux6")).expect("problem");
+    let pop = args.opt_u64("population", 200) as usize;
+    let threads = args.opt_u64("threads", 1).max(1) as usize;
+    // --demes N: serve an island campaign — the migration exchange
+    // runs in this loop, behind the assimilator, releasing each epoch
+    // as its dependencies reach quorum
+    if args.opt("demes").is_some() {
+        let c = island_campaign_from_args(args, "served_islands", problem);
+        let mut core = ServerCore::new(ServerConfig::default());
+        let mut ex = MigrationExchange::new(c.exchange_config());
+        ex.install(&mut core, c.workunits());
+        let handle = serve(core).expect("serve");
+        println!(
+            "vgp island server on {} ({} demes x {} epochs of {}); Ctrl-C to stop",
+            handle.addr,
+            c.demes,
+            c.epochs,
+            problem.name()
+        );
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(2));
+            let mut core = handle.core.lock().unwrap();
+            ex.poll(&mut core, handle.now());
+            let st = core.db.stats();
+            println!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress);
+            if core.is_complete() {
+                match c.merge_best(core.assimilated()) {
+                    Some(b) => println!(
+                        "campaign complete; best raw={} hits={} (deme {}, epoch {})",
+                        b.raw, b.hits, b.deme, b.epoch
+                    ),
+                    None => println!("campaign complete; no validated payloads"),
+                }
+                return 0;
+            }
+        }
+    }
     let runs = args.opt_u64("runs", 8) as usize;
     let gens = args.opt_u64("generations", 20) as usize;
-    let pop = args.opt_u64("population", 200) as usize;
     let mut c = Campaign::new("served", problem, runs, gens, pop);
-    c.threads = args.opt_u64("threads", 1).max(1) as usize;
+    c.threads = threads;
     let mut core = ServerCore::new(ServerConfig::default());
     for wu in c.workunits() {
         core.submit_wu(wu);
@@ -236,7 +353,9 @@ fn cmd_worker(args: &Args) -> i32 {
         flops: args.opt_f64("flops", 1.3e9),
         poll_interval: std::time::Duration::from_millis(args.opt_u64("poll-ms", 500)),
     };
-    let report = worker.run(addr, &key, &|spec| exec::run_wu_native(spec)).expect("worker run");
+    // run_wu_auto dispatches on the spec shape: whole-run WUs and
+    // island epoch WUs are both served by the same worker binary
+    let report = worker.run(addr, &key, &|spec| exec::run_wu_auto(spec)).expect("worker run");
     println!(
         "worker done: {} completed, {} errors, {:.1}s cpu",
         report.completed, report.errors, report.cpu_time

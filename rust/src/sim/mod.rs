@@ -11,15 +11,34 @@
 //! report; host departure kills in-flight work (the server's deadline
 //! pass reissues it). Ties are broken by sequence number, so a given
 //! seed reproduces the identical trajectory.
+//!
+//! **Per-core task model:** a host queues up to `ncpus` concurrent WUs
+//! (BOINC schedules one task per CPU), each computing at the host's
+//! per-core effective rate — so island epochs genuinely overlap on
+//! multi-core volunteers instead of being folded into one rate
+//! multiplier.
+//!
+//! **Executors and the exchange:** by default a completion fabricates a
+//! hash-stable placeholder payload (enough for the paper's run-level
+//! campaigns). An attached [`WuExecutor`] instead *runs the WU spec for
+//! real* — island campaigns need true checkpoints/emigrants for the
+//! attached [`MigrationExchange`] to route between epochs.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 use crate::boinc::db::HostRow;
+use crate::boinc::exchange::MigrationExchange;
 use crate::boinc::server::{ServerConfig, ServerCore};
 use crate::boinc::workunit::WorkUnit;
 use crate::churn::{ComputingPower, SimHost};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+/// Executes a WU spec at (virtual) completion time, producing the
+/// result payload a real client would upload. Must be deterministic in
+/// the spec for quorum agreement to work.
+pub type WuExecutor = Box<dyn FnMut(&Json) -> anyhow::Result<Json>>;
 
 /// Simulator tuning.
 #[derive(Clone, Debug)]
@@ -112,8 +131,12 @@ pub struct Simulation {
     pub cfg: SimConfig,
     host_ids: Vec<u64>,
     attached: Vec<bool>,
-    busy: Vec<bool>,
+    /// WUs currently computing on each host (per-core task model:
+    /// bounded by the host's ncpus)
+    active: Vec<u32>,
     rng: Rng,
+    exchange: Option<MigrationExchange>,
+    executor: Option<WuExecutor>,
 }
 
 impl Simulation {
@@ -122,15 +145,35 @@ impl Simulation {
             core: ServerCore::new(server_cfg),
             host_ids: vec![0; hosts.len()],
             attached: vec![false; hosts.len()],
-            busy: vec![false; hosts.len()],
+            active: vec![0; hosts.len()],
             hosts,
             cfg,
             rng: Rng::new(seed ^ 0x51315),
+            exchange: None,
+            executor: None,
         }
     }
 
     pub fn submit(&mut self, wu: WorkUnit) -> u64 {
         self.core.submit_wu(wu)
+    }
+
+    /// Attach a migration exchange (install its WUs into `self.core`
+    /// first); it is polled after every report and transitioner tick.
+    pub fn attach_exchange(&mut self, ex: MigrationExchange) {
+        self.exchange = Some(ex);
+    }
+
+    pub fn exchange(&self) -> Option<&MigrationExchange> {
+        self.exchange.as_ref()
+    }
+
+    /// Execute WU specs for real at completion time instead of
+    /// fabricating placeholder payloads (required for island
+    /// campaigns — the exchange routes actual checkpoint/emigrant
+    /// content).
+    pub fn set_executor(&mut self, f: WuExecutor) {
+        self.executor = Some(f);
     }
 
     /// Reference sequential time: all WUs on one dedicated mean host
@@ -146,6 +189,12 @@ impl Simulation {
 
     /// Run to campaign completion (or the safety horizon).
     pub fn run(mut self, reference_flops: f64) -> SimOutcome {
+        self.run_mut(reference_flops)
+    }
+
+    /// Like [`Simulation::run`], but leaves the simulation inspectable
+    /// afterwards (assimilated payloads, exchange stats, host table).
+    pub fn run_mut(&mut self, reference_flops: f64) -> SimOutcome {
         let t_seq = self.sequential_time(reference_flops);
         let total_wus = self.core.db.wus.len();
         let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
@@ -185,6 +234,9 @@ impl Simulation {
                         last_heartbeat: now,
                         error_results: 0,
                         valid_results: 0,
+                        consecutive_errors: 0,
+                        last_error_at: 0.0,
+                        in_flight: 0,
                         credit: 0.0,
                     });
                     self.host_ids[i] = id;
@@ -200,8 +252,8 @@ impl Simulation {
                     // deadline pass turns it into NO_REPLY later
                 }
                 Ev::Poll(i) => {
-                    if !self.attached[i] || self.busy[i] {
-                        continue;
+                    if !self.attached[i] || self.active[i] >= self.hosts[i].ncpus.max(1) {
+                        continue; // saturated: the next Complete re-polls
                     }
                     if self.core.is_complete() {
                         continue;
@@ -209,12 +261,13 @@ impl Simulation {
                     last_comm = last_comm.max(now);
                     match self.core.request_work(self.host_ids[i], now) {
                         Some((rid, wu, _sig)) => {
-                            self.busy[i] = true;
+                            self.active[i] += 1;
                             let h = &self.hosts[i];
-                            // ncpus scales virtual throughput: a multi-
-                            // core host drains its WU proportionally
-                            // faster (batched eval / one task per core)
-                            let compute = wu.flops_est / h.throughput_flops().max(1e3);
+                            // per-core task model: each concurrent WU
+                            // computes on ONE core at the host's
+                            // effective per-core rate; ncpus shows up as
+                            // queue width, not as a rate multiplier
+                            let compute = wu.flops_est / h.effective_flops().max(1e3);
                             let dur = compute + self.cfg.transfer_overhead;
                             let ok = !self.rng.chance(h.client_error_rate);
                             // client errors surface early (crash on start)
@@ -225,6 +278,9 @@ impl Simulation {
                                 at,
                                 Ev::Complete { host: i, rid, ok, cpu: compute },
                             );
+                            // multi-core hosts keep fetching until their
+                            // cores are full
+                            push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
                         }
                         None => {
                             push(&mut heap, &mut seq, now + self.cfg.poll_interval, Ev::Poll(i));
@@ -232,26 +288,60 @@ impl Simulation {
                     }
                 }
                 Ev::Complete { host: i, rid, ok, cpu } => {
-                    self.busy[i] = false;
+                    self.active[i] = self.active[i].saturating_sub(1);
                     if !self.attached[i] {
                         continue; // host died mid-computation
                     }
                     last_comm = last_comm.max(now);
                     if ok {
-                        // payload = canonical run descriptor (hash-stable
-                        // per WU so quorum agreement works)
-                        let wu_id = self.core.db.result(rid).map(|r| r.wu_id).unwrap_or(0);
-                        let payload = crate::util::json::Json::obj()
-                            .set("wu", wu_id)
-                            .set("status", "done");
-                        self.core.report_success(rid, now, cpu, payload);
+                        let payload = match self.executor.as_mut() {
+                            // real execution: the payload is the WU's
+                            // actual result content (island epochs)
+                            Some(exec_fn) => {
+                                let spec = self
+                                    .core
+                                    .db
+                                    .result(rid)
+                                    .and_then(|r| self.core.db.wu(r.wu_id))
+                                    .map(|w| w.spec.clone());
+                                match spec.map(|s| exec_fn(&s)) {
+                                    Some(Ok(p)) => Some(p),
+                                    Some(Err(e)) => {
+                                        // surface the cause — an executor
+                                        // failure is an infrastructure bug
+                                        // (bad spec), not simulated churn
+                                        eprintln!("sim: WU execution failed: {e:#}");
+                                        None
+                                    }
+                                    None => None,
+                                }
+                            }
+                            // placeholder: canonical run descriptor
+                            // (hash-stable per WU so quorum agreement
+                            // works)
+                            None => {
+                                let wu_id =
+                                    self.core.db.result(rid).map(|r| r.wu_id).unwrap_or(0);
+                                Some(Json::obj().set("wu", wu_id).set("status", "done"))
+                            }
+                        };
+                        match payload {
+                            Some(p) => self.core.report_success(rid, now, cpu, p),
+                            None => self.core.report_error(rid, now),
+                        }
                     } else {
                         self.core.report_error(rid, now);
+                    }
+                    if let Some(ex) = self.exchange.as_mut() {
+                        ex.poll(&mut self.core, now);
                     }
                     push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
                 }
                 Ev::Tick => {
                     self.core.tick(now);
+                    if let Some(ex) = self.exchange.as_mut() {
+                        ex.poll(&mut self.core, now);
+                    }
                     if !self.core.is_complete() {
                         push(&mut heap, &mut seq, now + self.cfg.tick_interval, Ev::Tick);
                     }
@@ -365,6 +455,49 @@ mod tests {
             single.makespan
         );
         assert!(quad.cp_gflops > single.cp_gflops * 2.0, "eq. 2 must see the cores");
+    }
+
+    #[test]
+    fn percore_model_queues_ncpus_wus_per_host() {
+        // one dual-core host must OVERLAP two WUs (per-core task
+        // queue), not merely drain one WU twice as fast
+        let run = |ncpus: u32| {
+            let mut rng = Rng::new(31);
+            let hosts =
+                sample_pool(&mut rng, &PoolParams::lab(1).with_ncpus(ncpus), &[("lab", 1)]);
+            let mut sim =
+                Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 31);
+            for wu in wus(2, 1e12) {
+                sim.submit(wu);
+            }
+            sim.run(1.3e9 * 0.95)
+        };
+        let single = run(1);
+        let dual = run(2);
+        assert_eq!(single.completed, 2);
+        assert_eq!(dual.completed, 2);
+        assert!(
+            dual.makespan < single.makespan * 0.6,
+            "2 cores must overlap 2 WUs: {} vs {}",
+            dual.makespan,
+            single.makespan
+        );
+    }
+
+    #[test]
+    fn executor_payloads_replace_placeholders() {
+        let mut rng = Rng::new(5);
+        let hosts = sample_pool(&mut rng, &PoolParams::lab(2), &[("lab", 2)]);
+        let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 5);
+        for wu in wus(3, 1e11) {
+            sim.submit(wu);
+        }
+        sim.set_executor(Box::new(|spec| Ok(Json::obj().set("echo", spec.u64_of("i")?))));
+        let out = sim.run_mut(1.3e9);
+        assert_eq!(out.completed, 3);
+        for a in sim.core.assimilated() {
+            assert!(a.payload.get("echo").is_some(), "executor payload must be assimilated");
+        }
     }
 
     #[test]

@@ -1,0 +1,270 @@
+//! Island-model integration: the acceptance proofs for the migration
+//! subsystem.
+//!
+//! * a campaign on the simulated volunteer pool completes with
+//!   migration actually occurring;
+//! * results are bit-identical across worker thread counts AND across
+//!   result-arrival orders at the exchange;
+//! * a churned-out deme times out to an empty immigrant set (and its
+//!   dead chain is cancelled) instead of deadlocking the campaign;
+//! * a mid-epoch checkpoint/resume reproduces the uninterrupted
+//!   payload byte for byte.
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::exchange::MigrationExchange;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::churn::PoolParams;
+use vgp::coordinator::{exec, simulate_island_campaign, IslandCampaign};
+use vgp::gp::engine::Checkpoint;
+use vgp::gp::islands::{self, IslandSpec};
+use vgp::gp::problems::ProblemKind;
+use vgp::sim::SimConfig;
+use vgp::util::json::Json;
+use vgp::util::rng::Rng;
+
+fn campaign(name: &str, demes: usize, epochs: usize) -> IslandCampaign {
+    let mut c = IslandCampaign::new(name, ProblemKind::Mux6, demes, epochs, 4, 60);
+    c.migration_k = 2;
+    c.seed = 5;
+    c
+}
+
+fn host(name: &str) -> HostRow {
+    HostRow {
+        id: 0,
+        name: name.into(),
+        city: "lab".into(),
+        flops: 1e9,
+        ncpus: 2,
+        on_frac: 1.0,
+        active_frac: 1.0,
+        registered_at: 0.0,
+        last_heartbeat: 0.0,
+        error_results: 0,
+        valid_results: 0,
+        consecutive_errors: 0,
+        last_error_at: 0.0,
+        in_flight: 0,
+        credit: 0.0,
+    }
+}
+
+// ---------------------------------------------------------------- (a)
+
+#[test]
+fn island_campaign_completes_with_migration_on_volunteer_pool() {
+    let c = campaign("volpool", 3, 3);
+    let r = simulate_island_campaign(
+        &c,
+        &PoolParams::volunteer(10),
+        &[("vol", 10)],
+        SimConfig::default(),
+        9,
+    );
+    assert_eq!(r.outcome.completed, 9, "every (deme, epoch) WU assimilates");
+    assert_eq!(r.stats.released, 6, "epochs 1..3 of every deme released");
+    assert!(
+        r.stats.immigrants_delivered >= 4,
+        "migration must actually move individuals: {}",
+        r.stats.immigrants_delivered
+    );
+    let best = r.best.expect("merged best");
+    assert!(best.raw.is_finite());
+    assert!(!best.tree.is_empty());
+}
+
+// ---------------------------------------------------------------- (b)
+
+#[test]
+fn island_epoch_payload_is_thread_count_independent() {
+    let c = campaign("threads", 2, 2);
+    let p1 = exec::run_island_wu_native(&c.wu_spec(0, 0)).unwrap().to_string();
+    let mut c4 = c.clone();
+    c4.threads = 4;
+    let p4 = exec::run_island_wu_native(&c4.wu_spec(0, 0)).unwrap().to_string();
+    assert_eq!(p1, p4, "epoch payload must be byte-stable across thread counts");
+}
+
+/// Drive a whole campaign against `ServerCore` + exchange by hand,
+/// shuffling the order in which each round's results reach the server.
+/// Returns (merged-best fingerprint, sorted per-WU payloads).
+fn drive_campaign(c: &IslandCampaign, order_seed: u64, threads: usize) -> (String, Vec<String>) {
+    let mut c = c.clone();
+    c.threads = threads;
+    let mut core = ServerCore::new(ServerConfig::default());
+    let mut ex = MigrationExchange::new(c.exchange_config());
+    ex.install(&mut core, c.workunits());
+    let hosts: Vec<u64> = (0..4).map(|i| core.register_host(host(&format!("h{i}")))).collect();
+    let mut order_rng = Rng::new(order_seed);
+    let mut now = 0.0;
+    for _round in 0..1000 {
+        now += 60.0;
+        ex.poll(&mut core, now);
+        let mut done: Vec<(u64, Json)> = Vec::new();
+        for &h in &hosts {
+            while let Some((rid, wu, _sig)) = core.request_work(h, now) {
+                done.push((rid, exec::run_island_wu_native(&wu.spec).unwrap()));
+            }
+        }
+        order_rng.shuffle(&mut done);
+        for (rid, payload) in done {
+            core.report_success(rid, now, 1.0, payload);
+        }
+        ex.poll(&mut core, now);
+        if core.is_complete() {
+            break;
+        }
+    }
+    assert!(core.is_complete(), "campaign must finish");
+    let best = c.merge_best(core.assimilated()).expect("merged best");
+    let fingerprint = format!(
+        "d{}e{}:{:016x}:{}",
+        best.deme,
+        best.epoch,
+        best.raw.to_bits(),
+        best.tree.to_json()
+    );
+    let mut payloads: Vec<String> = core
+        .assimilated()
+        .iter()
+        .map(|a| format!("{} {}", a.wu_name, a.payload))
+        .collect();
+    payloads.sort();
+    (fingerprint, payloads)
+}
+
+#[test]
+fn island_campaign_bit_identical_across_arrival_orders_and_threads() {
+    let c = campaign("order", 3, 3);
+    let a = drive_campaign(&c, 1, 1);
+    let b = drive_campaign(&c, 42, 1);
+    assert_eq!(a.0, b.0, "merged best must not depend on result-arrival order");
+    assert_eq!(a.1, b.1, "per-WU payloads must not depend on result-arrival order");
+    let d = drive_campaign(&c, 7, 4);
+    assert_eq!(a.0, d.0, "merged best must not depend on worker thread count");
+    assert_eq!(a.1, d.1, "per-WU payloads must not depend on worker thread count");
+}
+
+// ---------------------------------------------------------------- (c)
+
+#[test]
+fn churned_deme_times_out_to_empty_immigrants_without_deadlock() {
+    let mut c = campaign("churny", 3, 2);
+    c.migration_timeout = 600.0;
+    // high reliability threshold: this test drives ALL of one deme's
+    // errors through a single host
+    let mut core = ServerCore::new(ServerConfig {
+        reliability_error_threshold: 100,
+        ..ServerConfig::default()
+    });
+    let mut ex = MigrationExchange::new(c.exchange_config());
+    ex.install(&mut core, c.workunits());
+    let good = core.register_host(host("good"));
+    let bad = core.register_host(host("bad"));
+    // feeder order is demes 0,1,2: the 2-core good host takes demes 0
+    // and 1, the bad host takes deme 2 and goes silent
+    let (r0, w0, _) = core.request_work(good, 1.0).unwrap();
+    let (r1, w1, _) = core.request_work(good, 1.0).unwrap();
+    let (r2, w2, _) = core.request_work(bad, 1.0).unwrap();
+    assert_eq!(w2.spec.u64_of("deme").unwrap(), 2);
+    core.report_success(r0, 2.0, 1.0, exec::run_island_wu_native(&w0.spec).unwrap());
+    core.report_success(r1, 2.0, 1.0, exec::run_island_wu_native(&w1.spec).unwrap());
+    ex.poll(&mut core, 3.0);
+    // ring: deme 0 imports from the silent deme 2 — held back for now;
+    // deme 1 imports from deme 0, whose emigrants are banked
+    assert!(!ex.is_released(0, 1));
+    assert!(ex.is_released(1, 1));
+    // past the migration timeout: deme 0's epoch 1 goes out with an
+    // EMPTY immigrant buffer instead of waiting forever
+    ex.poll(&mut core, 2.0 + 601.0);
+    assert!(ex.is_released(0, 1), "timeout must release the gated epoch");
+    assert!(ex.stats.timeouts >= 1);
+    let spec01 = core.db.wu(ex.wu_id(0, 1)).unwrap().spec.clone();
+    assert_eq!(
+        spec01.get("immigrants").and_then(Json::as_arr).unwrap().len(),
+        0,
+        "churned source deme yields an empty immigrant set"
+    );
+    let spec11 = core.db.wu(ex.wu_id(1, 1)).unwrap().spec.clone();
+    assert_eq!(
+        spec11.get("immigrants").and_then(Json::as_arr).unwrap().len(),
+        2,
+        "live source deme delivers its migration_k emigrants"
+    );
+    // the bad host finally errors its WU to death: the whole deme-2
+    // chain is cancelled so the campaign can complete
+    let mut now = 700.0;
+    core.report_error(r2, now);
+    for _ in 0..3 {
+        now += 10.0;
+        let (rid, _, _) = core.request_work(bad, now).unwrap();
+        core.report_error(rid, now + 1.0);
+    }
+    ex.poll(&mut core, now + 2.0);
+    assert!(ex.is_dead(2, 0) && ex.is_dead(2, 1), "dead deme chain cancelled");
+    assert!(ex.stats.cancelled >= 1);
+    // drain the surviving demes' epoch-1 WUs
+    for round in 0..10 {
+        let t = now + 100.0 + round as f64 * 60.0;
+        while let Some((rid, wu, _)) = core.request_work(good, t) {
+            core.report_success(rid, t, 1.0, exec::run_island_wu_native(&wu.spec).unwrap());
+        }
+        ex.poll(&mut core, t);
+        if core.is_complete() {
+            break;
+        }
+    }
+    assert!(core.is_complete(), "campaign must complete despite the dead deme");
+    assert!(c.merge_best(core.assimilated()).is_some());
+}
+
+// ------------------------------------------------- checkpoint/resume
+
+#[test]
+fn mid_epoch_checkpoint_resume_is_bit_identical() {
+    let c = campaign("resume", 2, 2);
+    // run epoch 0 of both demes, then build deme 0's epoch-1 spec the
+    // way the exchange would: own checkpoint + ring-source immigrants
+    let p0 = exec::run_island_wu_native(&c.wu_spec(0, 0)).unwrap();
+    let p1 = exec::run_island_wu_native(&c.wu_spec(1, 0)).unwrap();
+    let spec = c
+        .wu_spec(0, 1)
+        .set("checkpoint", p0.get("checkpoint").unwrap().clone())
+        .set("immigrants", p1.get("emigrants").unwrap().clone());
+    let uninterrupted = exec::run_island_wu_native(&spec).unwrap().to_string();
+    // interrupted run: incorporate immigrants, evolve 2 of 4
+    // generations, push the LOCAL checkpoint through its JSON wire
+    // format (BOINC client restart after churn), resume, finish
+    let ispec = IslandSpec::from_json(&spec).unwrap();
+    let resumed = exec::with_native_evaluator(ProblemKind::Mux6, ispec.seed, 1, |ps, ev| {
+        let mut engine = islands::epoch_engine(&ispec, ps).unwrap();
+        engine.step(ev);
+        engine.step(ev);
+        let wire = engine.checkpoint().to_json().to_string();
+        let ck = Checkpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        let mut spec2 = ispec.clone();
+        spec2.checkpoint = Some(ck);
+        let mut engine2 = islands::epoch_engine(&spec2, ps).unwrap();
+        islands::finish_epoch(&mut engine2, &spec2, ev).unwrap().to_string()
+    });
+    assert_eq!(resumed, uninterrupted, "mid-epoch resume must be bit-identical");
+    // sanity: the payload really carries next-epoch state + emigrants
+    let payload = Json::parse(&uninterrupted).unwrap();
+    assert_eq!(payload.u64_of("epoch").unwrap(), 1);
+    assert_eq!(payload.get("emigrants").and_then(Json::as_arr).unwrap().len(), 2);
+    let ck = Checkpoint::from_json(payload.get("checkpoint").unwrap()).unwrap();
+    assert_eq!(ck.gen, 8, "checkpoint sits at the next epoch boundary");
+}
+
+// ------------------------------------------------- worker dispatch
+
+#[test]
+fn run_wu_auto_dispatches_on_spec_shape() {
+    let c = campaign("auto", 2, 1);
+    let island = exec::run_wu_auto(&c.wu_spec(0, 0)).unwrap();
+    assert!(island.get("checkpoint").is_some(), "island spec takes the island path");
+    let classic = vgp::coordinator::Campaign::new("t", ProblemKind::Mux6, 1, 3, 40);
+    let plain = exec::run_wu_auto(&classic.wu_spec(0)).unwrap();
+    assert!(plain.get("checkpoint").is_none(), "whole-run spec takes the classic path");
+    assert!(plain.get("best_raw").is_some());
+}

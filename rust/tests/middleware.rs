@@ -20,6 +20,9 @@ fn host(name: &str, flops: f64) -> HostRow {
         last_heartbeat: 0.0,
         error_results: 0,
         valid_results: 0,
+        consecutive_errors: 0,
+        last_error_at: 0.0,
+        in_flight: 0,
         credit: 0.0,
     }
 }

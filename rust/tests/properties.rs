@@ -136,6 +136,9 @@ fn prop_scheduler_never_double_dispatches() {
                     last_heartbeat: 0.0,
                     error_results: 0,
                     valid_results: 0,
+                    consecutive_errors: 0,
+                    last_error_at: 0.0,
+                    in_flight: 0,
                     credit: 0.0,
                 })
             })
@@ -183,6 +186,9 @@ fn prop_terminal_result_states_absorbing() {
             last_heartbeat: 0.0,
             error_results: 0,
             valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
             credit: 0.0,
         });
         s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
