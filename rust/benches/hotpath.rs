@@ -1,7 +1,12 @@
 //! Hot-path microbenchmarks (§Perf in EXPERIMENTS.md):
-//! * native bit-packed tape evaluation (progs x cases /s)
-//! * batched multi-thread evaluation (gp::eval) at 1/2/4/8 threads,
-//!   with the 4-thread-vs-1 speedup printed (acceptance: >= 2x)
+//! * native bit-packed tape evaluation (progs x cases /s), with the
+//!   pre-PR-3 u32 kernel timed alongside on multiplexer-6 so the
+//!   wide-lane speedup is measured, not assumed (acceptance: >= 1.5x
+//!   single-thread)
+//! * the (threads x scheduler x lane-width) batch-eval matrix through
+//!   gp::eval, appended to the repo's perf trajectory
+//!   (`BENCH_hotpath.json`, override path with VGP_BENCH_JSON, tag
+//!   entries with BENCH_PR)
 //! * AOT-artifact evaluation via PJRT (same metric, Method-2 path)
 //! * tape compilation
 //! * scheduler RPC throughput
@@ -13,19 +18,144 @@ use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::boinc::workunit::WorkUnit;
 use vgp::churn::{sample_pool, PoolParams};
 use vgp::coordinator::REFERENCE_FLOPS;
-use vgp::gp::eval::BatchEvaluator;
+use vgp::gp::eval::{BatchEvaluator, EvalOpts, Schedule};
 use vgp::gp::init::ramped_half_and_half;
 use vgp::gp::ops::{crossover, Limits};
 use vgp::gp::problems::multiplexer::Multiplexer;
-use vgp::gp::tape::{self, opcodes};
+use vgp::gp::tape::{self, opcodes, LANE_WIDTHS};
 use vgp::sim::{SimConfig, Simulation};
-use vgp::util::bench::Bench;
+use vgp::util::bench::{append_bench_json, Bench, BenchRecord};
 use vgp::util::json::Json;
 use vgp::util::rng::Rng;
+
+/// The pre-PR-3 scalar kernel over 32-bit words, kept verbatim (minus
+/// scratch reuse) as the measured baseline for the wide-lane rebuild.
+mod legacy_u32 {
+    use vgp::gp::tape::{opcodes, BoolCases};
+
+    pub struct U32Cases {
+        pub inputs: Vec<Vec<u32>>,
+        pub target: Vec<u32>,
+        pub mask: Vec<u32>,
+    }
+
+    impl U32Cases {
+        /// Re-slice the native u64 lane-block columns into the old
+        /// 32-bit layout (same bits, narrower words).
+        pub fn from_native(cases: &BoolCases) -> U32Cases {
+            let w = cases.words_u32();
+            let col32 = |col: &[u64]| -> Vec<u32> {
+                (0..w).map(|k| BoolCases::u32_word(col, k)).collect()
+            };
+            U32Cases {
+                inputs: cases.inputs.iter().map(|c| col32(c)).collect(),
+                target: col32(&cases.target),
+                mask: col32(&cases.mask),
+            }
+        }
+    }
+
+    fn tape_arity(op: i32) -> i32 {
+        use opcodes::*;
+        match op {
+            BOOL_OP_NOT => 1,
+            BOOL_OP_AND | BOOL_OP_OR | BOOL_OP_NAND | BOOL_OP_NOR | BOOL_OP_XOR => 2,
+            BOOL_OP_IF => 3,
+            _ => 0,
+        }
+    }
+
+    pub fn eval_bool_u32(
+        tape_ops: &[i32],
+        cases: &U32Cases,
+        stack: &mut [u32],
+        zero: &[u32],
+    ) -> u64 {
+        use opcodes::*;
+        let w = cases.target.len();
+        stack[..w].fill(0);
+        let mut sp: usize = 0;
+        for &op in tape_ops {
+            if !(0..BOOL_NOP).contains(&op) {
+                continue;
+            }
+            if op < BOOL_NUM_VARS {
+                let col = cases.inputs.get(op as usize).map(Vec::as_slice).unwrap_or(zero);
+                let slot = sp.min(STACK_DEPTH as usize - 1);
+                stack[slot * w..(slot + 1) * w].copy_from_slice(col);
+                sp = (sp + 1).min(STACK_DEPTH as usize);
+                continue;
+            }
+            let ar = tape_arity(op) as usize;
+            let i1 = sp.saturating_sub(1);
+            let i2 = sp.saturating_sub(2);
+            let i3 = sp.saturating_sub(3);
+            let new_sp = (sp + 1).saturating_sub(ar).clamp(0, STACK_DEPTH as usize);
+            let wr = new_sp.saturating_sub(1);
+            for k in 0..w {
+                let x1 = stack[i1 * w + k];
+                let x2 = stack[i2 * w + k];
+                let x3 = stack[i3 * w + k];
+                let r = match op {
+                    BOOL_OP_NOT => !x1,
+                    BOOL_OP_AND => x2 & x1,
+                    BOOL_OP_OR => x2 | x1,
+                    BOOL_OP_NAND => !(x2 & x1),
+                    BOOL_OP_NOR => !(x2 | x1),
+                    BOOL_OP_XOR => x2 ^ x1,
+                    BOOL_OP_IF => (x3 & x2) | (!x3 & x1),
+                    _ => unreachable!(),
+                };
+                stack[wr * w + k] = r;
+            }
+            sp = new_sp;
+        }
+        let mut hits = 0u64;
+        for k in 0..w {
+            hits += ((!(stack[k] ^ cases.target[k])) & cases.mask[k]).count_ones() as u64;
+        }
+        hits
+    }
+}
 
 fn main() {
     println!("== hot-path microbenches ==");
     let b = Bench::new(3, 15);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let pr_tag = std::env::var("BENCH_PR").unwrap_or_else(|_| "dev".to_string());
+
+    // ---- wide-lane kernel vs the pre-PR u32 kernel: mux6, 256 progs,
+    // single thread (the acceptance ratio)
+    let m6 = Multiplexer::new(2);
+    let mut rng = Rng::new(1);
+    let pop6 = ramped_half_and_half(&mut rng, m6.primset(), 256, 2, 6);
+    let tapes6: Vec<_> = pop6
+        .iter()
+        .map(|t| tape::compile(t, m6.primset(), opcodes::BOOL_NOP).unwrap())
+        .collect();
+    let u32_cases = legacy_u32::U32Cases::from_native(&m6.cases);
+    let w32 = u32_cases.target.len();
+    let mut u32_stack = vec![0u32; opcodes::STACK_DEPTH as usize * w32];
+    let u32_zero = vec![0u32; w32];
+    let old = b.run_throughput("legacy u32 kernel (mux6, 256 progs)", 256.0, "eval", || {
+        let mut acc = 0u64;
+        for t in &tapes6 {
+            acc += legacy_u32::eval_bool_u32(&t.ops, &u32_cases, &mut u32_stack, &u32_zero);
+        }
+        std::hint::black_box(acc);
+    });
+    let mut scratch6 = tape::BoolScratch::new(m6.cases.words());
+    let new = b.run_throughput("wide-lane kernel  (mux6, 256 progs)", 256.0, "eval", || {
+        let mut acc = 0u64;
+        for t in &tapes6 {
+            acc += tape::eval_bool_with(&t.ops, &m6.cases, &mut scratch6);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "      wide-lane vs u32 kernel speedup (mux6, 1 thread): {:.2}x (target >= 1.5x)",
+        new.per_sec() / old.per_sec()
+    );
 
     // ---- native packed eval: mux11, 256 programs x 2048 cases
     let m = Multiplexer::new(3);
@@ -42,13 +172,40 @@ fn main() {
         std::hint::black_box(acc);
     });
 
-    // ---- batched parallel eval: same workload through gp::eval
+    // ---- same comparison where the lane loop actually runs: mux11 is
+    // 32 u64 words, so L in {2,4,8} executes whole blocks (mux6's
+    // single word only measures the u32->u64 repack)
+    let u32_cases11 = legacy_u32::U32Cases::from_native(&m.cases);
+    let w32_11 = u32_cases11.target.len();
+    let mut u32_stack11 = vec![0u32; opcodes::STACK_DEPTH as usize * w32_11];
+    let u32_zero11 = vec![0u32; w32_11];
+    let old11 = b.run_throughput("legacy u32 kernel (mux11, 256 progs)", 256.0, "eval", || {
+        let mut acc = 0u64;
+        for t in &tapes {
+            acc += legacy_u32::eval_bool_u32(&t.ops, &u32_cases11, &mut u32_stack11, &u32_zero11);
+        }
+        std::hint::black_box(acc);
+    });
+    let mut scratch11 = tape::BoolScratch::new(m.cases.words());
+    let new11 = b.run_throughput("wide-lane kernel  (mux11, 256 progs)", 256.0, "eval", || {
+        let mut acc = 0u64;
+        for t in &tapes {
+            acc += tape::eval_bool_with(&t.ops, &m.cases, &mut scratch11);
+        }
+        std::hint::black_box(acc);
+    });
+    println!(
+        "      wide-lane vs u32 kernel speedup (mux11, 1 thread): {:.2}x",
+        new11.per_sec() / old11.per_sec()
+    );
+
+    // ---- the batch-eval matrix: lanes at 1 thread, then
+    // threads x scheduler at the default lane width (mux11 workload)
     let ps = m.primset().clone();
-    let mut throughputs: Vec<(usize, f64)> = Vec::new();
-    for threads in [1usize, 2, 4, 8] {
-        let mut ev = BatchEvaluator::new(threads);
+    for lanes in LANE_WIDTHS {
+        let mut ev = BatchEvaluator::with_opts(EvalOpts { threads: 1, schedule: Schedule::Static, lanes });
         let res = b.run_throughput(
-            &format!("batch eval, {threads} thread(s) (256 prog x 2048 cases)"),
+            &format!("batch eval, 1 thread, {lanes} lane(s)"),
             progs_cases,
             "prog*case",
             || {
@@ -56,7 +213,42 @@ fn main() {
                 std::hint::black_box(&fits);
             },
         );
-        throughputs.push((threads, res.per_sec()));
+        records.push(BenchRecord {
+            pr: pr_tag.clone(),
+            threads: 1,
+            scheduler: "static".to_string(),
+            lanes,
+            evals_per_sec: 256.0 * res.per_sec(),
+        });
+    }
+    let mut throughputs: Vec<(usize, f64)> = Vec::new();
+    for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                threads,
+                schedule,
+                lanes: tape::DEFAULT_LANES,
+            });
+            let res = b.run_throughput(
+                &format!("batch eval, {threads} thread(s), {}", schedule.name()),
+                progs_cases,
+                "prog*case",
+                || {
+                    let fits = ev.evaluate_bool(&pop, &ps, &m.cases);
+                    std::hint::black_box(&fits);
+                },
+            );
+            records.push(BenchRecord {
+                pr: pr_tag.clone(),
+                threads,
+                scheduler: schedule.name().to_string(),
+                lanes: tape::DEFAULT_LANES,
+                evals_per_sec: 256.0 * res.per_sec(),
+            });
+            if schedule == Schedule::Static {
+                throughputs.push((threads, res.per_sec()));
+            }
+        }
     }
     let t1 = throughputs[0].1;
     for &(threads, rate) in &throughputs[1..] {
@@ -124,5 +316,14 @@ fn main() {
         std::hint::black_box(sim.run(REFERENCE_FLOPS).completed);
     });
 
+    // ---- persist the matrix into the perf trajectory (the repo-root
+    // file, independent of cargo's working directory for benches)
+    let json_path = std::env::var("VGP_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+    });
+    match append_bench_json(&json_path, &records) {
+        Ok(()) => println!("appended {} records to {json_path}", records.len()),
+        Err(e) => println!("could not write {json_path}: {e} (records printed above)"),
+    }
     println!("done");
 }

@@ -11,6 +11,11 @@
 //! generations = 50
 //! population = 4000
 //! threads = 4        # worker-side eval threads (gp::eval batch pool)
+//! eval_lanes = 4     # boolean-kernel SIMD lane width (1|2|4|8 u64
+//!                    # words per block; off-menu values round down)
+//! schedule = static  # eval fan-out: static | sorted | steal
+//!                    # (size-sorted/stealing tame skewed tree-walk
+//!                    # populations; results are bit-identical)
 //!
 //! [pool]
 //! hosts = 45

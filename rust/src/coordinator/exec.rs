@@ -13,6 +13,7 @@
 use anyhow::{Context, Result};
 
 use crate::gp::engine::{Engine, Params};
+use crate::gp::eval::{EvalOpts, Schedule};
 use crate::gp::islands::{self, IslandSpec};
 use crate::gp::primset::PrimSet;
 use crate::gp::problems::{ant, interest_point, multiplexer, parity, regression, ProblemKind};
@@ -39,6 +40,25 @@ pub fn threads_of_spec(spec: &Json) -> usize {
     spec.get("threads").and_then(Json::as_u64).unwrap_or(1).max(1) as usize
 }
 
+/// Worker-side evaluation knobs for a WU spec: `threads`,
+/// `eval_lanes` (boolean kernel lane width) and `schedule`
+/// (static|sorted|steal). All three are pure throughput knobs —
+/// payloads are bit-identical for every combination, so heterogeneous
+/// volunteer configurations never break quorum agreement. Unknown or
+/// missing values fall back to the defaults.
+pub fn eval_opts_of_spec(spec: &Json) -> EvalOpts {
+    let d = EvalOpts::default();
+    EvalOpts {
+        threads: threads_of_spec(spec),
+        schedule: spec
+            .get("schedule")
+            .and_then(Json::as_str)
+            .and_then(|s| Schedule::parse(s).ok())
+            .unwrap_or(d.schedule),
+        lanes: spec.get("eval_lanes").and_then(Json::as_u64).map(|l| l as usize).unwrap_or(d.lanes),
+    }
+}
+
 /// Canonical result payload for a finished run (what quorum validation
 /// hashes; deterministic for a given spec).
 pub fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
@@ -55,17 +75,18 @@ pub fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
 /// Build a problem's primitive set and native (Method-1) evaluator and
 /// hand them to `f` — the one dispatch point shared by whole-run WUs,
 /// island epoch WUs and the sequential baseline. `seed` only matters
-/// for problems with sampled fitness cases (interest point).
+/// for problems with sampled fitness cases (interest point); `opts`
+/// carries the worker's thread/schedule/lane knobs.
 pub fn with_native_evaluator<R>(
     problem: ProblemKind,
     seed: u64,
-    threads: usize,
+    opts: EvalOpts,
     f: impl FnOnce(&PrimSet, &mut dyn Evaluator) -> R,
 ) -> R {
     match problem {
         ProblemKind::Ant => {
             let ps = ant::ant_set();
-            let mut ev = ant::NativeEvaluator::with_threads(threads);
+            let mut ev = ant::NativeEvaluator::with_opts(opts);
             f(&ps, &mut ev)
         }
         ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
@@ -76,37 +97,38 @@ pub fn with_native_evaluator<R>(
             };
             let m = multiplexer::Multiplexer::new(k);
             let ps = m.primset().clone();
-            let mut ev = multiplexer::NativeEvaluator::with_threads(&m, threads);
+            let mut ev = multiplexer::NativeEvaluator::with_opts(&m, opts);
             f(&ps, &mut ev)
         }
         ProblemKind::Parity5 => {
             let p = parity::Parity::new(5);
             let ps = p.primset().clone();
-            let mut ev = parity::NativeEvaluator::with_threads(&p, threads);
+            let mut ev = parity::NativeEvaluator::with_opts(&p, opts);
             f(&ps, &mut ev)
         }
         ProblemKind::Quartic => {
             let q = regression::Quartic::new(20);
             let ps = q.primset().clone();
-            let mut ev = regression::NativeEvaluator::with_threads(&q, threads);
+            let mut ev = regression::NativeEvaluator::with_opts(&q, opts);
             f(&ps, &mut ev)
         }
         ProblemKind::InterestPoint => {
             let ps = interest_point::ip_set();
-            let mut ev = interest_point::NativeEvaluator::with_threads(seed, threads);
+            let mut ev = interest_point::NativeEvaluator::with_opts(seed, opts);
             f(&ps, &mut ev)
         }
     }
 }
 
 /// Execute a WU spec with native (Method-1) evaluation. The spec's
-/// `threads` knob fans fitness evaluation across that many cores via
-/// the batched evaluators — payloads stay byte-identical regardless.
+/// `threads`/`schedule`/`eval_lanes` knobs shape how fitness
+/// evaluation is fanned across cores — payloads stay byte-identical
+/// regardless.
 pub fn run_wu_native(spec: &Json) -> Result<Json> {
     let (problem, params) = params_of_spec(spec)?;
-    let threads = threads_of_spec(spec);
+    let opts = eval_opts_of_spec(spec);
     let run =
-        with_native_evaluator(problem, params.seed, threads, |ps, ev| Engine::new(params, ps).run(ev));
+        with_native_evaluator(problem, params.seed, opts, |ps, ev| Engine::new(params, ps).run(ev));
     Ok(payload_of(&run))
 }
 
@@ -117,7 +139,8 @@ pub fn run_wu_native(spec: &Json) -> Result<Json> {
 pub fn run_island_wu_native(spec: &Json) -> Result<Json> {
     let ispec = IslandSpec::from_json(spec)?;
     let problem = ProblemKind::parse(&ispec.problem)?;
-    with_native_evaluator(problem, ispec.seed, ispec.threads, |ps, ev| {
+    let opts = eval_opts_of_spec(spec);
+    with_native_evaluator(problem, ispec.seed, opts, |ps, ev| {
         let mut engine = islands::epoch_engine(&ispec, ps)?;
         islands::finish_epoch(&mut engine, &ispec, ev)
     })
@@ -205,5 +228,40 @@ mod tests {
     fn bad_spec_rejected() {
         assert!(run_wu_native(&Json::obj().set("problem", "nope")).is_err());
         assert!(run_wu_native(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn eval_opts_parse_with_defaults_and_fallbacks() {
+        let opts = eval_opts_of_spec(&Json::obj());
+        assert_eq!(opts.threads, 1);
+        assert_eq!(opts.schedule, Schedule::Static);
+        assert_eq!(opts.lanes, crate::gp::tape::DEFAULT_LANES);
+        let spec = Json::obj().set("threads", 4u64).set("schedule", "steal").set("eval_lanes", 8u64);
+        let opts = eval_opts_of_spec(&spec);
+        assert_eq!(opts.threads, 4);
+        assert_eq!(opts.schedule, Schedule::Steal);
+        assert_eq!(opts.lanes, 8);
+        // unknown schedule falls back instead of poisoning the WU
+        let spec = Json::obj().set("schedule", "mystery");
+        assert_eq!(eval_opts_of_spec(&spec).schedule, Schedule::Static);
+    }
+
+    #[test]
+    fn payload_identical_across_schedules_and_lanes() {
+        // the skew-aware schedules and the lane width, like threads,
+        // must never change the quorum hash input
+        let c = Campaign::new("t", ProblemKind::Mux6, 1, 5, 100);
+        let base = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
+        for schedule in ["sorted", "steal"] {
+            for lanes in [1u64, 2, 8] {
+                let spec = c
+                    .wu_spec(0)
+                    .set("threads", 4u64)
+                    .set("schedule", schedule)
+                    .set("eval_lanes", lanes);
+                let payload = run_wu_native(&spec).unwrap().to_string();
+                assert_eq!(base, payload, "schedule={schedule} lanes={lanes}");
+            }
+        }
     }
 }

@@ -13,8 +13,10 @@ use crate::boinc::exchange::{ExchangeConfig, ExchangeStats, MigrationExchange};
 use crate::boinc::server::{Assimilated, ServerConfig};
 use crate::boinc::workunit::WorkUnit;
 use crate::churn::{sample_pool, PoolParams, SimHost};
+use crate::gp::eval::Schedule;
 use crate::gp::islands::Topology;
 use crate::gp::problems::ProblemKind;
+use crate::gp::tape;
 use crate::gp::tree::Tree;
 use crate::sim::{SimConfig, SimOutcome, Simulation};
 use crate::util::json::Json;
@@ -34,6 +36,12 @@ pub struct Campaign {
     /// payloads are bit-identical for any value, so heterogeneous
     /// volunteer core counts never break quorum agreement.
     pub threads: usize,
+    /// Boolean-kernel lane width per WU (`gp::tape` lane blocks);
+    /// like `threads`, a pure throughput knob — bit-identical payloads.
+    pub eval_lanes: usize,
+    /// Work-distribution policy for the worker's eval fan-out
+    /// (static|sorted|steal; see `gp::eval::Schedule`).
+    pub schedule: Schedule,
 }
 
 impl Campaign {
@@ -47,6 +55,8 @@ impl Campaign {
             redundancy: (1, 1),
             seed: 1,
             threads: 1,
+            eval_lanes: tape::DEFAULT_LANES,
+            schedule: Schedule::Static,
         }
     }
 
@@ -63,6 +73,9 @@ impl Campaign {
         );
         c.seed = cfg.u64_or("campaign", "seed", 1);
         c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
+        c.eval_lanes =
+            tape::normalize_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize);
+        c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
         c.redundancy = (
             cfg.u64_or("campaign", "target_nresults", 1) as usize,
             cfg.u64_or("campaign", "min_quorum", 1) as usize,
@@ -87,6 +100,8 @@ impl Campaign {
             .set("seed", self.seed + run as u64)
             .set("run", run as u64)
             .set("threads", self.threads as u64)
+            .set("eval_lanes", self.eval_lanes as u64)
+            .set("schedule", self.schedule.name())
     }
 
     /// Materialize the WUs of this campaign. The delay bound (deadline
@@ -136,6 +151,10 @@ pub struct IslandCampaign {
     pub redundancy: (usize, usize),
     pub seed: u64,
     pub threads: usize,
+    /// boolean-kernel lane width (see [`Campaign::eval_lanes`])
+    pub eval_lanes: usize,
+    /// eval fan-out policy (see [`Campaign::schedule`])
+    pub schedule: Schedule,
 }
 
 impl IslandCampaign {
@@ -161,6 +180,8 @@ impl IslandCampaign {
             redundancy: (1, 1),
             seed: 1,
             threads: 1,
+            eval_lanes: tape::DEFAULT_LANES,
+            schedule: Schedule::Static,
         }
     }
 
@@ -183,6 +204,9 @@ impl IslandCampaign {
         c.migration_timeout = cfg.f64_or("campaign", "migration_timeout", c.migration_timeout);
         c.seed = cfg.u64_or("campaign", "seed", 1);
         c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
+        c.eval_lanes =
+            tape::normalize_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize);
+        c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
         c.redundancy = (
             cfg.u64_or("campaign", "target_nresults", 1) as usize,
             cfg.u64_or("campaign", "min_quorum", 1) as usize,
@@ -205,6 +229,8 @@ impl IslandCampaign {
             .set("population", self.population as u64)
             .set("seed", self.seed + deme as u64)
             .set("threads", self.threads as u64)
+            .set("eval_lanes", self.eval_lanes as u64)
+            .set("schedule", self.schedule.name())
             .set("deme", deme as u64)
             .set("demes", self.demes as u64)
             .set("epoch", epoch as u64)
@@ -426,6 +452,37 @@ mod tests {
         assert_eq!(c.threads, 4);
         assert_eq!(c.wu_spec(0).u64_of("threads").unwrap(), 4);
         assert_eq!(c.wu_spec(1).u64_of("seed").unwrap(), 10);
+        // eval knobs default into every spec
+        assert_eq!(c.wu_spec(0).u64_of("eval_lanes").unwrap() as usize, tape::DEFAULT_LANES);
+        assert_eq!(c.wu_spec(0).str_of("schedule").unwrap(), "static");
+    }
+
+    #[test]
+    fn campaign_from_config_reads_eval_knobs() {
+        let cfg = crate::config::Config::parse(
+            "[campaign]\nproblem = mux6\neval_lanes = 8\nschedule = sorted\n",
+        )
+        .unwrap();
+        let c = Campaign::from_config(&cfg).unwrap();
+        assert_eq!(c.eval_lanes, 8);
+        assert_eq!(c.schedule, Schedule::Sorted);
+        assert_eq!(c.wu_spec(0).u64_of("eval_lanes").unwrap(), 8);
+        assert_eq!(c.wu_spec(0).str_of("schedule").unwrap(), "sorted");
+        // off-menu lane counts normalize instead of erroring...
+        let cfg = crate::config::Config::parse("[campaign]\neval_lanes = 5\n").unwrap();
+        assert_eq!(Campaign::from_config(&cfg).unwrap().eval_lanes, 4);
+        // ...but a bad schedule is a config error, not a silent default
+        let cfg = crate::config::Config::parse("[campaign]\nschedule = fifo\n").unwrap();
+        assert!(Campaign::from_config(&cfg).is_err());
+        // island campaigns carry the same knobs
+        let cfg = crate::config::Config::parse(
+            "[campaign]\nproblem = mux6\ndemes = 2\neval_lanes = 2\nschedule = steal\n",
+        )
+        .unwrap();
+        let ic = IslandCampaign::from_config(&cfg).unwrap();
+        assert_eq!(ic.eval_lanes, 2);
+        assert_eq!(ic.schedule, Schedule::Steal);
+        assert_eq!(ic.wu_spec(0, 0).str_of("schedule").unwrap(), "steal");
     }
 
     #[test]

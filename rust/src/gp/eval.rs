@@ -9,13 +9,30 @@
 //!   **once per generation** into one flat, reusable buffer (no
 //!   per-tree `Vec` churn; compilation itself is iterative via
 //!   [`tape::compile_into`]).
-//! * [`par_map_scratch`] — a scoped `std::thread` fan-out over item
-//!   indices with one scratch state per worker and **deterministic
-//!   result ordering** (static contiguous chunking; chunk results are
-//!   concatenated in chunk order).
-//! * [`BatchEvaluator`] — ties the two together for the three tape
-//!   problem families (packed boolean, f32 regression) and for
-//!   arbitrary tree-walk fitness closures (ant, interest point).
+//! * [`par_map_schedule`] — a scoped `std::thread` fan-out over item
+//!   indices with one scratch state per worker, a pluggable
+//!   [`Schedule`] (static chunks, size-sorted assignment, or an
+//!   atomic-counter work-stealing queue) and **deterministic result
+//!   ordering** (every result lands at its original index no matter
+//!   which worker computed it, or when).
+//! * [`BatchEvaluator`] — ties the two together for the tape problem
+//!   families (packed boolean at a configurable lane width, f32
+//!   regression) and for arbitrary tree-walk fitness closures (ant,
+//!   interest point).
+//!
+//! # Scheduling and skew
+//!
+//! [`Schedule::Static`] splits `0..n` into contiguous chunks, one per
+//! worker — optimal when per-item cost is uniform (the fixed-length
+//! tape problems). Tree-walk problems are *skewed*: an ant program's
+//! cost scales with its tree size, and a handful of bloated trees can
+//! leave every other worker idle behind one straggler chunk.
+//! [`Schedule::Sorted`] assigns items round-robin in descending size
+//! order (longest-processing-time-first), and [`Schedule::Steal`]
+//! drains the same sorted queue through an atomic counter so whichever
+//! worker is free next takes the next-largest item. Both write results
+//! into a preallocated output slot at the item's **original index**,
+//! so the caller-visible ordering contract is identical to `Static`.
 //!
 //! # Determinism contract
 //!
@@ -23,13 +40,18 @@
 //! point in this module returns results **bit-identical** to the
 //! sequential per-tree evaluators (`tape::eval_bool_native`,
 //! `tape::eval_reg_native`, or the closure run in a plain loop),
-//! regardless of the configured thread count. Work is partitioned by
-//! index, each item's computation touches only its own scratch, and
-//! no reduction reorders floating-point accumulation across items.
-//! This is what keeps WU result payloads hash-stable for BOINC-style
-//! quorum validation (paper §2) no matter how many cores a volunteer
-//! donates: a 1-thread laptop and an 8-thread workstation produce the
-//! same canonical payload byte-for-byte.
+//! regardless of the configured thread count, [`Schedule`] and lane
+//! width. Work is partitioned by index, each item's computation
+//! touches only its own scratch, results are placed by original index,
+//! and no reduction reorders floating-point accumulation across items.
+//! Scheduling decides only *who* computes an item and *when* — never
+//! what the item's bytes are. This is what keeps WU result payloads
+//! hash-stable for BOINC-style quorum validation (paper §2) no matter
+//! how many cores a volunteer donates: a 1-thread laptop and an
+//! 8-thread workstation produce the same canonical payload
+//! byte-for-byte.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::gp::primset::PrimSet;
 use crate::gp::tape::{self, opcodes, BoolCases, BoolScratch, RegCases, RegScratch};
@@ -95,14 +117,102 @@ impl TapeArena {
     }
 }
 
-/// Deterministic parallel map over `0..n` with per-worker scratch.
-///
-/// Items are split into at most `threads` contiguous chunks; each
-/// worker builds one scratch with `make_scratch`, maps its chunk in
-/// index order, and the chunk outputs are concatenated in chunk order
-/// — so the result is identical to the sequential map for any thread
-/// count (see the module's determinism contract).
+/// Work-distribution policy for the parallel fan-out. Every policy
+/// honors the same ordering contract — result `i` is the evaluation of
+/// item `i` — so the choice is invisible to correctness and to quorum
+/// payload hashes; it only moves wall-clock time around.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Schedule {
+    /// Contiguous index chunks, one per worker. Best for uniform-cost
+    /// items (fixed-length tape programs).
+    #[default]
+    Static,
+    /// Longest-processing-time-first: items are sorted by descending
+    /// size hint and dealt round-robin, so the expensive stragglers of
+    /// a skewed population spread across workers instead of piling
+    /// into one chunk. Deterministic assignment (no atomics).
+    Sorted,
+    /// Work stealing: workers drain the size-sorted queue through one
+    /// atomic counter; whichever worker frees up next takes the
+    /// next-largest item. Best load balance under extreme skew or
+    /// noisy hosts; assignment is nondeterministic but results are not.
+    Steal,
+}
+
+impl Schedule {
+    pub fn parse(name: &str) -> anyhow::Result<Schedule> {
+        Ok(match name {
+            "static" => Schedule::Static,
+            "sorted" => Schedule::Sorted,
+            "steal" => Schedule::Steal,
+            other => anyhow::bail!("unknown schedule '{other}' (static|sorted|steal)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::Static => "static",
+            Schedule::Sorted => "sorted",
+            Schedule::Steal => "steal",
+        }
+    }
+}
+
+/// Evaluation knobs threaded from WU specs / config / CLI into the
+/// batch pool: worker threads, work-distribution policy, and the
+/// boolean kernel's lane width. All three are pure throughput knobs —
+/// payloads are bit-identical for every combination.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOpts {
+    pub threads: usize,
+    pub schedule: Schedule,
+    pub lanes: usize,
+}
+
+impl Default for EvalOpts {
+    fn default() -> Self {
+        EvalOpts { threads: 1, schedule: Schedule::Static, lanes: tape::DEFAULT_LANES }
+    }
+}
+
+impl EvalOpts {
+    pub fn with_threads(threads: usize) -> EvalOpts {
+        EvalOpts { threads: threads.max(1), ..EvalOpts::default() }
+    }
+
+    pub fn evaluator(&self) -> BatchEvaluator {
+        BatchEvaluator::with_opts(*self)
+    }
+}
+
+/// Deterministic parallel map over `0..n` with per-worker scratch and
+/// static contiguous chunking (the [`Schedule::Static`] fast path,
+/// kept as the plain entry point for uniform-cost callers).
 pub fn par_map_scratch<S, R, MS, F>(threads: usize, n: usize, make_scratch: MS, f: F) -> Vec<R>
+where
+    R: Send,
+    MS: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> R + Sync,
+{
+    par_map_schedule(threads, n, Schedule::Static, None, make_scratch, f)
+}
+
+/// Deterministic parallel map over `0..n` under a [`Schedule`].
+///
+/// `sizes`, when given, is a per-item cost hint (tree size) consumed
+/// by the skew-aware schedules; `None` degrades `Sorted`/`Steal` to
+/// queue order. Whatever the schedule, each worker builds one scratch
+/// with `make_scratch` and every output lands at its item's original
+/// index — the result is identical to the sequential map for any
+/// thread count (see the module's determinism contract).
+pub fn par_map_schedule<S, R, MS, F>(
+    threads: usize,
+    n: usize,
+    schedule: Schedule,
+    sizes: Option<&[usize]>,
+    make_scratch: MS,
+    f: F,
+) -> Vec<R>
 where
     R: Send,
     MS: Fn() -> S + Sync,
@@ -113,45 +223,156 @@ where
         let mut scratch = make_scratch();
         return (0..n).map(|i| f(&mut scratch, i)).collect();
     }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for worker in 0..threads {
-            let lo = worker * chunk;
-            let hi = ((worker + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            let make_scratch = &make_scratch;
-            handles.push(scope.spawn(move || {
-                let mut scratch = make_scratch();
-                (lo..hi).map(|i| f(&mut scratch, i)).collect::<Vec<R>>()
-            }));
+    match schedule {
+        Schedule::Static => {
+            let chunk = n.div_ceil(threads);
+            std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for worker in 0..threads {
+                    let lo = worker * chunk;
+                    let hi = ((worker + 1) * chunk).min(n);
+                    if lo >= hi {
+                        break;
+                    }
+                    let f = &f;
+                    let make_scratch = &make_scratch;
+                    handles.push(scope.spawn(move || {
+                        let mut scratch = make_scratch();
+                        (lo..hi).map(|i| f(&mut scratch, i)).collect::<Vec<R>>()
+                    }));
+                }
+                let mut out = Vec::with_capacity(n);
+                for handle in handles {
+                    out.extend(handle.join().expect("evaluation worker panicked"));
+                }
+                out
+            })
         }
-        let mut out = Vec::with_capacity(n);
-        for handle in handles {
-            out.extend(handle.join().expect("evaluation worker panicked"));
+        Schedule::Sorted => {
+            let order = size_sorted_order(n, sizes);
+            let pairs = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for worker in 0..threads {
+                    let order = &order;
+                    let f = &f;
+                    let make_scratch = &make_scratch;
+                    handles.push(scope.spawn(move || {
+                        let mut scratch = make_scratch();
+                        let mut out: Vec<(usize, R)> = Vec::new();
+                        // LPT deal: worker w takes sorted ranks w,
+                        // w + threads, w + 2*threads, ...
+                        let mut pos = worker;
+                        while pos < order.len() {
+                            let i = order[pos];
+                            out.push((i, f(&mut scratch, i)));
+                            pos += threads;
+                        }
+                        out
+                    }));
+                }
+                let mut pairs: Vec<(usize, R)> = Vec::with_capacity(n);
+                for handle in handles {
+                    pairs.extend(handle.join().expect("evaluation worker panicked"));
+                }
+                pairs
+            });
+            scatter_by_index(n, pairs)
         }
-        out
-    })
+        Schedule::Steal => {
+            let order = size_sorted_order(n, sizes);
+            let next = AtomicUsize::new(0);
+            let pairs = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(threads);
+                for _worker in 0..threads {
+                    let order = &order;
+                    let next = &next;
+                    let f = &f;
+                    let make_scratch = &make_scratch;
+                    handles.push(scope.spawn(move || {
+                        let mut scratch = make_scratch();
+                        let mut out: Vec<(usize, R)> = Vec::new();
+                        loop {
+                            let pos = next.fetch_add(1, Ordering::Relaxed);
+                            if pos >= order.len() {
+                                break;
+                            }
+                            let i = order[pos];
+                            out.push((i, f(&mut scratch, i)));
+                        }
+                        out
+                    }));
+                }
+                let mut pairs: Vec<(usize, R)> = Vec::with_capacity(n);
+                for handle in handles {
+                    pairs.extend(handle.join().expect("evaluation worker panicked"));
+                }
+                pairs
+            });
+            scatter_by_index(n, pairs)
+        }
+    }
+}
+
+/// Item indices in descending size order (ties break toward the lower
+/// index, so the order — and the `Sorted` assignment — is a pure
+/// function of the size hints).
+fn size_sorted_order(n: usize, sizes: Option<&[usize]>) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..n).collect();
+    if let Some(sizes) = sizes {
+        debug_assert_eq!(sizes.len(), n);
+        order.sort_by(|&a, &b| sizes[b].cmp(&sizes[a]).then(a.cmp(&b)));
+    }
+    order
+}
+
+/// Place `(index, result)` pairs into a fresh vec at their original
+/// indices — the ordering half of the determinism contract for the
+/// out-of-order schedules.
+fn scatter_by_index<R>(n: usize, pairs: Vec<(usize, R)>) -> Vec<R> {
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    for (i, r) in pairs {
+        debug_assert!(out[i].is_none(), "item {i} evaluated twice");
+        out[i] = Some(r);
+    }
+    out.into_iter().map(|o| o.expect("every index evaluated exactly once")).collect()
 }
 
 /// Batched population evaluator: compile once per generation into a
 /// reusable [`TapeArena`], evaluate with per-thread scratch across a
-/// scoped worker pool. The problem `NativeEvaluator`s all delegate
-/// here; construct them `with_threads(..)` to use more than one core.
-#[derive(Debug, Default)]
+/// scoped worker pool under a configurable [`Schedule`] and boolean
+/// lane width. The problem `NativeEvaluator`s all delegate here;
+/// construct them `with_opts(..)` (or `with_threads(..)`) to use more
+/// than one core or a skew-aware schedule.
+#[derive(Debug)]
 pub struct BatchEvaluator {
     threads: usize,
+    schedule: Schedule,
+    lanes: usize,
     arena: TapeArena,
     /// individual evaluations performed (for CP accounting)
     pub evals: u64,
 }
 
+impl Default for BatchEvaluator {
+    fn default() -> Self {
+        BatchEvaluator::new(1)
+    }
+}
+
 impl BatchEvaluator {
     pub fn new(threads: usize) -> BatchEvaluator {
-        BatchEvaluator { threads: threads.max(1), arena: TapeArena::new(), evals: 0 }
+        BatchEvaluator::with_opts(EvalOpts::with_threads(threads))
+    }
+
+    pub fn with_opts(opts: EvalOpts) -> BatchEvaluator {
+        BatchEvaluator {
+            threads: opts.threads.max(1),
+            schedule: opts.schedule,
+            lanes: tape::normalize_lanes(opts.lanes),
+            arena: TapeArena::new(),
+            evals: 0,
+        }
     }
 
     pub fn threads(&self) -> usize {
@@ -160,6 +381,31 @@ impl BatchEvaluator {
 
     pub fn set_threads(&mut self, threads: usize) {
         self.threads = threads.max(1);
+    }
+
+    pub fn schedule(&self) -> Schedule {
+        self.schedule
+    }
+
+    pub fn set_schedule(&mut self, schedule: Schedule) {
+        self.schedule = schedule;
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn set_lanes(&mut self, lanes: usize) {
+        self.lanes = tape::normalize_lanes(lanes);
+    }
+
+    /// Per-item cost hints for the skew-aware schedules: tree size is
+    /// proportional to tape length for compiled problems and to walk
+    /// cost for the tree-walk problems. `None` for schedules that
+    /// never read hints (no allocation on the default Static path).
+    fn size_hints(&self, trees: &[Tree]) -> Option<Vec<usize>> {
+        matches!(self.schedule, Schedule::Sorted | Schedule::Steal)
+            .then(|| trees.iter().map(Tree::len).collect())
     }
 
     /// Score a population on packed boolean cases (multiplexer, parity).
@@ -173,15 +419,19 @@ impl BatchEvaluator {
         self.evals += trees.len() as u64;
         let arena = &self.arena;
         let words = cases.words();
-        par_map_scratch(
+        let lanes = self.lanes;
+        let sizes = self.size_hints(trees);
+        par_map_schedule(
             self.threads,
             trees.len(),
+            self.schedule,
+            sizes.as_deref(),
             || BoolScratch::new(words),
             |scratch, i| {
                 if !arena.is_ok(i) {
                     return Fitness::worst();
                 }
-                let hits = tape::eval_bool_with(arena.ops_of(i), cases, scratch);
+                let hits = tape::eval_bool_with_lanes(arena.ops_of(i), cases, scratch, lanes);
                 Fitness { raw: (cases.ncases - hits) as f64, hits: hits as u32 }
             },
         )
@@ -193,9 +443,12 @@ impl BatchEvaluator {
         self.evals += trees.len() as u64;
         let arena = &self.arena;
         let ncases = cases.ncases();
-        par_map_scratch(
+        let sizes = self.size_hints(trees);
+        par_map_schedule(
             self.threads,
             trees.len(),
+            self.schedule,
+            sizes.as_deref(),
             || RegScratch::new(ncases),
             |scratch, i| {
                 if !arena.is_ok(i) {
@@ -209,7 +462,8 @@ impl BatchEvaluator {
     }
 
     /// Fan an arbitrary per-tree fitness closure across the pool (the
-    /// non-tape problems: ant world walks, image-operator detectors).
+    /// non-tape problems: ant world walks, image-operator detectors —
+    /// the skewed workloads the `Sorted`/`Steal` schedules exist for).
     /// `f` must be a pure function of its arguments for the
     /// determinism contract to hold.
     pub fn evaluate_with<F>(&mut self, trees: &[Tree], ps: &PrimSet, f: F) -> Vec<Fitness>
@@ -217,7 +471,15 @@ impl BatchEvaluator {
         F: Fn(&Tree, &PrimSet) -> Fitness + Sync,
     {
         self.evals += trees.len() as u64;
-        par_map_scratch(self.threads, trees.len(), || (), |_, i| f(&trees[i], ps))
+        let sizes = self.size_hints(trees);
+        par_map_schedule(
+            self.threads,
+            trees.len(),
+            self.schedule,
+            sizes.as_deref(),
+            || (),
+            |_, i| f(&trees[i], ps),
+        )
     }
 }
 
@@ -252,6 +514,72 @@ mod tests {
         assert_eq!(par_map_scratch(4, 0, || (), |_, i| i), Vec::<usize>::new());
         assert_eq!(par_map_scratch(4, 1, || (), |_, i| i), vec![0]);
         assert_eq!(par_map_scratch(4, 3, || (), |_, i| i), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn every_schedule_preserves_index_order() {
+        let sizes: Vec<usize> = (0..97).map(|i| (i * 37) % 100).collect();
+        let expect: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            for threads in [1usize, 2, 3, 8] {
+                let hints = Some(sizes.as_slice());
+                let out = par_map_schedule(threads, 97, schedule, hints, || (), |_, i| i * i);
+                assert_eq!(out, expect, "{schedule:?} threads={threads}");
+                // size hints are optional for every schedule
+                let out = par_map_schedule(threads, 97, schedule, None, || (), |_, i| i * i);
+                assert_eq!(out, expect, "{schedule:?} threads={threads} no-sizes");
+            }
+            // empty + tiny inputs
+            assert_eq!(par_map_schedule(4, 0, schedule, None, || (), |_, i| i), Vec::<usize>::new());
+            let one = [9usize];
+            assert_eq!(par_map_schedule(4, 1, schedule, Some(&one[..]), || (), |_, i| i), vec![0]);
+        }
+    }
+
+    #[test]
+    fn size_sorted_order_is_deterministic_lpt() {
+        let sizes = [5usize, 9, 1, 9, 3];
+        // descending size, ties toward the lower index
+        assert_eq!(size_sorted_order(5, Some(sizes.as_slice())), vec![1, 3, 0, 4, 2]);
+        assert_eq!(size_sorted_order(3, None), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn schedule_parse_roundtrip() {
+        for s in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            assert_eq!(Schedule::parse(s.name()).unwrap(), s);
+        }
+        assert!(Schedule::parse("round-robin").is_err());
+    }
+
+    #[test]
+    fn skewed_population_identical_across_schedules_and_lanes() {
+        let ps = mux6_ps();
+        let cases = mux6_cases();
+        let mut rng = Rng::new(29);
+        // deliberately skewed sizes: depth-2 next to depth-8 trees
+        let mut pop = ramped_half_and_half(&mut rng, &ps, 40, 2, 3);
+        pop.extend(ramped_half_and_half(&mut rng, &ps, 8, 7, 8));
+        pop.extend(ramped_half_and_half(&mut rng, &ps, 40, 2, 3));
+        let mut baseline_ev = BatchEvaluator::new(1);
+        let baseline = baseline_ev.evaluate_bool(&pop, &ps, &cases);
+        for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            for threads in [1usize, 3, 8] {
+                for lanes in tape::LANE_WIDTHS {
+                    let mut ev = BatchEvaluator::with_opts(EvalOpts { threads, schedule, lanes });
+                    let got = ev.evaluate_bool(&pop, &ps, &cases);
+                    assert_eq!(got.len(), baseline.len());
+                    for (a, b) in got.iter().zip(&baseline) {
+                        assert_eq!(
+                            a.raw.to_bits(),
+                            b.raw.to_bits(),
+                            "{schedule:?} threads={threads} lanes={lanes}"
+                        );
+                        assert_eq!(a.hits, b.hits);
+                    }
+                }
+            }
+        }
     }
 
     #[test]

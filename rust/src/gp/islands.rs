@@ -121,7 +121,6 @@ pub struct IslandSpec {
     pub migration_k: usize,
     /// the deme's seed (campaign seed + deme index)
     pub seed: u64,
-    pub threads: usize,
     /// end-of-previous-epoch state; `None` only on epoch 0
     pub checkpoint: Option<Checkpoint>,
     /// banked migrants from the topology's source demes (may be empty
@@ -154,7 +153,9 @@ impl IslandSpec {
             epoch_gens: spec.u64_of("epoch_gens")? as usize,
             migration_k: spec.u64_of("migration_k")? as usize,
             seed: spec.u64_of("seed")?,
-            threads: spec.get("threads").and_then(Json::as_u64).unwrap_or(1).max(1) as usize,
+            // worker eval knobs (threads/eval_lanes/schedule) are NOT
+            // part of the island shape: exec::eval_opts_of_spec is the
+            // single reader of those spec keys
             checkpoint,
             immigrants,
         };
@@ -383,7 +384,6 @@ mod tests {
         assert_eq!(s.problem, "mux6");
         assert_eq!(s.epoch_start_gen(), 0);
         assert_eq!(s.epoch_target_gen(), 5);
-        assert_eq!(s.threads, 1);
         assert!(s.checkpoint.is_none());
         assert!(s.immigrants.is_empty());
         assert!(!s.params().stop_on_perfect);

@@ -9,7 +9,7 @@
 //! (tree executions x 400 time steps) is identical, which is what the
 //! paper's timing experiments measure.
 
-use crate::gp::eval::BatchEvaluator;
+use crate::gp::eval::{BatchEvaluator, EvalOpts};
 use crate::gp::primset::{Prim, PrimSet};
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
@@ -235,7 +235,14 @@ impl NativeEvaluator {
     }
 
     pub fn with_threads(threads: usize) -> NativeEvaluator {
-        NativeEvaluator { trail: santa_fe_trail(), batch: BatchEvaluator::new(threads) }
+        Self::with_opts(EvalOpts::with_threads(threads))
+    }
+
+    /// Full knob set. Ant fitness cost scales with tree size, so this
+    /// is a prime candidate for `Schedule::Sorted` / `Schedule::Steal`
+    /// on skewed populations.
+    pub fn with_opts(opts: EvalOpts) -> NativeEvaluator {
+        NativeEvaluator { trail: santa_fe_trail(), batch: BatchEvaluator::with_opts(opts) }
     }
 }
 

@@ -9,7 +9,7 @@
 //! per individual, hours per run at paper scale), which is what Table 3
 //! measures through the virtualization layer.
 
-use crate::gp::eval::BatchEvaluator;
+use crate::gp::eval::{BatchEvaluator, EvalOpts};
 use crate::gp::primset::{Prim, PrimSet};
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
@@ -222,7 +222,14 @@ impl NativeEvaluator {
     }
 
     pub fn with_threads(seed: u64, threads: usize) -> NativeEvaluator {
-        NativeEvaluator { base: synth_image(seed), batch: BatchEvaluator::new(threads) }
+        Self::with_opts(seed, EvalOpts::with_threads(threads))
+    }
+
+    /// Full knob set. Detector trees convolve one image per node, so
+    /// per-tree cost is strongly size-skewed — the workload the
+    /// `Sorted`/`Steal` schedules target.
+    pub fn with_opts(seed: u64, opts: EvalOpts) -> NativeEvaluator {
+        NativeEvaluator { base: synth_image(seed), batch: BatchEvaluator::with_opts(opts) }
     }
 }
 

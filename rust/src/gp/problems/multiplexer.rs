@@ -6,10 +6,12 @@
 //! * 11-mux (k=3): 2048 cases — the paper's 828-run campaign
 //! * 20-mux (k=4): 2^20 cases — the paper's long-run campaign
 //!
-//! Case packing follows the shared tape contract (32 cases/u32 word,
-//! LSB first); the 20-mux needs 32 768 words, chunked by the evaluator.
+//! Case packing follows the native lane-block layout (64 cases/u64
+//! word, LSB first — see `gp::tape` module docs); the 20-mux needs
+//! 16 384 words, chunked by the evaluator. The AOT artifact still
+//! consumes 32-bit words, re-sliced by `BoolCases::u32_word`.
 
-use crate::gp::eval::BatchEvaluator;
+use crate::gp::eval::{BatchEvaluator, EvalOpts};
 use crate::gp::primset::{bool_set, PrimSet};
 use crate::gp::tape::{self, opcodes, BoolCases, Tape};
 use crate::gp::tree::Tree;
@@ -78,7 +80,12 @@ impl<'a> NativeEvaluator<'a> {
     }
 
     pub fn with_threads(problem: &'a Multiplexer, threads: usize) -> NativeEvaluator<'a> {
-        NativeEvaluator { problem, batch: BatchEvaluator::new(threads) }
+        Self::with_opts(problem, EvalOpts::with_threads(threads))
+    }
+
+    /// Full knob set: threads, schedule, boolean lane width.
+    pub fn with_opts(problem: &'a Multiplexer, opts: EvalOpts) -> NativeEvaluator<'a> {
+        NativeEvaluator { problem, batch: BatchEvaluator::with_opts(opts) }
     }
 }
 
@@ -107,7 +114,8 @@ mod tests {
         let m = Multiplexer::new(3);
         assert_eq!(m.nbits, 11);
         assert_eq!(m.ncases(), 2048);
-        assert_eq!(m.cases.words(), 64);
+        assert_eq!(m.cases.words(), 32);
+        assert_eq!(m.cases.words_u32(), 64, "artifact contract unchanged");
         assert_eq!(m.primset().terminals.len(), 11);
     }
 
@@ -116,7 +124,7 @@ mod tests {
         let m = Multiplexer::new(4);
         assert_eq!(m.nbits, 20);
         assert_eq!(m.ncases(), 1 << 20);
-        assert_eq!(m.cases.words(), 32768);
+        assert_eq!(m.cases.words(), 16384);
     }
 
     #[test]
@@ -124,12 +132,12 @@ mod tests {
         let m = Multiplexer::new(3);
         // case: a=0b001 (addr 1), d1 = 1 -> bit index 3+1=4 set
         let case: u64 = 0b1 | (1 << 4);
-        let w = (case / 32) as usize;
-        let b = (case % 32) as u32;
+        let w = (case / 64) as usize;
+        let b = (case % 64) as u32;
         assert_eq!((m.cases.target[w] >> b) & 1, 1);
         // same address with d1 = 0 -> output 0
         let case0: u64 = 0b1;
-        assert_eq!((m.cases.target[(case0 / 32) as usize] >> (case0 % 32)) & 1, 0);
+        assert_eq!((m.cases.target[(case0 / 64) as usize] >> (case0 % 64)) & 1, 0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! the paper). Function set {AND, OR, NAND, NOR} — no IF, which is what
 //! makes parity hard for GP.
 
-use crate::gp::eval::BatchEvaluator;
+use crate::gp::eval::{BatchEvaluator, EvalOpts};
 use crate::gp::primset::{bool_set, PrimSet};
 use crate::gp::tape::BoolCases;
 use crate::gp::tree::Tree;
@@ -42,7 +42,12 @@ impl<'a> NativeEvaluator<'a> {
     }
 
     pub fn with_threads(problem: &'a Parity, threads: usize) -> NativeEvaluator<'a> {
-        NativeEvaluator { problem, batch: BatchEvaluator::new(threads) }
+        Self::with_opts(problem, EvalOpts::with_threads(threads))
+    }
+
+    /// Full knob set: threads, schedule, boolean lane width.
+    pub fn with_opts(problem: &'a Parity, opts: EvalOpts) -> NativeEvaluator<'a> {
+        NativeEvaluator { problem, batch: BatchEvaluator::with_opts(opts) }
     }
 }
 

@@ -2,7 +2,7 @@
 //! (Koza 1992) — Lil-gp's "symbolic linear regression" example problem
 //! (§3.1 of the paper). 20 fitness cases, ERC constants.
 
-use crate::gp::eval::BatchEvaluator;
+use crate::gp::eval::{BatchEvaluator, EvalOpts};
 use crate::gp::primset::{regression_set, PrimSet};
 use crate::gp::tape::RegCases;
 use crate::gp::tree::Tree;
@@ -39,7 +39,13 @@ impl<'a> NativeEvaluator<'a> {
     }
 
     pub fn with_threads(problem: &'a Quartic, threads: usize) -> NativeEvaluator<'a> {
-        NativeEvaluator { problem, batch: BatchEvaluator::new(threads) }
+        Self::with_opts(problem, EvalOpts::with_threads(threads))
+    }
+
+    /// Full knob set: threads, schedule (lanes are boolean-only but
+    /// harmless here).
+    pub fn with_opts(problem: &'a Quartic, opts: EvalOpts) -> NativeEvaluator<'a> {
+        NativeEvaluator { problem, batch: BatchEvaluator::with_opts(opts) }
     }
 }
 

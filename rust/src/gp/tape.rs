@@ -10,6 +10,28 @@
 //!   path and the baseline the artifact is validated against;
 //! * [`crate::runtime::ArtifactEvaluator`] — the "Method 2 wrapper"
 //!   path through the PJRT-loaded HLO.
+//!
+//! # Lane-block memory layout (the wide boolean kernel)
+//!
+//! Boolean fitness cases are bit-packed into `u64` words, LSB-first
+//! (case `c` lives in bit `c % 64` of word `c / 64`). The kernel
+//! processes words in fixed-width *lane blocks* of `L ∈ {1, 2, 4, 8}`
+//! words: every operator loop is a pair of loops — an outer loop over
+//! whole blocks and an inner loop with a compile-time trip count of
+//! exactly `L` — which stable rustc/LLVM auto-vectorizes into SIMD
+//! (128/256/512-bit) without any nightly features. A ragged tail
+//! (`words % L != 0`) falls back to a scalar remainder loop, and the
+//! final partial *word* (`ncases % 64 != 0`) is handled by the case
+//! mask, so any (ncases, lanes) combination scores identically.
+//!
+//! Because every boolean operator is bitwise, the result is
+//! **bit-identical for every lane width** — `--eval-lanes` is purely a
+//! throughput knob and can never break the quorum determinism
+//! contract. Pick `L = 4` (256-bit blocks, the default) on AVX2-class
+//! hosts, `L = 8` on AVX-512, `L = 2` on plain SSE2/NEON, `L = 1` to
+//! force the scalar kernel. The artifact (Method 2) contract is
+//! unchanged: it still consumes 32-bit words, re-sliced on the fly by
+//! [`BoolCases::u32_word`].
 
 use crate::gp::primset::PrimSet;
 use crate::gp::tree::Tree;
@@ -186,13 +208,34 @@ fn tape_arity(op: i32, nop: i32) -> i32 {
     }
 }
 
+/// Lane-block widths accepted by the wide boolean kernel (words per
+/// block; see the module docs for how to choose one).
+pub const LANE_WIDTHS: [usize; 4] = [1, 2, 4, 8];
+
+/// Default lane width: 4 × u64 = 256-bit blocks (AVX2-class hosts).
+pub const DEFAULT_LANES: usize = 4;
+
+/// Clamp an arbitrary `--eval-lanes` value onto [`LANE_WIDTHS`]:
+/// rounds down to the nearest supported width (0 → 1, 3 → 2, 100 → 8).
+pub fn normalize_lanes(lanes: usize) -> usize {
+    let mut best = 1;
+    for &l in &LANE_WIDTHS {
+        if l <= lanes {
+            best = l;
+        }
+    }
+    best
+}
+
 /// Packed boolean problem data: truth-table columns, target, mask.
+/// Cases are packed 64 per `u64` word, LSB-first (the lane-block
+/// kernel layout — see the module docs).
 #[derive(Clone, Debug)]
 pub struct BoolCases {
     /// `inputs[v]` = packed column for variable v, len = words.
-    pub inputs: Vec<Vec<u32>>,
-    pub target: Vec<u32>,
-    pub mask: Vec<u32>,
+    pub inputs: Vec<Vec<u64>>,
+    pub target: Vec<u64>,
+    pub mask: Vec<u64>,
     pub ncases: u64,
 }
 
@@ -200,29 +243,53 @@ impl BoolCases {
     /// Build the full truth table for `nbits` input bits where
     /// `f(case) -> bool` defines the target function.
     pub fn truth_table(nbits: usize, f: impl Fn(u64) -> bool) -> BoolCases {
-        let ncases: u64 = 1 << nbits;
-        let nwords = ncases.div_ceil(32) as usize;
-        let mut inputs = vec![vec![0u32; nwords]; nbits];
-        let mut target = vec![0u32; nwords];
-        let mut mask = vec![0u32; nwords];
+        BoolCases::truth_table_prefix(nbits, 1u64 << nbits, f)
+    }
+
+    /// Build only the first `ncases` rows of the `nbits` truth table —
+    /// exercises ragged tails (`ncases % 64 != 0`,
+    /// `words % lanes != 0`) that full power-of-two tables can't reach;
+    /// the differential tests lean on this.
+    pub fn truth_table_prefix(nbits: usize, ncases: u64, f: impl Fn(u64) -> bool) -> BoolCases {
+        assert!(ncases >= 1 && ncases <= 1u64 << nbits);
+        let nwords = ncases.div_ceil(64) as usize;
+        let mut inputs = vec![vec![0u64; nwords]; nbits];
+        let mut target = vec![0u64; nwords];
+        let mut mask = vec![0u64; nwords];
         for case in 0..ncases {
-            let w = (case / 32) as usize;
-            let b = (case % 32) as u32;
-            mask[w] |= 1 << b;
+            let w = (case / 64) as usize;
+            let b = (case % 64) as u32;
+            mask[w] |= 1u64 << b;
             for (v, col) in inputs.iter_mut().enumerate() {
                 if (case >> v) & 1 == 1 {
-                    col[w] |= 1 << b;
+                    col[w] |= 1u64 << b;
                 }
             }
             if f(case) {
-                target[w] |= 1 << b;
+                target[w] |= 1u64 << b;
             }
         }
         BoolCases { inputs, target, mask, ncases }
     }
 
+    /// Packed column length in u64 words.
     pub fn words(&self) -> usize {
         self.target.len()
+    }
+
+    /// Column length in u32 words — the AOT-artifact (Method 2)
+    /// contract, which predates the u64 repack and still ships 32-bit
+    /// words.
+    pub fn words_u32(&self) -> usize {
+        self.ncases.div_ceil(32) as usize
+    }
+
+    /// Re-slice a packed u64 column into its `k`-th u32 word (the
+    /// artifact wire layout). Out-of-range reads are 0, matching the
+    /// zero-padding the artifact path applies anyway.
+    pub fn u32_word(col: &[u64], k: usize) -> u32 {
+        let word = col.get(k / 2).copied().unwrap_or(0);
+        (word >> ((k % 2) * 32)) as u32
     }
 }
 
@@ -230,16 +297,16 @@ impl BoolCases {
 /// zero-column buffers that used to be allocated on every call.
 #[derive(Clone, Debug)]
 pub struct BoolScratch {
-    stack: Vec<u32>,
-    zero: Vec<u32>,
+    stack: Vec<u64>,
+    zero: Vec<u64>,
     words: usize,
 }
 
 impl BoolScratch {
     pub fn new(words: usize) -> BoolScratch {
         BoolScratch {
-            stack: vec![0u32; (opcodes::STACK_DEPTH as usize) * words],
-            zero: vec![0u32; words],
+            stack: vec![0u64; (opcodes::STACK_DEPTH as usize) * words],
+            zero: vec![0u64; words],
             words,
         }
     }
@@ -258,10 +325,67 @@ pub fn eval_bool_native(tape: &Tape, cases: &BoolCases) -> u64 {
     eval_bool_with(&tape.ops, cases, &mut scratch)
 }
 
-/// Scratch-buffer core of [`eval_bool_native`]: evaluates a tape's
-/// opcode row against packed cases with zero allocation (the scratch
-/// is reused across the whole batch by [`crate::gp::eval`]).
+/// Scratch-buffer core of [`eval_bool_native`] at the default lane
+/// width: evaluates a tape's opcode row against packed cases with zero
+/// allocation (the scratch is reused across the whole batch by
+/// [`crate::gp::eval`]).
 pub fn eval_bool_with(tape_ops: &[i32], cases: &BoolCases, scratch: &mut BoolScratch) -> u64 {
+    eval_bool_with_lanes(tape_ops, cases, scratch, DEFAULT_LANES)
+}
+
+/// Lane-width dispatch: monomorphizes the kernel for each supported
+/// block width so every operator loop has a compile-time trip count
+/// (the shape LLVM auto-vectorizes). Results are bit-identical for
+/// every width — lanes are a pure throughput knob.
+pub fn eval_bool_with_lanes(
+    tape_ops: &[i32],
+    cases: &BoolCases,
+    scratch: &mut BoolScratch,
+    lanes: usize,
+) -> u64 {
+    match normalize_lanes(lanes) {
+        1 => eval_bool_kernel::<1>(tape_ops, cases, scratch),
+        2 => eval_bool_kernel::<2>(tape_ops, cases, scratch),
+        8 => eval_bool_kernel::<8>(tape_ops, cases, scratch),
+        _ => eval_bool_kernel::<4>(tape_ops, cases, scratch),
+    }
+}
+
+/// Apply one operator column-wise in lane blocks of `L` words with a
+/// scalar remainder loop. `dst` may alias a source slot (binary ops
+/// write over operand 2's slot) but the update is element-wise, so a
+/// single in-order pass over one flat stack buffer is exact.
+#[inline(always)]
+fn apply_bool_op<const L: usize>(
+    stack: &mut [u64],
+    w: usize,
+    i1: usize,
+    i2: usize,
+    i3: usize,
+    wr: usize,
+    f: impl Fn(u64, u64, u64) -> u64,
+) {
+    let (b1, b2, b3, bw) = (i1 * w, i2 * w, i3 * w, wr * w);
+    let mut k = 0usize;
+    while k + L <= w {
+        for j in 0..L {
+            let r = f(stack[b1 + k + j], stack[b2 + k + j], stack[b3 + k + j]);
+            stack[bw + k + j] = r;
+        }
+        k += L;
+    }
+    while k < w {
+        let r = f(stack[b1 + k], stack[b2 + k], stack[b3 + k]);
+        stack[bw + k] = r;
+        k += 1;
+    }
+}
+
+fn eval_bool_kernel<const L: usize>(
+    tape_ops: &[i32],
+    cases: &BoolCases,
+    scratch: &mut BoolScratch,
+) -> u64 {
     use opcodes::*;
     let w = cases.words();
     scratch.ensure(w);
@@ -294,21 +418,17 @@ pub fn eval_bool_with(tape_ops: &[i32], cases: &BoolCases, scratch: &mut BoolScr
         let i3 = sp.saturating_sub(3);
         let new_sp = (sp + 1).saturating_sub(ar).clamp(0, STACK_DEPTH as usize);
         let wr = new_sp.saturating_sub(1);
-        for k in 0..w {
-            let x1 = stack[i1 * w + k];
-            let x2 = stack[i2 * w + k];
-            let x3 = stack[i3 * w + k];
-            let r = match op {
-                BOOL_OP_NOT => !x1,
-                BOOL_OP_AND => x2 & x1,
-                BOOL_OP_OR => x2 | x1,
-                BOOL_OP_NAND => !(x2 & x1),
-                BOOL_OP_NOR => !(x2 | x1),
-                BOOL_OP_XOR => x2 ^ x1,
-                BOOL_OP_IF => (x3 & x2) | (!x3 & x1),
-                _ => unreachable!(),
-            };
-            stack[wr * w + k] = r;
+        match op {
+            BOOL_OP_NOT => apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, _, _| !x1),
+            BOOL_OP_AND => apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, x2, _| x2 & x1),
+            BOOL_OP_OR => apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, x2, _| x2 | x1),
+            BOOL_OP_NAND => apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, x2, _| !(x2 & x1)),
+            BOOL_OP_NOR => apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, x2, _| !(x2 | x1)),
+            BOOL_OP_XOR => apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, x2, _| x2 ^ x1),
+            BOOL_OP_IF => {
+                apply_bool_op::<L>(stack, w, i1, i2, i3, wr, |x1, x2, x3| (x3 & x2) | (!x3 & x1))
+            }
+            _ => unreachable!(),
         }
         sp = new_sp;
     }
@@ -649,5 +769,73 @@ mod tests {
         assert_eq!(c.inputs[0][0], 0b10101010);
         assert_eq!(c.inputs[1][0], 0b11001100);
         assert_eq!(c.inputs[2][0], 0b11110000);
+    }
+
+    #[test]
+    fn truth_table_packs_64_cases_per_word() {
+        // 7 bits = 128 cases = exactly 2 u64 words, fully masked
+        let c = BoolCases::truth_table(7, |case| case & 1 == 1);
+        assert_eq!(c.ncases, 128);
+        assert_eq!(c.words(), 2);
+        assert_eq!(c.words_u32(), 4);
+        assert_eq!(c.mask, vec![u64::MAX; 2]);
+        // variable 0 alternates every case: 0b1010.. in every word
+        assert_eq!(c.inputs[0][0], 0xAAAA_AAAA_AAAA_AAAA);
+        assert_eq!(c.target[1], 0xAAAA_AAAA_AAAA_AAAA);
+        // u32 re-slicing matches the packed halves
+        assert_eq!(BoolCases::u32_word(&c.inputs[0], 0), 0xAAAA_AAAA);
+        assert_eq!(BoolCases::u32_word(&c.inputs[0], 3), 0xAAAA_AAAA);
+        assert_eq!(BoolCases::u32_word(&c.inputs[0], 4), 0, "past-the-end words read 0");
+    }
+
+    #[test]
+    fn truth_table_prefix_masks_ragged_tail() {
+        // 100 of 128 cases: one full word + a 36-bit partial word
+        let c = BoolCases::truth_table_prefix(7, 100, |case| case >= 50);
+        assert_eq!(c.ncases, 100);
+        assert_eq!(c.words(), 2);
+        assert_eq!(c.mask[0], u64::MAX);
+        assert_eq!(c.mask[1], (1u64 << 36) - 1);
+        // a constant-0 program hits exactly the masked cases below 50
+        let all_nop = vec![BOOL_NOP; TAPE_LEN as usize];
+        let mut scratch = BoolScratch::new(c.words());
+        assert_eq!(eval_bool_with(&all_nop, &c, &mut scratch), 50);
+    }
+
+    #[test]
+    fn normalize_lanes_rounds_down_to_supported_widths() {
+        assert_eq!(normalize_lanes(0), 1);
+        assert_eq!(normalize_lanes(1), 1);
+        assert_eq!(normalize_lanes(3), 2);
+        assert_eq!(normalize_lanes(4), 4);
+        assert_eq!(normalize_lanes(7), 4);
+        assert_eq!(normalize_lanes(8), 8);
+        assert_eq!(normalize_lanes(1000), 8);
+    }
+
+    #[test]
+    fn lane_widths_are_bit_identical_including_ragged_tails() {
+        // case sets chosen so words % lanes covers every remainder:
+        // 1, 2, 3 and 5 words against L in {1, 2, 4, 8}
+        let tables: Vec<BoolCases> = vec![
+            BoolCases::truth_table(5, |case| case.count_ones() % 2 == 0),
+            BoolCases::truth_table(7, |case| case & 3 == 1),
+            BoolCases::truth_table_prefix(8, 170, |case| case % 3 == 0),
+            BoolCases::truth_table_prefix(9, 290, |case| case % 5 == 1),
+        ];
+        let ps = mux6_ps();
+        let mut rng = Rng::new(41);
+        let pop = ramped_half_and_half(&mut rng, &ps, 60, 2, 6);
+        for cases in &tables {
+            let mut scratch = BoolScratch::new(cases.words());
+            for t in &pop {
+                let tape = compile(t, &ps, BOOL_NOP).unwrap();
+                let base = eval_bool_with_lanes(&tape.ops, cases, &mut scratch, 1);
+                for &lanes in &LANE_WIDTHS[1..] {
+                    let got = eval_bool_with_lanes(&tape.ops, cases, &mut scratch, lanes);
+                    assert_eq!(base, got, "lanes={lanes} words={}", cases.words());
+                }
+            }
+        }
     }
 }

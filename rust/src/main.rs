@@ -19,6 +19,13 @@
 //! (gp::eval batch pool; payloads stay bit-identical), `--ncpus N`
 //! gives every simulated host N cores, each computing one queued WU
 //! (the DES per-core task model).
+//!
+//! Performance knobs (all bit-identical — pure throughput):
+//! `--eval-lanes 1|2|4|8` sets the boolean kernel's SIMD lane-block
+//! width (u64 words per block; default 4 = 256-bit), `--schedule
+//! static|sorted|steal` picks the eval fan-out policy (size-sorted or
+//! work-stealing schedules tame skewed tree-walk populations like
+//! ant/interest-point).
 
 use vgp::boinc::exchange::MigrationExchange;
 use vgp::boinc::net::{serve, Worker};
@@ -28,6 +35,7 @@ use vgp::config::{Args, Config};
 use vgp::coordinator::{
     exec, simulate_campaign, simulate_island_campaign, Campaign, IslandCampaign, IslandReport,
 };
+use vgp::gp::eval::Schedule;
 use vgp::gp::islands::Topology;
 use vgp::gp::problems::ProblemKind;
 use vgp::metrics::ascii_plot;
@@ -84,7 +92,21 @@ fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> I
     c.migration_timeout = args.opt_f64("migration-timeout", c.migration_timeout);
     c.seed = args.opt_u64("seed", 1);
     c.threads = args.opt_u64("threads", 1).max(1) as usize;
+    c.eval_lanes = eval_lanes_of(args);
+    c.schedule = schedule_of(args);
     c
+}
+
+/// `--eval-lanes N`, normalized onto the supported {1, 2, 4, 8}.
+fn eval_lanes_of(args: &Args) -> usize {
+    vgp::gp::tape::normalize_lanes(
+        args.opt_u64("eval-lanes", vgp::gp::tape::DEFAULT_LANES as u64) as usize,
+    )
+}
+
+/// `--schedule static|sorted|steal`.
+fn schedule_of(args: &Args) -> Schedule {
+    Schedule::parse(args.opt_str("schedule", "static")).expect("schedule")
 }
 
 fn cmd_sim(args: &Args) -> i32 {
@@ -138,6 +160,8 @@ fn cmd_sim(args: &Args) -> i32 {
     let seed = args.opt_u64("seed", 7);
     let mut c = Campaign::new("cli", problem, runs, gens, pop);
     c.threads = args.opt_u64("threads", 1).max(1) as usize;
+    c.eval_lanes = eval_lanes_of(args);
+    c.schedule = schedule_of(args);
     if c.threads > 1 {
         // the DES models durations from FLOPs/host-rate; worker thread
         // fan-out only applies when WUs are actually executed (serve/
@@ -325,6 +349,8 @@ fn cmd_serve(args: &Args) -> i32 {
     let gens = args.opt_u64("generations", 20) as usize;
     let mut c = Campaign::new("served", problem, runs, gens, pop);
     c.threads = threads;
+    c.eval_lanes = eval_lanes_of(args);
+    c.schedule = schedule_of(args);
     let mut core = ServerCore::new(ServerConfig::default());
     for wu in c.workunits() {
         core.submit_wu(wu);

@@ -104,14 +104,16 @@ impl Runtime {
 
     /// Evaluate boolean tapes against packed cases; returns hit counts.
     /// Pads the population to the batch size and chunks the case words,
-    /// accumulating hits across word blocks.
+    /// accumulating hits across word blocks. The artifact contract is
+    /// 32-bit words; the native u64 lane-block columns are re-sliced on
+    /// the fly via [`BoolCases::u32_word`].
     pub fn eval_bool(&self, tapes: &[Tape], cases: &BoolCases) -> Result<Vec<u64>> {
         let b = self.meta.bool_batch;
         let w = self.meta.bool_words;
         let l = self.meta.tape_len;
         let nv = self.meta.bool_num_vars;
         let mut hits = vec![0u64; tapes.len()];
-        let total_words = cases.words();
+        let total_words = cases.words_u32();
 
         for chunk_start in (0..tapes.len()).step_by(b) {
             let chunk = &tapes[chunk_start..(chunk_start + b).min(tapes.len())];
@@ -130,12 +132,16 @@ impl Runtime {
                 // inputs [NV, W] u32 — zero-pad missing vars and words
                 let mut in_flat = vec![0u32; nv * w];
                 for (v, col) in cases.inputs.iter().enumerate().take(nv) {
-                    in_flat[v * w..v * w + wlen].copy_from_slice(&col[wstart..wend]);
+                    for k in 0..wlen {
+                        in_flat[v * w + k] = BoolCases::u32_word(col, wstart + k);
+                    }
                 }
                 let mut tgt = vec![0u32; w];
-                tgt[..wlen].copy_from_slice(&cases.target[wstart..wend]);
                 let mut msk = vec![0u32; w];
-                msk[..wlen].copy_from_slice(&cases.mask[wstart..wend]);
+                for k in 0..wlen {
+                    tgt[k] = BoolCases::u32_word(&cases.target, wstart + k);
+                    msk[k] = BoolCases::u32_word(&cases.mask, wstart + k);
+                }
 
                 let in_lit = xla::Literal::vec1(&in_flat)
                     .reshape(&[nv as i64, w as i64])

@@ -3,9 +3,15 @@
 //! `cargo bench` runs `harness = false` binaries that use [`Bench`] for
 //! hot-path timing and plain table printing for the paper-reproduction
 //! benches. Reports mean ± std, min, and derived throughput.
+//!
+//! [`BenchRecord`] / [`append_bench_json`] persist hot-path results
+//! into the repo's append-only perf trajectory (`BENCH_hotpath.json`)
+//! so regressions across PRs are visible in review, not just in a
+//! terminal scrollback.
 
 use std::time::Instant;
 
+use super::json::Json;
 use super::stats;
 
 /// Result of one benchmark case.
@@ -79,6 +85,52 @@ impl Bench {
     }
 }
 
+/// One hot-path measurement destined for the append-only perf log
+/// (`BENCH_hotpath.json` at the repo root). Schema:
+/// `{pr, threads, scheduler, lanes, evals_per_sec}`.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// which PR / commit recorded this entry (e.g. "pr3")
+    pub pr: String,
+    pub threads: usize,
+    /// `gp::eval::Schedule` name: static | sorted | steal
+    pub scheduler: String,
+    /// boolean-kernel lane width (u64 words per block)
+    pub lanes: usize,
+    /// individual program evaluations per second
+    pub evals_per_sec: f64,
+}
+
+impl BenchRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("pr", self.pr.as_str())
+            .set("threads", self.threads as u64)
+            .set("scheduler", self.scheduler.as_str())
+            .set("lanes", self.lanes as u64)
+            .set("evals_per_sec", self.evals_per_sec)
+    }
+}
+
+/// Append records to the JSON array at `path` (created if absent).
+/// Append-only by construction: existing entries are parsed and kept
+/// verbatim, so the file accumulates one perf trajectory across PRs.
+/// A file that parses but is not an array is an error — never
+/// silently overwrite someone's trajectory with an empty one.
+pub fn append_bench_json(path: &str, records: &[BenchRecord]) -> anyhow::Result<()> {
+    let mut entries: Vec<Json> = match std::fs::read_to_string(path) {
+        Ok(text) if !text.trim().is_empty() => match Json::parse(&text)?.as_arr() {
+            Some(arr) => arr.to_vec(),
+            None => anyhow::bail!("{path} exists but is not a JSON array; refusing to clobber"),
+        },
+        _ => Vec::new(),
+    };
+    entries.extend(records.iter().map(BenchRecord::to_json));
+    let body = entries.iter().map(Json::to_string).collect::<Vec<_>>().join(",\n  ");
+    std::fs::write(path, format!("[\n  {body}\n]\n"))?;
+    Ok(())
+}
+
 /// Fixed-width paper-style table printer used by the table benches.
 pub struct Table {
     headers: Vec<String>,
@@ -143,5 +195,35 @@ mod tests {
         t.row(&["22".into(), "yy".into()]);
         t.print(); // visual; just must not panic
         assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn bench_json_appends_without_clobbering() {
+        let path = std::env::temp_dir().join(format!("vgp_bench_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let rec = |pr: &str, threads: usize| BenchRecord {
+            pr: pr.into(),
+            threads,
+            scheduler: "static".into(),
+            lanes: 4,
+            evals_per_sec: 1.25e6,
+        };
+        append_bench_json(&path, &[rec("pr3", 1), rec("pr3", 8)]).unwrap();
+        append_bench_json(&path, &[rec("pr4", 1)]).unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 3, "append must keep prior entries");
+        assert_eq!(arr[0].str_of("pr").unwrap(), "pr3");
+        assert_eq!(arr[2].str_of("pr").unwrap(), "pr4");
+        assert_eq!(arr[1].u64_of("threads").unwrap(), 8);
+        assert_eq!(arr[0].str_of("scheduler").unwrap(), "static");
+        assert_eq!(arr[0].u64_of("lanes").unwrap(), 4);
+        assert!(arr[0].f64_of("evals_per_sec").unwrap() > 0.0);
+        // a parseable non-array must be refused, never clobbered
+        std::fs::write(&path, "{}").unwrap();
+        assert!(append_bench_json(&path, &[rec("pr5", 1)]).is_err());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "{}", "file left untouched");
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -9,11 +9,12 @@
 use vgp::coordinator::exec;
 use vgp::coordinator::Campaign;
 use vgp::gp::engine::{Checkpoint, Engine, Params, RunResult};
-use vgp::gp::eval::BatchEvaluator;
+use vgp::gp::eval::{BatchEvaluator, EvalOpts, Schedule};
 use vgp::gp::init::ramped_half_and_half;
 use vgp::gp::problems::multiplexer::Multiplexer;
 use vgp::gp::problems::{ant, ProblemKind};
-use vgp::gp::tape::{self, opcodes};
+use vgp::gp::tape::{self, opcodes, LANE_WIDTHS};
+use vgp::gp::tree::Tree;
 use vgp::gp::Fitness;
 use vgp::util::json::Json;
 use vgp::util::prop::{assert_prop, check};
@@ -141,6 +142,126 @@ fn batch_evaluator_matches_sequential_for_random_populations() {
         }
         Ok(())
     });
+}
+
+/// Thread counts for the determinism matrix: pinned by the CI steps
+/// via `VGP_EVAL_THREADS` (so the 1-thread and 8-thread runs really
+/// differ), the full spread otherwise.
+fn matrix_threads() -> Vec<usize> {
+    match std::env::var("VGP_EVAL_THREADS") {
+        Ok(v) => vec![v.parse().expect("VGP_EVAL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 4, 8],
+    }
+}
+
+/// A deliberately size-skewed ant population: a few huge trees (deep
+/// `progn2(move, progn2(move, ...))` chains) among many tiny ones —
+/// the worst case for static contiguous chunking, and exactly the
+/// population shape the `sorted`/`steal` schedules exist for.
+fn skewed_ant_population() -> Vec<Tree> {
+    let chain = |n: usize| {
+        // preorder: n times [progn2, move] then a final move; size 2n+1
+        let mut ops = Vec::with_capacity(2 * n + 1);
+        for _ in 0..n {
+            ops.push(ant::F_PROGN2);
+            ops.push(ant::T_MOVE);
+        }
+        ops.push(ant::T_MOVE);
+        let len = ops.len();
+        Tree::new(ops, vec![0.0; len])
+    };
+    let mut pop = Vec::new();
+    // many tiny trees...
+    for i in 0..60 {
+        pop.push(chain(i % 3));
+    }
+    // ...a few huge ones, clumped at one end (pessimal for Static)
+    for _ in 0..4 {
+        pop.push(chain(1500));
+    }
+    pop.push(chain(0));
+    pop
+}
+
+#[test]
+fn determinism_matrix_threads_x_schedule_x_lanes_on_skewed_population() {
+    // fitness bits for a skewed ant population must be identical
+    // across threads {1,2,4,8} x schedule {static,sorted,steal}; the
+    // boolean lane widths ride the same matrix on the mux11 kernel
+    let ps = ant::ant_set();
+    let pop = skewed_ant_population();
+    let mut baseline_ev = ant::NativeEvaluator::with_threads(1);
+    let baseline = vgp::gp::Evaluator::evaluate(&mut baseline_ev, &pop, &ps);
+    for threads in matrix_threads() {
+        for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            let mut ev = ant::NativeEvaluator::with_opts(EvalOpts {
+                threads,
+                schedule,
+                lanes: tape::DEFAULT_LANES,
+            });
+            let got = vgp::gp::Evaluator::evaluate(&mut ev, &pop, &ps);
+            assert_eq!(got.len(), baseline.len());
+            for (i, (a, b)) in got.iter().zip(&baseline).enumerate() {
+                assert_eq!(
+                    a.raw.to_bits(),
+                    b.raw.to_bits(),
+                    "ant tree {i} at threads={threads} schedule={}",
+                    schedule.name()
+                );
+                assert_eq!(a.hits, b.hits);
+            }
+        }
+    }
+
+    // boolean kernel: same matrix extended by lane width
+    let m = Multiplexer::new(3);
+    let mps = m.primset().clone();
+    let mut rng = Rng::new(77);
+    let mpop = ramped_half_and_half(&mut rng, &mps, 64, 2, 6);
+    let mut bool_baseline_ev = BatchEvaluator::new(1);
+    let bool_baseline = bool_baseline_ev.evaluate_bool(&mpop, &mps, &m.cases);
+    for threads in matrix_threads() {
+        for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            for lanes in LANE_WIDTHS {
+                let mut ev = BatchEvaluator::with_opts(EvalOpts { threads, schedule, lanes });
+                let got = ev.evaluate_bool(&mpop, &mps, &m.cases);
+                for (i, (a, b)) in got.iter().zip(&bool_baseline).enumerate() {
+                    assert_eq!(
+                        a.raw.to_bits(),
+                        b.raw.to_bits(),
+                        "mux tree {i} at threads={threads} schedule={} lanes={lanes}",
+                        schedule.name()
+                    );
+                    assert_eq!(a.hits, b.hits);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wu_payload_hash_stable_across_schedule_and_lane_matrix() {
+    // end-to-end: the exec-layer payload (the quorum hash input) for an
+    // ant WU — the skewed tree-walk workload — must be byte-identical
+    // across the full knob matrix carried by the spec
+    let c = Campaign::new("matrix", ProblemKind::Ant, 1, 4, 60);
+    let baseline = exec::run_wu_native(&c.wu_spec(0)).unwrap().to_string();
+    for threads in matrix_threads() {
+        for schedule in ["static", "sorted", "steal"] {
+            for lanes in [1u64, 8] {
+                let spec = c
+                    .wu_spec(0)
+                    .set("threads", threads as u64)
+                    .set("schedule", schedule)
+                    .set("eval_lanes", lanes);
+                let payload = exec::run_wu_native(&spec).unwrap().to_string();
+                assert_eq!(
+                    baseline, payload,
+                    "threads={threads} schedule={schedule} lanes={lanes}"
+                );
+            }
+        }
+    }
 }
 
 #[test]

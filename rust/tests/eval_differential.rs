@@ -1,0 +1,314 @@
+//! Differential / property proofs for the evaluation hot path: random
+//! trees for all five problems, evaluated through the production
+//! kernels (tape compile + wide-lane boolean kernel + batch fan-out)
+//! versus a naive recursive interpreter that shares **no code** with
+//! the tape machine. Fitness must be **bit-identical** for:
+//!
+//! * every lane width in `LANE_WIDTHS`, including ragged tails where
+//!   `ncases % (64 * lanes) != 0` (masked partial words AND partial
+//!   lane blocks);
+//! * every `Schedule` (static | sorted | steal);
+//! * every worker thread count (from `VGP_EVAL_THREADS` when set — CI
+//!   runs this file once at 1 and once at 8 — else {1, 2, 8}).
+
+use vgp::gp::eval::{BatchEvaluator, EvalOpts, Schedule};
+use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::primset::{bool_set, regression_set, PrimSet};
+use vgp::gp::problems::{ant, interest_point};
+use vgp::gp::tape::{self, opcodes, BoolCases, RegCases, LANE_WIDTHS};
+use vgp::gp::tree::Tree;
+use vgp::gp::Fitness;
+use vgp::util::rng::Rng;
+
+/// Worker thread counts under test: pinned by the CI matrix via
+/// `VGP_EVAL_THREADS`, a small spread otherwise.
+fn threads_under_test() -> Vec<usize> {
+    match std::env::var("VGP_EVAL_THREADS") {
+        Ok(v) => vec![v.parse().expect("VGP_EVAL_THREADS must be a thread count")],
+        Err(_) => vec![1, 2, 8],
+    }
+}
+
+const SCHEDULES: [Schedule; 3] = [Schedule::Static, Schedule::Sorted, Schedule::Steal];
+
+fn assert_fitness_bits(a: &[Fitness], b: &[Fitness], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.raw.to_bits(), y.raw.to_bits(), "{label}: tree {i} raw");
+        assert_eq!(x.hits, y.hits, "{label}: tree {i} hits");
+    }
+}
+
+// ------------------------------------------------------------- boolean
+
+/// Naive recursive interpreter over the preorder tree for ONE case
+/// (variable `v` reads bit `v` of the case index). Dispatches on the
+/// primitive's tape opcode but shares nothing with the tape machine:
+/// no postfix, no packing, no stack.
+fn eval_bool_tree(tree: &Tree, ps: &PrimSet, case: u64, i: &mut usize) -> bool {
+    use opcodes::*;
+    let op = tree.ops[*i] as usize;
+    *i += 1;
+    let tape_op = ps.prims[op].tape_op;
+    if (0..BOOL_NUM_VARS).contains(&tape_op) {
+        return (case >> tape_op) & 1 == 1;
+    }
+    match tape_op {
+        BOOL_OP_NOT => !eval_bool_tree(tree, ps, case, i),
+        BOOL_OP_AND | BOOL_OP_OR | BOOL_OP_NAND | BOOL_OP_NOR | BOOL_OP_XOR => {
+            let a = eval_bool_tree(tree, ps, case, i);
+            let b = eval_bool_tree(tree, ps, case, i);
+            match tape_op {
+                BOOL_OP_AND => a & b,
+                BOOL_OP_OR => a | b,
+                BOOL_OP_NAND => !(a & b),
+                BOOL_OP_NOR => !(a | b),
+                _ => a ^ b,
+            }
+        }
+        BOOL_OP_IF => {
+            let c = eval_bool_tree(tree, ps, case, i);
+            let t = eval_bool_tree(tree, ps, case, i);
+            let e = eval_bool_tree(tree, ps, case, i);
+            if c {
+                t
+            } else {
+                e
+            }
+        }
+        other => unreachable!("non-boolean tape op {other}"),
+    }
+}
+
+/// Case-at-a-time hit count against the target function `f`.
+fn naive_bool_fitness(
+    tree: &Tree,
+    ps: &PrimSet,
+    ncases: u64,
+    f: &dyn Fn(u64) -> bool,
+) -> Fitness {
+    if tape::compile(tree, ps, opcodes::BOOL_NOP).is_err() {
+        return Fitness::worst();
+    }
+    let mut hits = 0u64;
+    for case in 0..ncases {
+        let mut i = 0;
+        if eval_bool_tree(tree, ps, case, &mut i) == f(case) {
+            hits += 1;
+        }
+    }
+    Fitness { raw: (ncases - hits) as f64, hits: hits as u32 }
+}
+
+fn bool_differential(
+    label: &str,
+    ps: &PrimSet,
+    cases: &BoolCases,
+    f: &dyn Fn(u64) -> bool,
+    pop: &[Tree],
+) {
+    let naive: Vec<Fitness> =
+        pop.iter().map(|t| naive_bool_fitness(t, ps, cases.ncases, f)).collect();
+    for threads in threads_under_test() {
+        for schedule in SCHEDULES {
+            for lanes in LANE_WIDTHS {
+                let mut ev = BatchEvaluator::with_opts(EvalOpts { threads, schedule, lanes });
+                let got = ev.evaluate_bool(pop, ps, cases);
+                assert_fitness_bits(
+                    &got,
+                    &naive,
+                    &format!("{label} t={threads} {} l={lanes}", schedule.name()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multiplexer6_tape_kernel_matches_naive_interpreter() {
+    let names: &[&str] = &["a0", "a1", "d0", "d1", "d2", "d3"];
+    let ps = bool_set(6, true, names);
+    let f = |case: u64| {
+        let addr = (case & 0b11) as usize;
+        (case >> (2 + addr)) & 1 == 1
+    };
+    let cases = BoolCases::truth_table(6, f);
+    let mut rng = Rng::new(101);
+    let pop = ramped_half_and_half(&mut rng, &ps, 120, 2, 6);
+    bool_differential("mux6", &ps, &cases, &f, &pop);
+}
+
+#[test]
+fn parity5_tape_kernel_matches_naive_interpreter() {
+    let names: &[&str] = &["b0", "b1", "b2", "b3", "b4"];
+    let ps = bool_set(5, false, names);
+    let f = |case: u64| case.count_ones() % 2 == 0;
+    let cases = BoolCases::truth_table(5, f);
+    let mut rng = Rng::new(103);
+    let pop = ramped_half_and_half(&mut rng, &ps, 120, 2, 6);
+    bool_differential("parity5", &ps, &cases, &f, &pop);
+}
+
+#[test]
+fn ragged_tail_case_sets_match_naive_interpreter() {
+    // ncases chosen so every lane width sees a partial word AND a
+    // partial lane block: 37 (1 word), 100 (2 words), 170 (3 words),
+    // 290 (5 words), 449 (8 words, 1-bit tail)
+    let names: &[&str] = &["b0", "b1", "b2", "b3", "b4", "b5", "b6", "b7", "b8"];
+    let ps = bool_set(9, true, names);
+    let f = |case: u64| (case * 2654435761) % 7 < 3;
+    let mut rng = Rng::new(107);
+    let pop = ramped_half_and_half(&mut rng, &ps, 60, 2, 5);
+    for ncases in [37u64, 100, 170, 290, 449] {
+        let cases = BoolCases::truth_table_prefix(9, ncases, f);
+        assert_eq!(cases.ncases, ncases);
+        bool_differential(&format!("ragged{ncases}"), &ps, &cases, &f, &pop);
+    }
+}
+
+// ---------------------------------------------------------- regression
+
+/// Naive recursive f32 interpreter, mirroring the kernel's protected
+/// semantics (DIV guard, LOG guard, EXP clamp) in plain tree form.
+fn eval_reg_tree(tree: &Tree, ps: &PrimSet, x: &[f32], i: &mut usize) -> f32 {
+    use opcodes::*;
+    let op = tree.ops[*i] as usize;
+    let konst = tree.consts[*i];
+    *i += 1;
+    let tape_op = ps.prims[op].tape_op;
+    if (0..REG_NUM_VARS).contains(&tape_op) {
+        return x.get(tape_op as usize).copied().unwrap_or(0.0);
+    }
+    if tape_op == REG_OP_CONST {
+        return konst;
+    }
+    match tape_op {
+        REG_OP_ADD | REG_OP_SUB | REG_OP_MUL | REG_OP_DIV => {
+            let a = eval_reg_tree(tree, ps, x, i);
+            let b = eval_reg_tree(tree, ps, x, i);
+            match tape_op {
+                REG_OP_ADD => a + b,
+                REG_OP_SUB => a - b,
+                REG_OP_MUL => a * b,
+                _ => {
+                    if b.abs() < 1e-9 {
+                        1.0
+                    } else {
+                        a / b
+                    }
+                }
+            }
+        }
+        REG_OP_SIN => eval_reg_tree(tree, ps, x, i).sin(),
+        REG_OP_COS => eval_reg_tree(tree, ps, x, i).cos(),
+        REG_OP_EXP => eval_reg_tree(tree, ps, x, i).clamp(-50.0, 50.0).exp(),
+        REG_OP_LOG => {
+            let a = eval_reg_tree(tree, ps, x, i);
+            if a.abs() < 1e-9 {
+                0.0
+            } else {
+                a.abs().ln()
+            }
+        }
+        REG_OP_NEG => -eval_reg_tree(tree, ps, x, i),
+        other => unreachable!("non-regression tape op {other}"),
+    }
+}
+
+fn naive_reg_fitness(tree: &Tree, ps: &PrimSet, cases: &RegCases) -> Fitness {
+    use opcodes::*;
+    if tape::compile(tree, ps, REG_NOP).is_err() {
+        return Fitness::worst();
+    }
+    let mut sse = 0f64;
+    let mut hits = 0u32;
+    for k in 0..cases.ncases() {
+        let x: Vec<f32> = cases.x.iter().map(|col| col[k]).collect();
+        let mut i = 0;
+        let out = eval_reg_tree(tree, ps, &x, &mut i);
+        let err = (out - cases.y[k]) as f64;
+        sse += err * err;
+        if err.abs() <= REG_HIT_EPS as f64 {
+            hits += 1;
+        }
+    }
+    Fitness { raw: sse, hits }
+}
+
+#[test]
+fn regression_tape_kernel_matches_naive_interpreter() {
+    let ps = regression_set(1);
+    // 23 cases: not a multiple of anything interesting, on purpose
+    let xs: Vec<f32> = (0..23).map(|i| -1.0 + i as f32 * 0.09).collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x * x * x - 0.5 * x + 0.25).collect();
+    let cases = RegCases { x: vec![xs], y: ys };
+    let mut rng = Rng::new(109);
+    let pop = ramped_half_and_half(&mut rng, &ps, 150, 2, 6);
+    let naive: Vec<Fitness> = pop.iter().map(|t| naive_reg_fitness(t, &ps, &cases)).collect();
+    for threads in threads_under_test() {
+        for schedule in SCHEDULES {
+            let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                threads,
+                schedule,
+                lanes: tape::DEFAULT_LANES,
+            });
+            let got = ev.evaluate_reg(&pop, &ps, &cases);
+            assert_fitness_bits(&got, &naive, &format!("reg t={threads} {}", schedule.name()));
+        }
+    }
+}
+
+// ----------------------------------------------- tree-walk (ant / IP)
+
+#[test]
+fn ant_batch_fanout_matches_sequential_walks() {
+    let ps = ant::ant_set();
+    let trail = ant::santa_fe_trail();
+    let mut rng = Rng::new(113);
+    let pop = ramped_half_and_half(&mut rng, &ps, 90, 2, 6);
+    let naive: Vec<Fitness> = pop
+        .iter()
+        .map(|t| {
+            let eaten = ant::run_ant(t, &ps, &trail);
+            Fitness { raw: (ant::FOOD_PELLETS as u32 - eaten) as f64, hits: eaten }
+        })
+        .collect();
+    for threads in threads_under_test() {
+        for schedule in SCHEDULES {
+            let mut ev = ant::NativeEvaluator::with_opts(EvalOpts {
+                threads,
+                schedule,
+                lanes: tape::DEFAULT_LANES,
+            });
+            let got = vgp::gp::Evaluator::evaluate(&mut ev, &pop, &ps);
+            assert_fitness_bits(&got, &naive, &format!("ant t={threads} {}", schedule.name()));
+        }
+    }
+}
+
+#[test]
+fn interest_point_batch_fanout_matches_sequential_walks() {
+    let ps = interest_point::ip_set();
+    let mut rng = Rng::new(127);
+    let pop = ramped_half_and_half(&mut rng, &ps, 8, 2, 3);
+    let base = interest_point::synth_image(4);
+    let naive: Vec<Fitness> = pop
+        .iter()
+        .map(|t| {
+            let r = (interest_point::repeatability(t, &ps, &base, 3, 0)
+                + interest_point::repeatability(t, &ps, &base, 0, 3))
+                / 2.0;
+            Fitness { raw: 1.0 - r, hits: (r * 100.0) as u32 }
+        })
+        .collect();
+    for threads in threads_under_test() {
+        for schedule in SCHEDULES {
+            let mut ev = interest_point::NativeEvaluator::with_opts(
+                4,
+                EvalOpts { threads, schedule, lanes: tape::DEFAULT_LANES },
+            );
+            let got = vgp::gp::Evaluator::evaluate(&mut ev, &pop, &ps);
+            assert_fitness_bits(&got, &naive, &format!("ip t={threads} {}", schedule.name()));
+        }
+    }
+}

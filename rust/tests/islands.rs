@@ -16,6 +16,7 @@ use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::churn::PoolParams;
 use vgp::coordinator::{exec, simulate_island_campaign, IslandCampaign};
 use vgp::gp::engine::Checkpoint;
+use vgp::gp::eval::EvalOpts;
 use vgp::gp::islands::{self, IslandSpec};
 use vgp::gp::problems::ProblemKind;
 use vgp::sim::SimConfig;
@@ -218,6 +219,121 @@ fn churned_deme_times_out_to_empty_immigrants_without_deadlock() {
     assert!(c.merge_best(core.assimilated()).is_some());
 }
 
+// ---------------------------------------- (c') timeout/late-arrival races
+
+/// One adversarial interleaving of the straggler-timeout race: demes 0
+/// and 1 finish epoch 0 (in `variant`-dependent order), deme 2's WU
+/// stays in flight past the migration timeout — so deme 0's epoch 1
+/// (which imports from deme 2 in the ring) is released with an EMPTY
+/// immigrant buffer — and only THEN does deme 2's perfectly valid
+/// result arrive. Returns a fingerprint of every released spec and
+/// assimilated payload.
+fn run_late_arrival_scenario(variant: usize) -> String {
+    let mut c = campaign("late", 3, 2);
+    c.migration_timeout = 600.0;
+    let mut core = ServerCore::new(ServerConfig::default());
+    let mut ex = MigrationExchange::new(c.exchange_config());
+    ex.install(&mut core, c.workunits());
+    let hosts: Vec<u64> = (0..3).map(|i| core.register_host(host(&format!("h{i}")))).collect();
+    // all three epoch-0 WUs dispatch (feeder order: demes 0, 1, 2)
+    let (r0, w0, _) = core.request_work(hosts[0], 1.0).unwrap();
+    let (r1, w1, _) = core.request_work(hosts[1], 1.0).unwrap();
+    let (r2, w2, _) = core.request_work(hosts[2], 1.0).unwrap();
+    assert_eq!(w2.spec.u64_of("deme").unwrap(), 2);
+    let p0 = exec::run_island_wu_native(&w0.spec).unwrap();
+    let p1 = exec::run_island_wu_native(&w1.spec).unwrap();
+    let p2 = exec::run_island_wu_native(&w2.spec).unwrap();
+    // demes 0 and 1 report promptly — arrival order is adversarial
+    if variant == 0 {
+        core.report_success(r0, 2.0, 1.0, p0);
+        core.report_success(r1, 2.0, 1.0, p1);
+    } else {
+        core.report_success(r1, 2.0, 1.0, p1);
+        core.report_success(r0, 2.0, 1.0, p0);
+    }
+    ex.poll(&mut core, 3.0);
+    assert!(ex.is_released(1, 1), "deme 1 imports from banked deme 0");
+    assert!(!ex.is_released(0, 1), "deme 0 still waits on the straggling deme 2");
+    // the migration timeout fires first...
+    ex.poll(&mut core, 2.0 + 601.0);
+    assert!(ex.is_released(0, 1), "timeout releases deme 0's epoch 1");
+    assert_eq!(ex.stats.timeouts, 1);
+    let spec01 = core.db.wu(ex.wu_id(0, 1)).unwrap().spec.clone();
+    assert_eq!(
+        spec01.get("immigrants").and_then(Json::as_arr).unwrap().len(),
+        0,
+        "written-off source yields an empty immigrant buffer"
+    );
+    let released_at_timeout = ex.stats.released;
+    if variant == 2 {
+        // extra transitioner ticks between timeout and the late result
+        ex.poll(&mut core, 610.0);
+        ex.poll(&mut core, 620.0);
+    }
+    // ...and deme 2's late-but-valid result lands AFTER the write-off
+    core.report_success(r2, 630.0, 1.0, p2);
+    ex.poll(&mut core, 631.0);
+    // the late checkpoint revives deme 2's own chain (hard dependency
+    // satisfied), with real immigrants from its live source deme 1
+    assert!(ex.is_released(2, 1), "late own-checkpoint still releases deme 2's next epoch");
+    assert_eq!(
+        ex.stats.released,
+        released_at_timeout + 1,
+        "exactly one new release — nothing re-released"
+    );
+    let spec21 = core.db.wu(ex.wu_id(2, 1)).unwrap().spec.clone();
+    assert_eq!(
+        spec21.get("immigrants").and_then(Json::as_arr).unwrap().len(),
+        2,
+        "live source delivers its migration_k emigrants to the revived deme"
+    );
+    // the already-released epoch's spec must not have been touched by
+    // the late bank (no double-release, no spec mutation)
+    let spec01_after = core.db.wu(ex.wu_id(0, 1)).unwrap().spec.clone();
+    assert_eq!(spec01.to_string(), spec01_after.to_string(), "released spec mutated");
+    assert_eq!(ex.stats.timeouts, 1, "late arrival must not recount the timeout");
+    // drain epoch 1 to completion
+    for round in 0..10 {
+        let t = 700.0 + round as f64 * 60.0;
+        let mut done: Vec<(u64, Json)> = Vec::new();
+        for &h in &hosts {
+            while let Some((rid, wu, _)) = core.request_work(h, t) {
+                done.push((rid, exec::run_island_wu_native(&wu.spec).unwrap()));
+            }
+        }
+        for (rid, payload) in done {
+            core.report_success(rid, t, 1.0, payload);
+        }
+        ex.poll(&mut core, t);
+        if core.is_complete() {
+            break;
+        }
+    }
+    assert!(core.is_complete(), "campaign must finish despite the race");
+    assert_eq!(ex.stats.released, 3, "each deme's epoch 1 released exactly once");
+    // fingerprint: released specs + assimilated payloads, name-sorted
+    let mut lines: Vec<String> = core
+        .assimilated()
+        .iter()
+        .map(|a| format!("{} {}", a.wu_name, a.payload))
+        .collect();
+    for d in 0..3 {
+        let spec = core.db.wu(ex.wu_id(d, 1)).unwrap().spec.clone();
+        lines.push(format!("spec_d{d}_e1 {spec}"));
+    }
+    lines.sort();
+    lines.join("\n")
+}
+
+#[test]
+fn timeout_and_late_result_interleavings_are_equivalent_without_double_release() {
+    let a = run_late_arrival_scenario(0);
+    let b = run_late_arrival_scenario(1);
+    let c = run_late_arrival_scenario(2);
+    assert_eq!(a, b, "epoch-0 arrival order must not change released specs or payloads");
+    assert_eq!(a, c, "extra transitioner polls must not change released specs or payloads");
+}
+
 // ------------------------------------------------- checkpoint/resume
 
 #[test]
@@ -236,7 +352,7 @@ fn mid_epoch_checkpoint_resume_is_bit_identical() {
     // generations, push the LOCAL checkpoint through its JSON wire
     // format (BOINC client restart after churn), resume, finish
     let ispec = IslandSpec::from_json(&spec).unwrap();
-    let resumed = exec::with_native_evaluator(ProblemKind::Mux6, ispec.seed, 1, |ps, ev| {
+    let resumed = exec::with_native_evaluator(ProblemKind::Mux6, ispec.seed, EvalOpts::default(), |ps, ev| {
         let mut engine = islands::epoch_engine(&ispec, ps).unwrap();
         engine.step(ev);
         engine.step(ev);

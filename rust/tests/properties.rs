@@ -104,8 +104,8 @@ fn prop_tape_compile_matches_recursive_tree_eval() {
             let mut i = 0;
             let out = tree_eval(t, &ps, case, &mut i);
             let want = {
-                let w = (case / 32) as usize;
-                (m.cases.target[w] >> (case % 32)) & 1 == 1
+                let w = (case / 64) as usize;
+                (m.cases.target[w] >> (case % 64)) & 1 == 1
             };
             if out == want {
                 hits_tree += 1;

@@ -60,7 +60,8 @@ fn artifact_handles_case_chunking_mux20_slice() {
     let Some(rt) = runtime() else { return };
     let m = Multiplexer::new(3);
     let mut cases = m.cases.clone();
-    // triple the case set (3 x 64 = 192 words -> 3 artifact calls)
+    // triple the case set (3 x 64 = 192 u32 words -> 3 artifact calls;
+    // natively that's 96 u64 lane-block words, re-sliced on the fly)
     for v in 0..cases.inputs.len() {
         let col = cases.inputs[v].clone();
         cases.inputs[v].extend_from_slice(&col);
