@@ -3,10 +3,15 @@
 //!   pre-PR-3 u32 kernel timed alongside on multiplexer-6 so the
 //!   wide-lane speedup is measured, not assumed (acceptance: >= 1.5x
 //!   single-thread)
-//! * the (threads x scheduler x lane-width) batch-eval matrix through
-//!   gp::eval, appended to the repo's perf trajectory
+//! * the boolean (threads x scheduler x lane-width) batch-eval matrix
+//!   through gp::eval, appended to the repo's perf trajectory
 //!   (`BENCH_hotpath.json`, override path with VGP_BENCH_JSON, tag
 //!   entries with BENCH_PR)
+//! * the regression (threads x scheduler x reg-lane-width) matrix on
+//!   the packed-column f32 kernel, with the verbatim pre-PR-4 scalar
+//!   kernel timed alongside for the speedup ratio (acceptance: the
+//!   packed kernel at L=4 beats the legacy scalar kernel on
+//!   mux-scale populations)
 //! * AOT-artifact evaluation via PJRT (same metric, Method-2 path)
 //! * tape compilation
 //! * scheduler RPC throughput
@@ -21,6 +26,7 @@ use vgp::coordinator::REFERENCE_FLOPS;
 use vgp::gp::eval::{BatchEvaluator, EvalOpts, Schedule};
 use vgp::gp::init::ramped_half_and_half;
 use vgp::gp::ops::{crossover, Limits};
+use vgp::gp::primset::regression_set;
 use vgp::gp::problems::multiplexer::Multiplexer;
 use vgp::gp::tape::{self, opcodes, LANE_WIDTHS};
 use vgp::sim::{SimConfig, Simulation};
@@ -118,6 +124,100 @@ mod legacy_u32 {
     }
 }
 
+/// The pre-PR-4 f32 regression kernel, kept verbatim (minus the
+/// RegCases struct, whose columns were plain unpadded `Vec`s then) as
+/// the measured baseline for the packed-column rebuild: one
+/// runtime-trip-count case loop per operator with the opcode match
+/// inside — no fixed-trip lane blocks for LLVM to vectorize.
+mod legacy_reg {
+    use vgp::gp::tape::opcodes;
+
+    fn tape_arity(op: i32) -> i32 {
+        use opcodes::*;
+        match op {
+            REG_OP_ADD | REG_OP_SUB | REG_OP_MUL | REG_OP_DIV => 2,
+            REG_OP_SIN | REG_OP_COS | REG_OP_EXP | REG_OP_LOG | REG_OP_NEG => 1,
+            _ => 0,
+        }
+    }
+
+    pub fn eval_reg_scalar(
+        tape_ops: &[i32],
+        tape_consts: &[f32],
+        x: &[Vec<f32>],
+        y: &[f32],
+        stack: &mut [f32],
+        zero: &[f32],
+    ) -> (f64, u32) {
+        use opcodes::*;
+        let c = y.len();
+        stack[..c].fill(0.0);
+        let mut sp: usize = 0;
+        for (t, &op) in tape_ops.iter().enumerate() {
+            if !(0..REG_NOP).contains(&op) {
+                continue;
+            }
+            if op < REG_NUM_VARS || op == REG_OP_CONST {
+                let konst = tape_consts[t];
+                let slot = sp.min(STACK_DEPTH as usize - 1);
+                if op == REG_OP_CONST {
+                    stack[slot * c..(slot + 1) * c].fill(konst);
+                } else {
+                    let col = x.get(op as usize).map(Vec::as_slice).unwrap_or(zero);
+                    stack[slot * c..(slot + 1) * c].copy_from_slice(col);
+                }
+                sp = (sp + 1).min(STACK_DEPTH as usize);
+                continue;
+            }
+            let ar = tape_arity(op) as usize;
+            let i1 = sp.saturating_sub(1);
+            let i2 = sp.saturating_sub(2);
+            let new_sp = (sp + 1).saturating_sub(ar).clamp(0, STACK_DEPTH as usize);
+            let wr = new_sp.saturating_sub(1);
+            for k in 0..c {
+                let x1 = stack[i1 * c + k];
+                let x2 = stack[i2 * c + k];
+                let r = match op {
+                    REG_OP_ADD => x2 + x1,
+                    REG_OP_SUB => x2 - x1,
+                    REG_OP_MUL => x2 * x1,
+                    REG_OP_DIV => {
+                        if x1.abs() < 1e-9 {
+                            1.0
+                        } else {
+                            x2 / x1
+                        }
+                    }
+                    REG_OP_SIN => x1.sin(),
+                    REG_OP_COS => x1.cos(),
+                    REG_OP_EXP => x1.clamp(-50.0, 50.0).exp(),
+                    REG_OP_LOG => {
+                        if x1.abs() < 1e-9 {
+                            0.0
+                        } else {
+                            x1.abs().ln()
+                        }
+                    }
+                    REG_OP_NEG => -x1,
+                    _ => unreachable!(),
+                };
+                stack[wr * c + k] = r;
+            }
+            sp = new_sp;
+        }
+        let mut sse = 0f64;
+        let mut hits = 0u32;
+        for k in 0..c {
+            let err = (stack[k] - y[k]) as f64;
+            sse += err * err;
+            if err.abs() <= REG_HIT_EPS as f64 {
+                hits += 1;
+            }
+        }
+        (sse, hits)
+    }
+}
+
 fn main() {
     println!("== hot-path microbenches ==");
     let b = Bench::new(3, 15);
@@ -203,7 +303,12 @@ fn main() {
     // threads x scheduler at the default lane width (mux11 workload)
     let ps = m.primset().clone();
     for lanes in LANE_WIDTHS {
-        let mut ev = BatchEvaluator::with_opts(EvalOpts { threads: 1, schedule: Schedule::Static, lanes });
+        let mut ev = BatchEvaluator::with_opts(EvalOpts {
+            threads: 1,
+            schedule: Schedule::Static,
+            lanes,
+            ..EvalOpts::default()
+        });
         let res = b.run_throughput(
             &format!("batch eval, 1 thread, {lanes} lane(s)"),
             progs_cases,
@@ -215,6 +320,7 @@ fn main() {
         );
         records.push(BenchRecord {
             pr: pr_tag.clone(),
+            kernel: "bool".to_string(),
             threads: 1,
             scheduler: "static".to_string(),
             lanes,
@@ -228,6 +334,7 @@ fn main() {
                 threads,
                 schedule,
                 lanes: tape::DEFAULT_LANES,
+                ..EvalOpts::default()
             });
             let res = b.run_throughput(
                 &format!("batch eval, {threads} thread(s), {}", schedule.name()),
@@ -240,6 +347,7 @@ fn main() {
             );
             records.push(BenchRecord {
                 pr: pr_tag.clone(),
+                kernel: "bool".to_string(),
                 threads,
                 scheduler: schedule.name().to_string(),
                 lanes: tape::DEFAULT_LANES,
@@ -253,6 +361,113 @@ fn main() {
     let t1 = throughputs[0].1;
     for &(threads, rate) in &throughputs[1..] {
         println!("      batch eval speedup @{threads} threads vs 1: {:.2}x", rate / t1);
+    }
+
+    // ---- regression kernel: the packed-column f32 matrix vs the
+    // verbatim pre-PR-4 scalar kernel, on a mux-scale population
+    // (4000 programs, the paper's mux11 campaign size) x 256 cases
+    let rps = regression_set(1);
+    let mut rrng = Rng::new(2);
+    let rpop = ramped_half_and_half(&mut rrng, &rps, 4000, 2, 6);
+    let rtapes: Vec<_> = rpop
+        .iter()
+        .map(|t| tape::compile(t, &rps, opcodes::REG_NOP).unwrap())
+        .collect();
+    let reg_n = 256usize;
+    let xs: Vec<f32> = (0..reg_n).map(|i| -1.0 + 2.0 * i as f32 / (reg_n - 1) as f32).collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x + x * x + x * x * x + x * x * x * x).collect();
+    let rcases = tape::RegCases::new(vec![xs.clone()], ys.clone());
+    let reg_progs_cases = rpop.len() as f64 * reg_n as f64;
+    let mut legacy_stack = vec![0f32; opcodes::STACK_DEPTH as usize * reg_n];
+    let legacy_zero = vec![0f32; reg_n];
+    let legacy_x = vec![xs.clone()];
+    let old_reg = b.run_throughput(
+        "legacy scalar reg kernel (4000 progs x 256 cases)",
+        reg_progs_cases,
+        "prog*case",
+        || {
+            let mut acc = 0f64;
+            for t in &rtapes {
+                let (sse, _) = legacy_reg::eval_reg_scalar(
+                    &t.ops,
+                    &t.consts,
+                    &legacy_x,
+                    &ys,
+                    &mut legacy_stack,
+                    &legacy_zero,
+                );
+                acc += sse;
+            }
+            std::hint::black_box(acc);
+        },
+    );
+    records.push(BenchRecord {
+        pr: pr_tag.clone(),
+        kernel: "reg-legacy".to_string(),
+        threads: 1,
+        scheduler: "static".to_string(),
+        lanes: 0,
+        evals_per_sec: rpop.len() as f64 * old_reg.per_sec(),
+    });
+    let mut reg_scratch = tape::RegScratch::new(rcases.ncases());
+    let mut reg_l4_rate = 0.0f64;
+    for lanes in LANE_WIDTHS {
+        let res = b.run_throughput(
+            &format!("packed-column reg kernel, 1 thread, {lanes} lane(s)"),
+            reg_progs_cases,
+            "prog*case",
+            || {
+                let mut acc = 0f64;
+                for t in &rtapes {
+                    let (sse, _) =
+                        tape::eval_reg_with_lanes(&t.ops, &t.consts, &rcases, &mut reg_scratch, lanes);
+                    acc += sse;
+                }
+                std::hint::black_box(acc);
+            },
+        );
+        if lanes == 4 {
+            reg_l4_rate = res.per_sec();
+        }
+        records.push(BenchRecord {
+            pr: pr_tag.clone(),
+            kernel: "reg".to_string(),
+            threads: 1,
+            scheduler: "static".to_string(),
+            lanes,
+            evals_per_sec: rpop.len() as f64 * res.per_sec(),
+        });
+    }
+    println!(
+        "      packed-column vs legacy scalar reg kernel speedup (L=4, 1 thread): {:.2}x (target > 1x)",
+        reg_l4_rate / old_reg.per_sec()
+    );
+    for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+        for threads in [1usize, 2, 4, 8] {
+            let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                threads,
+                schedule,
+                reg_lanes: tape::DEFAULT_REG_LANES,
+                ..EvalOpts::default()
+            });
+            let res = b.run_throughput(
+                &format!("reg batch eval, {threads} thread(s), {}", schedule.name()),
+                reg_progs_cases,
+                "prog*case",
+                || {
+                    let fits = ev.evaluate_reg(&rpop, &rps, &rcases);
+                    std::hint::black_box(&fits);
+                },
+            );
+            records.push(BenchRecord {
+                pr: pr_tag.clone(),
+                kernel: "reg".to_string(),
+                threads,
+                scheduler: schedule.name().to_string(),
+                lanes: tape::DEFAULT_REG_LANES,
+                evals_per_sec: rpop.len() as f64 * res.per_sec(),
+            });
+        }
     }
 
     // ---- artifact eval (if built)

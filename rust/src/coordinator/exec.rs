@@ -18,7 +18,7 @@ use crate::gp::islands::{self, IslandSpec};
 use crate::gp::primset::PrimSet;
 use crate::gp::problems::{ant, interest_point, multiplexer, parity, regression, ProblemKind};
 use crate::gp::Evaluator;
-use crate::runtime::{BoolArtifactEvaluator, Runtime};
+use crate::runtime::{BoolArtifactEvaluator, RegArtifactEvaluator, Runtime};
 use crate::util::json::Json;
 
 /// Parse a WU spec into engine parameters.
@@ -41,11 +41,12 @@ pub fn threads_of_spec(spec: &Json) -> usize {
 }
 
 /// Worker-side evaluation knobs for a WU spec: `threads`,
-/// `eval_lanes` (boolean kernel lane width) and `schedule`
-/// (static|sorted|steal). All three are pure throughput knobs —
-/// payloads are bit-identical for every combination, so heterogeneous
-/// volunteer configurations never break quorum agreement. Unknown or
-/// missing values fall back to the defaults.
+/// `eval_lanes` (boolean kernel lane width), `reg_lanes` (regression
+/// kernel f32 lane width) and `schedule` (static|sorted|steal). All
+/// four are pure throughput knobs — payloads are bit-identical for
+/// every combination, so heterogeneous volunteer configurations never
+/// break quorum agreement. Unknown or missing values fall back to the
+/// defaults.
 pub fn eval_opts_of_spec(spec: &Json) -> EvalOpts {
     let d = EvalOpts::default();
     EvalOpts {
@@ -56,6 +57,11 @@ pub fn eval_opts_of_spec(spec: &Json) -> EvalOpts {
             .and_then(|s| Schedule::parse(s).ok())
             .unwrap_or(d.schedule),
         lanes: spec.get("eval_lanes").and_then(Json::as_u64).map(|l| l as usize).unwrap_or(d.lanes),
+        reg_lanes: spec
+            .get("reg_lanes")
+            .and_then(Json::as_u64)
+            .map(|l| l as usize)
+            .unwrap_or(d.reg_lanes),
     }
 }
 
@@ -71,6 +77,23 @@ pub fn payload_of(run: &crate::gp::engine::RunResult) -> Json {
         .set("found_perfect", run.found_perfect)
         .set("best_size", run.best.len() as u64)
 }
+
+/// Address-bit count `k` of a multiplexer problem (2^k data bits).
+/// One source of truth for BOTH evaluation methods: if Method 1 and
+/// Method 2 disagreed on the case set, the same WU spec would produce
+/// quorum-divergent payloads.
+fn mux_k(problem: ProblemKind) -> usize {
+    match problem {
+        ProblemKind::Mux6 => 2,
+        ProblemKind::Mux11 => 3,
+        _ => 4,
+    }
+}
+
+/// Fitness-case count of the quartic regression problem (Koza's 20
+/// points on [-1, 1]) — shared by both evaluation methods like
+/// [`mux_k`].
+const QUARTIC_NCASES: usize = 20;
 
 /// Build a problem's primitive set and native (Method-1) evaluator and
 /// hand them to `f` — the one dispatch point shared by whole-run WUs,
@@ -90,12 +113,7 @@ pub fn with_native_evaluator<R>(
             f(&ps, &mut ev)
         }
         ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
-            let k = match problem {
-                ProblemKind::Mux6 => 2,
-                ProblemKind::Mux11 => 3,
-                _ => 4,
-            };
-            let m = multiplexer::Multiplexer::new(k);
+            let m = multiplexer::Multiplexer::new(mux_k(problem));
             let ps = m.primset().clone();
             let mut ev = multiplexer::NativeEvaluator::with_opts(&m, opts);
             f(&ps, &mut ev)
@@ -107,7 +125,7 @@ pub fn with_native_evaluator<R>(
             f(&ps, &mut ev)
         }
         ProblemKind::Quartic => {
-            let q = regression::Quartic::new(20);
+            let q = regression::Quartic::new(QUARTIC_NCASES);
             let ps = q.primset().clone();
             let mut ev = regression::NativeEvaluator::with_opts(&q, opts);
             f(&ps, &mut ev)
@@ -157,21 +175,30 @@ pub fn run_wu_auto(spec: &Json) -> Result<Json> {
     }
 }
 
-/// Execute a boolean-problem WU spec through the AOT artifact
-/// (Method 2). Falls back with an error for non-tape problems.
+/// Execute a tape-problem WU spec through the AOT artifact
+/// (Method 2): multiplexers via the boolean artifact, quartic via the
+/// regression artifact. The spec's `threads`/`schedule` knobs shape
+/// the chunked artifact dispatch exactly like the native path
+/// (payloads stay byte-identical regardless); non-tape problems fall
+/// back with an error.
 pub fn run_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
     let (problem, params) = params_of_spec(spec)?;
-    let k = match problem {
-        ProblemKind::Mux6 => 2,
-        ProblemKind::Mux11 => 3,
-        ProblemKind::Mux20 => 4,
-        other => anyhow::bail!("artifact path supports multiplexers, got {other:?}"),
+    let opts = eval_opts_of_spec(spec);
+    let run = match problem {
+        ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
+            let m = multiplexer::Multiplexer::new(mux_k(problem));
+            let ps = m.primset().clone();
+            let mut ev = BoolArtifactEvaluator::with_opts(rt, &m.cases, opts);
+            Engine::new(params, &ps).run(&mut ev)
+        }
+        ProblemKind::Quartic => {
+            let q = regression::Quartic::new(QUARTIC_NCASES);
+            let ps = q.primset().clone();
+            let mut ev = RegArtifactEvaluator::with_opts(rt, &q.cases, opts);
+            Engine::new(params, &ps).run(&mut ev)
+        }
+        other => anyhow::bail!("artifact path supports tape problems (mux/quartic), got {other:?}"),
     };
-    let m = multiplexer::Multiplexer::new(k);
-    let ps = m.primset().clone();
-    let mut ev = BoolArtifactEvaluator { rt, cases: &m.cases, evals: 0 };
-    let run = Engine::new(params, &ps).run(&mut ev);
-    let _ = ev.evals;
     Ok(payload_of(&run))
 }
 
@@ -236,11 +263,17 @@ mod tests {
         assert_eq!(opts.threads, 1);
         assert_eq!(opts.schedule, Schedule::Static);
         assert_eq!(opts.lanes, crate::gp::tape::DEFAULT_LANES);
-        let spec = Json::obj().set("threads", 4u64).set("schedule", "steal").set("eval_lanes", 8u64);
+        assert_eq!(opts.reg_lanes, crate::gp::tape::DEFAULT_REG_LANES);
+        let spec = Json::obj()
+            .set("threads", 4u64)
+            .set("schedule", "steal")
+            .set("eval_lanes", 8u64)
+            .set("reg_lanes", 2u64);
         let opts = eval_opts_of_spec(&spec);
         assert_eq!(opts.threads, 4);
         assert_eq!(opts.schedule, Schedule::Steal);
         assert_eq!(opts.lanes, 8);
+        assert_eq!(opts.reg_lanes, 2);
         // unknown schedule falls back instead of poisoning the WU
         let spec = Json::obj().set("schedule", "mystery");
         assert_eq!(eval_opts_of_spec(&spec).schedule, Schedule::Static);
@@ -261,6 +294,25 @@ mod tests {
                     .set("eval_lanes", lanes);
                 let payload = run_wu_native(&spec).unwrap().to_string();
                 assert_eq!(base, payload, "schedule={schedule} lanes={lanes}");
+            }
+        }
+    }
+
+    #[test]
+    fn quartic_payload_identical_across_reg_lanes() {
+        // the regression kernel's f32 lane width rides the same quorum
+        // contract as the boolean lanes: payload bytes never move
+        let c = Campaign::new("t", ProblemKind::Quartic, 1, 5, 80);
+        let base = run_wu_native(&c.wu_spec(0)).unwrap().to_string();
+        for schedule in ["static", "sorted", "steal"] {
+            for reg_lanes in [1u64, 2, 4] {
+                let spec = c
+                    .wu_spec(0)
+                    .set("threads", 4u64)
+                    .set("schedule", schedule)
+                    .set("reg_lanes", reg_lanes);
+                let payload = run_wu_native(&spec).unwrap().to_string();
+                assert_eq!(base, payload, "schedule={schedule} reg_lanes={reg_lanes}");
             }
         }
     }

@@ -39,6 +39,9 @@ pub struct Campaign {
     /// Boolean-kernel lane width per WU (`gp::tape` lane blocks);
     /// like `threads`, a pure throughput knob — bit-identical payloads.
     pub eval_lanes: usize,
+    /// Regression-kernel f32 lane width per WU (`gp::tape`
+    /// packed-column blocks); same contract as `eval_lanes`.
+    pub reg_lanes: usize,
     /// Work-distribution policy for the worker's eval fan-out
     /// (static|sorted|steal; see `gp::eval::Schedule`).
     pub schedule: Schedule,
@@ -56,6 +59,7 @@ impl Campaign {
             seed: 1,
             threads: 1,
             eval_lanes: tape::DEFAULT_LANES,
+            reg_lanes: tape::DEFAULT_REG_LANES,
             schedule: Schedule::Static,
         }
     }
@@ -75,6 +79,8 @@ impl Campaign {
         c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
         c.eval_lanes =
             tape::normalize_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize);
+        c.reg_lanes =
+            tape::normalize_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize);
         c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
         c.redundancy = (
             cfg.u64_or("campaign", "target_nresults", 1) as usize,
@@ -101,6 +107,7 @@ impl Campaign {
             .set("run", run as u64)
             .set("threads", self.threads as u64)
             .set("eval_lanes", self.eval_lanes as u64)
+            .set("reg_lanes", self.reg_lanes as u64)
             .set("schedule", self.schedule.name())
     }
 
@@ -153,6 +160,8 @@ pub struct IslandCampaign {
     pub threads: usize,
     /// boolean-kernel lane width (see [`Campaign::eval_lanes`])
     pub eval_lanes: usize,
+    /// regression-kernel f32 lane width (see [`Campaign::reg_lanes`])
+    pub reg_lanes: usize,
     /// eval fan-out policy (see [`Campaign::schedule`])
     pub schedule: Schedule,
 }
@@ -181,6 +190,7 @@ impl IslandCampaign {
             seed: 1,
             threads: 1,
             eval_lanes: tape::DEFAULT_LANES,
+            reg_lanes: tape::DEFAULT_REG_LANES,
             schedule: Schedule::Static,
         }
     }
@@ -206,6 +216,8 @@ impl IslandCampaign {
         c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
         c.eval_lanes =
             tape::normalize_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize);
+        c.reg_lanes =
+            tape::normalize_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize);
         c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
         c.redundancy = (
             cfg.u64_or("campaign", "target_nresults", 1) as usize,
@@ -230,6 +242,7 @@ impl IslandCampaign {
             .set("seed", self.seed + deme as u64)
             .set("threads", self.threads as u64)
             .set("eval_lanes", self.eval_lanes as u64)
+            .set("reg_lanes", self.reg_lanes as u64)
             .set("schedule", self.schedule.name())
             .set("deme", deme as u64)
             .set("demes", self.demes as u64)
@@ -454,35 +467,41 @@ mod tests {
         assert_eq!(c.wu_spec(1).u64_of("seed").unwrap(), 10);
         // eval knobs default into every spec
         assert_eq!(c.wu_spec(0).u64_of("eval_lanes").unwrap() as usize, tape::DEFAULT_LANES);
+        assert_eq!(c.wu_spec(0).u64_of("reg_lanes").unwrap() as usize, tape::DEFAULT_REG_LANES);
         assert_eq!(c.wu_spec(0).str_of("schedule").unwrap(), "static");
     }
 
     #[test]
     fn campaign_from_config_reads_eval_knobs() {
         let cfg = crate::config::Config::parse(
-            "[campaign]\nproblem = mux6\neval_lanes = 8\nschedule = sorted\n",
+            "[campaign]\nproblem = mux6\neval_lanes = 8\nreg_lanes = 2\nschedule = sorted\n",
         )
         .unwrap();
         let c = Campaign::from_config(&cfg).unwrap();
         assert_eq!(c.eval_lanes, 8);
+        assert_eq!(c.reg_lanes, 2);
         assert_eq!(c.schedule, Schedule::Sorted);
         assert_eq!(c.wu_spec(0).u64_of("eval_lanes").unwrap(), 8);
+        assert_eq!(c.wu_spec(0).u64_of("reg_lanes").unwrap(), 2);
         assert_eq!(c.wu_spec(0).str_of("schedule").unwrap(), "sorted");
         // off-menu lane counts normalize instead of erroring...
-        let cfg = crate::config::Config::parse("[campaign]\neval_lanes = 5\n").unwrap();
+        let cfg = crate::config::Config::parse("[campaign]\neval_lanes = 5\nreg_lanes = 7\n").unwrap();
         assert_eq!(Campaign::from_config(&cfg).unwrap().eval_lanes, 4);
+        assert_eq!(Campaign::from_config(&cfg).unwrap().reg_lanes, 4);
         // ...but a bad schedule is a config error, not a silent default
         let cfg = crate::config::Config::parse("[campaign]\nschedule = fifo\n").unwrap();
         assert!(Campaign::from_config(&cfg).is_err());
         // island campaigns carry the same knobs
         let cfg = crate::config::Config::parse(
-            "[campaign]\nproblem = mux6\ndemes = 2\neval_lanes = 2\nschedule = steal\n",
+            "[campaign]\nproblem = mux6\ndemes = 2\neval_lanes = 2\nreg_lanes = 1\nschedule = steal\n",
         )
         .unwrap();
         let ic = IslandCampaign::from_config(&cfg).unwrap();
         assert_eq!(ic.eval_lanes, 2);
+        assert_eq!(ic.reg_lanes, 1);
         assert_eq!(ic.schedule, Schedule::Steal);
         assert_eq!(ic.wu_spec(0, 0).str_of("schedule").unwrap(), "steal");
+        assert_eq!(ic.wu_spec(0, 0).u64_of("reg_lanes").unwrap(), 1);
     }
 
     #[test]

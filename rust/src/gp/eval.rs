@@ -16,9 +16,9 @@
 //!   ordering** (every result lands at its original index no matter
 //!   which worker computed it, or when).
 //! * [`BatchEvaluator`] — ties the two together for the tape problem
-//!   families (packed boolean at a configurable lane width, f32
-//!   regression) and for arbitrary tree-walk fitness closures (ant,
-//!   interest point).
+//!   families (packed boolean and packed-column f32 regression, each
+//!   at a configurable lane width) and for arbitrary tree-walk
+//!   fitness closures (ant, interest point).
 //!
 //! # Scheduling and skew
 //!
@@ -41,7 +41,8 @@
 //! sequential per-tree evaluators (`tape::eval_bool_native`,
 //! `tape::eval_reg_native`, or the closure run in a plain loop),
 //! regardless of the configured thread count, [`Schedule`] and lane
-//! width. Work is partitioned by index, each item's computation
+//! widths (boolean `lanes` and regression `reg_lanes` alike). Work is
+//! partitioned by index, each item's computation
 //! touches only its own scratch, results are placed by original index,
 //! and no reduction reorders floating-point accumulation across items.
 //! Scheduling decides only *who* computes an item and *when* — never
@@ -85,14 +86,19 @@ impl TapeArena {
         self.consts.resize(trees.len() * TAPE_LEN, 0.0);
         self.ok.resize(trees.len(), false);
         for (i, tree) in trees.iter().enumerate() {
-            let res = tape::compile_into(
-                tree,
-                ps,
-                nop,
-                &mut self.ops[i * TAPE_LEN..(i + 1) * TAPE_LEN],
-                &mut self.consts[i * TAPE_LEN..(i + 1) * TAPE_LEN],
-            );
+            let ops = &mut self.ops[i * TAPE_LEN..(i + 1) * TAPE_LEN];
+            let consts = &mut self.consts[i * TAPE_LEN..(i + 1) * TAPE_LEN];
+            let res = tape::compile_into(tree, ps, nop, ops, consts);
             self.ok[i] = res.is_ok();
+            if res.is_err() {
+                // failed slots must still hold a harmless all-NOP tape:
+                // the artifact (Method 2) path ships whole arena chunks
+                // to the executable, so unspecified compile_into
+                // leftovers would ride the wire (the fitness for failed
+                // slots is discarded either way)
+                ops.fill(nop);
+                consts.fill(0.0);
+            }
         }
     }
 
@@ -159,19 +165,27 @@ impl Schedule {
 }
 
 /// Evaluation knobs threaded from WU specs / config / CLI into the
-/// batch pool: worker threads, work-distribution policy, and the
-/// boolean kernel's lane width. All three are pure throughput knobs —
-/// payloads are bit-identical for every combination.
+/// batch pool: worker threads, work-distribution policy, the boolean
+/// kernel's lane width (`lanes`, u64 words per block) and the
+/// regression kernel's lane width (`reg_lanes`, f32 values per
+/// block). All four are pure throughput knobs — payloads are
+/// bit-identical for every combination.
 #[derive(Clone, Copy, Debug)]
 pub struct EvalOpts {
     pub threads: usize,
     pub schedule: Schedule,
     pub lanes: usize,
+    pub reg_lanes: usize,
 }
 
 impl Default for EvalOpts {
     fn default() -> Self {
-        EvalOpts { threads: 1, schedule: Schedule::Static, lanes: tape::DEFAULT_LANES }
+        EvalOpts {
+            threads: 1,
+            schedule: Schedule::Static,
+            lanes: tape::DEFAULT_LANES,
+            reg_lanes: tape::DEFAULT_REG_LANES,
+        }
     }
 }
 
@@ -340,8 +354,9 @@ fn scatter_by_index<R>(n: usize, pairs: Vec<(usize, R)>) -> Vec<R> {
 
 /// Batched population evaluator: compile once per generation into a
 /// reusable [`TapeArena`], evaluate with per-thread scratch across a
-/// scoped worker pool under a configurable [`Schedule`] and boolean
-/// lane width. The problem `NativeEvaluator`s all delegate here;
+/// scoped worker pool under a configurable [`Schedule`] and kernel
+/// lane widths (boolean `lanes`, regression `reg_lanes`). The problem
+/// `NativeEvaluator`s all delegate here;
 /// construct them `with_opts(..)` (or `with_threads(..)`) to use more
 /// than one core or a skew-aware schedule.
 #[derive(Debug)]
@@ -349,6 +364,7 @@ pub struct BatchEvaluator {
     threads: usize,
     schedule: Schedule,
     lanes: usize,
+    reg_lanes: usize,
     arena: TapeArena,
     /// individual evaluations performed (for CP accounting)
     pub evals: u64,
@@ -370,6 +386,7 @@ impl BatchEvaluator {
             threads: opts.threads.max(1),
             schedule: opts.schedule,
             lanes: tape::normalize_lanes(opts.lanes),
+            reg_lanes: tape::normalize_lanes(opts.reg_lanes),
             arena: TapeArena::new(),
             evals: 0,
         }
@@ -397,6 +414,14 @@ impl BatchEvaluator {
 
     pub fn set_lanes(&mut self, lanes: usize) {
         self.lanes = tape::normalize_lanes(lanes);
+    }
+
+    pub fn reg_lanes(&self) -> usize {
+        self.reg_lanes
+    }
+
+    pub fn set_reg_lanes(&mut self, reg_lanes: usize) {
+        self.reg_lanes = tape::normalize_lanes(reg_lanes);
     }
 
     /// Per-item cost hints for the skew-aware schedules: tree size is
@@ -437,12 +462,14 @@ impl BatchEvaluator {
         )
     }
 
-    /// Score a population on f32 regression cases (quartic).
+    /// Score a population on packed-column f32 regression cases
+    /// (quartic), at the configured `reg_lanes` width.
     pub fn evaluate_reg(&mut self, trees: &[Tree], ps: &PrimSet, cases: &RegCases) -> Vec<Fitness> {
         self.arena.compile_population(trees, ps, opcodes::REG_NOP);
         self.evals += trees.len() as u64;
         let arena = &self.arena;
         let ncases = cases.ncases();
+        let reg_lanes = self.reg_lanes;
         let sizes = self.size_hints(trees);
         par_map_schedule(
             self.threads,
@@ -454,8 +481,13 @@ impl BatchEvaluator {
                 if !arena.is_ok(i) {
                     return Fitness::worst();
                 }
-                let (sse, hits) =
-                    tape::eval_reg_with(arena.ops_of(i), arena.consts_of(i), cases, scratch);
+                let (sse, hits) = tape::eval_reg_with_lanes(
+                    arena.ops_of(i),
+                    arena.consts_of(i),
+                    cases,
+                    scratch,
+                    reg_lanes,
+                );
                 Fitness { raw: sse, hits }
             },
         )
@@ -566,7 +598,12 @@ mod tests {
         for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
             for threads in [1usize, 3, 8] {
                 for lanes in tape::LANE_WIDTHS {
-                    let mut ev = BatchEvaluator::with_opts(EvalOpts { threads, schedule, lanes });
+                    let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                        threads,
+                        schedule,
+                        lanes,
+                        ..EvalOpts::default()
+                    });
                     let got = ev.evaluate_bool(&pop, &ps, &cases);
                     assert_eq!(got.len(), baseline.len());
                     for (a, b) in got.iter().zip(&baseline) {
@@ -627,7 +664,7 @@ mod tests {
         let ps = regression_set(1);
         let xs: Vec<f32> = (0..20).map(|i| -1.0 + i as f32 * 0.1).collect();
         let ys: Vec<f32> = xs.iter().map(|&x| x * x - x).collect();
-        let cases = RegCases { x: vec![xs], y: ys };
+        let cases = RegCases::new(vec![xs], ys);
         let mut rng = Rng::new(13);
         let pop = ramped_half_and_half(&mut rng, &ps, 61, 2, 5);
         let mut ev1 = BatchEvaluator::new(1);
@@ -638,6 +675,34 @@ mod tests {
             for (a, b) in got.iter().zip(&baseline) {
                 assert_eq!(a.raw.to_bits(), b.raw.to_bits(), "threads={threads}");
                 assert_eq!(a.hits, b.hits);
+            }
+        }
+    }
+
+    #[test]
+    fn reg_batch_identical_across_reg_lane_widths() {
+        // reg_lanes is the f32 analog of lanes: a pure throughput knob
+        // that must never move a fitness bit
+        let ps = regression_set(1);
+        let xs: Vec<f32> = (0..23).map(|i| -1.0 + i as f32 * 0.09).collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| x * x * x - x).collect();
+        let cases = RegCases::new(vec![xs], ys);
+        let mut rng = Rng::new(19);
+        let pop = ramped_half_and_half(&mut rng, &ps, 50, 2, 5);
+        let mut baseline_ev = BatchEvaluator::with_opts(EvalOpts { reg_lanes: 1, ..EvalOpts::default() });
+        let baseline = baseline_ev.evaluate_reg(&pop, &ps, &cases);
+        for reg_lanes in tape::LANE_WIDTHS {
+            for threads in [1usize, 4] {
+                let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                    threads,
+                    reg_lanes,
+                    ..EvalOpts::default()
+                });
+                let got = ev.evaluate_reg(&pop, &ps, &cases);
+                for (a, b) in got.iter().zip(&baseline) {
+                    assert_eq!(a.raw.to_bits(), b.raw.to_bits(), "reg_lanes={reg_lanes} threads={threads}");
+                    assert_eq!(a.hits, b.hits);
+                }
             }
         }
     }

@@ -227,7 +227,10 @@ impl NativeEvaluator {
 
     /// Full knob set. Detector trees convolve one image per node, so
     /// per-tree cost is strongly size-skewed — the workload the
-    /// `Sorted`/`Steal` schedules target.
+    /// `Sorted`/`Steal` schedules target. The lane knobs (`lanes`,
+    /// `reg_lanes`) only drive the tape kernels and are inert for this
+    /// tree-walk problem; accepting the full [`EvalOpts`] keeps WU
+    /// specs uniform across problems.
     pub fn with_opts(seed: u64, opts: EvalOpts) -> NativeEvaluator {
         NativeEvaluator { base: synth_image(seed), batch: BatchEvaluator::with_opts(opts) }
     }

@@ -19,7 +19,7 @@ impl Quartic {
             .map(|i| -1.0 + 2.0 * i as f32 / (ncases.max(2) - 1) as f32)
             .collect();
         let ys: Vec<f32> = xs.iter().map(|&x| x + x * x + x * x * x + x * x * x * x).collect();
-        Quartic { cases: RegCases { x: vec![xs], y: ys }, ps: regression_set(1) }
+        Quartic { cases: RegCases::new(vec![xs], ys), ps: regression_set(1) }
     }
 
     pub fn primset(&self) -> &PrimSet {
@@ -42,8 +42,9 @@ impl<'a> NativeEvaluator<'a> {
         Self::with_opts(problem, EvalOpts::with_threads(threads))
     }
 
-    /// Full knob set: threads, schedule (lanes are boolean-only but
-    /// harmless here).
+    /// Full knob set: threads, schedule, and `reg_lanes` — the f32
+    /// lane-block width of the packed-column kernel (`lanes` is the
+    /// boolean kernel's knob; harmless here).
     pub fn with_opts(problem: &'a Quartic, opts: EvalOpts) -> NativeEvaluator<'a> {
         NativeEvaluator { problem, batch: BatchEvaluator::with_opts(opts) }
     }
@@ -68,10 +69,10 @@ mod tests {
     fn case_generation_covers_interval() {
         let q = Quartic::new(20);
         assert_eq!(q.cases.ncases(), 20);
-        assert!((q.cases.x[0][0] + 1.0).abs() < 1e-6);
-        assert!((q.cases.x[0][19] - 1.0).abs() < 1e-6);
+        assert!((q.cases.x()[0][0] + 1.0).abs() < 1e-6);
+        assert!((q.cases.x()[0][19] - 1.0).abs() < 1e-6);
         // y(1) = 4
-        assert!((q.cases.y[19] - 4.0).abs() < 1e-5);
+        assert!((q.cases.y()[19] - 4.0).abs() < 1e-5);
     }
 
     #[test]

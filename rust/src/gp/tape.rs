@@ -32,6 +32,42 @@
 //! force the scalar kernel. The artifact (Method 2) contract is
 //! unchanged: it still consumes 32-bit words, re-sliced on the fly by
 //! [`BoolCases::u32_word`].
+//!
+//! # Packed-column f32 layout (the regression kernel)
+//!
+//! Regression fitness cases mirror the boolean rebuild in f32:
+//! [`RegCases`] stores one **padded column per variable**
+//! (structure-of-arrays), every column zero-padded to a multiple of
+//! [`REG_LANE_PAD`] so lane blocks of `L ∈ {1, 2, 4, 8}` f32 values
+//! always divide the column evenly — the kernel's inner loops have a
+//! compile-time trip count of exactly `L` and no ragged remainder,
+//! which is the shape stable rustc/LLVM auto-vectorizes (128/256-bit
+//! SIMD for the arithmetic operators; `sin`/`cos` stay libm calls).
+//! [`RegScratch`] holds the matching lane-blocked stack slabs
+//! (`STACK_DEPTH` padded columns in one flat buffer). Padding lanes
+//! may compute anything — including NaN/inf garbage — because the
+//! fitness reduction below never reads past the real case count.
+//!
+//! Every operator is applied **element-wise**: case `k`'s value is
+//! produced by the identical scalar f32 expression at every lane
+//! width, so — exactly like the boolean kernel — results are
+//! **bit-identical for every `L`** and `--reg-lanes` is a pure
+//! throughput knob. Pick `L = 8` (8 × f32 = 256-bit blocks, the
+//! default) on AVX2-class hosts, `L = 4` on plain SSE2/NEON, `L = 1`
+//! to force the scalar kernel.
+//!
+//! # Pinned SSE reduction order
+//!
+//! The regression fitness reduction is part of the quorum determinism
+//! contract and is **pinned**: one scalar pass over the real cases in
+//! ascending index order (`k = 0, 1, …, ncases-1`), each per-case f32
+//! error widened to f64 *before* squaring, squares accumulated into
+//! one f64 in that same order. No pairwise/blocked/SIMD reduction, no
+//! reassociation — f64 addition is not associative, and any reorder
+//! would make the SSE payload bits a function of lane width or
+//! scheduling. `rust/tests/determinism.rs` asserts this order
+//! explicitly (`reg_sse_reduction_order_is_pinned`); change it only
+//! together with that test and the artifact kernel.
 
 use crate::gp::primset::PrimSet;
 use crate::gp::tree::Tree;
@@ -440,79 +476,201 @@ fn eval_bool_kernel<const L: usize>(
     hits
 }
 
-/// f32 regression cases.
+/// Padding granularity for packed-column f32 data: columns are padded
+/// with zeros to a multiple of the widest lane block, so every
+/// supported `L` divides the padded length evenly and the kernel's
+/// lane loops never see a ragged remainder.
+pub const REG_LANE_PAD: usize = 8;
+
+/// Default f32 lane width: 8 × f32 = 256-bit blocks (AVX2-class
+/// hosts); use 4 on plain SSE2/NEON, 1 to force the scalar kernel.
+pub const DEFAULT_REG_LANES: usize = 8;
+
+/// f32 regression cases in packed-column (structure-of-arrays)
+/// layout: one padded column per variable plus the padded target
+/// column (see the module docs). Only the first [`RegCases::ncases`]
+/// entries of each column are real fitness cases; the zero padding is
+/// evaluated (cheaply, in whole lane blocks) but never read by the
+/// fitness reduction.
 #[derive(Clone, Debug)]
 pub struct RegCases {
-    /// `x[v]` = values of variable v across cases.
-    pub x: Vec<Vec<f32>>,
-    pub y: Vec<f32>,
+    x: Vec<Vec<f32>>,
+    y: Vec<f32>,
+    ncases: usize,
 }
 
 impl RegCases {
+    /// Pack variable columns and the target column into the padded
+    /// layout. Every column in `x` must be as long as `y`.
+    pub fn new(x: Vec<Vec<f32>>, y: Vec<f32>) -> RegCases {
+        let ncases = y.len();
+        assert!(ncases > 0, "RegCases needs at least one fitness case");
+        let padded = ncases.div_ceil(REG_LANE_PAD) * REG_LANE_PAD;
+        fn pad_to(mut col: Vec<f32>, padded: usize) -> Vec<f32> {
+            col.resize(padded, 0.0);
+            col
+        }
+        let x = x
+            .into_iter()
+            .map(|col| {
+                assert_eq!(col.len(), ncases, "variable column length != target length");
+                pad_to(col, padded)
+            })
+            .collect();
+        RegCases { x, y: pad_to(y, padded), ncases }
+    }
+
+    /// Real (unpadded) fitness-case count.
     pub fn ncases(&self) -> usize {
+        self.ncases
+    }
+
+    /// Padded column length — a multiple of [`REG_LANE_PAD`].
+    pub fn padded(&self) -> usize {
         self.y.len()
+    }
+
+    /// Padded variable columns (`x()[v][k]` = variable v in case k;
+    /// zeros past [`RegCases::ncases`]).
+    pub fn x(&self) -> &[Vec<f32>] {
+        &self.x
+    }
+
+    /// Padded target column (zeros past [`RegCases::ncases`]).
+    pub fn y(&self) -> &[f32] {
+        &self.y
     }
 }
 
-/// Reusable per-thread scratch for [`eval_reg_with`].
+/// Reusable per-thread scratch for [`eval_reg_with`]: lane-blocked
+/// stack slabs (`STACK_DEPTH` padded columns in one flat buffer) plus
+/// the zero column read by out-of-range variables.
 #[derive(Clone, Debug)]
 pub struct RegScratch {
     stack: Vec<f32>,
     zero: Vec<f32>,
-    ncases: usize,
+    padded: usize,
 }
 
 impl RegScratch {
+    /// Scratch for case sets of `ncases` — rounded up to the padded
+    /// column length internally, so `new(cases.ncases())` and
+    /// `new(cases.padded())` build the identical scratch.
     pub fn new(ncases: usize) -> RegScratch {
+        let padded = ncases.max(1).div_ceil(REG_LANE_PAD) * REG_LANE_PAD;
         RegScratch {
-            stack: vec![0f32; (opcodes::STACK_DEPTH as usize) * ncases],
-            zero: vec![0f32; ncases],
-            ncases,
+            stack: vec![0f32; (opcodes::STACK_DEPTH as usize) * padded],
+            zero: vec![0f32; padded],
+            padded,
         }
     }
 
-    fn ensure(&mut self, ncases: usize) {
-        if self.ncases != ncases {
-            *self = RegScratch::new(ncases);
+    fn ensure(&mut self, padded: usize) {
+        if self.padded != padded {
+            *self = RegScratch::new(padded);
         }
     }
 }
 
-/// Native f32 tape evaluation; returns (SSE, hits).
+/// Native f32 tape evaluation at the default lane width; returns
+/// (SSE, hits).
 pub fn eval_reg_native(tape: &Tape, cases: &RegCases) -> (f64, u32) {
     let mut scratch = RegScratch::new(cases.ncases());
     eval_reg_with(&tape.ops, &tape.consts, cases, &mut scratch)
 }
 
-/// Scratch-buffer core of [`eval_reg_native`]. Stack-overflow pushes
-/// clamp by overwriting the top slot — the same semantics as
-/// [`eval_bool_with`] and the kernel in `python/compile/kernels/ref.py`
-/// (they previously disagreed: the reg path silently dropped pushes).
+/// Scratch-buffer core of [`eval_reg_native`] at the default lane
+/// width. Stack-overflow pushes clamp by overwriting the top slot —
+/// the same semantics as [`eval_bool_with`] and the kernel in
+/// `python/compile/kernels/ref.py`.
 pub fn eval_reg_with(
     tape_ops: &[i32],
     tape_consts: &[f32],
     cases: &RegCases,
     scratch: &mut RegScratch,
 ) -> (f64, u32) {
+    eval_reg_with_lanes(tape_ops, tape_consts, cases, scratch, DEFAULT_REG_LANES)
+}
+
+/// Lane-width dispatch for the f32 kernel: monomorphizes each
+/// supported block width so every operator loop has a compile-time
+/// trip count (the shape LLVM auto-vectorizes). Results are
+/// bit-identical for every width — `--reg-lanes` is a pure throughput
+/// knob (see the module docs).
+pub fn eval_reg_with_lanes(
+    tape_ops: &[i32],
+    tape_consts: &[f32],
+    cases: &RegCases,
+    scratch: &mut RegScratch,
+    lanes: usize,
+) -> (f64, u32) {
+    match normalize_lanes(lanes) {
+        1 => eval_reg_kernel::<1>(tape_ops, tape_consts, cases, scratch),
+        2 => eval_reg_kernel::<2>(tape_ops, tape_consts, cases, scratch),
+        4 => eval_reg_kernel::<4>(tape_ops, tape_consts, cases, scratch),
+        _ => eval_reg_kernel::<8>(tape_ops, tape_consts, cases, scratch),
+    }
+}
+
+/// Apply one f32 operator column-wise in lane blocks of `L` values,
+/// with a scalar remainder loop (never taken for padded columns; kept
+/// so the helper is total for any slice length). `dst` may alias a
+/// source slot, but the update is element-wise over one flat stack
+/// buffer, so a single in-order pass is exact — and because case `k`
+/// is computed by the identical scalar expression at every `L`, lane
+/// width can never change a single result bit.
+#[inline(always)]
+fn apply_reg_op<const L: usize>(
+    stack: &mut [f32],
+    w: usize,
+    i1: usize,
+    i2: usize,
+    wr: usize,
+    f: impl Fn(f32, f32) -> f32,
+) {
+    let (b1, b2, bw) = (i1 * w, i2 * w, wr * w);
+    let mut k = 0usize;
+    while k + L <= w {
+        for j in 0..L {
+            let r = f(stack[b1 + k + j], stack[b2 + k + j]);
+            stack[bw + k + j] = r;
+        }
+        k += L;
+    }
+    while k < w {
+        let r = f(stack[b1 + k], stack[b2 + k]);
+        stack[bw + k] = r;
+        k += 1;
+    }
+}
+
+fn eval_reg_kernel<const L: usize>(
+    tape_ops: &[i32],
+    tape_consts: &[f32],
+    cases: &RegCases,
+    scratch: &mut RegScratch,
+) -> (f64, u32) {
     use opcodes::*;
-    let c = cases.ncases();
-    scratch.ensure(c);
+    let w = cases.padded();
+    scratch.ensure(w);
     let stack = &mut scratch.stack;
-    let zero = &scratch.zero;
-    stack[..c].fill(0.0); // see eval_bool_with: deterministic answer slot
+    let zero: &[f32] = &scratch.zero;
+    stack[..w].fill(0.0); // see eval_bool_kernel: deterministic answer slot
     let mut sp: usize = 0;
     for (t, &op) in tape_ops.iter().enumerate() {
         if !(0..REG_NOP).contains(&op) {
-            continue;
+            continue; // NOP
         }
         if op < REG_NUM_VARS || op == REG_OP_CONST {
-            let konst = tape_consts[t];
+            // terminal push (missing vars read as constant-0 columns);
+            // a full stack clamps by overwriting the top slot, exactly
+            // like the bool kernel and python/compile/kernels/ref.py
             let slot = sp.min(STACK_DEPTH as usize - 1);
             if op == REG_OP_CONST {
-                stack[slot * c..(slot + 1) * c].fill(konst);
+                stack[slot * w..(slot + 1) * w].fill(tape_consts[t]);
             } else {
-                let col = cases.x.get(op as usize).unwrap_or(zero);
-                stack[slot * c..(slot + 1) * c].copy_from_slice(col);
+                let col = cases.x.get(op as usize).map(Vec::as_slice).unwrap_or(zero);
+                stack[slot * w..(slot + 1) * w].copy_from_slice(col);
             }
             sp = (sp + 1).min(STACK_DEPTH as usize);
             continue;
@@ -522,40 +680,43 @@ pub fn eval_reg_with(
         let i2 = sp.saturating_sub(2);
         let new_sp = (sp + 1).saturating_sub(ar).clamp(0, STACK_DEPTH as usize);
         let wr = new_sp.saturating_sub(1);
-        for k in 0..c {
-            let x1 = stack[i1 * c + k];
-            let x2 = stack[i2 * c + k];
-            let r = match op {
-                REG_OP_ADD => x2 + x1,
-                REG_OP_SUB => x2 - x1,
-                REG_OP_MUL => x2 * x1,
-                REG_OP_DIV => {
-                    if x1.abs() < 1e-9 {
-                        1.0
-                    } else {
-                        x2 / x1
-                    }
+        match op {
+            REG_OP_ADD => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, x2| x2 + x1),
+            REG_OP_SUB => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, x2| x2 - x1),
+            REG_OP_MUL => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, x2| x2 * x1),
+            REG_OP_DIV => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, x2| {
+                if x1.abs() < 1e-9 {
+                    1.0
+                } else {
+                    x2 / x1
                 }
-                REG_OP_SIN => x1.sin(),
-                REG_OP_COS => x1.cos(),
-                REG_OP_EXP => x1.clamp(-50.0, 50.0).exp(),
-                REG_OP_LOG => {
-                    if x1.abs() < 1e-9 {
-                        0.0
-                    } else {
-                        x1.abs().ln()
-                    }
+            }),
+            REG_OP_SIN => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, _| x1.sin()),
+            REG_OP_COS => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, _| x1.cos()),
+            REG_OP_EXP => {
+                apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, _| x1.clamp(-50.0, 50.0).exp())
+            }
+            REG_OP_LOG => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, _| {
+                if x1.abs() < 1e-9 {
+                    0.0
+                } else {
+                    x1.abs().ln()
                 }
-                REG_OP_NEG => -x1,
-                _ => unreachable!(),
-            };
-            stack[wr * c + k] = r;
+            }),
+            REG_OP_NEG => apply_reg_op::<L>(stack, w, i1, i2, wr, |x1, _| -x1),
+            _ => unreachable!(),
         }
         sp = new_sp;
     }
+    // Pinned reduction (module docs: "Pinned SSE reduction order"):
+    // one scalar pass over the REAL cases in ascending index order,
+    // each f32 error widened to f64 before squaring and accumulating.
+    // Never reorder, block, or pairwise this sum — f64 addition is not
+    // associative, and the SSE payload bits must stay independent of
+    // lane width, schedule and thread count.
     let mut sse = 0f64;
     let mut hits = 0u32;
-    for k in 0..c {
+    for k in 0..cases.ncases {
         let err = (stack[k] - cases.y[k]) as f64;
         sse += err * err;
         if err.abs() <= REG_HIT_EPS as f64 {
@@ -664,10 +825,62 @@ mod tests {
         let tape = compile(&t, &ps, REG_NOP).unwrap();
         let xs: Vec<f32> = (0..20).map(|i| -1.0 + i as f32 * 0.1).collect();
         let ys: Vec<f32> = xs.iter().map(|&x| x + x * x + x * x * x + x * x * x * x).collect();
-        let cases = RegCases { x: vec![xs], y: ys };
+        let cases = RegCases::new(vec![xs], ys);
         let (sse, hits) = eval_reg_native(&tape, &cases);
         assert!(sse < 1e-9, "sse {sse}");
         assert_eq!(hits, 20);
+    }
+
+    #[test]
+    fn reg_cases_pad_to_lane_multiple_and_keep_values() {
+        // 20 cases pad to 24 (= 3 blocks of REG_LANE_PAD); padding is 0
+        let xs: Vec<f32> = (0..20).map(|i| i as f32).collect();
+        let ys: Vec<f32> = xs.iter().map(|&x| 2.0 * x).collect();
+        let c = RegCases::new(vec![xs.clone()], ys.clone());
+        assert_eq!(c.ncases(), 20);
+        assert_eq!(c.padded(), 24);
+        assert_eq!(c.padded() % REG_LANE_PAD, 0);
+        assert_eq!(&c.x()[0][..20], &xs[..]);
+        assert_eq!(&c.y()[..20], &ys[..]);
+        assert!(c.x()[0][20..].iter().all(|&v| v == 0.0));
+        assert!(c.y()[20..].iter().all(|&v| v == 0.0));
+        // an exact multiple gains no padding
+        let c = RegCases::new(vec![vec![1.0; 16]], vec![0.0; 16]);
+        assert_eq!(c.padded(), 16);
+    }
+
+    #[test]
+    fn reg_lane_widths_are_bit_identical_including_ragged_ncases() {
+        // ncases spanning every padding remainder; random trees from
+        // the regression set (sin/cos/div guards included)
+        let ps = regression_set(2);
+        let mut rng = Rng::new(47);
+        let pop = ramped_half_and_half(&mut rng, &ps, 60, 2, 6);
+        for ncases in [1usize, 7, 8, 20, 23, 64] {
+            let xs: Vec<f32> = (0..ncases).map(|i| -1.5 + i as f32 * 0.13).collect();
+            let zs: Vec<f32> = (0..ncases).map(|i| (i as f32 * 0.7).sin()).collect();
+            let ys: Vec<f32> = xs.iter().map(|&x| x * x - 0.5).collect();
+            let cases = RegCases::new(vec![xs, zs], ys);
+            let mut scratch = RegScratch::new(cases.ncases());
+            for t in &pop {
+                let tape = match compile(t, &ps, REG_NOP) {
+                    Ok(tp) => tp,
+                    Err(_) => continue,
+                };
+                let (base_sse, base_hits) =
+                    eval_reg_with_lanes(&tape.ops, &tape.consts, &cases, &mut scratch, 1);
+                for &lanes in &LANE_WIDTHS[1..] {
+                    let (sse, hits) =
+                        eval_reg_with_lanes(&tape.ops, &tape.consts, &cases, &mut scratch, lanes);
+                    assert_eq!(
+                        base_sse.to_bits(),
+                        sse.to_bits(),
+                        "lanes={lanes} ncases={ncases}"
+                    );
+                    assert_eq!(base_hits, hits, "lanes={lanes} ncases={ncases}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -753,10 +966,17 @@ mod tests {
             *slot = REG_OP_ADD;
         }
         let tape = Tape { ops, consts };
-        let cases = RegCases { x: vec![vec![0.0]], y: vec![121.0] };
+        let cases = RegCases::new(vec![vec![0.0]], vec![121.0]);
         let (sse, hits) = eval_reg_native(&tape, &cases);
         assert!(sse < 1e-6, "clamp semantics must yield 121, sse={sse}");
         assert_eq!(hits, 1);
+        // clamp semantics must also hold at every lane width
+        let mut scratch = RegScratch::new(cases.ncases());
+        for lanes in LANE_WIDTHS {
+            let (s, h) = eval_reg_with_lanes(&tape.ops, &tape.consts, &cases, &mut scratch, lanes);
+            assert_eq!(s.to_bits(), sse.to_bits(), "lanes={lanes}");
+            assert_eq!(h, hits, "lanes={lanes}");
+        }
     }
 
     #[test]

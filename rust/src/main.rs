@@ -22,10 +22,11 @@
 //!
 //! Performance knobs (all bit-identical — pure throughput):
 //! `--eval-lanes 1|2|4|8` sets the boolean kernel's SIMD lane-block
-//! width (u64 words per block; default 4 = 256-bit), `--schedule
-//! static|sorted|steal` picks the eval fan-out policy (size-sorted or
-//! work-stealing schedules tame skewed tree-walk populations like
-//! ant/interest-point).
+//! width (u64 words per block; default 4 = 256-bit), `--reg-lanes
+//! 1|2|4|8` the regression kernel's f32 lane-block width (default 8 =
+//! 256-bit), `--schedule static|sorted|steal` picks the eval fan-out
+//! policy (size-sorted or work-stealing schedules tame skewed
+//! tree-walk populations like ant/interest-point).
 
 use vgp::boinc::exchange::MigrationExchange;
 use vgp::boinc::net::{serve, Worker};
@@ -93,6 +94,7 @@ fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> I
     c.seed = args.opt_u64("seed", 1);
     c.threads = args.opt_u64("threads", 1).max(1) as usize;
     c.eval_lanes = eval_lanes_of(args);
+    c.reg_lanes = reg_lanes_of(args);
     c.schedule = schedule_of(args);
     c
 }
@@ -101,6 +103,13 @@ fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> I
 fn eval_lanes_of(args: &Args) -> usize {
     vgp::gp::tape::normalize_lanes(
         args.opt_u64("eval-lanes", vgp::gp::tape::DEFAULT_LANES as u64) as usize,
+    )
+}
+
+/// `--reg-lanes N`, normalized onto the supported {1, 2, 4, 8}.
+fn reg_lanes_of(args: &Args) -> usize {
+    vgp::gp::tape::normalize_lanes(
+        args.opt_u64("reg-lanes", vgp::gp::tape::DEFAULT_REG_LANES as u64) as usize,
     )
 }
 
@@ -161,6 +170,7 @@ fn cmd_sim(args: &Args) -> i32 {
     let mut c = Campaign::new("cli", problem, runs, gens, pop);
     c.threads = args.opt_u64("threads", 1).max(1) as usize;
     c.eval_lanes = eval_lanes_of(args);
+    c.reg_lanes = reg_lanes_of(args);
     c.schedule = schedule_of(args);
     if c.threads > 1 {
         // the DES models durations from FLOPs/host-rate; worker thread
@@ -350,6 +360,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut c = Campaign::new("served", problem, runs, gens, pop);
     c.threads = threads;
     c.eval_lanes = eval_lanes_of(args);
+    c.reg_lanes = reg_lanes_of(args);
     c.schedule = schedule_of(args);
     let mut core = ServerCore::new(ServerConfig::default());
     for wu in c.workunits() {

@@ -11,9 +11,28 @@
 //! (B=256 programs x W=64 case-words / C=64 cases); this module pads
 //! and chunks arbitrary populations and case sets, accumulating hits
 //! and SSE across case blocks (the 20-mux's 32 768 words = 512 blocks).
+//!
+//! # Batched dispatch (shared with the native hot path)
+//!
+//! The artifact path rides the same machinery as Method 1:
+//! populations are compiled **once per generation** into a
+//! [`TapeArena`] (one flat allocation, no per-tree `Vec`s), and the
+//! fixed-shape chunks are fanned across worker threads by
+//! [`par_map_schedule`] under the WU's `threads`/`schedule` knobs —
+//! [`TapeSource`] abstracts over arena- and slice-backed populations
+//! so both entry points share one dispatch core. Determinism is
+//! preserved by construction: every chunk's results land at the
+//! chunk's original index, and the per-tape accumulation across
+//! word/case blocks runs in ascending block order *inside* one
+//! worker, so payload bytes never depend on the thread count or
+//! schedule. The packed native buffers are re-sliced to the
+//! artifact's existing wire contract on the fly ([`BoolCases::u32_word`]
+//! for the 32-bit boolean words; the padded [`RegCases`] columns are
+//! sliced to the real case count).
 
 use anyhow::{Context, Result};
 
+use crate::gp::eval::{par_map_schedule, EvalOpts, TapeArena};
 use crate::gp::tape::{opcodes, BoolCases, RegCases, Tape};
 use crate::util::json::Json;
 
@@ -84,12 +103,78 @@ impl Artifact {
     }
 }
 
+/// Borrowed view of a compiled population — what the artifact path
+/// ships to the executable, chunk by chunk. Implemented by plain
+/// `[Tape]` slices (the legacy per-tree API, kept for the integration
+/// tests) and by [`TapeArena`] (the batched path: compiled once per
+/// generation into one flat reusable allocation). `Sync` because
+/// chunks are dispatched across worker threads.
+pub trait TapeSource: Sync {
+    fn count(&self) -> usize;
+    fn tape_ops(&self, i: usize) -> &[i32];
+    fn tape_consts(&self, i: usize) -> &[f32];
+}
+
+impl TapeSource for [Tape] {
+    fn count(&self) -> usize {
+        self.len()
+    }
+
+    fn tape_ops(&self, i: usize) -> &[i32] {
+        &self[i].ops
+    }
+
+    fn tape_consts(&self, i: usize) -> &[f32] {
+        &self[i].consts
+    }
+}
+
+impl TapeSource for TapeArena {
+    fn count(&self) -> usize {
+        self.len()
+    }
+
+    fn tape_ops(&self, i: usize) -> &[i32] {
+        self.ops_of(i)
+    }
+
+    fn tape_consts(&self, i: usize) -> &[f32] {
+        self.consts_of(i)
+    }
+}
+
 /// The full evaluator runtime: a PJRT CPU client plus the two loaded
 /// evaluator artifacts.
+///
+/// # Thread-safety contract for the batched dispatch
+///
+/// `eval_bool_batched`/`eval_reg_batched` share the two loaded
+/// executables across worker threads and call `execute` concurrently.
+/// PJRT loaded executables are execute-thread-safe by the PJRT C API
+/// contract, and the offline stub is trivially `Sync` — but if the
+/// stub is swapped for bindings whose handle types are not `Sync`,
+/// this module will fail to compile at the `par_map_schedule` bound
+/// rather than race: wrap the executable (e.g. a mutex per
+/// [`Artifact`], or one executable per worker) before forcing `Sync`.
+/// Host-side `Literal`s are never shared — each worker builds its own
+/// from the precomputed packed blocks.
 pub struct Runtime {
     pub meta: ArtifactMeta,
     bool_eval: Artifact,
     reg_eval: Artifact,
+}
+
+/// Scatter per-chunk result vectors back to one flat population-order
+/// vector (chunks are `chunk_len = b` wide except a ragged tail) —
+/// the shared epilogue of both batched dispatch paths. Propagates the
+/// first chunk error, if any.
+fn scatter_chunks<R: Copy + Default>(n: usize, b: usize, chunks: Vec<Result<Vec<R>>>) -> Result<Vec<R>> {
+    let mut out = vec![R::default(); n];
+    for (chunk_idx, res) in chunks.into_iter().enumerate() {
+        let chunk = res?;
+        out[chunk_idx * b..chunk_idx * b + chunk.len()].copy_from_slice(&chunk);
+    }
+    Ok(out)
 }
 
 impl Runtime {
@@ -103,32 +188,43 @@ impl Runtime {
     }
 
     /// Evaluate boolean tapes against packed cases; returns hit counts.
-    /// Pads the population to the batch size and chunks the case words,
-    /// accumulating hits across word blocks. The artifact contract is
-    /// 32-bit words; the native u64 lane-block columns are re-sliced on
-    /// the fly via [`BoolCases::u32_word`].
+    /// Single-threaded convenience wrapper over
+    /// [`Runtime::eval_bool_batched`].
     pub fn eval_bool(&self, tapes: &[Tape], cases: &BoolCases) -> Result<Vec<u64>> {
+        self.eval_bool_batched(tapes, cases, EvalOpts::default())
+    }
+
+    /// Evaluate a boolean population (any [`TapeSource`]) through the
+    /// artifact, batched: the population is cut into fixed-shape
+    /// chunks of `bool_batch` programs and the chunks are fanned
+    /// across `opts.threads` workers under `opts.schedule`
+    /// ([`par_map_schedule`] scatters chunk results back to their
+    /// original indices). Within one chunk, hits accumulate across
+    /// case-word blocks in ascending order inside a single worker, so
+    /// results are bit-identical to the sequential loop for every
+    /// thread count and schedule. The artifact contract is 32-bit
+    /// words; the native u64 lane-block columns are re-sliced on the
+    /// fly via [`BoolCases::u32_word`].
+    pub fn eval_bool_batched<T: TapeSource + ?Sized>(
+        &self,
+        tapes: &T,
+        cases: &BoolCases,
+        opts: EvalOpts,
+    ) -> Result<Vec<u64>> {
         let b = self.meta.bool_batch;
         let w = self.meta.bool_words;
         let l = self.meta.tape_len;
         let nv = self.meta.bool_num_vars;
-        let mut hits = vec![0u64; tapes.len()];
+        let n = tapes.count();
         let total_words = cases.words_u32();
-
-        for chunk_start in (0..tapes.len()).step_by(b) {
-            let chunk = &tapes[chunk_start..(chunk_start + b).min(tapes.len())];
-            // tape literal [B, L] i32 (pad with NOP rows)
-            let mut tape_flat = vec![opcodes::BOOL_NOP; b * l];
-            for (i, t) in chunk.iter().enumerate() {
-                tape_flat[i * l..(i + 1) * l].copy_from_slice(&t.ops);
-            }
-            let tape_lit = xla::Literal::vec1(&tape_flat)
-                .reshape(&[b as i64, l as i64])
-                .map_err(|e| anyhow::anyhow!("tape reshape: {e:?}"))?;
-
-            for wstart in (0..total_words).step_by(w) {
-                let wend = (wstart + w).min(total_words);
-                let wlen = wend - wstart;
+        let nchunks = n.div_ceil(b);
+        // re-slice the case words ONCE — every chunk ships the same
+        // (inputs, target, mask) block sequence, so packing it inside
+        // the chunk loop would multiply this work by nchunks
+        let case_blocks: Vec<(Vec<u32>, Vec<u32>, Vec<u32>)> = (0..total_words)
+            .step_by(w)
+            .map(|wstart| {
+                let wlen = (wstart + w).min(total_words) - wstart;
                 // inputs [NV, W] u32 — zero-pad missing vars and words
                 let mut in_flat = vec![0u32; nv * w];
                 for (v, col) in cases.inputs.iter().enumerate().take(nv) {
@@ -142,92 +238,180 @@ impl Runtime {
                     tgt[k] = BoolCases::u32_word(&cases.target, wstart + k);
                     msk[k] = BoolCases::u32_word(&cases.mask, wstart + k);
                 }
-
-                let in_lit = xla::Literal::vec1(&in_flat)
-                    .reshape(&[nv as i64, w as i64])
-                    .map_err(|e| anyhow::anyhow!("inputs reshape: {e:?}"))?;
-                let tgt_lit = xla::Literal::vec1(&tgt);
-                let msk_lit = xla::Literal::vec1(&msk);
-
-                let out =
-                    self.bool_eval.execute(&[&tape_lit, &in_lit, &tgt_lit, &msk_lit])?;
-                let out = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
-                let chunk_hits: Vec<i32> =
-                    out.to_vec().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
-                for (i, &h) in chunk_hits.iter().take(chunk.len()).enumerate() {
-                    hits[chunk_start + i] += h as u64;
+                (in_flat, tgt, msk)
+            })
+            .collect();
+        // per-chunk program counts double as size hints for the
+        // skew-aware schedules (only the ragged last chunk differs —
+        // artifact chunks are otherwise uniform-cost by construction)
+        let sizes: Vec<usize> = (0..nchunks).map(|c| (n - c * b).min(b)).collect();
+        let chunk_results: Vec<Result<Vec<u64>>> = par_map_schedule(
+            opts.threads,
+            nchunks,
+            opts.schedule,
+            Some(sizes.as_slice()),
+            || (),
+            |_, chunk_idx| -> Result<Vec<u64>> {
+                let lo = chunk_idx * b;
+                let hi = (lo + b).min(n);
+                // tape literal [B, L] i32 (pad with NOP rows)
+                let mut tape_flat = vec![opcodes::BOOL_NOP; b * l];
+                for (i, t) in (lo..hi).enumerate() {
+                    tape_flat[i * l..(i + 1) * l].copy_from_slice(tapes.tape_ops(t));
                 }
-            }
-        }
-        Ok(hits)
+                let tape_lit = xla::Literal::vec1(&tape_flat)
+                    .reshape(&[b as i64, l as i64])
+                    .map_err(|e| anyhow::anyhow!("tape reshape: {e:?}"))?;
+
+                let mut hits = vec![0u64; hi - lo];
+                // literals are built per worker (the xla handle types
+                // are not assumed shareable across threads); the packed
+                // data they wrap is the shared precomputed block
+                for (in_flat, tgt, msk) in &case_blocks {
+                    let in_lit = xla::Literal::vec1(in_flat)
+                        .reshape(&[nv as i64, w as i64])
+                        .map_err(|e| anyhow::anyhow!("inputs reshape: {e:?}"))?;
+                    let tgt_lit = xla::Literal::vec1(tgt);
+                    let msk_lit = xla::Literal::vec1(msk);
+
+                    let out =
+                        self.bool_eval.execute(&[&tape_lit, &in_lit, &tgt_lit, &msk_lit])?;
+                    let out = out.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+                    let chunk_hits: Vec<i32> =
+                        out.to_vec().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+                    for (i, &h) in chunk_hits.iter().take(hi - lo).enumerate() {
+                        hits[i] += h as u64;
+                    }
+                }
+                Ok(hits)
+            },
+        );
+        scatter_chunks(n, b, chunk_results)
     }
 
     /// Evaluate regression tapes; returns (SSE, hits) per tape.
+    /// Single-threaded convenience wrapper over
+    /// [`Runtime::eval_reg_batched`].
     pub fn eval_reg(&self, tapes: &[Tape], cases: &RegCases) -> Result<Vec<(f64, u32)>> {
+        self.eval_reg_batched(tapes, cases, EvalOpts::default())
+    }
+
+    /// Evaluate a regression population (any [`TapeSource`]) through
+    /// the artifact, batched exactly like
+    /// [`Runtime::eval_bool_batched`]: fixed-shape chunks of
+    /// `reg_batch` programs across workers, per-tape SSE/hit
+    /// accumulation walking case blocks in ascending order inside one
+    /// worker. The padded packed-column [`RegCases`] buffers are
+    /// sliced back to the artifact's unpadded wire contract on the fly
+    /// (only real cases ship; the artifact applies its own mask).
+    pub fn eval_reg_batched<T: TapeSource + ?Sized>(
+        &self,
+        tapes: &T,
+        cases: &RegCases,
+        opts: EvalOpts,
+    ) -> Result<Vec<(f64, u32)>> {
         let b = self.meta.reg_batch;
         let c = self.meta.reg_cases;
         let l = self.meta.tape_len;
         let nv = self.meta.reg_num_vars;
+        let n = tapes.count();
         let total = cases.ncases();
-        let mut out_acc = vec![(0f64, 0u32); tapes.len()];
-
-        for chunk_start in (0..tapes.len()).step_by(b) {
-            let chunk = &tapes[chunk_start..(chunk_start + b).min(tapes.len())];
-            let mut tape_flat = vec![opcodes::REG_NOP; b * l];
-            let mut const_flat = vec![0f32; b * l];
-            for (i, t) in chunk.iter().enumerate() {
-                tape_flat[i * l..(i + 1) * l].copy_from_slice(&t.ops);
-                const_flat[i * l..(i + 1) * l].copy_from_slice(&t.consts);
-            }
-
-            for cstart in (0..total).step_by(c) {
+        let nchunks = n.div_ceil(b);
+        // pack the case blocks ONCE and share them across chunks (see
+        // eval_bool_batched — the blocks are chunk-invariant)
+        let case_blocks: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..total)
+            .step_by(c)
+            .map(|cstart| {
                 let cend = (cstart + c).min(total);
                 let clen = cend - cstart;
                 let mut x_flat = vec![0f32; nv * c];
-                for (v, col) in cases.x.iter().enumerate().take(nv) {
+                for (v, col) in cases.x().iter().enumerate().take(nv) {
                     x_flat[v * c..v * c + clen].copy_from_slice(&col[cstart..cend]);
                 }
                 let mut y = vec![0f32; c];
-                y[..clen].copy_from_slice(&cases.y[cstart..cend]);
+                y[..clen].copy_from_slice(&cases.y()[cstart..cend]);
                 let mut mask = vec![0f32; c];
                 mask[..clen].fill(1.0);
-
+                (x_flat, y, mask)
+            })
+            .collect();
+        let sizes: Vec<usize> = (0..nchunks).map(|ch| (n - ch * b).min(b)).collect();
+        let chunk_results: Vec<Result<Vec<(f64, u32)>>> = par_map_schedule(
+            opts.threads,
+            nchunks,
+            opts.schedule,
+            Some(sizes.as_slice()),
+            || (),
+            |_, chunk_idx| -> Result<Vec<(f64, u32)>> {
+                let lo = chunk_idx * b;
+                let hi = (lo + b).min(n);
+                let mut tape_flat = vec![opcodes::REG_NOP; b * l];
+                let mut const_flat = vec![0f32; b * l];
+                for (i, t) in (lo..hi).enumerate() {
+                    tape_flat[i * l..(i + 1) * l].copy_from_slice(tapes.tape_ops(t));
+                    const_flat[i * l..(i + 1) * l].copy_from_slice(tapes.tape_consts(t));
+                }
                 let tape_lit = xla::Literal::vec1(&tape_flat)
                     .reshape(&[b as i64, l as i64])
                     .map_err(|e| anyhow::anyhow!("tape reshape: {e:?}"))?;
                 let const_lit = xla::Literal::vec1(&const_flat)
                     .reshape(&[b as i64, l as i64])
                     .map_err(|e| anyhow::anyhow!("const reshape: {e:?}"))?;
-                let x_lit = xla::Literal::vec1(&x_flat)
-                    .reshape(&[nv as i64, c as i64])
-                    .map_err(|e| anyhow::anyhow!("x reshape: {e:?}"))?;
-                let y_lit = xla::Literal::vec1(&y);
-                let m_lit = xla::Literal::vec1(&mask);
 
-                let out = self
-                    .reg_eval
-                    .execute(&[&tape_lit, &const_lit, &x_lit, &y_lit, &m_lit])?;
-                let (sse_l, hits_l) =
-                    out.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
-                let sses: Vec<f32> = sse_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-                let hs: Vec<i32> = hits_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
-                for i in 0..chunk.len() {
-                    out_acc[chunk_start + i].0 += sses[i] as f64;
-                    out_acc[chunk_start + i].1 += hs[i] as u32;
+                let mut acc = vec![(0f64, 0u32); hi - lo];
+                for (x_flat, y, mask) in &case_blocks {
+                    let x_lit = xla::Literal::vec1(x_flat)
+                        .reshape(&[nv as i64, c as i64])
+                        .map_err(|e| anyhow::anyhow!("x reshape: {e:?}"))?;
+                    let y_lit = xla::Literal::vec1(y);
+                    let m_lit = xla::Literal::vec1(mask);
+
+                    let out = self
+                        .reg_eval
+                        .execute(&[&tape_lit, &const_lit, &x_lit, &y_lit, &m_lit])?;
+                    let (sse_l, hits_l) =
+                        out.to_tuple2().map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+                    let sses: Vec<f32> = sse_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    let hs: Vec<i32> = hits_l.to_vec().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    for (i, slot) in acc.iter_mut().enumerate() {
+                        slot.0 += sses[i] as f64;
+                        slot.1 += hs[i] as u32;
+                    }
                 }
-            }
-        }
-        Ok(out_acc)
+                Ok(acc)
+            },
+        );
+        scatter_chunks(n, b, chunk_results)
     }
 }
 
 /// [`crate::gp::Evaluator`] backed by the boolean artifact — drop-in
 /// replacement for the native evaluators of multiplexer/parity.
+/// Populations are compiled into a reusable [`TapeArena`] (failed
+/// compiles become all-NOP rows and score worst, like the native
+/// path) and dispatched through [`Runtime::eval_bool_batched`] under
+/// the WU's `threads`/`schedule` knobs.
 pub struct BoolArtifactEvaluator<'a> {
     pub rt: &'a Runtime,
     pub cases: &'a BoolCases,
     /// evaluations performed (for CP accounting)
     pub evals: u64,
+    opts: EvalOpts,
+    arena: TapeArena,
+}
+
+impl<'a> BoolArtifactEvaluator<'a> {
+    pub fn new(rt: &'a Runtime, cases: &'a BoolCases) -> BoolArtifactEvaluator<'a> {
+        Self::with_opts(rt, cases, EvalOpts::default())
+    }
+
+    pub fn with_opts(
+        rt: &'a Runtime,
+        cases: &'a BoolCases,
+        opts: EvalOpts,
+    ) -> BoolArtifactEvaluator<'a> {
+        BoolArtifactEvaluator { rt, cases, evals: 0, opts, arena: TapeArena::new() }
+    }
 }
 
 impl crate::gp::Evaluator for BoolArtifactEvaluator<'_> {
@@ -236,30 +420,14 @@ impl crate::gp::Evaluator for BoolArtifactEvaluator<'_> {
         trees: &[crate::gp::tree::Tree],
         ps: &crate::gp::primset::PrimSet,
     ) -> Vec<crate::gp::Fitness> {
-        // compile all, mark failures (shouldn't happen under Limits)
-        let mut tapes = Vec::with_capacity(trees.len());
-        let mut ok = Vec::with_capacity(trees.len());
-        for t in trees {
-            match crate::gp::tape::compile(t, ps, opcodes::BOOL_NOP) {
-                Ok(tape) => {
-                    tapes.push(tape);
-                    ok.push(true);
-                }
-                Err(_) => {
-                    tapes.push(Tape {
-                        ops: vec![opcodes::BOOL_NOP; opcodes::TAPE_LEN as usize],
-                        consts: vec![0.0; opcodes::TAPE_LEN as usize],
-                    });
-                    ok.push(false);
-                }
-            }
-        }
+        self.arena.compile_population(trees, ps, opcodes::BOOL_NOP);
         self.evals += trees.len() as u64;
-        let hits = self.rt.eval_bool(&tapes, self.cases).expect("artifact eval");
+        let hits =
+            self.rt.eval_bool_batched(&self.arena, self.cases, self.opts).expect("artifact eval");
         hits.iter()
-            .zip(ok)
-            .map(|(&h, is_ok)| {
-                if is_ok {
+            .enumerate()
+            .map(|(i, &h)| {
+                if self.arena.is_ok(i) {
                     crate::gp::Fitness { raw: (self.cases.ncases - h) as f64, hits: h as u32 }
                 } else {
                     crate::gp::Fitness::worst()
@@ -270,6 +438,61 @@ impl crate::gp::Evaluator for BoolArtifactEvaluator<'_> {
 
     fn cost_per_eval(&self) -> f64 {
         320.0 * self.cases.ncases as f64
+    }
+}
+
+/// [`crate::gp::Evaluator`] backed by the regression artifact — the
+/// Method-2 counterpart of `regression::NativeEvaluator`, sharing the
+/// same [`TapeArena`] + batched-dispatch machinery as
+/// [`BoolArtifactEvaluator`].
+pub struct RegArtifactEvaluator<'a> {
+    pub rt: &'a Runtime,
+    pub cases: &'a RegCases,
+    /// evaluations performed (for CP accounting)
+    pub evals: u64,
+    opts: EvalOpts,
+    arena: TapeArena,
+}
+
+impl<'a> RegArtifactEvaluator<'a> {
+    pub fn new(rt: &'a Runtime, cases: &'a RegCases) -> RegArtifactEvaluator<'a> {
+        Self::with_opts(rt, cases, EvalOpts::default())
+    }
+
+    pub fn with_opts(
+        rt: &'a Runtime,
+        cases: &'a RegCases,
+        opts: EvalOpts,
+    ) -> RegArtifactEvaluator<'a> {
+        RegArtifactEvaluator { rt, cases, evals: 0, opts, arena: TapeArena::new() }
+    }
+}
+
+impl crate::gp::Evaluator for RegArtifactEvaluator<'_> {
+    fn evaluate(
+        &mut self,
+        trees: &[crate::gp::tree::Tree],
+        ps: &crate::gp::primset::PrimSet,
+    ) -> Vec<crate::gp::Fitness> {
+        self.arena.compile_population(trees, ps, opcodes::REG_NOP);
+        self.evals += trees.len() as u64;
+        let scored =
+            self.rt.eval_reg_batched(&self.arena, self.cases, self.opts).expect("artifact eval");
+        scored
+            .iter()
+            .enumerate()
+            .map(|(i, &(sse, hits))| {
+                if self.arena.is_ok(i) {
+                    crate::gp::Fitness { raw: sse, hits }
+                } else {
+                    crate::gp::Fitness::worst()
+                }
+            })
+            .collect()
+    }
+
+    fn cost_per_eval(&self) -> f64 {
+        200.0 * self.cases.ncases() as f64
     }
 }
 

@@ -87,15 +87,22 @@ impl Bench {
 
 /// One hot-path measurement destined for the append-only perf log
 /// (`BENCH_hotpath.json` at the repo root). Schema:
-/// `{pr, threads, scheduler, lanes, evals_per_sec}`.
+/// `{pr, kernel, threads, scheduler, lanes, evals_per_sec}`.
+/// Entries recorded before PR 4 predate the `kernel` field; readers
+/// should treat a missing `kernel` as `"bool"`.
 #[derive(Clone, Debug)]
 pub struct BenchRecord {
     /// which PR / commit recorded this entry (e.g. "pr3")
     pub pr: String,
+    /// which kernel was measured: "bool" (u64 lane blocks), "reg"
+    /// (packed-column f32 lane blocks) or "reg-legacy" (the verbatim
+    /// pre-PR-4 scalar kernel timed for the speedup ratio; lanes = 0)
+    pub kernel: String,
     pub threads: usize,
     /// `gp::eval::Schedule` name: static | sorted | steal
     pub scheduler: String,
-    /// boolean-kernel lane width (u64 words per block)
+    /// kernel lane width (u64 words or f32 values per block; 0 marks
+    /// a legacy baseline with no lane loop)
     pub lanes: usize,
     /// individual program evaluations per second
     pub evals_per_sec: f64,
@@ -105,6 +112,7 @@ impl BenchRecord {
     pub fn to_json(&self) -> Json {
         Json::obj()
             .set("pr", self.pr.as_str())
+            .set("kernel", self.kernel.as_str())
             .set("threads", self.threads as u64)
             .set("scheduler", self.scheduler.as_str())
             .set("lanes", self.lanes as u64)
@@ -204,6 +212,7 @@ mod tests {
         let _ = std::fs::remove_file(&path);
         let rec = |pr: &str, threads: usize| BenchRecord {
             pr: pr.into(),
+            kernel: "bool".into(),
             threads,
             scheduler: "static".into(),
             lanes: 4,

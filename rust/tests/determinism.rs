@@ -4,13 +4,18 @@
 //!   to an uninterrupted run (best tree, fitness bits, total_evals,
 //!   canonical payload string — what quorum validation hashes);
 //! * `gp::eval::BatchEvaluator` must equal the sequential per-tree
-//!   evaluators bitwise for random populations at 1, 2 and 8 threads.
+//!   evaluators bitwise for random populations at 1, 2 and 8 threads;
+//! * the regression SSE reduction order is **pinned** (per case in
+//!   ascending index order, f64-widened before squaring) — asserted
+//!   by `reg_sse_reduction_order_is_pinned` so future lane work can't
+//!   silently reorder the sum (see the `gp::tape` module docs).
 
 use vgp::coordinator::exec;
 use vgp::coordinator::Campaign;
 use vgp::gp::engine::{Checkpoint, Engine, Params, RunResult};
 use vgp::gp::eval::{BatchEvaluator, EvalOpts, Schedule};
 use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::primset::regression_set;
 use vgp::gp::problems::multiplexer::Multiplexer;
 use vgp::gp::problems::{ant, ProblemKind};
 use vgp::gp::tape::{self, opcodes, LANE_WIDTHS};
@@ -197,7 +202,7 @@ fn determinism_matrix_threads_x_schedule_x_lanes_on_skewed_population() {
             let mut ev = ant::NativeEvaluator::with_opts(EvalOpts {
                 threads,
                 schedule,
-                lanes: tape::DEFAULT_LANES,
+                ..EvalOpts::default()
             });
             let got = vgp::gp::Evaluator::evaluate(&mut ev, &pop, &ps);
             assert_eq!(got.len(), baseline.len());
@@ -223,7 +228,12 @@ fn determinism_matrix_threads_x_schedule_x_lanes_on_skewed_population() {
     for threads in matrix_threads() {
         for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
             for lanes in LANE_WIDTHS {
-                let mut ev = BatchEvaluator::with_opts(EvalOpts { threads, schedule, lanes });
+                let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                    threads,
+                    schedule,
+                    lanes,
+                    ..EvalOpts::default()
+                });
                 let got = ev.evaluate_bool(&mpop, &mps, &m.cases);
                 for (i, (a, b)) in got.iter().zip(&bool_baseline).enumerate() {
                     assert_eq!(
@@ -235,6 +245,88 @@ fn determinism_matrix_threads_x_schedule_x_lanes_on_skewed_population() {
                     assert_eq!(a.hits, b.hits);
                 }
             }
+        }
+    }
+
+    // regression kernel: the same matrix with the f32 lane axis
+    let rps = regression_set(1);
+    let xs: Vec<f32> = (0..23).map(|i| -1.0 + i as f32 * 0.09).collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x * x * x * x - x).collect();
+    let rcases = tape::RegCases::new(vec![xs], ys);
+    let mut rng = Rng::new(79);
+    let rpop = ramped_half_and_half(&mut rng, &rps, 64, 2, 6);
+    let mut reg_baseline_ev = BatchEvaluator::new(1);
+    let reg_baseline = reg_baseline_ev.evaluate_reg(&rpop, &rps, &rcases);
+    for threads in matrix_threads() {
+        for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            for reg_lanes in LANE_WIDTHS {
+                let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                    threads,
+                    schedule,
+                    reg_lanes,
+                    ..EvalOpts::default()
+                });
+                let got = ev.evaluate_reg(&rpop, &rps, &rcases);
+                for (i, (a, b)) in got.iter().zip(&reg_baseline).enumerate() {
+                    assert_eq!(
+                        a.raw.to_bits(),
+                        b.raw.to_bits(),
+                        "reg tree {i} at threads={threads} schedule={} reg_lanes={reg_lanes}",
+                        schedule.name()
+                    );
+                    assert_eq!(a.hits, b.hits);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn reg_sse_reduction_order_is_pinned() {
+    // The SSE reduction contract documented in gp::tape ("Pinned SSE
+    // reduction order"): per case in ascending index order, f32 error
+    // widened to f64 BEFORE squaring, squares summed sequentially into
+    // one f64. Cases with wildly mixed magnitudes make any
+    // reassociation (pairwise, blocked, reversed) land on different
+    // f64 bits, so this test fails if future lane work reorders the
+    // sum.
+    let ps = regression_set(1);
+    // mixed magnitudes: errors span ~12 orders of magnitude
+    let xs: Vec<f32> = vec![
+        1.0e6, -3.0, 1.0e-6, 7.5e4, -0.5, 2.0e5, 1.0e-3, -9.0e5, 0.25, 4.0e3, -1.0e-5, 6.0e2,
+        -2.5e4, 0.125,
+    ];
+    let ys: Vec<f32> = vec![0.0; 14];
+    let cases = tape::RegCases::new(vec![xs.clone()], ys.clone());
+    let mut rng = Rng::new(83);
+    let pop = ramped_half_and_half(&mut rng, &ps, 40, 2, 6);
+    for t in &pop {
+        let tape = match tape::compile(t, &ps, opcodes::REG_NOP) {
+            Ok(tp) => tp,
+            Err(_) => continue,
+        };
+        // expected: single-case kernel runs accumulated in case order.
+        // eval on a 1-case set yields exactly err_k^2 (one f64 square),
+        // so the in-order fold below IS the pinned reduction.
+        let mut expected = 0f64;
+        for k in 0..xs.len() {
+            let single = tape::RegCases::new(vec![vec![xs[k]]], vec![ys[k]]);
+            let (sq, _) = tape::eval_reg_native(&tape, &single);
+            expected += sq;
+        }
+        let (batch, _) = tape::eval_reg_native(&tape, &cases);
+        assert_eq!(
+            expected.to_bits(),
+            batch.to_bits(),
+            "SSE must be the in-order per-case f64 sum (tree {:?})",
+            t
+        );
+        // and the order is lane- and thread-invariant
+        let mut scratch = tape::RegScratch::new(cases.ncases());
+        for lanes in LANE_WIDTHS {
+            let (sse, _) =
+                tape::eval_reg_with_lanes(&tape.ops, &tape.consts, &cases, &mut scratch, lanes);
+            assert_eq!(batch.to_bits(), sse.to_bits(), "lanes={lanes}");
         }
     }
 }

@@ -1,12 +1,19 @@
 //! Differential / property proofs for the evaluation hot path: random
 //! trees for all five problems, evaluated through the production
-//! kernels (tape compile + wide-lane boolean kernel + batch fan-out)
-//! versus a naive recursive interpreter that shares **no code** with
-//! the tape machine. Fitness must be **bit-identical** for:
+//! kernels (tape compile + wide-lane boolean kernel + packed-column
+//! f32 regression kernel + batch fan-out) versus naive interpreters
+//! that share **no code** with the tape machine (recursive tree
+//! walkers, plus a scalar per-case tape interpreter for crafted tapes
+//! that no well-formed tree can produce). Fitness must be
+//! **bit-identical** for:
 //!
-//! * every lane width in `LANE_WIDTHS`, including ragged tails where
-//!   `ncases % (64 * lanes) != 0` (masked partial words AND partial
-//!   lane blocks);
+//! * every boolean lane width in `LANE_WIDTHS`, including ragged
+//!   tails where `ncases % (64 * lanes) != 0` (masked partial words
+//!   AND partial lane blocks);
+//! * every regression lane width in `LANE_WIDTHS`, including ragged
+//!   case counts (`ncases % REG_LANE_PAD != 0` — exercised through
+//!   the zero-padded columns), push-clamp saturation and non-finite
+//!   (NaN/inf) intermediate values;
 //! * every `Schedule` (static | sorted | steal);
 //! * every worker thread count (from `VGP_EVAL_THREADS` when set — CI
 //!   runs this file once at 1 and once at 8 — else {1, 2, 8}).
@@ -112,7 +119,12 @@ fn bool_differential(
     for threads in threads_under_test() {
         for schedule in SCHEDULES {
             for lanes in LANE_WIDTHS {
-                let mut ev = BatchEvaluator::with_opts(EvalOpts { threads, schedule, lanes });
+                let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                    threads,
+                    schedule,
+                    lanes,
+                    ..EvalOpts::default()
+                });
                 let got = ev.evaluate_bool(pop, ps, cases);
                 assert_fitness_bits(
                     &got,
@@ -223,10 +235,10 @@ fn naive_reg_fitness(tree: &Tree, ps: &PrimSet, cases: &RegCases) -> Fitness {
     let mut sse = 0f64;
     let mut hits = 0u32;
     for k in 0..cases.ncases() {
-        let x: Vec<f32> = cases.x.iter().map(|col| col[k]).collect();
+        let x: Vec<f32> = cases.x().iter().map(|col| col[k]).collect();
         let mut i = 0;
         let out = eval_reg_tree(tree, ps, &x, &mut i);
-        let err = (out - cases.y[k]) as f64;
+        let err = (out - cases.y()[k]) as f64;
         sse += err * err;
         if err.abs() <= REG_HIT_EPS as f64 {
             hits += 1;
@@ -235,25 +247,214 @@ fn naive_reg_fitness(tree: &Tree, ps: &PrimSet, cases: &RegCases) -> Fitness {
     Fitness { raw: sse, hits }
 }
 
+/// The full reg matrix: naive recursive interpreter vs the
+/// packed-column kernel across threads x schedule x reg lane width.
+fn reg_differential(label: &str, ps: &PrimSet, cases: &RegCases, pop: &[Tree]) {
+    let naive: Vec<Fitness> = pop.iter().map(|t| naive_reg_fitness(t, ps, cases)).collect();
+    for threads in threads_under_test() {
+        for schedule in SCHEDULES {
+            for reg_lanes in LANE_WIDTHS {
+                let mut ev = BatchEvaluator::with_opts(EvalOpts {
+                    threads,
+                    schedule,
+                    reg_lanes,
+                    ..EvalOpts::default()
+                });
+                let got = ev.evaluate_reg(pop, ps, cases);
+                assert_fitness_bits(
+                    &got,
+                    &naive,
+                    &format!("{label} t={threads} {} rl={reg_lanes}", schedule.name()),
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn regression_tape_kernel_matches_naive_interpreter() {
     let ps = regression_set(1);
     // 23 cases: not a multiple of anything interesting, on purpose
+    // (pads to 24, so the kernel also evaluates one zero-padded tail)
     let xs: Vec<f32> = (0..23).map(|i| -1.0 + i as f32 * 0.09).collect();
     let ys: Vec<f32> = xs.iter().map(|&x| x * x * x - 0.5 * x + 0.25).collect();
-    let cases = RegCases { x: vec![xs], y: ys };
+    let cases = RegCases::new(vec![xs], ys);
     let mut rng = Rng::new(109);
     let pop = ramped_half_and_half(&mut rng, &ps, 150, 2, 6);
-    let naive: Vec<Fitness> = pop.iter().map(|t| naive_reg_fitness(t, &ps, &cases)).collect();
-    for threads in threads_under_test() {
-        for schedule in SCHEDULES {
-            let mut ev = BatchEvaluator::with_opts(EvalOpts {
-                threads,
-                schedule,
-                lanes: tape::DEFAULT_LANES,
-            });
-            let got = ev.evaluate_reg(&pop, &ps, &cases);
-            assert_fitness_bits(&got, &naive, &format!("reg t={threads} {}", schedule.name()));
+    reg_differential("reg", &ps, &cases, &pop);
+}
+
+#[test]
+fn regression_ragged_case_counts_match_naive_interpreter() {
+    // every padding remainder of REG_LANE_PAD, including the 1-case
+    // set and an exact multiple (no padding at all)
+    let ps = regression_set(2);
+    let mut rng = Rng::new(131);
+    let pop = ramped_half_and_half(&mut rng, &ps, 40, 2, 5);
+    for ncases in [1usize, 5, 8, 13, 16, 27] {
+        let xs: Vec<f32> = (0..ncases).map(|i| -2.0 + i as f32 * 0.31).collect();
+        let zs: Vec<f32> = (0..ncases).map(|i| (i as f32 * 1.7).cos()).collect();
+        let ys: Vec<f32> = xs.iter().zip(&zs).map(|(&x, &z)| x * z - 0.25).collect();
+        let cases = RegCases::new(vec![xs, zs], ys);
+        reg_differential(&format!("reg-ragged{ncases}"), &ps, &cases, &pop);
+    }
+}
+
+#[test]
+fn regression_nonfinite_intermediates_match_naive_interpreter() {
+    // crafted trees drive f32 arithmetic off the cliff: 1e30 * 1e30
+    // overflows to +inf, inf - inf is NaN, and the DIV/LOG guards sit
+    // right at their 1e-9 thresholds. The kernel must reproduce the
+    // naive interpreter BIT for bit — including NaN payload bits in
+    // the SSE — at every lane width.
+    // regression_set(1) preorder ops: x0=0 erc=1 +=2 -=3 *=4 %=5 sin=6 cos=7
+    let ps = regression_set(1);
+    let huge = 1.0e30f32;
+    let tiny = 5.0e-10f32; // below the 1e-9 guard: protected DIV/LOG
+    let pop = vec![
+        // (* 1e30' 1e30') -> +inf in every case
+        Tree::new(vec![4, 1, 1], vec![0.0, huge, huge]),
+        // (- (* 1e30' 1e30') (* 1e30' 1e30')) -> inf - inf = NaN
+        Tree::new(vec![3, 4, 1, 1, 4, 1, 1], vec![0.0, 0.0, huge, huge, 0.0, huge, huge]),
+        // (% x0 5e-10') -> guarded: constant 1.0
+        Tree::new(vec![5, 0, 1], vec![0.0, 0.0, tiny]),
+        // (% 1e30' x0) -> overflows to inf where |x| is small enough
+        Tree::new(vec![5, 1, 0], vec![0.0, huge, 0.0]),
+        // (sin (* 1e30' 1e30')) -> sin(inf) = NaN
+        Tree::new(vec![6, 4, 1, 1], vec![0.0, 0.0, huge, huge]),
+        // (+ x0 (cos (- (* 1e30' 1e30') (* 1e30' 1e30')))) -> x + cos(NaN)
+        Tree::new(
+            vec![2, 0, 7, 3, 4, 1, 1, 4, 1, 1],
+            vec![0.0, 0.0, 0.0, 0.0, 0.0, huge, huge, 0.0, huge, huge],
+        ),
+    ];
+    let xs: Vec<f32> = (0..11).map(|i| -1.0 + i as f32 * 0.2).collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x).collect();
+    let cases = RegCases::new(vec![xs], ys);
+    reg_differential("reg-nonfinite", &ps, &cases, &pop);
+}
+
+/// Scalar per-case tape interpreter with the kernel's clamp semantics
+/// (push onto a full stack overwrites the top slot) — the oracle for
+/// crafted tapes that no well-formed tree can compile to. Shares no
+/// code or layout with the packed-column kernel.
+fn naive_tape_reg_case(tape_ops: &[i32], tape_consts: &[f32], x: &[f32]) -> f32 {
+    use opcodes::*;
+    let depth = STACK_DEPTH as usize;
+    let mut stack = vec![0f32; depth + 1];
+    let mut sp = 0usize;
+    stack[0] = 0.0;
+    for (t, &op) in tape_ops.iter().enumerate() {
+        if !(0..REG_NOP).contains(&op) {
+            continue;
+        }
+        if op < REG_NUM_VARS || op == REG_OP_CONST {
+            let v = if op == REG_OP_CONST {
+                tape_consts[t]
+            } else {
+                x.get(op as usize).copied().unwrap_or(0.0)
+            };
+            let slot = sp.min(depth - 1);
+            stack[slot] = v;
+            sp = (sp + 1).min(depth);
+            continue;
+        }
+        let x1 = stack[sp.saturating_sub(1)];
+        let x2 = stack[sp.saturating_sub(2)];
+        let (r, ar) = match op {
+            REG_OP_ADD => (x2 + x1, 2),
+            REG_OP_SUB => (x2 - x1, 2),
+            REG_OP_MUL => (x2 * x1, 2),
+            REG_OP_DIV => (if x1.abs() < 1e-9 { 1.0 } else { x2 / x1 }, 2),
+            REG_OP_SIN => (x1.sin(), 1),
+            REG_OP_COS => (x1.cos(), 1),
+            REG_OP_EXP => (x1.clamp(-50.0, 50.0).exp(), 1),
+            REG_OP_LOG => (if x1.abs() < 1e-9 { 0.0 } else { x1.abs().ln() }, 1),
+            REG_OP_NEG => (-x1, 1),
+            _ => unreachable!(),
+        };
+        sp = (sp + 1).saturating_sub(ar).clamp(0, depth);
+        stack[sp.saturating_sub(1)] = r;
+    }
+    stack[0]
+}
+
+#[test]
+fn regression_crafted_tapes_clamp_and_exp_log_neg_match_scalar_oracle() {
+    // raw tapes reach what trees cannot: push-clamp saturation (more
+    // than STACK_DEPTH live pushes) and the EXP/LOG/NEG opcodes the
+    // tree primitive set does not expose
+    use vgp::gp::tape::opcodes::*;
+    let l = TAPE_LEN as usize;
+    let mut tapes: Vec<(Vec<i32>, Vec<f32>)> = Vec::new();
+    // 17 CONST pushes (one past STACK_DEPTH, clamping) then 15 ADDs
+    let mut ops = vec![REG_NOP; l];
+    let mut consts = vec![0f32; l];
+    for i in 0..17 {
+        ops[i] = REG_OP_CONST;
+        consts[i] = 0.5 + i as f32;
+    }
+    for slot in ops.iter_mut().skip(17).take(15) {
+        *slot = REG_OP_ADD;
+    }
+    tapes.push((ops, consts));
+    // 20 variable pushes (clamping) folded by MULs, then NEG
+    let mut ops = vec![REG_NOP; l];
+    for slot in ops.iter_mut().take(20) {
+        *slot = 0; // x0
+    }
+    for slot in ops.iter_mut().skip(20).take(15) {
+        *slot = REG_OP_MUL;
+    }
+    ops[35] = REG_OP_NEG;
+    tapes.push((ops, vec![0f32; l]));
+    // EXP of a huge operand (clamped to e^50) and LOG of a tiny one
+    let mut ops = vec![REG_NOP; l];
+    let mut consts = vec![0f32; l];
+    ops[0] = REG_OP_CONST;
+    consts[0] = 1.0e9;
+    ops[1] = REG_OP_EXP;
+    ops[2] = REG_OP_CONST;
+    consts[2] = 5.0e-10;
+    ops[3] = REG_OP_LOG;
+    ops[4] = REG_OP_ADD;
+    ops[5] = REG_OP_NEG;
+    tapes.push((ops, consts));
+    // underflowing LOG input that passes the guard: ln(|x|) -> -inf? no,
+    // 2e-9 passes the 1e-9 guard and ln(2e-9) is finite; EXP(-1e9)
+    // clamps to e^-50
+    let mut ops = vec![REG_NOP; l];
+    let mut consts = vec![0f32; l];
+    ops[0] = REG_OP_CONST;
+    consts[0] = 2.0e-9;
+    ops[1] = REG_OP_LOG;
+    ops[2] = REG_OP_CONST;
+    consts[2] = -1.0e9;
+    ops[3] = REG_OP_EXP;
+    ops[4] = REG_OP_SUB;
+    tapes.push((ops, consts));
+
+    let xs: Vec<f32> = (0..13).map(|i| -3.0 + i as f32 * 0.5).collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x * 2.0).collect();
+    let cases = RegCases::new(vec![xs.clone()], ys.clone());
+    let mut scratch = tape::RegScratch::new(cases.ncases());
+    for (ti, (ops, consts)) in tapes.iter().enumerate() {
+        // oracle: per-case scalar interpreter + the pinned reduction
+        let mut sse = 0f64;
+        let mut hits = 0u32;
+        for k in 0..xs.len() {
+            let out = naive_tape_reg_case(ops, consts, &xs[k..k + 1]);
+            let err = (out - ys[k]) as f64;
+            sse += err * err;
+            if err.abs() <= REG_HIT_EPS as f64 {
+                hits += 1;
+            }
+        }
+        for lanes in LANE_WIDTHS {
+            let (got_sse, got_hits) =
+                tape::eval_reg_with_lanes(ops, consts, &cases, &mut scratch, lanes);
+            assert_eq!(sse.to_bits(), got_sse.to_bits(), "tape {ti} lanes={lanes} sse");
+            assert_eq!(hits, got_hits, "tape {ti} lanes={lanes} hits");
         }
     }
 }
@@ -278,7 +479,7 @@ fn ant_batch_fanout_matches_sequential_walks() {
             let mut ev = ant::NativeEvaluator::with_opts(EvalOpts {
                 threads,
                 schedule,
-                lanes: tape::DEFAULT_LANES,
+                ..EvalOpts::default()
             });
             let got = vgp::gp::Evaluator::evaluate(&mut ev, &pop, &ps);
             assert_fitness_bits(&got, &naive, &format!("ant t={threads} {}", schedule.name()));
@@ -305,7 +506,7 @@ fn interest_point_batch_fanout_matches_sequential_walks() {
         for schedule in SCHEDULES {
             let mut ev = interest_point::NativeEvaluator::with_opts(
                 4,
-                EvalOpts { threads, schedule, lanes: tape::DEFAULT_LANES },
+                EvalOpts { threads, schedule, ..EvalOpts::default() },
             );
             let got = vgp::gp::Evaluator::evaluate(&mut ev, &pop, &ps);
             assert_fitness_bits(&got, &naive, &format!("ip t={threads} {}", schedule.name()));

@@ -220,12 +220,12 @@ fn prop_regression_tape_matches_scalar_eval() {
         let tape = tape::compile(t, &ps, opcodes::REG_NOP).map_err(|e| e.to_string())?;
         let xs: Vec<f32> = (0..8).map(|i| -1.0 + i as f32 * 0.25).collect();
         let ys = vec![0f32; 8];
-        let cases = tape::RegCases { x: vec![xs.clone()], y: ys };
+        let cases = tape::RegCases::new(vec![xs.clone()], ys);
         let (sse_all, _) = tape::eval_reg_native(&tape, &cases);
         // pointwise: evaluate each case alone; SSE must sum
         let mut sse_sum = 0f64;
         for (i, &x) in xs.iter().enumerate() {
-            let c1 = tape::RegCases { x: vec![vec![x]], y: vec![0.0] };
+            let c1 = tape::RegCases::new(vec![vec![x]], vec![0.0]);
             let (s1, _) = tape::eval_reg_native(&tape, &c1);
             sse_sum += s1;
             let _ = i;

@@ -5,11 +5,12 @@
 //!
 //! Skipped when artifacts/ hasn't been built (`make artifacts`).
 
+use vgp::gp::eval::{EvalOpts, Schedule};
 use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::primset::regression_set;
 use vgp::gp::problems::multiplexer::Multiplexer;
 use vgp::gp::problems::parity::Parity;
 use vgp::gp::tape::{self, opcodes, RegCases};
-use vgp::gp::primset::regression_set;
 use vgp::runtime::Runtime;
 use vgp::util::rng::Rng;
 
@@ -96,7 +97,7 @@ fn artifact_matches_native_on_regression() {
         pop.iter().map(|t| tape::compile(t, &ps, opcodes::REG_NOP).unwrap()).collect();
     let xs: Vec<f32> = (0..20).map(|i| -1.0 + i as f32 * 0.1).collect();
     let ys: Vec<f32> = xs.iter().map(|&x| x + x * x).collect();
-    let cases = RegCases { x: vec![xs], y: ys };
+    let cases = RegCases::new(vec![xs], ys);
     let artifact = rt.eval_reg(&tapes, &cases).unwrap();
     for (i, tp) in tapes.iter().enumerate() {
         let (sse, hits) = tape::eval_reg_native(tp, &cases);
@@ -122,5 +123,42 @@ fn artifact_batch_padding_is_neutral() {
     assert_eq!(hits.len(), 5);
     for (i, tp) in tapes.iter().enumerate() {
         assert_eq!(hits[i], tape::eval_bool_native(tp, &m.cases));
+    }
+}
+
+#[test]
+fn artifact_batched_dispatch_matches_serial_for_every_knob() {
+    // the chunked multi-thread dispatch (TapeArena + par_map_schedule)
+    // must return exactly the serial wrapper's bytes for every
+    // threads x schedule combination — the artifact-path half of the
+    // quorum determinism contract
+    let Some(rt) = runtime() else { return };
+    let m = Multiplexer::new(3);
+    let mut rng = Rng::new(17);
+    // > 1 chunk of 256, with a ragged last chunk
+    let pop = ramped_half_and_half(&mut rng, m.primset(), 300, 2, 6);
+    let tapes: Vec<_> =
+        pop.iter().map(|t| tape::compile(t, m.primset(), opcodes::BOOL_NOP).unwrap()).collect();
+    let serial = rt.eval_bool(&tapes, &m.cases).unwrap();
+    let rps = regression_set(1);
+    let rpop = ramped_half_and_half(&mut rng, &rps, 300, 2, 6);
+    let rtapes: Vec<_> =
+        rpop.iter().map(|t| tape::compile(t, &rps, opcodes::REG_NOP).unwrap()).collect();
+    let xs: Vec<f32> = (0..20).map(|i| -1.0 + i as f32 * 0.1).collect();
+    let ys: Vec<f32> = xs.iter().map(|&x| x * x - x).collect();
+    let rcases = RegCases::new(vec![xs], ys);
+    let rserial = rt.eval_reg(&rtapes, &rcases).unwrap();
+    for threads in [1usize, 2, 8] {
+        for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
+            let opts = EvalOpts { threads, schedule, ..EvalOpts::default() };
+            let got = rt.eval_bool_batched(&tapes[..], &m.cases, opts).unwrap();
+            assert_eq!(serial, got, "bool threads={threads} {}", schedule.name());
+            let rgot = rt.eval_reg_batched(&rtapes[..], &rcases, opts).unwrap();
+            assert_eq!(rserial.len(), rgot.len());
+            for (i, (a, b)) in rserial.iter().zip(&rgot).enumerate() {
+                assert_eq!(a.0.to_bits(), b.0.to_bits(), "reg sse {i} threads={threads}");
+                assert_eq!(a.1, b.1, "reg hits {i}");
+            }
+        }
     }
 }
