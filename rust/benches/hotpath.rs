@@ -17,6 +17,13 @@
 //! * scheduler RPC throughput
 //! * DES event throughput
 //! * GP breeding (crossover+mutation) throughput
+//!
+//! **Smoke mode** (`VGP_BENCH_SMOKE=1`, the CI bench-smoke job): fewer
+//! iterations, a trimmed threads × scheduler matrix and no
+//! paper-infrastructure benches — but still ≥ 1 *measured* row per
+//! kernel (bool, reg, reg-legacy) appended to the perf trajectory,
+//! which is then schema-validated; any write or schema failure exits
+//! nonzero so CI cannot upload a broken artifact.
 
 use vgp::boinc::db::HostRow;
 use vgp::boinc::server::{ServerConfig, ServerCore};
@@ -30,7 +37,7 @@ use vgp::gp::primset::regression_set;
 use vgp::gp::problems::multiplexer::Multiplexer;
 use vgp::gp::tape::{self, opcodes, LANE_WIDTHS};
 use vgp::sim::{SimConfig, Simulation};
-use vgp::util::bench::{append_bench_json, Bench, BenchRecord};
+use vgp::util::bench::{append_bench_json, validate_bench_json, Bench, BenchRecord};
 use vgp::util::json::Json;
 use vgp::util::rng::Rng;
 
@@ -219,8 +226,15 @@ mod legacy_reg {
 }
 
 fn main() {
-    println!("== hot-path microbenches ==");
-    let b = Bench::new(3, 15);
+    let smoke = std::env::var("VGP_BENCH_SMOKE").map(|v| v == "1" || v == "true").unwrap_or(false);
+    println!("== hot-path microbenches{} ==", if smoke { " (smoke mode)" } else { "" });
+    let b = if smoke { Bench::new(1, 3) } else { Bench::new(3, 15) };
+    let thread_axis: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4, 8] };
+    let schedules: &[Schedule] = if smoke {
+        &[Schedule::Static]
+    } else {
+        &[Schedule::Static, Schedule::Sorted, Schedule::Steal]
+    };
     let mut records: Vec<BenchRecord> = Vec::new();
     let pr_tag = std::env::var("BENCH_PR").unwrap_or_else(|_| "dev".to_string());
 
@@ -328,8 +342,8 @@ fn main() {
         });
     }
     let mut throughputs: Vec<(usize, f64)> = Vec::new();
-    for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
-        for threads in [1usize, 2, 4, 8] {
+    for &schedule in schedules {
+        for &threads in thread_axis {
             let mut ev = BatchEvaluator::with_opts(EvalOpts {
                 threads,
                 schedule,
@@ -365,10 +379,11 @@ fn main() {
 
     // ---- regression kernel: the packed-column f32 matrix vs the
     // verbatim pre-PR-4 scalar kernel, on a mux-scale population
-    // (4000 programs, the paper's mux11 campaign size) x 256 cases
+    // (4000 programs, the paper's mux11 campaign size; smoke mode
+    // trims it to 512) x 256 cases
     let rps = regression_set(1);
     let mut rrng = Rng::new(2);
-    let rpop = ramped_half_and_half(&mut rrng, &rps, 4000, 2, 6);
+    let rpop = ramped_half_and_half(&mut rrng, &rps, if smoke { 512 } else { 4000 }, 2, 6);
     let rtapes: Vec<_> = rpop
         .iter()
         .map(|t| tape::compile(t, &rps, opcodes::REG_NOP).unwrap())
@@ -442,8 +457,8 @@ fn main() {
         "      packed-column vs legacy scalar reg kernel speedup (L=4, 1 thread): {:.2}x (target > 1x)",
         reg_l4_rate / old_reg.per_sec()
     );
-    for schedule in [Schedule::Static, Schedule::Sorted, Schedule::Steal] {
-        for threads in [1usize, 2, 4, 8] {
+    for &schedule in schedules {
+        for &threads in thread_axis {
             let mut ev = BatchEvaluator::with_opts(EvalOpts {
                 threads,
                 schedule,
@@ -470,74 +485,114 @@ fn main() {
         }
     }
 
-    // ---- artifact eval (if built)
-    if std::path::Path::new("artifacts/meta.json").exists() {
-        let rt = vgp::runtime::Runtime::load("artifacts").unwrap();
-        b.run_throughput("artifact bool eval (256 prog x 2048 cases)", progs_cases, "prog*case", || {
-            let hits = rt.eval_bool(&tapes, &m.cases).unwrap();
-            std::hint::black_box(hits);
+    // the paper-infrastructure benches don't feed the kernel perf
+    // trajectory — smoke mode skips them to stay runner-cheap
+    if !smoke {
+        // ---- artifact eval (if built)
+        if std::path::Path::new("artifacts/meta.json").exists() {
+            let rt = vgp::runtime::Runtime::load("artifacts").unwrap();
+            b.run_throughput("artifact bool eval (256 prog x 2048 cases)", progs_cases, "prog*case", || {
+                let hits = rt.eval_bool(&tapes, &m.cases).unwrap();
+                std::hint::black_box(hits);
+            });
+        } else {
+            println!("artifact bench skipped (run `make artifacts`)");
+        }
+
+        // ---- tape compilation
+        b.run_throughput("tape compile (256 trees)", 256.0, "tree", || {
+            for t in &pop {
+                std::hint::black_box(tape::compile(t, m.primset(), opcodes::BOOL_NOP).unwrap());
+            }
         });
-    } else {
-        println!("artifact bench skipped (run `make artifacts`)");
+
+        // ---- breeding
+        let limits = Limits::default();
+        let ps = m.primset().clone();
+        let mut brng = Rng::new(3);
+        b.run_throughput("crossover (1000 offspring)", 1000.0, "offspring", || {
+            for i in 0..1000 {
+                let a = &pop[i % pop.len()];
+                let c = &pop[(i * 7 + 1) % pop.len()];
+                std::hint::black_box(crossover(&mut brng, a, c, &ps, limits));
+            }
+        });
+
+        // ---- scheduler RPC throughput (request+report cycles)
+        b.run_throughput("scheduler dispatch+report cycle (x1000)", 1000.0, "rpc-pair", || {
+            let mut s = ServerCore::new(ServerConfig::default());
+            let h = s.register_host(HostRow {
+                id: 0,
+                name: "h".into(),
+                city: "x".into(),
+                flops: 1e9,
+                ncpus: 1,
+                on_frac: 1.0,
+                active_frac: 1.0,
+                registered_at: 0.0,
+                last_heartbeat: 0.0,
+                error_results: 0,
+                valid_results: 0,
+                consecutive_errors: 0,
+                last_error_at: 0.0,
+                in_flight: 0,
+                credit: 0.0,
+            });
+            for i in 0..1000 {
+                s.submit_wu(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e9));
+            }
+            let mut now = 0.0;
+            for _ in 0..1000 {
+                let (rid, _, _) = s.request_work(h, now).unwrap();
+                s.report_success(rid, now + 1.0, 1.0, Json::obj().set("ok", true));
+                now += 2.0;
+            }
+            std::hint::black_box(s.assimilated().len());
+        });
+
+        // ---- DES throughput: a full volunteer campaign per iteration
+        b.run_throughput("DES volunteer campaign (40 hosts, 100 wus)", 100.0, "wu", || {
+            let mut rng = Rng::new(9);
+            let hosts = sample_pool(&mut rng, &PoolParams::volunteer(40), &[("x", 40)]);
+            let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 9);
+            for i in 0..100 {
+                sim.submit(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e12));
+            }
+            std::hint::black_box(sim.run(REFERENCE_FLOPS).completed);
+        });
     }
 
-    // ---- tape compilation
-    b.run_throughput("tape compile (256 trees)", 256.0, "tree", || {
-        for t in &pop {
-            std::hint::black_box(tape::compile(t, m.primset(), opcodes::BOOL_NOP).unwrap());
+    // the smoke contract CI relies on: at least one measured row per
+    // kernel, whatever the trimmed matrix looks like
+    if smoke {
+        for kernel in ["bool", "reg", "reg-legacy"] {
+            assert!(records.iter().any(|r| r.kernel == kernel), "smoke run must measure kernel '{kernel}'");
         }
-    });
-
-    // ---- breeding
-    let limits = Limits::default();
-    let ps = m.primset().clone();
-    let mut brng = Rng::new(3);
-    b.run_throughput("crossover (1000 offspring)", 1000.0, "offspring", || {
-        for i in 0..1000 {
-            let a = &pop[i % pop.len()];
-            let c = &pop[(i * 7 + 1) % pop.len()];
-            std::hint::black_box(crossover(&mut brng, a, c, &ps, limits));
-        }
-    });
-
-    // ---- scheduler RPC throughput (request+report cycles)
-    b.run_throughput("scheduler dispatch+report cycle (x1000)", 1000.0, "rpc-pair", || {
-        let mut s = ServerCore::new(ServerConfig::default());
-        let h = s.register_host(HostRow {
-            id: 0, name: "h".into(), city: "x".into(), flops: 1e9, ncpus: 1,
-            on_frac: 1.0, active_frac: 1.0, registered_at: 0.0, last_heartbeat: 0.0,
-            error_results: 0, valid_results: 0, consecutive_errors: 0, last_error_at: 0.0, in_flight: 0, credit: 0.0,
-        });
-        for i in 0..1000 {
-            s.submit_wu(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e9));
-        }
-        let mut now = 0.0;
-        for _ in 0..1000 {
-            let (rid, _, _) = s.request_work(h, now).unwrap();
-            s.report_success(rid, now + 1.0, 1.0, Json::obj().set("ok", true));
-            now += 2.0;
-        }
-        std::hint::black_box(s.assimilated().len());
-    });
-
-    // ---- DES throughput: a full volunteer campaign per iteration
-    b.run_throughput("DES volunteer campaign (40 hosts, 100 wus)", 100.0, "wu", || {
-        let mut rng = Rng::new(9);
-        let hosts = sample_pool(&mut rng, &PoolParams::volunteer(40), &[("x", 40)]);
-        let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 9);
-        for i in 0..100 {
-            sim.submit(WorkUnit::new(0, format!("w{i}"), Json::obj(), 1e12));
-        }
-        std::hint::black_box(sim.run(REFERENCE_FLOPS).completed);
-    });
+    }
 
     // ---- persist the matrix into the perf trajectory (the repo-root
-    // file, independent of cargo's working directory for benches)
+    // file, independent of cargo's working directory for benches),
+    // then re-validate the whole file against the schema
     let json_path = std::env::var("VGP_BENCH_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
     });
     match append_bench_json(&json_path, &records) {
-        Ok(()) => println!("appended {} records to {json_path}", records.len()),
+        Ok(()) => {
+            println!("appended {} records to {json_path}", records.len());
+            match validate_bench_json(&json_path) {
+                Ok(n) => println!("{json_path} schema OK ({n} entries)"),
+                Err(e) => {
+                    println!("{json_path} schema INVALID: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        // local runs tolerate an unwritable trajectory; the CI smoke
+        // job must not (its uploaded artifact would be stale)
+        Err(e) if smoke => {
+            println!("could not write {json_path}: {e}");
+            std::process::exit(1);
+        }
         Err(e) => println!("could not write {json_path}: {e} (records printed above)"),
     }
     println!("done");

@@ -28,11 +28,11 @@
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 
-use crate::gp::islands::Topology;
+use crate::gp::islands::{AdaptiveMigration, Topology};
 use crate::util::json::Json;
 
 use super::server::ServerCore;
-use super::workunit::WorkUnit;
+use super::workunit::{ServerState, WorkUnit};
 
 /// Static shape of an island campaign, as the exchange sees it.
 #[derive(Clone, Debug)]
@@ -43,6 +43,17 @@ pub struct ExchangeConfig {
     /// seconds after a deme's own checkpoint lands before missing
     /// source-deme emigrants are written off as churned
     pub migration_timeout: f64,
+    /// adaptive per-deme migration rate: when set, every released
+    /// epoch spec has its `migration_k` recomputed from the deme's
+    /// banked best-fitness trajectory (a pure function of validated
+    /// payload content — see [`AdaptiveMigration`]); `None` keeps the
+    /// campaign's fixed rate
+    pub adaptive: Option<AdaptiveMigration>,
+    /// straggler boosting: race an extra replica against a dependency
+    /// WU that is blocking an epoch barrier while in flight on a host
+    /// with a nonzero consecutive-error streak, instead of waiting for
+    /// the migration timeout
+    pub boost_replicas: bool,
 }
 
 /// Observable exchange counters (campaign reporting + tests).
@@ -60,14 +71,19 @@ pub struct ExchangeStats {
     pub timeouts: u64,
     /// WUs cancelled because their deme's dependency chain died
     pub cancelled: u64,
+    /// barrier-blocking WUs that got a boosted racing replica
+    pub boosted: u64,
 }
 
 /// A deme-epoch's validated outcome: the checkpoint the next epoch
-/// resumes from and the emigrants its neighbors import.
+/// resumes from, the emigrants its neighbors import, and the deme's
+/// best raw fitness (exact payload bits — the adaptive-migration
+/// policy's input).
 struct Bank {
     checkpoint: Json,
     emigrants: Vec<Json>,
     banked_at: f64,
+    best_raw: Option<f64>,
 }
 
 /// The migration broker. Owns no results — it reads the assimilator's
@@ -86,6 +102,9 @@ pub struct MigrationExchange {
     /// timeout — dedups the `timeouts` stat when several dependents
     /// (or several polls) observe the same straggler
     written_off: BTreeSet<(usize, usize)>,
+    /// WU ids already given a boosted replica (one race per WU — a
+    /// straggler that keeps straggling falls back to the timeout path)
+    boosted: BTreeSet<u64>,
     /// how far into `ServerCore::assimilated` we have scanned
     scanned: usize,
     pub stats: ExchangeStats,
@@ -102,6 +121,7 @@ impl MigrationExchange {
             released: vec![vec![false; e]; d],
             dead: vec![vec![false; e]; d],
             written_off: BTreeSet::new(),
+            boosted: BTreeSet::new(),
             scanned: 0,
             stats: ExchangeStats::default(),
         }
@@ -141,6 +161,7 @@ impl MigrationExchange {
     pub fn poll(&mut self, core: &mut ServerCore, now: f64) {
         self.bank_new(core);
         self.cancel_dead_chains(core);
+        self.boost_stragglers(core);
         self.release_ready(core, now);
     }
 
@@ -157,7 +178,13 @@ impl MigrationExchange {
                 .and_then(Json::as_arr)
                 .map(|v| v.to_vec())
                 .unwrap_or_default();
-            self.banked.insert((d, e), Bank { checkpoint, emigrants, banked_at: a.completed_at });
+            let best_raw = a
+                .payload
+                .get("best_raw_bits")
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .map(f64::from_bits);
+            self.banked.insert((d, e), Bank { checkpoint, emigrants, banked_at: a.completed_at, best_raw });
             self.stats.banked += 1;
         }
         self.scanned = assimilated.len();
@@ -190,6 +217,49 @@ impl MigrationExchange {
                     }
                 }
                 break;
+            }
+        }
+    }
+
+    /// Straggler boosting: for every still-gated epoch, find the
+    /// dependency WUs blocking its barrier (the deme's own previous
+    /// checkpoint and its topology sources) that are neither banked
+    /// nor dead, and — when such a WU is in flight on a host the
+    /// scheduler's reliability counters mark suspect (a nonzero
+    /// consecutive-error streak) — raise its replication by one racing
+    /// replica instead of letting the epoch sit out the migration
+    /// timeout. Each WU is boosted at most once; payload determinism
+    /// makes the race outcome-neutral, so this only moves *time*,
+    /// never content.
+    fn boost_stragglers(&mut self, core: &mut ServerCore) {
+        if !self.cfg.boost_replicas {
+            return;
+        }
+        for e in 1..self.cfg.epochs {
+            for d in 0..self.cfg.demes {
+                if self.released[d][e] || self.dead[d][e] {
+                    continue;
+                }
+                let mut deps: Vec<(usize, usize)> = vec![(d, e - 1)];
+                deps.extend(self.cfg.topology.sources(d, self.cfg.demes).into_iter().map(|s| (s, e - 1)));
+                for (sd, se) in deps {
+                    if self.banked.contains_key(&(sd, se)) || self.dead[sd][se] {
+                        continue;
+                    }
+                    let wu_id = self.wu_ids[sd][se];
+                    if self.boosted.contains(&wu_id) {
+                        continue;
+                    }
+                    let suspect = core.db.results_of_wu(wu_id).iter().any(|r| {
+                        r.server_state == ServerState::InProgress
+                            && core.db.host(r.host_id).map(|h| h.consecutive_errors > 0).unwrap_or(false)
+                    });
+                    if suspect && core.boost_wu(wu_id) {
+                        self.boosted.insert(wu_id);
+                        self.stats.boosted += 1;
+                        core.metrics.inc("exchange.boosted");
+                    }
+                }
             }
         }
     }
@@ -232,9 +302,20 @@ impl MigrationExchange {
                 let id = self.wu_ids[d][e];
                 let Some(base) = core.db.wu(id).map(|w| w.spec.clone()) else { continue };
                 let n_imm = immigrants.len() as u64;
-                let spec = base
+                let mut spec = base
                     .set("checkpoint", own.checkpoint.clone())
                     .set("immigrants", Json::Arr(immigrants));
+                if let Some(adaptive) = self.cfg.adaptive {
+                    // the deme's validated best-raw trajectory over
+                    // epochs 0..e (all banked — the own-checkpoint
+                    // dependency chain guarantees it), in epoch order:
+                    // pure payload content, so every poll interleaving
+                    // computes the same rate
+                    let history: Vec<f64> = (0..e)
+                        .filter_map(|ep| self.banked.get(&(d, ep)).and_then(|b| b.best_raw))
+                        .collect();
+                    spec = spec.set("migration_k", adaptive.k_for(&history) as u64);
+                }
                 core.release_wu(id, spec);
                 self.released[d][e] = true;
                 self.stats.released += 1;
@@ -296,14 +377,27 @@ mod tests {
             .set("emigrants", Json::Arr(emigrants))
     }
 
-    fn campaign(demes: usize, epochs: usize) -> (ServerCore, MigrationExchange) {
-        let mut core = ServerCore::new(ServerConfig::default());
-        let mut ex = MigrationExchange::new(ExchangeConfig {
+    /// Like [`island_payload`] but carrying the deme's best raw
+    /// fitness (exact bits) — the adaptive-migration policy input.
+    fn island_payload_raw(d: usize, e: usize, n_emigrants: usize, raw: f64) -> Json {
+        island_payload(d, e, n_emigrants).set("best_raw_bits", format!("{:016x}", raw.to_bits()))
+    }
+
+    fn cfg(demes: usize, epochs: usize) -> ExchangeConfig {
+        ExchangeConfig {
             demes,
             epochs,
             topology: Topology::Ring,
             migration_timeout: 1000.0,
-        });
+            adaptive: None,
+            boost_replicas: false,
+        }
+    }
+
+    fn campaign_with(config: ExchangeConfig) -> (ServerCore, MigrationExchange) {
+        let (demes, epochs) = (config.demes, config.epochs);
+        let mut core = ServerCore::new(ServerConfig::default());
+        let mut ex = MigrationExchange::new(config);
         let mut wus = Vec::new();
         for e in 0..epochs {
             for d in 0..demes {
@@ -312,6 +406,10 @@ mod tests {
         }
         ex.install(&mut core, wus);
         (core, ex)
+    }
+
+    fn campaign(demes: usize, epochs: usize) -> (ServerCore, MigrationExchange) {
+        campaign_with(cfg(demes, epochs))
     }
 
     /// Fetch-and-succeed every dispatchable result, reporting payloads
@@ -399,5 +497,87 @@ mod tests {
             drain(&mut core, &mut ex, h, now);
         }
         assert!(core.is_complete(), "cancelled chain must not deadlock the campaign");
+    }
+
+    #[test]
+    fn adaptive_rate_is_patched_from_banked_trajectories() {
+        let mut config = cfg(2, 3);
+        config.adaptive = Some(AdaptiveMigration { base_k: 2, max_k: 8 });
+        let (mut core, mut ex) = campaign_with(config);
+        let h = core.register_host(host());
+        // raws[epoch][deme]: deme 0 stagnates, deme 1 keeps improving
+        let raws = [[5.0, 5.0], [5.0, 4.0]];
+        for e in 0..2usize {
+            let mut pending = Vec::new();
+            while let Some((rid, got, _)) = core.request_work(h, e as f64 + 1.0) {
+                let d = got.spec.u64_of("deme").unwrap() as usize;
+                let ep = got.spec.u64_of("epoch").unwrap() as usize;
+                assert_eq!(ep, e);
+                pending.push((rid, d));
+            }
+            for (rid, d) in pending {
+                core.report_success(rid, e as f64 + 1.5, 1.0, island_payload_raw(d, e, 2, raws[e][d]));
+            }
+            ex.poll(&mut core, e as f64 + 2.0);
+        }
+        // one epoch of history each: base rate for both demes
+        for d in 0..2 {
+            let spec = core.db.wu(ex.wu_id(d, 1)).unwrap().spec.clone();
+            assert_eq!(spec.u64_of("migration_k").unwrap(), 2, "deme {d} epoch 1 at base rate");
+        }
+        // epoch 2: deme 0 stagnated (5.0 -> 5.0) so its rate doubles;
+        // deme 1 improved (5.0 -> 4.0) and stays at base
+        let spec0 = core.db.wu(ex.wu_id(0, 2)).unwrap().spec.clone();
+        assert_eq!(spec0.u64_of("migration_k").unwrap(), 4, "stagnant deme doubles its rate");
+        let spec1 = core.db.wu(ex.wu_id(1, 2)).unwrap().spec.clone();
+        assert_eq!(spec1.u64_of("migration_k").unwrap(), 2, "improving deme stays at base");
+    }
+
+    #[test]
+    fn straggler_on_flaky_host_gets_raced_not_timed_out() {
+        let mut config = cfg(2, 2);
+        config.boost_replicas = true;
+        let (mut core, mut ex) = campaign_with(config);
+        let mut h1 = host();
+        h1.ncpus = 1;
+        let mut h2 = host();
+        h2.ncpus = 1;
+        let good = core.register_host(h1);
+        let flaky = core.register_host(h2);
+        // feeder order: (0,0) to the good host, (1,0) to the flaky one
+        let (r_good, w_good, _) = core.request_work(good, 1.0).unwrap();
+        assert_eq!(w_good.spec.u64_of("deme").unwrap(), 0);
+        let (r_flaky, w_flaky, _) = core.request_work(flaky, 1.0).unwrap();
+        assert_eq!(w_flaky.spec.u64_of("deme").unwrap(), 1);
+        // the flaky host crashes once (consecutive_errors = 1), then
+        // takes the reissued replica and goes silent mid-computation
+        core.report_error(r_flaky, 2.0);
+        let (_r_stuck, w_stuck, _) = core.request_work(flaky, 3.0).unwrap();
+        assert_eq!(w_stuck.spec.u64_of("deme").unwrap(), 1, "reissue goes back out");
+        // deme 0 finishes epoch 0; its epoch 1 imports from the straggler
+        core.report_success(r_good, 4.0, 1.0, island_payload(0, 0, 2));
+        ex.poll(&mut core, 5.0);
+        assert!(!ex.is_released(0, 1), "barrier still blocked by the straggler");
+        assert_eq!(ex.stats.boosted, 1, "suspect straggler must be raced");
+        assert_eq!(core.metrics.counter("wu.boosted"), 1);
+        // the good host picks up the racing replica (distinct-host
+        // rule) and completes it long before the migration timeout
+        let (r_race, w_race, _) = core.request_work(good, 6.0).unwrap();
+        assert_eq!(w_race.spec.u64_of("deme").unwrap(), 1);
+        core.report_success(r_race, 7.0, 1.0, island_payload(1, 0, 2));
+        ex.poll(&mut core, 8.0);
+        assert!(ex.is_released(0, 1) && ex.is_released(1, 1), "race unblocks the barrier");
+        assert_eq!(ex.stats.timeouts, 0, "no straggler write-off needed");
+        // the spec carries the straggler deme's real emigrants, not an
+        // empty timeout buffer
+        let spec = core.db.wu(ex.wu_id(0, 1)).unwrap().spec.clone();
+        assert_eq!(spec.get("immigrants").and_then(Json::as_arr).unwrap().len(), 2);
+        // one boost per WU: further polls must not re-boost
+        ex.poll(&mut core, 9.0);
+        assert_eq!(ex.stats.boosted, 1);
+        for now in [10.0, 20.0, 30.0] {
+            drain(&mut core, &mut ex, good, now);
+        }
+        assert!(core.is_complete());
     }
 }

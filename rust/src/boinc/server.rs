@@ -117,6 +117,32 @@ impl ServerCore {
         self.metrics.inc("wu.released");
     }
 
+    /// Raise a WU's replication by one extra racing replica — the
+    /// exchange's straggler boosting for island epoch barriers. Bumping
+    /// `target_nresults` past 1 arms the distinct-host rule, so the new
+    /// replica is steered to a *different* volunteer than the suspect
+    /// one; whichever replica reports first becomes canonical (payloads
+    /// are deterministic, so the race cannot change the result).
+    /// No-op on done, held, or unknown WUs. Returns whether a replica
+    /// was actually added.
+    pub fn boost_wu(&mut self, wu_id: u64) -> bool {
+        let ok = match self.db.wu_mut(wu_id) {
+            Some(w) if !w.is_done() && !w.held => {
+                w.target_nresults += 1;
+                // keep the error-mask headroom invariant: a boost must
+                // not push an otherwise-healthy WU into too_many_total
+                w.max_total_results += 1;
+                true
+            }
+            _ => false,
+        };
+        if ok {
+            self.db.insert_result(ResultRecord::new(0, wu_id));
+            self.metrics.inc("wu.boosted");
+        }
+        ok
+    }
+
     /// Administratively terminate a WU that can never run (its island
     /// dependency chain died): sets the couldnt_send error mask so the
     /// campaign completes instead of deadlocking.
@@ -174,22 +200,49 @@ impl ServerCore {
         if saturated {
             return None;
         }
-        let rid = self.db.pop_unsent()?;
-        let wu_id = self.db.result(rid).expect("result exists").wu_id;
-        let wu = self.db.wu(wu_id).expect("wu exists").clone();
         // redundancy must span distinct hosts (BOINC "one result per
-        // user per WU"); non-redundant WUs may be retried anywhere
-        if wu.target_nresults > 1 {
-            let already_here = self
-                .db
-                .results_of_wu(wu_id)
-                .iter()
-                .any(|r| r.host_id == host_id && r.server_state != ServerState::Unsent);
+        // user per WU"); non-redundant WUs may be retried anywhere.
+        // Scan PAST replicas this host cannot take instead of bouncing
+        // on the queue head: a boosted race replica parked at the front
+        // must not starve the suspect host of every WU queued behind it
+        // (head-of-line blocking that could deadlock a degraded pool).
+        let mut bounced: Vec<u64> = Vec::new();
+        let mut picked: Option<(u64, u64)> = None;
+        while let Some(rid) = self.db.pop_unsent() {
+            let wu_id = self.db.result(rid).expect("result exists").wu_id;
+            let (done, redundant) = {
+                let w = self.db.wu(wu_id).expect("wu exists");
+                (w.is_done(), w.target_nresults > 1)
+            };
+            if done {
+                // a leftover race replica of an already-finished WU
+                // (the boosted straggler recovered first): retire it
+                // instead of dispatching dead work to a volunteer
+                if let Some(r) = self.db.result_mut(rid) {
+                    r.server_state = ServerState::Over;
+                }
+                self.metrics.inc("result.didnt_need");
+                continue;
+            }
+            let already_here = redundant
+                && self
+                    .db
+                    .results_of_wu(wu_id)
+                    .iter()
+                    .any(|r| r.host_id == host_id && r.server_state != ServerState::Unsent);
             if already_here {
-                self.db.push_unsent(rid);
-                return None;
+                bounced.push(rid);
+            } else {
+                picked = Some((rid, wu_id));
+                break;
             }
         }
+        // bounced replicas return to the queue front in original order
+        for rid in bounced.into_iter().rev() {
+            self.db.push_unsent(rid);
+        }
+        let (rid, wu_id) = picked?;
+        let wu = self.db.wu(wu_id).expect("wu exists").clone();
         let est = wu.flops_est / host_flops.max(1e6);
         let deadline = now + (self.cfg.deadline_slack * est).max(wu.delay_bound);
         {
@@ -666,6 +719,72 @@ mod tests {
         s.release_wu(id, Json::obj());
         assert!(s.request_work(h, 4.0).is_none());
         assert_eq!(s.db.results_of_wu(id).len(), 1);
+    }
+
+    #[test]
+    fn boost_wu_adds_racing_replica_on_distinct_host() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let slow = s.register_host(host(1e9));
+        let fast = s.register_host(host(1e9));
+        let id = s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let (r1, _, _) = s.request_work(slow, 0.0).unwrap();
+        assert!(s.boost_wu(id), "in-flight WU must be boostable");
+        // the straggler host cannot grab its own race replica...
+        assert!(s.request_work(slow, 1.0).is_none(), "distinct-host rule armed by boost");
+        // ...but another volunteer can, and its result completes the WU
+        let (r2, got, _) = s.request_work(fast, 2.0).expect("boost replica dispatches");
+        assert_eq!(got.id, id);
+        s.report_success(r2, 3.0, 1.0, payload(4));
+        assert!(s.is_complete(), "racer's quorum-1 result assimilates");
+        assert_eq!(s.assimilated().len(), 1);
+        // the straggler's late identical report is absorbed quietly
+        s.report_success(r1, 9.0, 5.0, payload(4));
+        assert_eq!(s.assimilated().len(), 1, "no double assimilation");
+        // done WUs refuse further boosts
+        assert!(!s.boost_wu(id));
+        // held WUs refuse boosts (the exchange owns their lifecycle)
+        let mut held = WorkUnit::new(0, "held", Json::obj(), 1e9);
+        held.held = true;
+        let hid = s.submit_wu(held);
+        assert!(!s.boost_wu(hid));
+    }
+
+    #[test]
+    fn leftover_race_replica_is_retired_after_completion() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h1 = s.register_host(host(1e9));
+        let h2 = s.register_host(host(1e9));
+        let id = s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let (r1, _, _) = s.request_work(h1, 0.0).unwrap();
+        assert!(s.boost_wu(id));
+        // the straggler recovers first: the WU completes while the
+        // race replica is still unsent
+        s.report_success(r1, 1.0, 1.0, payload(2));
+        assert!(s.is_complete());
+        // the stale replica must not dispatch as dead work
+        assert!(s.request_work(h2, 2.0).is_none());
+        assert_eq!(s.metrics.counter("result.didnt_need"), 1);
+        assert!(s.db.results_of_wu(id).iter().all(|r| r.server_state != ServerState::Unsent));
+    }
+
+    #[test]
+    fn bounced_race_replica_does_not_starve_the_queue() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let mut multi = host(1e9);
+        multi.ncpus = 2;
+        let h = s.register_host(multi);
+        let h2 = s.register_host(host(1e9));
+        let a = s.submit_wu(WorkUnit::new(0, "a", Json::obj(), 1e9));
+        let (_ra, _, _) = s.request_work(h, 0.0).unwrap();
+        assert!(s.boost_wu(a), "race replica parked at the queue head");
+        let b = s.submit_wu(WorkUnit::new(0, "b", Json::obj(), 1e9));
+        // the race replica is not takeable by h, but the WU queued
+        // behind it must still dispatch — no head-of-line starvation
+        let (_rb, got, _) = s.request_work(h, 1.0).expect("WU behind the bounce dispatches");
+        assert_eq!(got.id, b);
+        // the bounced replica stays at the front for the next host
+        let (_rr, got2, _) = s.request_work(h2, 2.0).unwrap();
+        assert_eq!(got2.id, a);
     }
 
     #[test]

@@ -45,7 +45,25 @@
 //! topology = ring        # ring | all | none
 //! migration_timeout = 21600   # secs before a straggler deme is
 //!                             # written off (empty immigrant set)
+//! island_path = native   # native | artifact: which evaluation method
+//!                        # epoch WUs request (Method 1 compiled-in vs
+//!                        # Method 2 AOT artifact via PJRT)
+//! adaptive_migration = false  # recompute each epoch's migration_k
+//!                             # from the deme's validated fitness
+//!                             # trajectory (stagnation doubles the
+//!                             # rate, capped at the smallest deme)
+//! deme_sizes = 600,500,400,300   # heterogeneous per-deme populations
+//!                                # (count must equal `demes`;
+//!                                # omit for homogeneous campaigns)
+//! boost_replicas = false # race an extra replica against a straggler
+//!                        # WU blocking an epoch barrier when its host
+//!                        # has a consecutive-error streak
 //! ```
+//!
+//! Island knobs are validated at campaign construction
+//! (`IslandCampaign::validate`): a `deme_sizes` count that doesn't
+//! match `demes`, or a `migration_k` larger than the smallest deme,
+//! is a parse-time error — not a deep evaluator failure.
 
 use std::collections::BTreeMap;
 

@@ -21,6 +21,45 @@ use crate::gp::Evaluator;
 use crate::runtime::{BoolArtifactEvaluator, RegArtifactEvaluator, Runtime};
 use crate::util::json::Json;
 
+/// Which evaluation method a campaign's WUs request: the paper's
+/// Method 1 (fitness compiled into the client binary) or Method 2
+/// (the separately-shipped AOT artifact via PJRT). Rides WU specs as
+/// the `path` key so a single worker binary serves both, per campaign.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecPath {
+    Native,
+    Artifact,
+}
+
+impl ExecPath {
+    pub fn parse(name: &str) -> Result<ExecPath> {
+        Ok(match name {
+            "native" => ExecPath::Native,
+            "artifact" => ExecPath::Artifact,
+            other => anyhow::bail!("unknown exec path '{other}' (native|artifact)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecPath::Native => "native",
+            ExecPath::Artifact => "artifact",
+        }
+    }
+}
+
+/// The execution path a WU spec requests (`path` key). An absent key
+/// means native — the universally available method — so pre-PR specs
+/// keep running unchanged; an *unknown* value is an error, never a
+/// fallback: silently evaluating a foreign-path spec natively would
+/// let quorum members mix evaluation methods blindly.
+pub fn path_of_spec(spec: &Json) -> Result<ExecPath> {
+    match spec.get("path").and_then(Json::as_str) {
+        None => Ok(ExecPath::Native),
+        Some(s) => ExecPath::parse(s),
+    }
+}
+
 /// Parse a WU spec into engine parameters.
 pub fn params_of_spec(spec: &Json) -> Result<(ProblemKind, Params)> {
     let problem = ProblemKind::parse(spec.str_of("problem")?)?;
@@ -166,22 +205,80 @@ pub fn run_island_wu_native(spec: &Json) -> Result<Json> {
 
 /// Dispatch on the spec shape: island epoch WUs carry deme coordinates,
 /// whole-run WUs don't. This is what a generic worker runs
-/// (`vgp worker` serves both campaign kinds with one binary).
+/// (`vgp worker` serves both campaign kinds with one binary); specs
+/// requesting the artifact path fail cleanly here — use
+/// [`run_wu_auto_rt`] with a loaded [`Runtime`] to serve them.
 pub fn run_wu_auto(spec: &Json) -> Result<Json> {
-    if IslandSpec::is_island(spec) {
-        run_island_wu_native(spec)
-    } else {
-        run_wu_native(spec)
+    run_wu_auto_rt(None, spec)
+}
+
+/// Full worker dispatch: the spec *shape* picks island vs whole-run
+/// execution and the spec's `path` key picks Method 1 vs Method 2. A
+/// worker without a loaded runtime fails artifact WUs with a clear
+/// error (reported as a client error, so the server reissues the
+/// replica to a capable host) instead of silently evaluating natively:
+/// the two methods are only proven payload-identical for the boolean
+/// problems, and quorum members must never mix paths blindly.
+pub fn run_wu_auto_rt(rt: Option<&Runtime>, spec: &Json) -> Result<Json> {
+    match path_of_spec(spec)? {
+        ExecPath::Artifact => {
+            let rt = rt.context(
+                "spec requests the artifact path but no runtime is loaded \
+                 (build artifacts/ — `make artifacts` — and restart the worker)",
+            )?;
+            run_wu_artifact(rt, spec)
+        }
+        ExecPath::Native => {
+            if IslandSpec::is_island(spec) {
+                run_island_wu_native(spec)
+            } else {
+                run_wu_native(spec)
+            }
+        }
+    }
+}
+
+/// Execute one island epoch WU through the AOT artifact (Method 2):
+/// the island analog of the whole-run arm of [`run_wu_artifact`].
+/// Resume/seed, immigrant incorporation and emigrant selection are the
+/// same [`crate::gp::islands`] machinery as the native path — only the
+/// fitness evaluator differs ([`BoolArtifactEvaluator`] /
+/// [`RegArtifactEvaluator`] serving chunked populations through
+/// `TapeSource`), so epoch payload *shape* is identical across paths.
+pub fn run_island_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
+    let ispec = IslandSpec::from_json(spec)?;
+    let problem = ProblemKind::parse(&ispec.problem)?;
+    let opts = eval_opts_of_spec(spec);
+    match problem {
+        ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
+            let m = multiplexer::Multiplexer::new(mux_k(problem));
+            let ps = m.primset().clone();
+            let mut ev = BoolArtifactEvaluator::with_opts(rt, &m.cases, opts);
+            let mut engine = islands::epoch_engine(&ispec, &ps)?;
+            islands::finish_epoch(&mut engine, &ispec, &mut ev)
+        }
+        ProblemKind::Quartic => {
+            let q = regression::Quartic::new(QUARTIC_NCASES);
+            let ps = q.primset().clone();
+            let mut ev = RegArtifactEvaluator::with_opts(rt, &q.cases, opts);
+            let mut engine = islands::epoch_engine(&ispec, &ps)?;
+            islands::finish_epoch(&mut engine, &ispec, &mut ev)
+        }
+        other => anyhow::bail!("artifact path supports tape problems (mux/quartic), got {other:?}"),
     }
 }
 
 /// Execute a tape-problem WU spec through the AOT artifact
 /// (Method 2): multiplexers via the boolean artifact, quartic via the
-/// regression artifact. The spec's `threads`/`schedule` knobs shape
-/// the chunked artifact dispatch exactly like the native path
-/// (payloads stay byte-identical regardless); non-tape problems fall
-/// back with an error.
+/// regression artifact — island epoch specs route to
+/// [`run_island_wu_artifact`], whole-run specs to the engine below.
+/// The spec's `threads`/`schedule` knobs shape the chunked artifact
+/// dispatch exactly like the native path (payloads stay byte-identical
+/// regardless); non-tape problems fall back with an error.
 pub fn run_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
+    if IslandSpec::is_island(spec) {
+        return run_island_wu_artifact(rt, spec);
+    }
     let (problem, params) = params_of_spec(spec)?;
     let opts = eval_opts_of_spec(spec);
     let run = match problem {
@@ -296,6 +393,30 @@ mod tests {
                 assert_eq!(base, payload, "schedule={schedule} lanes={lanes}");
             }
         }
+    }
+
+    #[test]
+    fn path_of_spec_defaults_native_and_rejects_unknowns() {
+        assert_eq!(path_of_spec(&Json::obj()).unwrap(), ExecPath::Native);
+        assert_eq!(path_of_spec(&Json::obj().set("path", "artifact")).unwrap(), ExecPath::Artifact);
+        assert_eq!(path_of_spec(&Json::obj().set("path", "native")).unwrap(), ExecPath::Native);
+        // an unknown path is an error, not a silent native fallback —
+        // quorum members must never mix evaluation methods blindly
+        assert!(path_of_spec(&Json::obj().set("path", "quantum")).is_err());
+        assert!(run_wu_auto(&Json::obj().set("path", "quantum")).is_err());
+        for p in [ExecPath::Native, ExecPath::Artifact] {
+            assert_eq!(ExecPath::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn artifact_spec_without_runtime_fails_cleanly() {
+        let c = Campaign::new("t", ProblemKind::Mux6, 1, 3, 40);
+        let spec = c.wu_spec(0).set("path", "artifact");
+        let err = run_wu_auto_rt(None, &spec).unwrap_err();
+        assert!(format!("{err:#}").contains("no runtime is loaded"), "{err:#}");
+        // native specs keep running through the same entry point
+        assert!(run_wu_auto_rt(None, &c.wu_spec(0)).is_ok());
     }
 
     #[test]

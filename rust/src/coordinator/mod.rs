@@ -14,7 +14,7 @@ use crate::boinc::server::{Assimilated, ServerConfig};
 use crate::boinc::workunit::WorkUnit;
 use crate::churn::{sample_pool, PoolParams, SimHost};
 use crate::gp::eval::Schedule;
-use crate::gp::islands::Topology;
+use crate::gp::islands::{AdaptiveMigration, Topology};
 use crate::gp::problems::ProblemKind;
 use crate::gp::tape;
 use crate::gp::tree::Tree;
@@ -164,6 +164,22 @@ pub struct IslandCampaign {
     pub reg_lanes: usize,
     /// eval fan-out policy (see [`Campaign::schedule`])
     pub schedule: Schedule,
+    /// which evaluation method epoch WUs request: Method 1 (native) or
+    /// Method 2 (AOT artifact) — rides every spec as the `path` key
+    pub path: exec::ExecPath,
+    /// adaptive per-deme migration: the exchange recomputes each
+    /// released epoch's `migration_k` from the deme's validated
+    /// best-fitness trajectory (stagnation doubles the rate, capped at
+    /// the smallest deme population; see
+    /// [`crate::gp::islands::AdaptiveMigration`])
+    pub adaptive_migration: bool,
+    /// per-deme populations for heterogeneous campaigns (empty =
+    /// every deme uses `population`); length must equal `demes`
+    pub deme_sizes: Vec<usize>,
+    /// race an extra replica against a straggling dependency WU held
+    /// by a host with a consecutive-error streak, instead of waiting
+    /// out the migration timeout
+    pub boost_replicas: bool,
 }
 
 impl IslandCampaign {
@@ -192,7 +208,78 @@ impl IslandCampaign {
             eval_lanes: tape::DEFAULT_LANES,
             reg_lanes: tape::DEFAULT_REG_LANES,
             schedule: Schedule::Static,
+            path: exec::ExecPath::Native,
+            adaptive_migration: false,
+            deme_sizes: Vec::new(),
+            boost_replicas: false,
         }
+    }
+
+    /// Individuals in deme `deme` (heterogeneous campaigns size demes
+    /// individually; everyone else uses the campaign-wide population).
+    pub fn deme_population(&self, deme: usize) -> usize {
+        self.deme_sizes.get(deme).copied().unwrap_or(self.population)
+    }
+
+    /// Smallest deme population — the bound the per-epoch immigrant
+    /// volume (fan-in × `migration_k`) must respect so tail
+    /// incorporation never overruns into the elite head.
+    pub fn min_deme_population(&self) -> usize {
+        (0..self.demes).map(|d| self.deme_population(d)).min().unwrap_or(self.population)
+    }
+
+    /// Largest per-deme immigrant fan-in of the topology (sources × k
+    /// is what incorporation has to absorb; 1 for a ring, demes-1 for
+    /// all-to-all, 0 for isolated demes).
+    fn max_fan_in(&self) -> usize {
+        (0..self.demes).map(|d| self.topology.sources(d, self.demes).len()).max().unwrap_or(0)
+    }
+
+    /// The adaptive-migration policy this campaign installs (`None`
+    /// when adaptive migration is off) — the single source of truth
+    /// shared by [`IslandCampaign::exchange_config`] and the
+    /// determinism proofs in `rust/tests/islands.rs`. The cap divides
+    /// the smallest deme by the topology fan-in so even a fully
+    /// boosted rate can be absorbed by every deme's tail.
+    pub fn adaptive_policy(&self) -> Option<AdaptiveMigration> {
+        self.adaptive_migration.then(|| AdaptiveMigration {
+            base_k: self.migration_k,
+            // strictly below the deme size so even a fully boosted
+            // immigrant volume leaves the elite head untouched
+            max_k: (self.min_deme_population() - 1) / self.max_fan_in().max(1),
+        })
+    }
+
+    /// Validate the island knobs at construction time, where the error
+    /// can name the offending flag — not deep inside emigrant
+    /// selection / tail incorporation, where a bad `migration_k` or a
+    /// mis-sized `deme_sizes` list would surface as silent truncation
+    /// (or as the elite head being clobbered by immigrant overflow).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.deme_sizes.is_empty() {
+            anyhow::ensure!(
+                self.deme_sizes.len() == self.demes,
+                "deme-sizes lists {} entries but the campaign has {} demes",
+                self.deme_sizes.len(),
+                self.demes
+            );
+            if let Some(d) = self.deme_sizes.iter().position(|&p| p == 0) {
+                anyhow::bail!("deme-sizes: deme {d} has population 0");
+            }
+        }
+        let min_pop = self.min_deme_population();
+        let fan_in = self.max_fan_in().max(1);
+        // strict: an immigrant volume EQUAL to the deme size would
+        // already overwrite slot 0, the elitism-protected head
+        anyhow::ensure!(
+            self.migration_k * fan_in < min_pop,
+            "migration_k {} x immigrant fan-in {} does not fit the smallest deme population {} \
+             (each deme must absorb every source's emigrants without overrunning its elite head)",
+            self.migration_k,
+            fan_in,
+            min_pop
+        );
+        Ok(())
     }
 
     /// Island campaign from an INI `[campaign]` section (selected over
@@ -219,16 +306,31 @@ impl IslandCampaign {
         c.reg_lanes =
             tape::normalize_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize);
         c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
+        c.path = exec::ExecPath::parse(cfg.str_or("campaign", "island_path", c.path.name()))?;
+        c.adaptive_migration = cfg.bool_or("campaign", "adaptive_migration", false);
+        c.boost_replicas = cfg.bool_or("campaign", "boost_replicas", false);
+        if let Some(sizes) = cfg.get("campaign", "deme_sizes") {
+            c.deme_sizes = parse_deme_sizes(sizes)?;
+        }
         c.redundancy = (
             cfg.u64_or("campaign", "target_nresults", 1) as usize,
             cfg.u64_or("campaign", "min_quorum", 1) as usize,
         );
+        c.validate()?;
         Ok(c)
     }
 
-    /// FLOPs for one epoch WU of one deme.
+    /// FLOPs for one epoch WU of one average-sized deme (the
+    /// homogeneous figure; heterogeneous campaigns use
+    /// [`IslandCampaign::flops_per_epoch_of`] per WU).
     pub fn flops_per_epoch(&self) -> f64 {
         self.epoch_gens as f64 * self.population as f64 * self.problem.flops_per_eval()
+    }
+
+    /// FLOPs for one epoch WU of deme `deme` (heterogeneous demes
+    /// differ — deadlines and CP accounting must track the real size).
+    pub fn flops_per_epoch_of(&self, deme: usize) -> f64 {
+        self.epoch_gens as f64 * self.deme_population(deme) as f64 * self.problem.flops_per_eval()
     }
 
     /// Static spec of a (deme, epoch) WU. The exchange patches in
@@ -238,12 +340,13 @@ impl IslandCampaign {
         Json::obj()
             .set("campaign", self.name.as_str())
             .set("problem", self.problem.name())
-            .set("population", self.population as u64)
+            .set("population", self.deme_population(deme) as u64)
             .set("seed", self.seed + deme as u64)
             .set("threads", self.threads as u64)
             .set("eval_lanes", self.eval_lanes as u64)
             .set("reg_lanes", self.reg_lanes as u64)
             .set("schedule", self.schedule.name())
+            .set("path", self.path.name())
             .set("deme", deme as u64)
             .set("demes", self.demes as u64)
             .set("epoch", epoch as u64)
@@ -257,18 +360,20 @@ impl IslandCampaign {
     /// 0 dispatches immediately, later epochs are held until their
     /// migration dependencies are quorum-complete.
     pub fn workunits(&self) -> Vec<(usize, usize, WorkUnit)> {
-        let expected_secs = self.flops_per_epoch() / REFERENCE_FLOPS;
-        let delay_bound = (3.0 * expected_secs).clamp(3600.0, 7.0 * 86400.0);
         let mut out = Vec::with_capacity(self.demes * self.epochs);
         for epoch in 0..self.epochs {
             for deme in 0..self.demes {
+                // per-deme FLOPs: heterogeneous demes get deadlines
+                // scaled to their own population
+                let flops = self.flops_per_epoch_of(deme);
+                let expected_secs = flops / REFERENCE_FLOPS;
                 let mut wu = WorkUnit::new(
                     0,
                     format!("{}_d{:02}_e{:02}", self.name, deme, epoch),
                     self.wu_spec(deme, epoch),
-                    self.flops_per_epoch(),
+                    flops,
                 );
-                wu.delay_bound = delay_bound;
+                wu.delay_bound = (3.0 * expected_secs).clamp(3600.0, 7.0 * 86400.0);
                 wu.held = epoch > 0;
                 out.push((deme, epoch, wu.with_redundancy(self.redundancy.0, self.redundancy.1)));
             }
@@ -282,6 +387,8 @@ impl IslandCampaign {
             epochs: self.epochs,
             topology: self.topology,
             migration_timeout: self.migration_timeout,
+            adaptive: self.adaptive_policy(),
+            boost_replicas: self.boost_replicas,
         }
     }
 
@@ -318,6 +425,16 @@ impl IslandCampaign {
     }
 }
 
+/// Parse a `deme_sizes` / `--deme-sizes` comma list ("120,80,200")
+/// into per-deme populations — shared by the INI and CLI front ends.
+pub fn parse_deme_sizes(s: &str) -> anyhow::Result<Vec<usize>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<usize>().map_err(|_| anyhow::anyhow!("bad deme size '{t}' in '{s}'")))
+        .collect()
+}
+
 /// The merged winner of an island campaign.
 #[derive(Clone, Debug)]
 pub struct IslandBest {
@@ -349,13 +466,26 @@ pub fn simulate_island_campaign(
     sim_cfg: SimConfig,
     seed: u64,
 ) -> IslandReport {
+    campaign.validate().expect("invalid island campaign");
     let mut rng = Rng::new(seed);
     let hosts: Vec<SimHost> = sample_pool(&mut rng, pool, cities);
     let mut sim = Simulation::new(sim_cfg, ServerConfig::default(), hosts, seed);
     let mut ex = MigrationExchange::new(campaign.exchange_config());
     ex.install(&mut sim.core, campaign.workunits());
     sim.attach_exchange(ex);
-    sim.set_executor(Box::new(exec::run_island_wu_native));
+    // the campaign's exec path picks the evaluator every simulated
+    // volunteer runs: Method 1 (native) or Method 2 (AOT artifact)
+    match campaign.path {
+        exec::ExecPath::Native => sim.set_executor(Box::new(exec::run_island_wu_native)),
+        exec::ExecPath::Artifact => {
+            // same directory resolution as the worker's autoload
+            // (VGP_ARTIFACTS or ./artifacts)
+            let rt = crate::runtime::Runtime::load(&crate::runtime::artifacts_dir()).expect(
+                "artifact-path island campaign needs compiled artifacts (run `make artifacts`)",
+            );
+            sim.set_executor(Box::new(move |spec: &Json| exec::run_island_wu_artifact(&rt, spec)));
+        }
+    }
     let outcome = sim.run_mut(REFERENCE_FLOPS);
     let best = campaign.merge_best(sim.core.assimilated());
     let stats = sim.exchange().map(|e| e.stats.clone()).unwrap_or_default();
@@ -533,6 +663,95 @@ mod tests {
         assert_eq!(c.topology, crate::gp::islands::Topology::All);
         assert_eq!(c.wu_spec(2, 1).u64_of("seed").unwrap(), 5);
         assert_eq!(c.exchange_config().demes, 5);
+    }
+
+    #[test]
+    fn heterogeneous_deme_sizes_ride_specs_and_flops() {
+        let mut c = IslandCampaign::new("het", ProblemKind::Mux6, 3, 2, 5, 100);
+        c.deme_sizes = vec![40, 100, 160];
+        c.validate().unwrap();
+        assert_eq!(c.deme_population(0), 40);
+        assert_eq!(c.deme_population(2), 160);
+        assert_eq!(c.min_deme_population(), 40);
+        assert_eq!(c.wu_spec(0, 0).u64_of("population").unwrap(), 40);
+        assert_eq!(c.wu_spec(2, 1).u64_of("population").unwrap(), 160);
+        assert!(c.flops_per_epoch_of(2) > c.flops_per_epoch_of(0) * 3.9);
+        let wus = c.workunits();
+        for (d, _, wu) in &wus {
+            assert!((wu.flops_est - c.flops_per_epoch_of(*d)).abs() < 1e-6);
+        }
+        // homogeneous campaigns are untouched by the new accessors
+        let h = IslandCampaign::new("homo", ProblemKind::Mux6, 3, 2, 5, 100);
+        assert_eq!(h.deme_population(1), 100);
+        assert_eq!(h.min_deme_population(), 100);
+    }
+
+    #[test]
+    fn island_knob_validation_names_the_offense() {
+        // deme count mismatch
+        let mut c = IslandCampaign::new("v", ProblemKind::Mux6, 3, 2, 5, 100);
+        c.deme_sizes = vec![50, 50];
+        let err = format!("{:#}", c.validate().unwrap_err());
+        assert!(err.contains("deme-sizes") && err.contains('3'), "{err}");
+        // migration_k larger than the smallest deme
+        let mut c = IslandCampaign::new("v", ProblemKind::Mux6, 2, 2, 5, 100);
+        c.deme_sizes = vec![4, 100];
+        c.migration_k = 5;
+        let err = format!("{:#}", c.validate().unwrap_err());
+        assert!(err.contains("migration_k"), "{err}");
+        // zero-sized deme
+        let mut c = IslandCampaign::new("v", ProblemKind::Mux6, 2, 2, 5, 100);
+        c.deme_sizes = vec![100, 0];
+        assert!(c.validate().is_err());
+        // all-to-all topology multiplies the immigrant volume by its
+        // fan-in: k alone fitting the deme is not enough
+        let mut c = IslandCampaign::new("v", ProblemKind::Mux6, 4, 2, 5, 30);
+        c.topology = crate::gp::islands::Topology::All;
+        c.migration_k = 10; // 10 <= 30, but 3 sources x 10 = 30 = whole deme
+        assert!(c.validate().is_err(), "fan-in x k overrunning a deme must be rejected");
+        c.migration_k = 5; // 3 x 5 = 15 < 30
+        c.validate().unwrap();
+        // the adaptive cap shares the strict fan-in bound
+        c.adaptive_migration = true;
+        assert_eq!(c.adaptive_policy().unwrap().max_k, 9, "cap = (min deme - 1) / fan-in");
+        // the INI front end surfaces the same errors at parse time
+        let cfg = crate::config::Config::parse("[campaign]\ndemes = 3\ndeme_sizes = 10,20\n").unwrap();
+        assert!(IslandCampaign::from_config(&cfg).is_err());
+        let cfg = crate::config::Config::parse("[campaign]\npopulation = 10\nmigration_k = 40\n").unwrap();
+        assert!(IslandCampaign::from_config(&cfg).is_err());
+        // bad size tokens are a config error, not a silent default
+        assert!(parse_deme_sizes("10,x,30").is_err());
+        assert_eq!(parse_deme_sizes("10, 20 ,30").unwrap(), vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn island_campaign_from_config_reads_new_knobs() {
+        let cfg = crate::config::Config::parse(
+            "[campaign]\nproblem = mux6\ndemes = 3\nepochs = 2\npopulation = 50\n\
+             deme_sizes = 40,50,60\nadaptive_migration = true\nboost_replicas = yes\n\
+             island_path = artifact\nmigration_k = 3\n",
+        )
+        .unwrap();
+        let c = IslandCampaign::from_config(&cfg).unwrap();
+        assert_eq!(c.deme_sizes, vec![40, 50, 60]);
+        assert!(c.adaptive_migration && c.boost_replicas);
+        assert_eq!(c.path, exec::ExecPath::Artifact);
+        assert_eq!(c.wu_spec(1, 0).str_of("path").unwrap(), "artifact");
+        let xcfg = c.exchange_config();
+        assert!(xcfg.boost_replicas);
+        let adaptive = xcfg.adaptive.expect("adaptive policy installed");
+        assert_eq!(adaptive.base_k, 3);
+        assert_eq!(adaptive.max_k, 39, "cap strictly below the smallest deme");
+        // defaults stay off and native
+        let cfg = crate::config::Config::parse("[campaign]\nproblem = mux6\ndemes = 2\n").unwrap();
+        let c = IslandCampaign::from_config(&cfg).unwrap();
+        assert_eq!(c.path, exec::ExecPath::Native);
+        assert!(!c.adaptive_migration && !c.boost_replicas && c.deme_sizes.is_empty());
+        assert!(c.exchange_config().adaptive.is_none());
+        assert_eq!(c.wu_spec(0, 0).str_of("path").unwrap(), "native");
+        // an unknown island_path is a config error
+        let cfg = crate::config::Config::parse("[campaign]\ndemes = 2\nisland_path = quantum\n").unwrap();
+        assert!(IslandCampaign::from_config(&cfg).is_err());
     }
 
     #[test]

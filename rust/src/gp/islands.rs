@@ -25,6 +25,34 @@
 //!   the batched evaluators' bit-identical thread contract, so a WU
 //!   payload is byte-stable across volunteers and across mid-epoch
 //!   checkpoint/resume — the property BOINC quorum validation hashes.
+//!
+//! # Checkpoint-spec compression
+//!
+//! Population payloads ride in *every* epoch WU spec and result
+//! payload and grow linearly with deme size, so island checkpoints
+//! serialize their population through a versioned varint +
+//! prefix-sharing codec ([`encode_population`]) instead of the JSON
+//! tree array: consecutive trees share their common preorder-opcode
+//! prefix (elites and tournament offspring overlap heavily), constants
+//! are stored sparsely as exact f32 bits, and the byte stream is
+//! base64'd into a single `pop_packed` string. The encoding is a pure
+//! function of the population (one canonical byte sequence per state),
+//! so spec *signatures* and quorum payload hashes stay stable across
+//! honest encoders. [`parse_checkpoint`] accepts both the packed form
+//! and the legacy `population` array, and rejects unknown codec
+//! versions instead of guessing.
+//!
+//! # Adaptive migration
+//!
+//! [`AdaptiveMigration`] turns the per-epoch emigrant count into a
+//! pure deterministic function of the deme's *validated* best-fitness
+//! trajectory: every trailing epoch that failed to strictly improve
+//! the deme's running best doubles the base rate (stagnating demes
+//! import more genetic material), clamped to a cap the campaign sets
+//! at or below its smallest deme population. Because the inputs are
+//! exact f64 bits banked from canonical payloads — never timings,
+//! thread counts, or arrival order — every replica and every server
+//! computes the identical rate.
 
 use anyhow::Result;
 
@@ -32,6 +60,7 @@ use crate::gp::engine::{Checkpoint, Engine, Params};
 use crate::gp::primset::PrimSet;
 use crate::gp::tree::Tree;
 use crate::gp::{Evaluator, Fitness};
+use crate::util::codec;
 use crate::util::json::Json;
 
 /// Migration topology: which demes feed immigrants into deme `d`.
@@ -73,6 +102,165 @@ impl Topology {
             Topology::All => (0..demes).filter(|&s| s != d).collect(),
             Topology::Isolated => Vec::new(),
         }
+    }
+}
+
+/// Version byte of the packed-population codec (see module docs).
+/// Bump when the byte layout changes; decoders reject unknown
+/// versions rather than misparse old blobs.
+pub const POP_CODEC_VERSION: u8 = 1;
+
+/// Encode a population as the canonical packed blob: version byte,
+/// tree count, then per tree `(len, shared-prefix-with-previous,
+/// fresh opcode bytes, sparse nonzero f32 const bits)`, all varint
+/// framed and base64'd. Deterministic: one population, one string.
+pub fn encode_population(pop: &[Tree]) -> String {
+    let mut bytes = Vec::with_capacity(16 + pop.len() * 8);
+    bytes.push(POP_CODEC_VERSION);
+    codec::push_varint(&mut bytes, pop.len() as u64);
+    let mut prev: &[u8] = &[];
+    for t in pop {
+        codec::push_varint(&mut bytes, t.ops.len() as u64);
+        let max_share = t.ops.len().min(prev.len());
+        let mut shared = 0usize;
+        while shared < max_share && t.ops[shared] == prev[shared] {
+            shared += 1;
+        }
+        codec::push_varint(&mut bytes, shared as u64);
+        bytes.extend_from_slice(&t.ops[shared..]);
+        let nonzero: Vec<(usize, u32)> = t
+            .consts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.to_bits() != 0)
+            .map(|(i, c)| (i, c.to_bits()))
+            .collect();
+        codec::push_varint(&mut bytes, nonzero.len() as u64);
+        for (i, bits) in nonzero {
+            codec::push_varint(&mut bytes, i as u64);
+            bytes.extend_from_slice(&bits.to_le_bytes());
+        }
+        prev = &t.ops;
+    }
+    codec::b64_encode(&bytes)
+}
+
+/// Decode a packed population blob. Exact inverse of
+/// [`encode_population`]: trailing bytes, truncation, out-of-range
+/// indices and unknown versions are hard errors (a corrupt spec must
+/// fail the WU, not evolve a garbage deme).
+pub fn decode_population(s: &str) -> Result<Vec<Tree>> {
+    let bytes = codec::b64_decode(s)?;
+    anyhow::ensure!(!bytes.is_empty(), "empty population blob");
+    anyhow::ensure!(
+        bytes[0] == POP_CODEC_VERSION,
+        "unsupported population codec version {} (expected {})",
+        bytes[0],
+        POP_CODEC_VERSION
+    );
+    let mut i = 1usize;
+    let n = codec::read_varint(&bytes, &mut i)? as usize;
+    // every tree costs >= 3 frame bytes, so a count beyond the blob
+    // length is corruption — reject it before allocating anything
+    // (the count is attacker-reachable via a tampered spec)
+    anyhow::ensure!(n <= bytes.len(), "population count {n} exceeds blob size {}", bytes.len());
+    let mut pop: Vec<Tree> = Vec::with_capacity(n);
+    // prefix sharing amplifies: a tiny frame can reference the whole
+    // previous tree, so bound the CUMULATIVE decoded size too — per
+    // tree caps alone would let an ~8 MB blob demand terabytes
+    let mut total_nodes = 0usize;
+    for _ in 0..n {
+        let len = codec::read_varint(&bytes, &mut i)? as usize;
+        anyhow::ensure!(len <= 1 << 20, "tree size {len} implausible");
+        total_nodes += len;
+        anyhow::ensure!(total_nodes <= 1 << 24, "decoded population exceeds 16M nodes");
+        let shared = codec::read_varint(&bytes, &mut i)? as usize;
+        let prev: &[u8] = pop.last().map(|t| t.ops.as_slice()).unwrap_or(&[]);
+        anyhow::ensure!(shared <= len && shared <= prev.len(), "bad shared prefix {shared}");
+        let fresh = len - shared;
+        anyhow::ensure!(i + fresh <= bytes.len(), "ops truncated");
+        let mut ops = Vec::with_capacity(len);
+        ops.extend_from_slice(&prev[..shared]);
+        ops.extend_from_slice(&bytes[i..i + fresh]);
+        i += fresh;
+        let mut consts = vec![0f32; len];
+        let nz = codec::read_varint(&bytes, &mut i)? as usize;
+        anyhow::ensure!(nz <= len, "const count {nz} exceeds tree size {len}");
+        for _ in 0..nz {
+            let idx = codec::read_varint(&bytes, &mut i)? as usize;
+            anyhow::ensure!(idx < len, "const index {idx} out of range {len}");
+            anyhow::ensure!(i + 4 <= bytes.len(), "consts truncated");
+            let bits = u32::from_le_bytes([bytes[i], bytes[i + 1], bytes[i + 2], bytes[i + 3]]);
+            i += 4;
+            consts[idx] = f32::from_bits(bits);
+        }
+        pop.push(Tree::new(ops, consts));
+    }
+    anyhow::ensure!(i == bytes.len(), "trailing bytes in population blob");
+    Ok(pop)
+}
+
+/// Serialize a checkpoint for an island WU spec/payload: the standard
+/// [`Checkpoint::to_json`] shape with the `population` tree array
+/// replaced by the packed `pop_packed` string. Everything else (exact
+/// rng state, best pair, counters) is carried verbatim, so the packed
+/// form round-trips bit-exactly through [`parse_checkpoint`].
+pub fn checkpoint_to_packed_json(ck: &Checkpoint) -> Json {
+    let mut j = ck.to_json();
+    if let Json::Obj(ref mut m) = j {
+        m.remove("population");
+    }
+    j.set("pop_packed", encode_population(&ck.population))
+}
+
+/// Parse a checkpoint from either wire form: packed (`pop_packed`,
+/// the island codec) or legacy (`population` array — local BOINC
+/// client checkpoints and pre-compression specs).
+pub fn parse_checkpoint(j: &Json) -> Result<Checkpoint> {
+    match j.get("pop_packed").and_then(Json::as_str) {
+        None => Checkpoint::from_json(j),
+        Some(packed) => {
+            let pop = decode_population(packed)?;
+            let mut jj = j.clone();
+            if let Json::Obj(ref mut m) = jj {
+                m.remove("pop_packed");
+                m.insert("population".to_string(), Json::Arr(pop.iter().map(Tree::to_json).collect()));
+            }
+            Checkpoint::from_json(&jj)
+        }
+    }
+}
+
+/// Adaptive migration policy: the emigrant count each epoch is a pure
+/// deterministic function of the deme's validated best-raw trajectory
+/// (see module docs). Owned by the server-side exchange, which patches
+/// the computed `migration_k` into each released epoch spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AdaptiveMigration {
+    /// rate while the deme keeps improving
+    pub base_k: usize,
+    /// hard cap — campaigns set this at or below the smallest deme
+    /// population so incorporation never overruns a tail
+    pub max_k: usize,
+}
+
+impl AdaptiveMigration {
+    /// Emigrant count for the epoch about to be released, from the
+    /// deme's banked best-raw values in ascending epoch order (exact
+    /// payload bits). Each trailing epoch without a strict improvement
+    /// of the running best doubles the base rate, clamped to `max_k`.
+    pub fn k_for(&self, best_raw: &[f64]) -> usize {
+        let mut running_best = f64::INFINITY;
+        let mut streak = 0usize;
+        for &raw in best_raw {
+            if raw < running_best {
+                running_best = raw;
+                streak = 0;
+            } else {
+                streak += 1;
+            }
+        }
+        self.base_k.saturating_mul(1usize << streak.min(3)).min(self.max_k)
     }
 }
 
@@ -137,7 +325,9 @@ impl IslandSpec {
     pub fn from_json(spec: &Json) -> Result<IslandSpec> {
         let checkpoint = match spec.get("checkpoint") {
             None | Some(Json::Null) => None,
-            Some(j) => Some(Checkpoint::from_json(j)?),
+            // packed (island codec) and legacy population arrays both
+            // parse; unknown codec versions fail the WU cleanly
+            Some(j) => Some(parse_checkpoint(j)?),
         };
         let immigrants = match spec.get("immigrants").and_then(Json::as_arr) {
             Some(arr) => arr.iter().map(Migrant::from_json).collect::<Result<Vec<Migrant>>>()?,
@@ -162,6 +352,12 @@ impl IslandSpec {
         anyhow::ensure!(s.population > 0, "island spec: population must be > 0");
         anyhow::ensure!(s.epoch_gens > 0, "island spec: epoch_gens must be > 0");
         anyhow::ensure!(s.deme < s.demes, "island spec: deme {} out of range {}", s.deme, s.demes);
+        anyhow::ensure!(
+            s.migration_k <= s.population,
+            "island spec: migration_k {} exceeds deme population {}",
+            s.migration_k,
+            s.population
+        );
         Ok(s)
     }
 
@@ -278,7 +474,7 @@ pub fn finish_epoch(engine: &mut Engine, spec: &IslandSpec, eval: &mut dyn Evalu
         .set("epoch", spec.epoch as u64)
         .set("generations_run", engine.generation() as u64)
         .set("total_evals", ck.total_evals)
-        .set("checkpoint", ck.to_json())
+        .set("checkpoint", checkpoint_to_packed_json(&ck))
         .set("emigrants", Json::Arr(emigrants.iter().map(Migrant::to_json).collect()));
     if let Some((tree, fit)) = engine.best() {
         payload = payload
@@ -392,5 +588,121 @@ mod tests {
         let bad = spec.set("epoch", 1u64);
         let s1 = IslandSpec::from_json(&bad).unwrap();
         assert!(epoch_engine(&s1, &ps()).is_err());
+    }
+
+    #[test]
+    fn island_spec_rejects_oversized_migration_k() {
+        let spec = Json::obj()
+            .set("problem", "mux6")
+            .set("population", 4u64)
+            .set("seed", 1u64)
+            .set("deme", 0u64)
+            .set("demes", 2u64)
+            .set("epoch", 0u64)
+            .set("epochs", 1u64)
+            .set("epoch_gens", 2u64)
+            .set("migration_k", 5u64);
+        let err = IslandSpec::from_json(&spec).unwrap_err();
+        assert!(format!("{err:#}").contains("migration_k"), "{err:#}");
+    }
+
+    #[test]
+    fn population_codec_roundtrips_exact_bits() {
+        // hand-built trees exercising prefix sharing, empty trees,
+        // sparse consts, and exotic f32 bit patterns (-0.0, inf, NaN)
+        let pop = vec![
+            Tree::new(vec![6, 0, 8, 2], vec![0.0; 4]),
+            Tree::new(vec![6, 0, 8, 3], vec![0.0, 0.25, 0.0, -0.0]),
+            Tree::new(vec![6, 0], vec![f32::INFINITY, f32::from_bits(0x7fc0_0001)]),
+            Tree::new(vec![], vec![]),
+            Tree::new(vec![9, 9, 9, 9, 9, 9, 9], vec![0.0; 7]),
+        ];
+        let s = encode_population(&pop);
+        let back = decode_population(&s).unwrap();
+        assert_eq!(back.len(), pop.len());
+        for (a, b) in pop.iter().zip(&back) {
+            assert_eq!(a.ops, b.ops);
+            let abits: Vec<u32> = a.consts.iter().map(|c| c.to_bits()).collect();
+            let bbits: Vec<u32> = b.consts.iter().map(|c| c.to_bits()).collect();
+            assert_eq!(abits, bbits, "const bits must round-trip exactly (incl -0.0/NaN)");
+        }
+        // canonical: re-encoding the decoded population yields the
+        // identical string (what spec signing depends on)
+        assert_eq!(encode_population(&back), s);
+    }
+
+    #[test]
+    fn population_codec_rejects_unknown_version_and_garbage() {
+        let mut bytes = vec![POP_CODEC_VERSION + 1];
+        crate::util::codec::push_varint(&mut bytes, 0);
+        let blob = crate::util::codec::b64_encode(&bytes);
+        let err = decode_population(&blob).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        assert!(decode_population("not base64 at all!").is_err());
+        // truncated ops stream
+        let mut t = vec![POP_CODEC_VERSION];
+        crate::util::codec::push_varint(&mut t, 1); // one tree
+        crate::util::codec::push_varint(&mut t, 10); // claims 10 ops
+        crate::util::codec::push_varint(&mut t, 0); // no shared prefix
+        t.push(1); // ...but ships only one byte
+        assert!(decode_population(&crate::util::codec::b64_encode(&t)).is_err());
+        // a tree count beyond the blob length is rejected up front —
+        // before the count can drive a huge pre-allocation
+        let mut big = vec![POP_CODEC_VERSION];
+        crate::util::codec::push_varint(&mut big, 1 << 24);
+        let err = decode_population(&crate::util::codec::b64_encode(&big)).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds blob size"), "{err:#}");
+    }
+
+    #[test]
+    fn packed_checkpoint_roundtrips_and_shrinks() {
+        let ck = Checkpoint {
+            gen: 7,
+            rng: [1, 2, 3, u64::MAX],
+            population: (0..50).map(|i| Tree::new(vec![6, 0, 8, (i % 4) as u8], vec![0.0; 4])).collect(),
+            total_evals: 350,
+            best: Some((tree(3), Fitness { raw: 0.1 + 0.2, hits: 9 })),
+        };
+        let packed = checkpoint_to_packed_json(&ck);
+        assert!(packed.get("population").is_none(), "packed form drops the tree array");
+        assert!(packed.get("pop_packed").is_some());
+        let wire = packed.to_string();
+        let legacy = ck.to_json().to_string();
+        assert!(
+            wire.len() * 3 < legacy.len(),
+            "packed spec must be much smaller: {} vs {} bytes",
+            wire.len(),
+            legacy.len()
+        );
+        let back = parse_checkpoint(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.gen, ck.gen);
+        assert_eq!(back.rng, ck.rng);
+        assert_eq!(back.population, ck.population);
+        assert_eq!(back.total_evals, ck.total_evals);
+        let (t1, f1) = ck.best.as_ref().unwrap();
+        let (t2, f2) = back.best.as_ref().unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(f1.raw.to_bits(), f2.raw.to_bits());
+        // the legacy array form parses identically (old specs resume)
+        let from_legacy = parse_checkpoint(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(from_legacy.population, ck.population);
+        assert_eq!(from_legacy.rng, ck.rng);
+    }
+
+    #[test]
+    fn adaptive_k_doubles_on_stagnation_and_clamps() {
+        let a = AdaptiveMigration { base_k: 2, max_k: 12 };
+        assert_eq!(a.k_for(&[]), 2, "no history: base rate");
+        assert_eq!(a.k_for(&[5.0]), 2, "first epoch always 'improves'");
+        assert_eq!(a.k_for(&[5.0, 4.0, 3.0]), 2, "improving deme stays at base");
+        assert_eq!(a.k_for(&[5.0, 5.0]), 4, "one stagnant epoch doubles");
+        assert_eq!(a.k_for(&[5.0, 5.0, 5.0]), 8);
+        assert_eq!(a.k_for(&[5.0, 5.0, 5.0, 5.0]), 12, "clamped to max_k");
+        assert_eq!(a.k_for(&[5.0, 5.0, 5.0, 5.0, 5.0]), 12, "streak shift saturates");
+        assert_eq!(a.k_for(&[5.0, 6.0, 4.0]), 2, "strict improvement resets the streak");
+        // a late non-improving epoch counts even after past progress
+        assert_eq!(a.k_for(&[5.0, 3.0, 3.5]), 4);
+        let zero = AdaptiveMigration { base_k: 0, max_k: 8 };
+        assert_eq!(zero.k_for(&[5.0, 5.0, 5.0]), 0, "k=0 stays off under adaptation");
     }
 }

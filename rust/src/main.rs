@@ -8,6 +8,15 @@
 //! vgp sim --demes 4 --epochs 4 --epoch-gens 10 --topology ring
 //!                                      # island-model campaign (real GP
 //!                                      # execution + server migration)
+//! vgp sim --demes 4 --adaptive-migration --boost-replicas \
+//!         --deme-sizes 600,500,400,300 --island-path artifact
+//!                                      # adaptive island campaign:
+//!                                      # per-deme migration rate from
+//!                                      # banked fitness deltas,
+//!                                      # straggler replica racing,
+//!                                      # heterogeneous demes, epochs
+//!                                      # evaluated through the AOT
+//!                                      # artifact (Method 2)
 //! vgp serve --runs 8 --problem mux6 --threads 4   # TCP server campaign
 //! vgp serve --demes 4 --epochs 3       # island campaign over TCP
 //! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval,
@@ -75,6 +84,19 @@ fn pool_of(args: &Args, hosts: usize) -> PoolParams {
     pool_from(args.opt_str("pool", "lab"), hosts, args.opt_u64("ncpus", 1) as u32)
 }
 
+/// `--flag` or `--flag true|1|yes|on` (the Args parser eats a bare
+/// following value as the option's argument, so accept both shapes).
+fn bool_flag(args: &Args, name: &str) -> bool {
+    args.has_flag(name) || args.opt(name).map(|v| matches!(v, "true" | "1" | "yes" | "on")).unwrap_or(false)
+}
+
+/// A bad island-campaign flag exits with a curated message, never a
+/// panic backtrace.
+fn exit_invalid_campaign(e: anyhow::Error) -> ! {
+    eprintln!("invalid island campaign: {e:#}");
+    std::process::exit(2);
+}
+
 /// One source of truth for the island-campaign flags shared by
 /// `vgp sim --demes` and `vgp serve --demes`.
 fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> IslandCampaign {
@@ -96,6 +118,19 @@ fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> I
     c.eval_lanes = eval_lanes_of(args);
     c.reg_lanes = reg_lanes_of(args);
     c.schedule = schedule_of(args);
+    // island extensions: evaluation path, adaptive migration,
+    // heterogeneous deme sizes, straggler replica boosting
+    c.path = exec::ExecPath::parse(args.opt_str("island-path", "native"))
+        .unwrap_or_else(|e| exit_invalid_campaign(e));
+    c.adaptive_migration = bool_flag(args, "adaptive-migration");
+    c.boost_replicas = bool_flag(args, "boost-replicas");
+    if let Some(sizes) = args.opt("deme-sizes") {
+        c.deme_sizes =
+            vgp::coordinator::parse_deme_sizes(sizes).unwrap_or_else(|e| exit_invalid_campaign(e));
+    }
+    if let Err(e) = c.validate() {
+        exit_invalid_campaign(e);
+    }
     c
 }
 
@@ -390,9 +425,17 @@ fn cmd_worker(args: &Args) -> i32 {
         flops: args.opt_f64("flops", 1.3e9),
         poll_interval: std::time::Duration::from_millis(args.opt_u64("poll-ms", 500)),
     };
-    // run_wu_auto dispatches on the spec shape: whole-run WUs and
-    // island epoch WUs are both served by the same worker binary
-    let report = worker.run(addr, &key, &|spec| exec::run_wu_auto(spec)).expect("worker run");
+    // run_wu_auto_rt dispatches on the spec shape (whole-run vs island
+    // epoch) AND the spec's `path` key (Method 1 native vs Method 2
+    // artifact) — one worker binary serves every campaign kind. The
+    // runtime loads opportunistically: without artifacts/ the worker
+    // still serves native WUs, and artifact WUs fail cleanly so the
+    // server reissues them to a capable host.
+    let rt = vgp::runtime::Runtime::autoload();
+    if rt.is_some() {
+        println!("artifact runtime loaded: serving Method-2 (artifact-path) WUs");
+    }
+    let report = worker.run(addr, &key, &|spec| exec::run_wu_auto_rt(rt.as_ref(), spec)).expect("worker run");
     println!(
         "worker done: {} completed, {} errors, {:.1}s cpu",
         report.completed, report.errors, report.cpu_time

@@ -143,6 +143,13 @@ impl TapeSource for TapeArena {
     }
 }
 
+/// The artifact directory every front end shares (worker autoload,
+/// artifact-path simulations): the `VGP_ARTIFACTS` env var when set,
+/// else `artifacts/`.
+pub fn artifacts_dir() -> String {
+    std::env::var("VGP_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string())
+}
+
 /// The full evaluator runtime: a PJRT CPU client plus the two loaded
 /// evaluator artifacts.
 ///
@@ -185,6 +192,26 @@ impl Runtime {
         let bool_eval = Artifact::load(&client, &format!("{dir}/bool_eval.hlo.txt"))?;
         let reg_eval = Artifact::load(&client, &format!("{dir}/reg_eval.hlo.txt"))?;
         Ok(Runtime { meta, bool_eval, reg_eval })
+    }
+
+    /// Best-effort load for generic workers: the artifact directory
+    /// comes from [`artifacts_dir`], and a missing or unloadable
+    /// artifact set degrades to `None` — the worker then serves native
+    /// WUs only, and specs requesting the artifact path fail cleanly
+    /// and reissue to a capable host
+    /// (see `coordinator::exec::run_wu_auto_rt`).
+    pub fn autoload() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !std::path::Path::new(&format!("{dir}/meta.json")).exists() {
+            return None;
+        }
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("warning: artifacts present at {dir}/ but failed to load: {e:#}");
+                None
+            }
+        }
     }
 
     /// Evaluate boolean tapes against packed cases; returns hit counts.

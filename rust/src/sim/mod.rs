@@ -122,6 +122,10 @@ pub struct SimOutcome {
     pub completions: Vec<f64>,
     pub client_errors: u64,
     pub no_replies: u64,
+    /// attached-executor failures (e.g. an artifact-path campaign run
+    /// where the runtime cannot serve the spec) — infrastructure
+    /// problems, counted separately from simulated client churn
+    pub executor_failures: u64,
 }
 
 /// A prepared simulation: server + WUs + host pool.
@@ -309,8 +313,10 @@ impl Simulation {
                                     Some(Err(e)) => {
                                         // surface the cause — an executor
                                         // failure is an infrastructure bug
-                                        // (bad spec), not simulated churn
+                                        // (bad spec / missing artifacts),
+                                        // not simulated churn
                                         eprintln!("sim: WU execution failed: {e:#}");
+                                        self.core.metrics.inc("sim.executor_failure");
                                         None
                                     }
                                     None => None,
@@ -371,6 +377,7 @@ impl Simulation {
             completions,
             client_errors: self.core.metrics.counter("result.client_error"),
             no_replies: self.core.metrics.counter("result.no_reply"),
+            executor_failures: self.core.metrics.counter("sim.executor_failure"),
         }
     }
 }
@@ -498,6 +505,20 @@ mod tests {
         for a in sim.core.assimilated() {
             assert!(a.payload.get("echo").is_some(), "executor payload must be assimilated");
         }
+    }
+
+    #[test]
+    fn executor_failures_are_counted_not_hidden() {
+        let mut rng = Rng::new(5);
+        let hosts = sample_pool(&mut rng, &PoolParams::lab(1), &[("lab", 1)]);
+        let mut sim = Simulation::new(SimConfig::default(), ServerConfig::default(), hosts, 5);
+        let mut wu = WorkUnit::new(0, "w", Json::obj(), 1e9);
+        wu.max_error_results = 0; // first executor failure poisons the WU
+        sim.submit(wu);
+        sim.set_executor(Box::new(|_spec| anyhow::bail!("no runtime on this volunteer")));
+        let out = sim.run_mut(1.3e9);
+        assert_eq!(out.completed, 0);
+        assert!(out.executor_failures >= 1, "failure must be visible in the outcome");
     }
 
     #[test]

@@ -139,6 +139,44 @@ pub fn append_bench_json(path: &str, records: &[BenchRecord]) -> anyhow::Result<
     Ok(())
 }
 
+/// Validate the perf-trajectory schema: a JSON array whose entries
+/// each carry `{pr: str, threads: u64 >= 1, scheduler: static|sorted|
+/// steal, lanes: u64, evals_per_sec: finite f64 > 0}` and, when
+/// present, `kernel` in `{bool, reg, reg-legacy}` (entries recorded
+/// before PR 4 predate the field and imply `bool`). Returns the entry
+/// count so callers (the bench-smoke CI job) can assert coverage.
+pub fn validate_bench_json(path: &str) -> anyhow::Result<usize> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let parsed = Json::parse(&text)?;
+    let entries = match parsed.as_arr() {
+        Some(arr) => arr,
+        None => anyhow::bail!("{path}: top level must be a JSON array"),
+    };
+    for (i, e) in entries.iter().enumerate() {
+        anyhow::ensure!(!e.str_of("pr")?.is_empty(), "{path} entry {i}: empty pr tag");
+        anyhow::ensure!(e.u64_of("threads")? >= 1, "{path} entry {i}: threads must be >= 1");
+        let sched = e.str_of("scheduler")?;
+        anyhow::ensure!(
+            matches!(sched, "static" | "sorted" | "steal"),
+            "{path} entry {i}: unknown scheduler '{sched}' (static|sorted|steal)"
+        );
+        e.u64_of("lanes")?; // 0 is legal: it marks a no-lane legacy baseline
+        let eps = e.f64_of("evals_per_sec")?;
+        anyhow::ensure!(
+            eps.is_finite() && eps > 0.0,
+            "{path} entry {i}: evals_per_sec must be a positive, finite number (got {eps})"
+        );
+        if let Some(k) = e.get("kernel") {
+            let k = k.as_str().ok_or_else(|| anyhow::anyhow!("{path} entry {i}: kernel must be a string"))?;
+            anyhow::ensure!(
+                matches!(k, "bool" | "reg" | "reg-legacy"),
+                "{path} entry {i}: unknown kernel '{k}' (bool|reg|reg-legacy)"
+            );
+        }
+    }
+    Ok(entries.len())
+}
+
 /// Fixed-width paper-style table printer used by the table benches.
 pub struct Table {
     headers: Vec<String>,
@@ -234,5 +272,52 @@ mod tests {
         assert!(append_bench_json(&path, &[rec("pr5", 1)]).is_err());
         assert_eq!(std::fs::read_to_string(&path).unwrap(), "{}", "file left untouched");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bench_json_schema_validation() {
+        let path = std::env::temp_dir().join(format!("vgp_bench_v_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let rec = BenchRecord {
+            pr: "pr5".into(),
+            kernel: "reg".into(),
+            threads: 2,
+            scheduler: "steal".into(),
+            lanes: 8,
+            evals_per_sec: 3.2e6,
+        };
+        append_bench_json(&path, &[rec]).unwrap();
+        assert_eq!(validate_bench_json(&path).unwrap(), 1);
+        // the real trajectory's pre-PR-4 shape (no kernel field) passes
+        std::fs::write(
+            &path,
+            r#"[{"evals_per_sec":410000,"lanes":1,"pr":"pr3-est","scheduler":"static","threads":1}]"#,
+        )
+        .unwrap();
+        assert_eq!(validate_bench_json(&path).unwrap(), 1);
+        // rejected shapes: wrong top level, bad scheduler, bad kernel,
+        // non-positive rate, zero threads
+        for bad in [
+            r#"{"pr":"x"}"#,
+            r#"[{"evals_per_sec":1.0,"lanes":1,"pr":"x","scheduler":"fifo","threads":1}]"#,
+            r#"[{"evals_per_sec":1.0,"kernel":"gpu","lanes":1,"pr":"x","scheduler":"static","threads":1}]"#,
+            r#"[{"evals_per_sec":0,"lanes":1,"pr":"x","scheduler":"static","threads":1}]"#,
+            r#"[{"evals_per_sec":1.0,"lanes":1,"pr":"x","scheduler":"static","threads":0}]"#,
+            r#"[{"lanes":1,"pr":"x","scheduler":"static","threads":1}]"#,
+        ] {
+            std::fs::write(&path, bad).unwrap();
+            assert!(validate_bench_json(&path).is_err(), "must reject: {bad}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn committed_trajectory_passes_validation() {
+        // the repo-root perf log must always satisfy the schema the
+        // bench-smoke CI job enforces on its uploaded artifact (21
+        // committed pr3-est/pr4-est entries; local bench runs append)
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+        assert!(validate_bench_json(path).unwrap() >= 21, "trajectory entries went missing");
     }
 }

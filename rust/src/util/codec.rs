@@ -1,0 +1,152 @@
+//! Byte-level codecs for compact WU payloads: LEB128 varints and a
+//! dependency-free base64 (no external crates offline).
+//!
+//! Both directions are fully deterministic — a given byte sequence has
+//! exactly one encoding — because the island checkpoint compression
+//! ([`crate::gp::islands`]) rides inside *signed* WU specs and
+//! quorum-hashed payloads: two honest encoders must emit identical
+//! text for identical state.
+
+/// Append `v` as an unsigned LEB128 varint (7 bits per byte, high bit
+/// = continuation). 0 encodes as a single 0x00 byte.
+pub fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Read an unsigned LEB128 varint at `*i`, advancing `*i` past it.
+pub fn read_varint(b: &[u8], i: &mut usize) -> anyhow::Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&byte) = b.get(*i) else {
+            anyhow::bail!("varint truncated at byte {}", *i);
+        };
+        *i += 1;
+        anyhow::ensure!(shift < 64, "varint overflows u64");
+        v |= ((byte & 0x7f) as u64) << shift;
+        if byte & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+const B64: &[u8; 64] = b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with `=` padding (RFC 4648).
+pub fn b64_encode(bytes: &[u8]) -> String {
+    let mut out = String::with_capacity(bytes.len().div_ceil(3) * 4);
+    for chunk in bytes.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let n = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64[(n >> 18) as usize & 63] as char);
+        out.push(B64[(n >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 { B64[(n >> 6) as usize & 63] as char } else { '=' });
+        out.push(if chunk.len() > 2 { B64[n as usize & 63] as char } else { '=' });
+    }
+    out
+}
+
+fn b64_value(c: u8) -> anyhow::Result<u32> {
+    Ok(match c {
+        b'A'..=b'Z' => (c - b'A') as u32,
+        b'a'..=b'z' => (c - b'a') as u32 + 26,
+        b'0'..=b'9' => (c - b'0') as u32 + 52,
+        b'+' => 62,
+        b'/' => 63,
+        other => anyhow::bail!("invalid base64 byte 0x{other:02x}"),
+    })
+}
+
+/// Decode standard base64 (strict: length multiple of 4, padding only
+/// at the end).
+pub fn b64_decode(s: &str) -> anyhow::Result<Vec<u8>> {
+    let b = s.as_bytes();
+    anyhow::ensure!(b.len() % 4 == 0, "base64 length {} not a multiple of 4", b.len());
+    let mut out = Vec::with_capacity(b.len() / 4 * 3);
+    for (ci, chunk) in b.chunks(4).enumerate() {
+        let last = ci == b.len() / 4 - 1;
+        let pad = chunk.iter().filter(|&&c| c == b'=').count();
+        anyhow::ensure!(pad <= 2 && (pad == 0 || last), "misplaced base64 padding");
+        anyhow::ensure!(chunk[0] != b'=' && chunk[1] != b'=', "misplaced base64 padding");
+        if pad == 2 {
+            anyhow::ensure!(chunk[2] == b'=' && chunk[3] == b'=', "misplaced base64 padding");
+        } else if pad == 1 {
+            anyhow::ensure!(chunk[3] == b'=', "misplaced base64 padding");
+        }
+        let v0 = b64_value(chunk[0])?;
+        let v1 = b64_value(chunk[1])?;
+        let v2 = if pad == 2 { 0 } else { b64_value(chunk[2])? };
+        let v3 = if pad >= 1 { 0 } else { b64_value(chunk[3])? };
+        let n = (v0 << 18) | (v1 << 12) | (v2 << 6) | v3;
+        out.push((n >> 16) as u8);
+        if pad < 2 {
+            out.push((n >> 8) as u8);
+        }
+        if pad == 0 {
+            out.push(n as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn varint_roundtrips_edge_values() {
+        for v in [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            push_varint(&mut buf, v);
+            let mut i = 0;
+            assert_eq!(read_varint(&buf, &mut i).unwrap(), v);
+            assert_eq!(i, buf.len(), "decoder must consume exactly the encoding");
+        }
+    }
+
+    #[test]
+    fn varint_is_compact_and_rejects_truncation() {
+        let mut buf = Vec::new();
+        push_varint(&mut buf, 127);
+        assert_eq!(buf.len(), 1);
+        push_varint(&mut buf, 128);
+        assert_eq!(buf.len(), 3);
+        // truncated continuation byte
+        let mut i = 1;
+        assert!(read_varint(&buf[..2], &mut i).is_err());
+    }
+
+    #[test]
+    fn b64_roundtrips_all_tail_lengths() {
+        for n in 0..10usize {
+            let bytes: Vec<u8> = (0..n as u8).map(|i| i.wrapping_mul(37).wrapping_add(5)).collect();
+            let s = b64_encode(&bytes);
+            assert_eq!(s.len() % 4, 0);
+            assert_eq!(b64_decode(&s).unwrap(), bytes, "n={n}");
+        }
+        // RFC 4648 vectors
+        assert_eq!(b64_encode(b"foob"), "Zm9vYg==");
+        assert_eq!(b64_encode(b"fooba"), "Zm9vYmE=");
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+    }
+
+    #[test]
+    fn b64_decode_rejects_garbage() {
+        assert!(b64_decode("abc").is_err(), "length not multiple of 4");
+        assert!(b64_decode("ab!=").is_err(), "invalid alphabet byte");
+        assert!(b64_decode("=abc").is_err(), "padding at the front");
+        assert!(b64_decode("ab=c").is_err(), "padding mid-chunk");
+        assert!(b64_decode("AB==CD==").is_err(), "padding before the last chunk");
+    }
+}

@@ -3,6 +3,7 @@
 //! crates for these, so they are implemented here (see DESIGN.md §2).
 
 pub mod bench;
+pub mod codec;
 pub mod json;
 pub mod log;
 pub mod prop;

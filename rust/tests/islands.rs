@@ -10,14 +10,17 @@
 //! * a mid-epoch checkpoint/resume reproduces the uninterrupted
 //!   payload byte for byte.
 
+use std::collections::HashMap;
+
 use vgp::boinc::db::HostRow;
 use vgp::boinc::exchange::MigrationExchange;
 use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::signature::SigningKey;
 use vgp::churn::PoolParams;
 use vgp::coordinator::{exec, simulate_island_campaign, IslandCampaign};
 use vgp::gp::engine::Checkpoint;
 use vgp::gp::eval::EvalOpts;
-use vgp::gp::islands::{self, IslandSpec};
+use vgp::gp::islands::{self, AdaptiveMigration, IslandSpec};
 use vgp::gp::problems::ProblemKind;
 use vgp::sim::SimConfig;
 use vgp::util::json::Json;
@@ -88,8 +91,12 @@ fn island_epoch_payload_is_thread_count_independent() {
 
 /// Drive a whole campaign against `ServerCore` + exchange by hand,
 /// shuffling the order in which each round's results reach the server.
-/// Returns (merged-best fingerprint, sorted per-WU payloads).
-fn drive_campaign(c: &IslandCampaign, order_seed: u64, threads: usize) -> (String, Vec<String>) {
+/// Returns the finished (campaign, server, exchange) for inspection.
+fn drive_campaign_core(
+    c: &IslandCampaign,
+    order_seed: u64,
+    threads: usize,
+) -> (IslandCampaign, ServerCore, MigrationExchange) {
     let mut c = c.clone();
     c.threads = threads;
     let mut core = ServerCore::new(ServerConfig::default());
@@ -117,6 +124,34 @@ fn drive_campaign(c: &IslandCampaign, order_seed: u64, threads: usize) -> (Strin
         }
     }
     assert!(core.is_complete(), "campaign must finish");
+    (c, core, ex)
+}
+
+/// Content fingerprint of a finished campaign: every assimilated
+/// payload plus the `migration_k` each released epoch actually rode
+/// with (the adaptive-rate trajectory), name-sorted so the comparison
+/// is arrival-order free.
+fn campaign_lines(c: &IslandCampaign, core: &ServerCore, ex: &MigrationExchange) -> Vec<String> {
+    let mut lines: Vec<String> = core
+        .assimilated()
+        .iter()
+        .map(|a| format!("{} {}", a.wu_name, a.payload))
+        .collect();
+    for d in 0..c.demes {
+        for e in 1..c.epochs {
+            if ex.is_released(d, e) {
+                let k = core.db.wu(ex.wu_id(d, e)).unwrap().spec.u64_of("migration_k").unwrap();
+                lines.push(format!("k_d{d}_e{e}={k}"));
+            }
+        }
+    }
+    lines.sort();
+    lines
+}
+
+/// (merged-best fingerprint, sorted per-WU payloads + k trajectory).
+fn drive_campaign(c: &IslandCampaign, order_seed: u64, threads: usize) -> (String, Vec<String>) {
+    let (c, core, ex) = drive_campaign_core(c, order_seed, threads);
     let best = c.merge_best(core.assimilated()).expect("merged best");
     let fingerprint = format!(
         "d{}e{}:{:016x}:{}",
@@ -125,13 +160,7 @@ fn drive_campaign(c: &IslandCampaign, order_seed: u64, threads: usize) -> (Strin
         best.raw.to_bits(),
         best.tree.to_json()
     );
-    let mut payloads: Vec<String> = core
-        .assimilated()
-        .iter()
-        .map(|a| format!("{} {}", a.wu_name, a.payload))
-        .collect();
-    payloads.sort();
-    (fingerprint, payloads)
+    (fingerprint, campaign_lines(&c, &core, &ex))
 }
 
 #[test]
@@ -368,8 +397,222 @@ fn mid_epoch_checkpoint_resume_is_bit_identical() {
     let payload = Json::parse(&uninterrupted).unwrap();
     assert_eq!(payload.u64_of("epoch").unwrap(), 1);
     assert_eq!(payload.get("emigrants").and_then(Json::as_arr).unwrap().len(), 2);
-    let ck = Checkpoint::from_json(payload.get("checkpoint").unwrap()).unwrap();
+    // payload checkpoints ship in the packed form; parse_checkpoint
+    // reads both packed and legacy wire shapes
+    let ck = islands::parse_checkpoint(payload.get("checkpoint").unwrap()).unwrap();
     assert_eq!(ck.gen, 8, "checkpoint sits at the next epoch boundary");
+}
+
+// ------------------------------------------------- adaptive migration
+
+#[test]
+fn adaptive_migration_trajectory_bit_identical_across_orders_and_threads() {
+    let mut c = campaign("adapt", 3, 4);
+    c.adaptive_migration = true;
+    let a = drive_campaign(&c, 1, 1);
+    let b = drive_campaign(&c, 42, 1);
+    assert_eq!(a.0, b.0, "adaptive merged best must not depend on result-arrival order");
+    assert_eq!(a.1, b.1, "adaptive payloads + k trajectory must not depend on arrival order");
+    let d = drive_campaign(&c, 7, 4);
+    assert_eq!(a.0, d.0, "adaptive merged best must not depend on worker thread count");
+    assert_eq!(a.1, d.1, "adaptive payloads + k trajectory must not depend on thread count");
+}
+
+#[test]
+fn adaptive_rate_is_the_offline_function_of_validated_payloads() {
+    let mut c = campaign("adaptk", 3, 4);
+    c.adaptive_migration = true;
+    let (c, core, ex) = drive_campaign_core(&c, 11, 1);
+    // rebuild each deme's best-raw trajectory from the assimilated
+    // payloads alone — nothing else may influence the rate
+    let mut raw: HashMap<(usize, usize), f64> = HashMap::new();
+    for a in core.assimilated() {
+        let d = a.payload.u64_of("deme").unwrap() as usize;
+        let e = a.payload.u64_of("epoch").unwrap() as usize;
+        let bits = u64::from_str_radix(a.payload.str_of("best_raw_bits").unwrap(), 16).unwrap();
+        raw.insert((d, e), f64::from_bits(bits));
+    }
+    // the campaign's own policy (base rate + fan-in-aware cap) — the
+    // same object the exchange installs
+    let policy = c.adaptive_policy().expect("adaptive campaign");
+    assert_eq!(policy, AdaptiveMigration { base_k: 2, max_k: 59 }, "ring fan-in 1, min deme 60");
+    for d in 0..c.demes {
+        for e in 1..c.epochs {
+            let history: Vec<f64> = (0..e).map(|ep| raw[&(d, ep)]).collect();
+            let spec = core.db.wu(ex.wu_id(d, e)).unwrap().spec.clone();
+            assert_eq!(
+                spec.u64_of("migration_k").unwrap() as usize,
+                policy.k_for(&history),
+                "deme {d} epoch {e}: released k must be the pure function of payload history"
+            );
+            // the worker honored the patched rate: its payload exports
+            // exactly k emigrants
+            let payload = core
+                .assimilated()
+                .iter()
+                .find(|a| {
+                    a.payload.u64_of("deme").unwrap() as usize == d
+                        && a.payload.u64_of("epoch").unwrap() as usize == e
+                })
+                .expect("epoch assimilated");
+            assert_eq!(
+                payload.payload.get("emigrants").and_then(Json::as_arr).unwrap().len() as u64,
+                spec.u64_of("migration_k").unwrap(),
+                "deme {d} epoch {e}: emigrant count must match the adaptive k"
+            );
+        }
+    }
+}
+
+// ------------------------------------------- heterogeneous deme sizes
+
+#[test]
+fn heterogeneous_deme_checkpoint_resume_is_bit_identical() {
+    let mut c = campaign("hetero", 3, 2);
+    c.deme_sizes = vec![40, 60, 90];
+    c.validate().unwrap();
+    // epoch 0 of deme 0 (the resumed deme) and deme 2 (its ring source)
+    let p0 = exec::run_island_wu_native(&c.wu_spec(0, 0)).unwrap();
+    let p2 = exec::run_island_wu_native(&c.wu_spec(2, 0)).unwrap();
+    let spec = c
+        .wu_spec(0, 1)
+        .set("checkpoint", p0.get("checkpoint").unwrap().clone())
+        .set("immigrants", p2.get("emigrants").unwrap().clone());
+    let uninterrupted = exec::run_island_wu_native(&spec).unwrap().to_string();
+    // interrupted run: 2 of 4 generations, local checkpoint through
+    // the wire (legacy form — a BOINC client restart), resume, finish
+    let ispec = IslandSpec::from_json(&spec).unwrap();
+    assert_eq!(ispec.population, 40, "deme 0 runs at its own size");
+    let resumed = exec::with_native_evaluator(ProblemKind::Mux6, ispec.seed, EvalOpts::default(), |ps, ev| {
+        let mut engine = islands::epoch_engine(&ispec, ps).unwrap();
+        engine.step(ev);
+        engine.step(ev);
+        let wire = engine.checkpoint().to_json().to_string();
+        let ck = Checkpoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        let mut spec2 = ispec.clone();
+        spec2.checkpoint = Some(ck);
+        let mut engine2 = islands::epoch_engine(&spec2, ps).unwrap();
+        islands::finish_epoch(&mut engine2, &spec2, ev).unwrap().to_string()
+    });
+    assert_eq!(resumed, uninterrupted, "heterogeneous mid-epoch resume must be bit-identical");
+    // deme sizes survive the full round trip
+    let payload = Json::parse(&uninterrupted).unwrap();
+    let ck0 = islands::parse_checkpoint(payload.get("checkpoint").unwrap()).unwrap();
+    assert_eq!(ck0.population.len(), 40);
+    let ck2 = islands::parse_checkpoint(p2.get("checkpoint").unwrap()).unwrap();
+    assert_eq!(ck2.population.len(), 90);
+    // and a full heterogeneous campaign is content-deterministic
+    let a = drive_campaign(&c, 3, 1);
+    let b = drive_campaign(&c, 9, 2);
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.1, b.1);
+}
+
+// --------------------------------------------- checkpoint compression
+
+#[test]
+fn compressed_epoch_specs_roundtrip_and_sign_stably() {
+    let c = campaign("packed", 2, 2);
+    let p0 = exec::run_island_wu_native(&c.wu_spec(0, 0)).unwrap();
+    let ckj = p0.get("checkpoint").unwrap();
+    // payload checkpoints ship packed: one blob, no tree array
+    assert!(ckj.get("pop_packed").is_some(), "island checkpoints must ship compressed");
+    assert!(ckj.get("population").is_none());
+    // decode -> re-encode is the identity on the wire text (the
+    // canonical-encoding property signing depends on)
+    let ck = islands::parse_checkpoint(ckj).unwrap();
+    assert_eq!(ck.population.len(), 60);
+    let repacked = islands::checkpoint_to_packed_json(&ck);
+    assert_eq!(repacked.to_string(), ckj.to_string(), "re-encode must be canonical");
+    // the packed form is substantially smaller than the legacy array
+    let legacy = ck.to_json().to_string();
+    assert!(
+        ckj.to_string().len() * 2 < legacy.len(),
+        "packed {} bytes vs legacy {} bytes",
+        ckj.to_string().len(),
+        legacy.len()
+    );
+    // signature stability: two independent encodes of the same state
+    // produce byte-identical signed spec text
+    let imm = p0.get("emigrants").unwrap().clone();
+    let spec1 = c.wu_spec(0, 1).set("checkpoint", ckj.clone()).set("immigrants", Json::Arr(vec![]));
+    let spec2 = c.wu_spec(0, 1).set("checkpoint", repacked).set("immigrants", Json::Arr(vec![]));
+    let key = SigningKey::new(b"vgp-project-key");
+    let s1 = key.sign(spec1.to_string().as_bytes());
+    let s2 = key.sign(spec2.to_string().as_bytes());
+    assert_eq!(s1, s2, "spec signatures must be stable across encoders");
+    assert!(key.verify(spec2.to_string().as_bytes(), &s1));
+    // compression is payload-neutral: the same epoch executed from the
+    // packed and from the legacy checkpoint form yields identical bytes
+    let packed_spec = c.wu_spec(0, 1).set("checkpoint", ckj.clone()).set("immigrants", imm.clone());
+    let legacy_spec = c.wu_spec(0, 1).set("checkpoint", ck.to_json()).set("immigrants", imm);
+    let packed_payload = exec::run_island_wu_native(&packed_spec).unwrap().to_string();
+    let legacy_payload = exec::run_island_wu_native(&legacy_spec).unwrap().to_string();
+    assert_eq!(packed_payload, legacy_payload, "compression must never change payloads");
+}
+
+// ------------------------------------------------- replica boosting
+
+#[test]
+fn boosted_replica_quorum_agrees_with_unboosted_path() {
+    let mut c = campaign("boosty", 2, 2);
+    c.boost_replicas = true;
+    c.migration_timeout = 1e9; // only the race can unblock the barrier early
+    let mut core = ServerCore::new(ServerConfig::default());
+    let mut ex = MigrationExchange::new(c.exchange_config());
+    ex.install(&mut core, c.workunits());
+    let mut hg = host("good");
+    hg.ncpus = 1;
+    let mut hf = host("flaky");
+    hf.ncpus = 1;
+    let good = core.register_host(hg);
+    let flaky = core.register_host(hf);
+    let (rg, wg, _) = core.request_work(good, 1.0).unwrap();
+    assert_eq!(wg.spec.u64_of("deme").unwrap(), 0);
+    let (rf, wf, _) = core.request_work(flaky, 1.0).unwrap();
+    assert_eq!(wf.spec.u64_of("deme").unwrap(), 1);
+    // the flaky host crashes once, fetches the reissue, then straggles
+    core.report_error(rf, 2.0);
+    let (_r_stuck, w_stuck, _) = core.request_work(flaky, 3.0).unwrap();
+    assert_eq!(w_stuck.spec.u64_of("deme").unwrap(), 1);
+    core.report_success(rg, 4.0, 1.0, exec::run_island_wu_native(&wg.spec).unwrap());
+    ex.poll(&mut core, 5.0);
+    assert_eq!(ex.stats.boosted, 1, "reliability counters must trigger the race");
+    assert!(!ex.is_released(0, 1));
+    // the good host wins the race with the real payload
+    let (rr, wr, _) = core.request_work(good, 6.0).unwrap();
+    assert_eq!(wr.spec.u64_of("deme").unwrap(), 1, "race replica goes to a distinct host");
+    core.report_success(rr, 7.0, 1.0, exec::run_island_wu_native(&wr.spec).unwrap());
+    ex.poll(&mut core, 8.0);
+    assert!(ex.is_released(0, 1) && ex.is_released(1, 1), "race unblocks both barriers");
+    assert_eq!(ex.stats.timeouts, 0, "no straggler write-off needed");
+    for round in 0..20 {
+        let t = 10.0 + round as f64 * 60.0;
+        while let Some((rid, wu, _)) = core.request_work(good, t) {
+            core.report_success(rid, t, 1.0, exec::run_island_wu_native(&wu.spec).unwrap());
+        }
+        ex.poll(&mut core, t);
+        if core.is_complete() {
+            break;
+        }
+    }
+    assert!(core.is_complete());
+    // quorum agreement: the raced WU's canonical payload is exactly
+    // what any honest host computes from the static spec
+    let direct = exec::run_island_wu_native(&c.wu_spec(1, 0)).unwrap().to_string();
+    let canon = core
+        .assimilated()
+        .iter()
+        .find(|a| a.wu_name == "boosty_d01_e00")
+        .expect("raced WU assimilated");
+    assert_eq!(canon.payload.to_string(), direct, "boosted canonical must equal direct execution");
+    // the whole campaign's content equals an unboosted run's: boosting
+    // moves time, never content
+    let mut unboosted = c.clone();
+    unboosted.boost_replicas = false;
+    let lines_boosted = campaign_lines(&c, &core, &ex);
+    let (_, lines_unboosted) = drive_campaign(&unboosted, 5, 1);
+    assert_eq!(lines_boosted, lines_unboosted);
 }
 
 // ------------------------------------------------- worker dispatch
