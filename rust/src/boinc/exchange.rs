@@ -26,9 +26,12 @@
 //! of result arrivals (that doesn't cross a timeout boundary) produces
 //! byte-identical epoch specs, payloads and final campaign state.
 
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::collections::{BTreeMap, BTreeSet};
 
-use crate::gp::islands::{AdaptiveMigration, Topology};
+use crate::gp::islands::{AdaptiveMigration, Migrant, Topology};
+use crate::gp::primset::PrimSet;
+use crate::gp::problems::ProblemKind;
+use crate::gp::verify::{self, TapeKind};
 use crate::util::json::Json;
 
 use super::server::ServerCore;
@@ -54,6 +57,14 @@ pub struct ExchangeConfig {
     /// with a nonzero consecutive-error streak, instead of waiting for
     /// the migration timeout
     pub boost_replicas: bool,
+    /// emigrant trust boundary ([`crate::gp::verify`]): when set to the
+    /// campaign's problem, every banked emigrant payload is parsed and
+    /// its tree statically verified against that problem's primitive
+    /// set *before* it can ever ride a released epoch spec; invalid
+    /// migrants are quarantined (dropped). The decision is pure payload
+    /// content, so it preserves the module's arrival-order-free
+    /// determinism contract. `None` banks payloads verbatim.
+    pub verify: Option<ProblemKind>,
 }
 
 /// Observable exchange counters (campaign reporting + tests).
@@ -73,6 +84,9 @@ pub struct ExchangeStats {
     pub cancelled: u64,
     /// barrier-blocking WUs that got a boosted racing replica
     pub boosted: u64,
+    /// emigrant payloads dropped at the banking trust boundary
+    /// (unparseable or failed static verification)
+    pub quarantined: u64,
 }
 
 /// A deme-epoch's validated outcome: the checkpoint the next epoch
@@ -94,7 +108,7 @@ pub struct MigrationExchange {
     /// `[deme][epoch]` → WU id (pre-assigned at install)
     wu_ids: Vec<Vec<u64>>,
     /// WU id → (deme, epoch)
-    coords: HashMap<u64, (usize, usize)>,
+    coords: BTreeMap<u64, (usize, usize)>,
     banked: BTreeMap<(usize, usize), Bank>,
     released: Vec<Vec<bool>>,
     dead: Vec<Vec<bool>>,
@@ -107,22 +121,28 @@ pub struct MigrationExchange {
     boosted: BTreeSet<u64>,
     /// how far into `ServerCore::assimilated` we have scanned
     scanned: usize,
+    /// verification context derived once from `cfg.verify`: the
+    /// problem's primitive set and tape kind (the same pair the worker
+    /// verifies WU specs against)
+    vctx: Option<(PrimSet, Option<TapeKind>)>,
     pub stats: ExchangeStats,
 }
 
 impl MigrationExchange {
     pub fn new(cfg: ExchangeConfig) -> MigrationExchange {
         let (d, e) = (cfg.demes, cfg.epochs);
+        let vctx = cfg.verify.map(|p| (verify::problem_primset(p), verify::problem_tape_kind(p)));
         MigrationExchange {
             cfg,
             wu_ids: vec![vec![0; e]; d],
-            coords: HashMap::new(),
+            coords: BTreeMap::new(),
             banked: BTreeMap::new(),
             released: vec![vec![false; e]; d],
             dead: vec![vec![false; e]; d],
             written_off: BTreeSet::new(),
             boosted: BTreeSet::new(),
             scanned: 0,
+            vctx,
             stats: ExchangeStats::default(),
         }
     }
@@ -172,12 +192,33 @@ impl MigrationExchange {
         for a in &assimilated[self.scanned..] {
             let Some(&(d, e)) = self.coords.get(&a.wu_id) else { continue };
             let checkpoint = a.payload.get("checkpoint").cloned().unwrap_or(Json::Null);
-            let emigrants = a
+            let mut emigrants = a
                 .payload
                 .get("emigrants")
                 .and_then(Json::as_arr)
                 .map(|v| v.to_vec())
                 .unwrap_or_default();
+            if let Some((ps, kind)) = &self.vctx {
+                let mut kept = Vec::with_capacity(emigrants.len());
+                for (i, ej) in emigrants.into_iter().enumerate() {
+                    let checked = Migrant::from_json(&ej)
+                        .and_then(|m| verify::verify_tree(&m.tree, ps, *kind).ensure_ok("tree"));
+                    match checked {
+                        Ok(()) => {
+                            core.metrics.inc("exchange.verify.ok");
+                            kept.push(ej);
+                        }
+                        Err(err) => {
+                            self.stats.quarantined += 1;
+                            core.metrics.inc("exchange.verify.rejected");
+                            eprintln!(
+                                "warning: exchange: quarantined emigrant {i} of deme {d} epoch {e}: {err:#}"
+                            );
+                        }
+                    }
+                }
+                emigrants = kept;
+            }
             let best_raw = a
                 .payload
                 .get("best_raw_bits")
@@ -391,6 +432,9 @@ mod tests {
             migration_timeout: 1000.0,
             adaptive: None,
             boost_replicas: false,
+            // most tests bank synthetic `{deme, rank}` stand-in
+            // migrants, so the trust boundary stays off by default
+            verify: None,
         }
     }
 
@@ -531,6 +575,57 @@ mod tests {
         assert_eq!(spec0.u64_of("migration_k").unwrap(), 4, "stagnant deme doubles its rate");
         let spec1 = core.db.wu(ex.wu_id(1, 2)).unwrap().spec.clone();
         assert_eq!(spec1.u64_of("migration_k").unwrap(), 2, "improving deme stays at base");
+    }
+
+    #[test]
+    fn banking_quarantines_unverifiable_emigrants() {
+        let mut config = cfg(2, 2);
+        config.verify = Some(ProblemKind::Mux6);
+        let (mut core, mut ex) = campaign_with(config);
+        let h = core.register_host(host());
+        // one honest migrant (a bare terminal is a complete mux6
+        // expression), one junk object, one parseable migrant whose
+        // tree is garbage over the mux6 primitive set
+        let good = Migrant {
+            tree: crate::gp::tree::Tree::new(vec![0], vec![0.0]),
+            fitness: crate::gp::Fitness { raw: 1.0, hits: 3 },
+            from_deme: 0,
+        };
+        let bogus = Migrant {
+            tree: crate::gp::tree::Tree::new(vec![99], vec![0.0]),
+            fitness: crate::gp::Fitness { raw: 1.0, hits: 0 },
+            from_deme: 0,
+        };
+        let junk = Json::obj().set("deme", 0u64).set("rank", 1u64);
+        let payload0 = Json::obj()
+            .set("deme", 0u64)
+            .set("epoch", 0u64)
+            .set("checkpoint", Json::obj().set("gen", 3u64))
+            .set("emigrants", Json::Arr(vec![good.to_json(), junk.clone(), bogus.to_json()]));
+        let payload1 = Json::obj()
+            .set("deme", 1u64)
+            .set("epoch", 0u64)
+            .set("checkpoint", Json::obj().set("gen", 3u64))
+            .set("emigrants", Json::Arr(vec![junk, bogus.to_json()]));
+        let (r0, w0, _) = core.request_work(h, 1.0).unwrap();
+        assert_eq!(w0.spec.u64_of("deme").unwrap(), 0);
+        let (r1, w1, _) = core.request_work(h, 1.0).unwrap();
+        assert_eq!(w1.spec.u64_of("deme").unwrap(), 1);
+        core.report_success(r0, 2.0, 1.0, payload0);
+        core.report_success(r1, 2.0, 1.0, payload1);
+        ex.poll(&mut core, 3.0);
+        assert_eq!(ex.stats.quarantined, 4, "both junk shapes dropped from both banks");
+        assert_eq!(core.metrics.counter("exchange.verify.rejected"), 4);
+        assert_eq!(core.metrics.counter("exchange.verify.ok"), 1);
+        // ring of 2: deme 1 imports deme 0's bank — only the verified
+        // migrant survives; deme 0 imports deme 1's all-junk bank
+        let spec1 = core.db.wu(ex.wu_id(1, 1)).unwrap().spec.clone();
+        let imms = spec1.get("immigrants").and_then(Json::as_arr).unwrap();
+        assert_eq!(imms.len(), 1, "only the verified migrant rides the released spec");
+        assert_eq!(Migrant::from_json(&imms[0]).unwrap(), good);
+        let spec0 = core.db.wu(ex.wu_id(0, 1)).unwrap().spec.clone();
+        assert_eq!(spec0.get("immigrants").and_then(Json::as_arr).unwrap().len(), 0);
+        assert_eq!(ex.stats.empty_releases, 1);
     }
 
     #[test]

@@ -384,7 +384,9 @@ impl ServerCore {
 
         // ---- validator: find a quorum of agreeing payload hashes
         if successes.len() >= wu.min_quorum {
-            let mut groups: std::collections::HashMap<&str, Vec<usize>> = Default::default();
+            // BTreeMap so equal-size quorum groups tie-break on payload
+            // hash, not hasher iteration order (determinism contract)
+            let mut groups: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
             for (i, s) in successes.iter().enumerate() {
                 groups.entry(s.2.as_str()).or_default().push(i);
             }
@@ -461,7 +463,7 @@ impl ServerCore {
         // raw success count — two disagreeing results are inconclusive
         // (BOINC validate_state INCONCLUSIVE) and need a tie-breaker.
         let max_group = {
-            let mut groups: std::collections::HashMap<&str, usize> = Default::default();
+            let mut groups: std::collections::BTreeMap<&str, usize> = Default::default();
             for s in &successes {
                 *groups.entry(s.2.as_str()).or_default() += 1;
             }

@@ -12,9 +12,10 @@
 //! population = 4000
 //! threads = 4        # worker-side eval threads (gp::eval batch pool)
 //! eval_lanes = 4     # boolean-kernel SIMD lane width (1|2|4|8 u64
-//!                    # words per block; off-menu values round down)
+//!                    # words per block; off-menu values are a config
+//!                    # error naming the supported widths)
 //! reg_lanes = 8      # regression-kernel SIMD lane width (1|2|4|8
-//!                    # f32 values per block; same rounding)
+//!                    # f32 values per block; same strict parse)
 //! schedule = static  # eval fan-out: static | sorted | steal
 //!                    # (size-sorted/stealing tame skewed tree-walk
 //!                    # populations; results are bit-identical)

@@ -17,7 +17,7 @@ use crate::gp::eval::{EvalOpts, Schedule};
 use crate::gp::islands::{self, IslandSpec};
 use crate::gp::primset::PrimSet;
 use crate::gp::problems::{ant, interest_point, multiplexer, parity, regression, ProblemKind};
-use crate::gp::Evaluator;
+use crate::gp::{verify, Evaluator};
 use crate::runtime::{BoolArtifactEvaluator, RegArtifactEvaluator, Runtime};
 use crate::util::json::Json;
 
@@ -70,6 +70,68 @@ pub fn params_of_spec(spec: &Json) -> Result<(ProblemKind, Params)> {
         ..Params::default()
     };
     Ok((problem, params))
+}
+
+/// Cheap structural verification of a whole-run WU spec at the parse
+/// boundary: budgets must be sane *before* an engine and its
+/// population buffers are sized from them (a hostile spec could
+/// otherwise request absurd allocations or a zero-size population that
+/// breaks tournament selection).
+pub fn verify_run_spec(params: &Params) -> Result<()> {
+    anyhow::ensure!(params.population >= 1, "spec population must be >= 1");
+    anyhow::ensure!(
+        params.population <= 1_000_000,
+        "spec population {} exceeds the 1e6 sanity budget",
+        params.population
+    );
+    anyhow::ensure!(
+        params.generations <= 100_000,
+        "spec generations {} exceeds the 1e5 sanity budget",
+        params.generations
+    );
+    Ok(())
+}
+
+/// Verify every untrusted tree riding an island WU spec — the
+/// checkpoint population (and tracked best) plus the immigrant buffer
+/// — before any evaluation cycles are spent
+/// ([`crate::gp::verify`]; the WU-spec-parse trust boundary). Errors
+/// reject the WU with a located diagnostic (the server reissues it);
+/// warnings (over-budget trees, provably-constant outputs) pass
+/// through and are returned as a count for WU-level logging.
+pub fn verify_island_spec(ispec: &IslandSpec, ps: &PrimSet) -> Result<u64> {
+    let problem = ProblemKind::parse(&ispec.problem)?;
+    let kind = verify::problem_tape_kind(problem);
+    let mut warnings = 0u64;
+    let mut check = |tree: &crate::gp::tree::Tree, what: String| -> Result<u64> {
+        let r = verify::verify_tree(tree, ps, kind);
+        r.ensure_ok(&what)?;
+        Ok(r.warning_count() as u64)
+    };
+    if let Some(ck) = &ispec.checkpoint {
+        for (i, tree) in ck.population.iter().enumerate() {
+            warnings +=
+                check(tree, format!("checkpoint tree {i} (deme {}, epoch {})", ispec.deme, ispec.epoch))?;
+        }
+        if let Some((tree, _)) = &ck.best {
+            warnings +=
+                check(tree, format!("checkpoint best tree (deme {}, epoch {})", ispec.deme, ispec.epoch))?;
+        }
+    }
+    for (i, m) in ispec.immigrants.iter().enumerate() {
+        warnings += check(&m.tree, format!("immigrant {i} from deme {}", m.from_deme))?;
+    }
+    Ok(warnings)
+}
+
+/// WU-level compile-failure visibility (NOP-filled arena slots used to
+/// be silently scored worst with no trace anywhere).
+fn log_compile_failures(what: &str, failures: u64) {
+    if failures > 0 {
+        eprintln!(
+            "warning: {what}: {failures} tree(s) failed tape compile (NOP-filled, scored worst)"
+        );
+    }
 }
 
 /// Worker-side evaluation thread count for a WU spec (defaults to 1).
@@ -183,9 +245,13 @@ pub fn with_native_evaluator<R>(
 /// regardless.
 pub fn run_wu_native(spec: &Json) -> Result<Json> {
     let (problem, params) = params_of_spec(spec)?;
+    verify_run_spec(&params)?;
     let opts = eval_opts_of_spec(spec);
-    let run =
-        with_native_evaluator(problem, params.seed, opts, |ps, ev| Engine::new(params, ps).run(ev));
+    let run = with_native_evaluator(problem, params.seed, opts, |ps, ev| {
+        let run = Engine::new(params, ps).run(ev);
+        log_compile_failures("whole-run WU", ev.compile_failures());
+        run
+    });
     Ok(payload_of(&run))
 }
 
@@ -198,8 +264,14 @@ pub fn run_island_wu_native(spec: &Json) -> Result<Json> {
     let problem = ProblemKind::parse(&ispec.problem)?;
     let opts = eval_opts_of_spec(spec);
     with_native_evaluator(problem, ispec.seed, opts, |ps, ev| {
+        verify_island_spec(&ispec, ps)?;
         let mut engine = islands::epoch_engine(&ispec, ps)?;
-        islands::finish_epoch(&mut engine, &ispec, ev)
+        let payload = islands::finish_epoch(&mut engine, &ispec, ev);
+        log_compile_failures(
+            &format!("island WU (deme {}, epoch {})", ispec.deme, ispec.epoch),
+            ev.compile_failures(),
+        );
+        payload
     })
 }
 
@@ -253,16 +325,28 @@ pub fn run_island_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
         ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
             let m = multiplexer::Multiplexer::new(mux_k(problem));
             let ps = m.primset().clone();
+            verify_island_spec(&ispec, &ps)?;
             let mut ev = BoolArtifactEvaluator::with_opts(rt, &m.cases, opts);
             let mut engine = islands::epoch_engine(&ispec, &ps)?;
-            islands::finish_epoch(&mut engine, &ispec, &mut ev)
+            let payload = islands::finish_epoch(&mut engine, &ispec, &mut ev);
+            log_compile_failures(
+                &format!("artifact island WU (deme {}, epoch {})", ispec.deme, ispec.epoch),
+                crate::gp::Evaluator::compile_failures(&ev),
+            );
+            payload
         }
         ProblemKind::Quartic => {
             let q = regression::Quartic::new(QUARTIC_NCASES);
             let ps = q.primset().clone();
+            verify_island_spec(&ispec, &ps)?;
             let mut ev = RegArtifactEvaluator::with_opts(rt, &q.cases, opts);
             let mut engine = islands::epoch_engine(&ispec, &ps)?;
-            islands::finish_epoch(&mut engine, &ispec, &mut ev)
+            let payload = islands::finish_epoch(&mut engine, &ispec, &mut ev);
+            log_compile_failures(
+                &format!("artifact island WU (deme {}, epoch {})", ispec.deme, ispec.epoch),
+                crate::gp::Evaluator::compile_failures(&ev),
+            );
+            payload
         }
         other => anyhow::bail!("artifact path supports tape problems (mux/quartic), got {other:?}"),
     }
@@ -280,6 +364,7 @@ pub fn run_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
         return run_island_wu_artifact(rt, spec);
     }
     let (problem, params) = params_of_spec(spec)?;
+    verify_run_spec(&params)?;
     let opts = eval_opts_of_spec(spec);
     let run = match problem {
         ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 => {
@@ -302,6 +387,7 @@ pub fn run_wu_artifact(rt: &Runtime, spec: &Json) -> Result<Json> {
 /// Sequential-baseline helper: run the same spec N times back-to-back
 /// (the paper's one-machine T_seq measurement), returning elapsed secs.
 pub fn sequential_baseline(specs: &[Json], native: bool, rt: Option<&Runtime>) -> Result<f64> {
+    // lint:allow(wall-clock): this *is* the wall-clock measurement
     let t0 = std::time::Instant::now();
     for spec in specs {
         if native {

@@ -78,9 +78,9 @@ impl Campaign {
         c.seed = cfg.u64_or("campaign", "seed", 1);
         c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
         c.eval_lanes =
-            tape::normalize_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize);
+            tape::parse_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize)?;
         c.reg_lanes =
-            tape::normalize_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize);
+            tape::parse_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize)?;
         c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
         c.redundancy = (
             cfg.u64_or("campaign", "target_nresults", 1) as usize,
@@ -302,9 +302,9 @@ impl IslandCampaign {
         c.seed = cfg.u64_or("campaign", "seed", 1);
         c.threads = cfg.u64_or("campaign", "threads", 1).max(1) as usize;
         c.eval_lanes =
-            tape::normalize_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize);
+            tape::parse_lanes(cfg.u64_or("campaign", "eval_lanes", c.eval_lanes as u64) as usize)?;
         c.reg_lanes =
-            tape::normalize_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize);
+            tape::parse_lanes(cfg.u64_or("campaign", "reg_lanes", c.reg_lanes as u64) as usize)?;
         c.schedule = Schedule::parse(cfg.str_or("campaign", "schedule", c.schedule.name()))?;
         c.path = exec::ExecPath::parse(cfg.str_or("campaign", "island_path", c.path.name()))?;
         c.adaptive_migration = cfg.bool_or("campaign", "adaptive_migration", false);
@@ -389,6 +389,9 @@ impl IslandCampaign {
             migration_timeout: self.migration_timeout,
             adaptive: self.adaptive_policy(),
             boost_replicas: self.boost_replicas,
+            // real campaigns always verify banked emigrants against the
+            // campaign problem's primitive set (trust boundary)
+            verify: Some(self.problem),
         }
     }
 
@@ -614,11 +617,16 @@ mod tests {
         assert_eq!(c.wu_spec(0).u64_of("eval_lanes").unwrap(), 8);
         assert_eq!(c.wu_spec(0).u64_of("reg_lanes").unwrap(), 2);
         assert_eq!(c.wu_spec(0).str_of("schedule").unwrap(), "sorted");
-        // off-menu lane counts normalize instead of erroring...
-        let cfg = crate::config::Config::parse("[campaign]\neval_lanes = 5\nreg_lanes = 7\n").unwrap();
-        assert_eq!(Campaign::from_config(&cfg).unwrap().eval_lanes, 4);
-        assert_eq!(Campaign::from_config(&cfg).unwrap().reg_lanes, 4);
-        // ...but a bad schedule is a config error, not a silent default
+        // off-menu lane counts are config errors naming the supported
+        // widths — never silently rounded to a different kernel
+        let cfg = crate::config::Config::parse("[campaign]\neval_lanes = 5\n").unwrap();
+        let err = Campaign::from_config(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported lane width 5"), "{err:#}");
+        let cfg = crate::config::Config::parse("[campaign]\nreg_lanes = 7\n").unwrap();
+        assert!(Campaign::from_config(&cfg).is_err());
+        let cfg = crate::config::Config::parse("[campaign]\ndemes = 2\neval_lanes = 3\n").unwrap();
+        assert!(IslandCampaign::from_config(&cfg).is_err());
+        // a bad schedule is likewise a config error, not a silent default
         let cfg = crate::config::Config::parse("[campaign]\nschedule = fifo\n").unwrap();
         assert!(Campaign::from_config(&cfg).is_err());
         // island campaigns carry the same knobs

@@ -71,6 +71,10 @@ pub struct TapeArena {
     consts: Vec<f32>,
     ok: Vec<bool>,
     len: usize,
+    /// Cumulative count of NOP-filled slots across every
+    /// `compile_population` call — compile failures were previously
+    /// invisible (slots silently evaluated as NOPs and scored worst).
+    failed: u64,
 }
 
 impl TapeArena {
@@ -85,6 +89,7 @@ impl TapeArena {
         self.ops.resize(trees.len() * TAPE_LEN, nop);
         self.consts.resize(trees.len() * TAPE_LEN, 0.0);
         self.ok.resize(trees.len(), false);
+        let mut failed_now = 0u64;
         for (i, tree) in trees.iter().enumerate() {
             let ops = &mut self.ops[i * TAPE_LEN..(i + 1) * TAPE_LEN];
             let consts = &mut self.consts[i * TAPE_LEN..(i + 1) * TAPE_LEN];
@@ -98,8 +103,15 @@ impl TapeArena {
                 // slots is discarded either way)
                 ops.fill(nop);
                 consts.fill(0.0);
+                failed_now += 1;
             }
         }
+        self.failed += failed_now;
+    }
+
+    /// Cumulative NOP-filled (compile-failed) slot count.
+    pub fn compile_failures(&self) -> u64 {
+        self.failed
     }
 
     pub fn len(&self) -> usize {
@@ -422,6 +434,12 @@ impl BatchEvaluator {
 
     pub fn set_reg_lanes(&mut self, reg_lanes: usize) {
         self.reg_lanes = tape::normalize_lanes(reg_lanes);
+    }
+
+    /// Cumulative compile-failure (NOP-filled slot) count across every
+    /// generation this evaluator has scored.
+    pub fn compile_failures(&self) -> u64 {
+        self.arena.compile_failures()
     }
 
     /// Per-item cost hints for the skew-aware schedules: tree size is

@@ -32,6 +32,7 @@ pub mod primset;
 pub mod problems;
 pub mod tape;
 pub mod tree;
+pub mod verify;
 
 /// Minimizing fitness: lower `raw` is better; `hits` is the Koza hit
 /// count (exact-match cases) reported alongside, as in the paper's
@@ -64,5 +65,11 @@ pub trait Evaluator {
     /// the simulator to convert work into virtual seconds.
     fn cost_per_eval(&self) -> f64 {
         1.0e6
+    }
+    /// Cumulative count of individuals whose tape compile failed and
+    /// were NOP-filled / scored worst instead of evaluated. Tape-backed
+    /// evaluators override this; tree interpreters never compile.
+    fn compile_failures(&self) -> u64 {
+        0
     }
 }

@@ -94,6 +94,10 @@ impl Evaluator for NativeEvaluator<'_> {
         self.batch.evaluate_bool(trees, ps, &self.problem.cases)
     }
 
+    fn compile_failures(&self) -> u64 {
+        self.batch.compile_failures()
+    }
+
     fn cost_per_eval(&self) -> f64 {
         match self.problem.k {
             2 => 1.0e4,

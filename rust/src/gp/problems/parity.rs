@@ -15,13 +15,15 @@ pub struct Parity {
     ps: PrimSet,
 }
 
-const NAMES: &[&str] = &["b0", "b1", "b2", "b3", "b4", "b5", "b6", "b7"];
+/// Input-bit terminal names (shared with [`crate::gp::verify`], which
+/// rebuilds the primitive set without the truth table).
+pub const PARITY_NAMES: &[&str] = &["b0", "b1", "b2", "b3", "b4", "b5", "b6", "b7"];
 
 impl Parity {
     pub fn new(nbits: usize) -> Parity {
         assert!((2..=8).contains(&nbits));
         let cases = BoolCases::truth_table(nbits, |case| case.count_ones() % 2 == 0);
-        let ps = bool_set(nbits, false, NAMES);
+        let ps = bool_set(nbits, false, PARITY_NAMES);
         Parity { nbits, cases, ps }
     }
 
@@ -54,6 +56,10 @@ impl<'a> NativeEvaluator<'a> {
 impl Evaluator for NativeEvaluator<'_> {
     fn evaluate(&mut self, trees: &[Tree], ps: &PrimSet) -> Vec<Fitness> {
         self.batch.evaluate_bool(trees, ps, &self.problem.cases)
+    }
+
+    fn compile_failures(&self) -> u64 {
+        self.batch.compile_failures()
     }
 
     fn cost_per_eval(&self) -> f64 {

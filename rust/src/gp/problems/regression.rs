@@ -55,6 +55,10 @@ impl Evaluator for NativeEvaluator<'_> {
         self.batch.evaluate_reg(trees, ps, &self.problem.cases)
     }
 
+    fn compile_failures(&self) -> u64 {
+        self.batch.compile_failures()
+    }
+
     fn cost_per_eval(&self) -> f64 {
         4.0e3
     }

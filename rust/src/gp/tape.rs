@@ -226,7 +226,7 @@ pub fn compile_into(
     Ok(())
 }
 
-fn tape_arity(op: i32, nop: i32) -> i32 {
+pub(crate) fn tape_arity(op: i32, nop: i32) -> i32 {
     use opcodes::*;
     if nop == BOOL_NOP {
         match op {
@@ -261,6 +261,19 @@ pub fn normalize_lanes(lanes: usize) -> usize {
         }
     }
     best
+}
+
+/// Strict lane-width parser for user-facing knobs (`--eval-lanes`,
+/// `--reg-lanes`, `[campaign] eval_lanes`): unsupported widths are an
+/// error naming [`LANE_WIDTHS`], never silently rounded.
+/// [`normalize_lanes`] remains for internal defaulting (WU specs,
+/// evaluator construction) where a best-effort width is wanted.
+pub fn parse_lanes(lanes: usize) -> anyhow::Result<usize> {
+    if LANE_WIDTHS.contains(&lanes) {
+        Ok(lanes)
+    } else {
+        anyhow::bail!("unsupported lane width {lanes}: supported widths are {LANE_WIDTHS:?}")
+    }
 }
 
 /// Packed boolean problem data: truth-table columns, target, mask.

@@ -1,0 +1,828 @@
+//! Static verification of tapes, trees, and WU payloads at trust
+//! boundaries.
+//!
+//! Volunteer hosts are anonymous: every byte a host sends — banked
+//! emigrants, checkpoints riding a WU spec — and every artifact the
+//! server ships crosses a trust boundary and must be validated
+//! *cheaply, before any cycles are spent on it* (Anderson's BOINC
+//! design point). This module is that validation layer: a linear-pass
+//! abstract interpreter over the [`Tape`] IR plus a tree-level
+//! front-end, producing a structured [`VerifyReport`]. It is
+//! **diagnostics only** — nothing here transforms a tape or tree, so
+//! the pinned bit-identical kernel contracts are untouched.
+//!
+//! # What is checked
+//!
+//! Structural pass (mirrors the kernel's fetch/dispatch exactly):
+//!
+//! * **length** — op/const rows must be exactly `TAPE_LEN` and aligned;
+//! * **op-range** — opcodes outside the kernel's `0..=NOP` space are
+//!   *skipped* by the kernel, so the tape would silently evaluate a
+//!   different program than its bytes claim: rejected. This also
+//!   catches bool opcodes in a reg tape (`BOOL_OP_* > REG_NOP`);
+//! * **op-whitelist** — in-range opcodes must appear in the problem's
+//!   [`PrimSet`] (no `IF` in parity tapes, no out-of-range terminal
+//!   indices, no reg ops in bool tapes);
+//! * **stack-underflow / stack-depth / net-depth** — the kernels index
+//!   `sp-1`/`sp-2` unchecked and clamp pushes at `STACK_DEPTH`;
+//!   stack-effect consistency is what makes that safe;
+//! * **interior-nop** — real ops after NOP padding began never come
+//!   from `compile` and indicate tampering or corruption;
+//! * **nan-const** — a non-finite `CONST` operand escapes into the SSE
+//!   reduction and can poison quorum payload bits.
+//!
+//! Abstract domains (run only on structurally clean tapes):
+//!
+//! * **reg interval + NaN propagation** — every value is tracked as an
+//!   `[lo, hi]` f64 interval with a may-be-NaN flag, mirroring the
+//!   kernel's clamp/guard semantics (`EXP` clamps its input to ±50, so
+//!   its output is *proven* ≤ e⁵⁰ even for an ∞ input; `DIV`/`LOG`
+//!   guards are modeled). The proven output bounds and NaN-possibility
+//!   land in the report; a possibly-NaN output is a warning.
+//! * **bool constness** — values are tracked as const/var/negated-var,
+//!   folding identities (`XOR(v,v) = 0`, `OR(v,¬v) = 1`, constant `IF`
+//!   selectors). Provably-constant subexpressions, dead `IF` branches
+//!   and a provably-constant output are flagged as warnings — they
+//!   waste volunteer cycles but are legal programs.
+//!
+//! Severity contract: **errors** are payloads no honest
+//! `compile`-produced tape can exhibit → callers must reject.
+//! **Warnings** are legal-but-suspect (constant output, over-budget
+//! trees that the arena NOP-fills and scores worst) → callers log or
+//! count them, never block. [`VerifyReport::record`] surfaces both
+//! through a [`crate::metrics::Metrics`] registry.
+//!
+//! Wired at: [`crate::runtime`] artifact autoload (meta budgets),
+//! `coordinator::exec` WU-spec parse (checkpoint population +
+//! immigrants), and `MigrationExchange` banking (emigrant payloads).
+
+use std::collections::BTreeSet;
+
+use crate::gp::primset::{bool_set, PrimSet};
+use crate::gp::problems::multiplexer::{MUX11_NAMES, MUX20_NAMES, MUX6_NAMES};
+use crate::gp::problems::parity::PARITY_NAMES;
+use crate::gp::problems::ProblemKind;
+use crate::gp::tape::{self, opcodes, Tape, TapeError};
+use crate::gp::tree::Tree;
+use crate::metrics::Metrics;
+
+/// Which kernel a tape targets. Decides the NOP opcode, the opcode
+/// space, and which abstract domain runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TapeKind {
+    Bool,
+    Reg,
+}
+
+impl TapeKind {
+    pub fn nop(self) -> i32 {
+        match self {
+            TapeKind::Bool => opcodes::BOOL_NOP,
+            TapeKind::Reg => opcodes::REG_NOP,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TapeKind::Bool => "bool",
+            TapeKind::Reg => "reg",
+        }
+    }
+}
+
+/// Diagnostic severity. Errors reject; warnings inform.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// One finding, anchored to a tape slot / tree node when applicable.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Tape slot or tree node index (`usize::MAX` = whole payload).
+    pub pos: usize,
+    /// Stable rule id (`"stack-underflow"`, `"op-whitelist"`, …).
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub message: String,
+}
+
+/// Structured verification outcome. `is_ok()` means "no errors";
+/// warnings may still be present and worth logging.
+#[derive(Clone, Debug, Default)]
+pub struct VerifyReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Reg tapes: proven output interval (±∞ endpoints allowed).
+    pub output_bounds: Option<(f64, f64)>,
+    /// Reg tapes: interval analysis could not exclude a NaN output.
+    pub may_nan: bool,
+    /// The output is provably the same for every input.
+    pub const_output: bool,
+}
+
+impl VerifyReport {
+    pub fn error(&mut self, pos: usize, rule: &'static str, message: impl Into<String>) {
+        self.diagnostics.push(Diagnostic { pos, rule, severity: Severity::Error, message: message.into() });
+    }
+
+    pub fn warn(&mut self, pos: usize, rule: &'static str, message: impl Into<String>) {
+        self.diagnostics.push(Diagnostic { pos, rule, severity: Severity::Warning, message: message.into() });
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.first_error().is_none()
+    }
+
+    pub fn first_error(&self) -> Option<&Diagnostic> {
+        self.diagnostics.iter().find(|d| d.severity == Severity::Error)
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// Fold another report's diagnostics into this one (tree-level
+    /// reports absorb the tape-level pass this way).
+    pub fn merge(&mut self, other: VerifyReport) {
+        self.diagnostics.extend(other.diagnostics);
+        self.output_bounds = other.output_bounds.or(self.output_bounds);
+        self.may_nan |= other.may_nan;
+        self.const_output |= other.const_output;
+    }
+
+    /// Bail with the first error (naming `what`) if the report has any.
+    pub fn ensure_ok(&self, what: &str) -> anyhow::Result<()> {
+        if let Some(e) = self.first_error() {
+            anyhow::bail!(
+                "{what} failed verification ({} error(s)): [{}@{}] {}",
+                self.error_count(),
+                e.rule,
+                e.pos as isize,
+                e.message
+            );
+        }
+        Ok(())
+    }
+
+    /// Surface the outcome through a metrics registry:
+    /// `<prefix>.ok` / `<prefix>.rejected` counters plus
+    /// `<prefix>.warnings` accumulation.
+    pub fn record(&self, m: &Metrics, prefix: &str) {
+        if self.is_ok() {
+            m.inc(&format!("{prefix}.ok"));
+        } else {
+            m.inc(&format!("{prefix}.rejected"));
+        }
+        let w = self.warning_count();
+        if w > 0 {
+            m.add(&format!("{prefix}.warnings"), w as u64);
+        }
+    }
+}
+
+/// Position marker for whole-payload diagnostics.
+const WHOLE: usize = usize::MAX;
+
+/// Verify raw tape rows against a problem's primitive set. Linear pass;
+/// never panics, never allocates per-slot.
+pub fn verify_tape_rows(ops: &[i32], consts: &[f32], ps: &PrimSet, kind: TapeKind) -> VerifyReport {
+    let mut r = VerifyReport::default();
+    let l = opcodes::TAPE_LEN as usize;
+    let nop = kind.nop();
+    if ops.len() != l {
+        r.error(WHOLE, "length", format!("tape has {} op slots, kernel contract is {l}", ops.len()));
+    }
+    if consts.len() != ops.len() {
+        r.error(
+            WHOLE,
+            "length",
+            format!("const row ({}) is not aligned with op row ({})", consts.len(), ops.len()),
+        );
+        return r; // cannot index safely past this point
+    }
+
+    let whitelist: BTreeSet<i32> =
+        ps.prims.iter().map(|p| p.tape_op).filter(|&op| op >= 0).chain([nop]).collect();
+
+    let mut sp: i32 = 0;
+    let mut padding = false;
+    let mut interior_flagged = false;
+    let mut depth_flagged = false;
+    let mut live_ops = 0usize;
+    for (pos, &op) in ops.iter().enumerate() {
+        if op == nop {
+            padding = true;
+            continue;
+        }
+        if padding && !interior_flagged {
+            r.error(pos, "interior-nop", "live op after NOP padding began (compile never emits this)");
+            interior_flagged = true;
+        }
+        live_ops += 1;
+        if !(0..nop).contains(&op) {
+            r.error(
+                pos,
+                "op-range",
+                format!("opcode {op} outside the {} kernel space 0..{nop} (kernel would skip it)", kind.name()),
+            );
+            continue; // mirror the kernel: out-of-range ops have no stack effect
+        }
+        if !whitelist.contains(&op) {
+            r.error(pos, "op-whitelist", format!("opcode {op} is not in this problem's primitive set"));
+        }
+        let arity = tape::tape_arity(op, nop);
+        if arity == 0 {
+            sp += 1;
+            if sp > opcodes::STACK_DEPTH && !depth_flagged {
+                r.error(pos, "stack-depth", format!("push at depth {sp} exceeds STACK_DEPTH (kernel clamps and clobbers slot {})", opcodes::STACK_DEPTH - 1));
+                depth_flagged = true;
+            }
+            sp = sp.min(opcodes::STACK_DEPTH);
+        } else if sp < arity {
+            r.error(pos, "stack-underflow", format!("opcode {op} needs {arity} operands, stack has {sp}"));
+            sp = 1; // pretend the op produced a value and keep scanning
+        } else {
+            sp -= arity - 1;
+        }
+        if kind == TapeKind::Reg && op == opcodes::REG_OP_CONST && !consts[pos].is_finite() {
+            r.error(pos, "nan-const", format!("non-finite constant {} escapes into the SSE reduction", consts[pos]));
+        }
+    }
+    if live_ops == 0 {
+        r.error(WHOLE, "empty", "all-NOP tape computes nothing");
+    } else if sp != 1 && r.is_ok() {
+        r.error(WHOLE, "net-depth", format!("final stack depth {sp}, a complete expression leaves exactly 1"));
+    }
+
+    if r.is_ok() {
+        match kind {
+            TapeKind::Bool => bool_constness(ops, nop, &mut r),
+            TapeKind::Reg => reg_intervals(ops, consts, &mut r),
+        }
+    }
+    r
+}
+
+/// Verify a compiled [`Tape`].
+pub fn verify_tape(tape: &Tape, ps: &PrimSet, kind: TapeKind) -> VerifyReport {
+    verify_tape_rows(&tape.ops, &tape.consts, ps, kind)
+}
+
+/// Verify an untrusted [`Tree`] (checkpoint population member, banked
+/// emigrant, …). Shape and constants are always checked; when `kind`
+/// is known the tree is additionally compiled and the tape pass +
+/// abstract domain run on the result. Over-budget trees
+/// (`TooLong`/`TooDeep`) are **warnings**: evolution produces them
+/// legitimately and the arena NOP-fills + scores them worst.
+pub fn verify_tree(tree: &Tree, ps: &PrimSet, kind: Option<TapeKind>) -> VerifyReport {
+    let mut r = VerifyReport::default();
+    if !tree.is_well_formed(ps) {
+        r.error(WHOLE, "tree-shape", format!("tree ({} nodes) is not one complete expression over this primitive set", tree.len()));
+        return r;
+    }
+    for (node, &c) in tree.consts.iter().enumerate() {
+        if !c.is_finite() {
+            r.error(node, "nan-const", format!("non-finite tree constant {c}"));
+        }
+    }
+    if !r.is_ok() {
+        return r;
+    }
+    if let Some(k) = kind {
+        match tape::compile(tree, ps, k.nop()) {
+            Ok(tape) => r.merge(verify_tape(&tape, ps, k)),
+            Err(TapeError::TooLong { size }) => {
+                r.warn(WHOLE, "budget", format!("tree size {size} exceeds tape length (scored worst, never evaluated)"));
+            }
+            Err(TapeError::TooDeep { depth }) => {
+                r.warn(WHOLE, "budget", format!("postfix depth {depth} exceeds stack depth (scored worst, never evaluated)"));
+            }
+            Err(e) => r.error(WHOLE, "compile", e.to_string()),
+        }
+    }
+    r
+}
+
+/// The tape kernel a problem evaluates on, if any (`None` = tree
+/// interpreter problems: ant, interest-point).
+pub fn problem_tape_kind(p: ProblemKind) -> Option<TapeKind> {
+    match p {
+        ProblemKind::Mux6 | ProblemKind::Mux11 | ProblemKind::Mux20 | ProblemKind::Parity5 => {
+            Some(TapeKind::Bool)
+        }
+        ProblemKind::Quartic => Some(TapeKind::Reg),
+        ProblemKind::Ant | ProblemKind::InterestPoint => None,
+    }
+}
+
+/// A problem's primitive set, built **without touching case data** —
+/// Mux20's truth table is 2²⁰ cases and must never be materialized on
+/// a verification path.
+pub fn problem_primset(p: ProblemKind) -> PrimSet {
+    match p {
+        ProblemKind::Ant => crate::gp::problems::ant::ant_set(),
+        ProblemKind::Mux6 => bool_set(6, true, MUX6_NAMES),
+        ProblemKind::Mux11 => bool_set(11, true, MUX11_NAMES),
+        ProblemKind::Mux20 => bool_set(20, true, MUX20_NAMES),
+        ProblemKind::Parity5 => bool_set(5, false, PARITY_NAMES),
+        ProblemKind::Quartic => crate::gp::primset::regression_set(1),
+        ProblemKind::InterestPoint => crate::gp::problems::interest_point::ip_set(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bool constness domain
+// ---------------------------------------------------------------------------
+
+/// Abstract boolean value: constant, a variable, a negated variable,
+/// or unknown. Tracking negation is what proves `OR(v, NOT v) = 1`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BVal {
+    Const(bool),
+    Var(i32),
+    Not(i32),
+    Unknown,
+}
+
+impl BVal {
+    fn complement(self, other: BVal) -> bool {
+        matches!(
+            (self, other),
+            (BVal::Var(a), BVal::Not(b)) | (BVal::Not(a), BVal::Var(b)) if a == b
+        )
+    }
+
+    fn negate(self) -> BVal {
+        match self {
+            BVal::Const(c) => BVal::Const(!c),
+            BVal::Var(v) => BVal::Not(v),
+            BVal::Not(v) => BVal::Var(v),
+            BVal::Unknown => BVal::Unknown,
+        }
+    }
+}
+
+/// Constness analysis for a structurally-clean bool tape. Flags
+/// provably-constant subexpressions/outputs and dead `IF` branches.
+fn bool_constness(ops: &[i32], nop: i32, r: &mut VerifyReport) {
+    use opcodes::*;
+    let mut stack: Vec<BVal> = Vec::with_capacity(STACK_DEPTH as usize);
+    for (pos, &op) in ops.iter().enumerate() {
+        if op == nop {
+            break; // clean tapes have a pure NOP tail
+        }
+        let v = if op < BOOL_NUM_VARS {
+            BVal::Var(op)
+        } else if op == BOOL_OP_NOT {
+            stack.pop().unwrap().negate()
+        } else if op == BOOL_OP_IF {
+            // postfix order: c a b → stack top is b (else), then a, then c
+            let b = stack.pop().unwrap();
+            let a = stack.pop().unwrap();
+            let c = stack.pop().unwrap();
+            match c {
+                BVal::Const(sel) => {
+                    r.warn(pos, "dead-code", format!("IF selector is provably {sel}; one branch is unreachable"));
+                    if sel { a } else { b }
+                }
+                _ if a == b && a != BVal::Unknown => a,
+                _ => BVal::Unknown,
+            }
+        } else {
+            let x1 = stack.pop().unwrap(); // top
+            let x2 = stack.pop().unwrap();
+            binary_bval(op, x2, x1)
+        };
+        if matches!(v, BVal::Const(_)) && op >= BOOL_NUM_VARS {
+            r.warn(pos, "const-fold", format!("subexpression at slot {pos} is provably constant"));
+        }
+        stack.push(v);
+    }
+    if let Some(&BVal::Const(c)) = stack.last() {
+        r.const_output = true;
+        r.warn(WHOLE, "const-output", format!("output is provably the constant {c} for every input"));
+    }
+}
+
+fn binary_bval(op: i32, a: BVal, b: BVal) -> BVal {
+    use opcodes::*;
+    let and = |a: BVal, b: BVal| -> BVal {
+        match (a, b) {
+            (BVal::Const(false), _) | (_, BVal::Const(false)) => BVal::Const(false),
+            (BVal::Const(true), x) | (x, BVal::Const(true)) => x,
+            _ if a == b && a != BVal::Unknown => a,
+            _ if a.complement(b) => BVal::Const(false),
+            _ => BVal::Unknown,
+        }
+    };
+    let or = |a: BVal, b: BVal| -> BVal {
+        match (a, b) {
+            (BVal::Const(true), _) | (_, BVal::Const(true)) => BVal::Const(true),
+            (BVal::Const(false), x) | (x, BVal::Const(false)) => x,
+            _ if a == b && a != BVal::Unknown => a,
+            _ if a.complement(b) => BVal::Const(true),
+            _ => BVal::Unknown,
+        }
+    };
+    match op {
+        BOOL_OP_AND => and(a, b),
+        BOOL_OP_OR => or(a, b),
+        BOOL_OP_NAND => and(a, b).negate(),
+        BOOL_OP_NOR => or(a, b).negate(),
+        BOOL_OP_XOR => match (a, b) {
+            (BVal::Const(x), BVal::Const(y)) => BVal::Const(x != y),
+            (BVal::Const(false), x) | (x, BVal::Const(false)) => x,
+            (BVal::Const(true), x) | (x, BVal::Const(true)) => x.negate(),
+            _ if a == b && a != BVal::Unknown => BVal::Const(false),
+            _ if a.complement(b) => BVal::Const(true),
+            _ => BVal::Unknown,
+        },
+        _ => BVal::Unknown,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// reg interval + NaN domain
+// ---------------------------------------------------------------------------
+
+const MAXF: f64 = f32::MAX as f64;
+const INF: f64 = f64::INFINITY;
+/// Kernel guard threshold for DIV/LOG (`|x| < 1e-9` takes the guard).
+const GUARD: f64 = 1e-9;
+
+/// An f64 interval over-approximating a set of f32 values, with a
+/// may-be-NaN flag carried alongside (NaN is not ordered, so it cannot
+/// live in the endpoints).
+#[derive(Clone, Copy, Debug)]
+struct Iv {
+    lo: f64,
+    hi: f64,
+    nan: bool,
+}
+
+impl Iv {
+    fn point(v: f64) -> Iv {
+        Iv { lo: v, hi: v, nan: false }
+    }
+
+    /// Any finite f32 input column.
+    fn any_input() -> Iv {
+        Iv { lo: -MAXF, hi: MAXF, nan: false }
+    }
+
+    /// Model f32 evaluation of f64 endpoint math: magnitudes past
+    /// `f32::MAX` overflow to ±∞, NaN endpoints widen to ±∞ + NaN flag.
+    fn sanitized(mut self) -> Iv {
+        if self.lo.is_nan() {
+            self.lo = -INF;
+            self.nan = true;
+        }
+        if self.hi.is_nan() {
+            self.hi = INF;
+            self.nan = true;
+        }
+        if self.lo < -MAXF {
+            self.lo = -INF;
+        }
+        if self.hi > MAXF {
+            self.hi = INF;
+        }
+        Iv { lo: self.lo.min(self.hi), hi: self.hi.max(self.lo), nan: self.nan }
+    }
+
+    fn contains_zero(&self) -> bool {
+        self.lo <= 0.0 && self.hi >= 0.0
+    }
+
+    fn may_inf(&self) -> bool {
+        self.lo == -INF || self.hi == INF
+    }
+
+    fn max_abs(&self) -> f64 {
+        self.lo.abs().max(self.hi.abs())
+    }
+
+    fn union(self, other: Iv) -> Iv {
+        Iv { lo: self.lo.min(other.lo), hi: self.hi.max(other.hi), nan: self.nan || other.nan }
+    }
+}
+
+/// Interval/NaN analysis for a structurally-clean reg tape, mirroring
+/// the kernel's clamp and guard semantics. Proves the EXP saturation
+/// bound (output ≤ e⁵⁰ regardless of input) and whether a NaN can
+/// reach the output.
+// lint:allow-file(float-arith): the transcendental calls in this
+// domain compute *diagnostic bounds*, never payload bits — the pinned
+// evaluation kernels live in tape.rs.
+fn reg_intervals(ops: &[i32], consts: &[f32], r: &mut VerifyReport) {
+    use opcodes::*;
+    let mut stack: Vec<Iv> = Vec::with_capacity(STACK_DEPTH as usize);
+    for (pos, &op) in ops.iter().enumerate() {
+        if op == REG_NOP {
+            break;
+        }
+        let v = if op < REG_NUM_VARS {
+            Iv::any_input()
+        } else if op == REG_OP_CONST {
+            Iv::point(consts[pos] as f64)
+        } else if tape::tape_arity(op, REG_NOP) == 1 {
+            let x1 = stack.pop().unwrap();
+            unary_iv(op, x1)
+        } else {
+            let x1 = stack.pop().unwrap(); // top
+            let x2 = stack.pop().unwrap();
+            binary_iv(op, x2, x1)
+        };
+        stack.push(v);
+    }
+    if let Some(&out) = stack.last() {
+        r.output_bounds = Some((out.lo, out.hi));
+        r.may_nan = out.nan;
+        if out.nan {
+            r.warn(WHOLE, "nan-range", "interval analysis cannot exclude a NaN output");
+        }
+        if out.lo == out.hi && !out.nan {
+            r.const_output = true;
+            r.warn(WHOLE, "const-output", format!("output is provably the constant {} for every input", out.lo));
+        }
+    }
+}
+
+fn unary_iv(op: i32, x1: Iv) -> Iv {
+    use opcodes::*;
+    match op {
+        REG_OP_SIN | REG_OP_COS => {
+            // sin/cos of ±∞ or NaN is NaN; otherwise bounded in [-1, 1]
+            Iv { lo: -1.0, hi: 1.0, nan: x1.nan || x1.may_inf() }
+        }
+        REG_OP_EXP => {
+            // kernel clamps the input to [-50, 50] *before* exp — even a
+            // ±∞ input saturates at e^±50. This is the push-clamp
+            // saturation bound the verifier proves.
+            let lo = x1.lo.clamp(-50.0, 50.0).exp();
+            let hi = x1.hi.clamp(-50.0, 50.0).exp();
+            Iv { lo, hi, nan: x1.nan }.sanitized()
+        }
+        REG_OP_LOG => {
+            // kernel: |x| < 1e-9 → 0.0, else ln(|x|)
+            let guard_reachable = x1.lo < GUARD && x1.hi > -GUARD;
+            let hi = if x1.may_inf() { INF } else { x1.max_abs().max(GUARD).ln() };
+            let mut v = Iv { lo: GUARD.ln(), hi, nan: x1.nan };
+            if guard_reachable {
+                v = v.union(Iv::point(0.0));
+            }
+            v.sanitized()
+        }
+        REG_OP_NEG => Iv { lo: -x1.hi, hi: -x1.lo, nan: x1.nan }.sanitized(),
+        _ => Iv { lo: -INF, hi: INF, nan: true },
+    }
+}
+
+fn binary_iv(op: i32, x2: Iv, x1: Iv) -> Iv {
+    use opcodes::*;
+    let nan_in = x1.nan || x2.nan;
+    match op {
+        REG_OP_ADD => {
+            // ∞ + -∞ = NaN is reachable iff opposite infinities are
+            let nan = nan_in || (x2.hi == INF && x1.lo == -INF) || (x2.lo == -INF && x1.hi == INF);
+            Iv { lo: x2.lo + x1.lo, hi: x2.hi + x1.hi, nan }.sanitized()
+        }
+        REG_OP_SUB => {
+            let nan = nan_in || (x2.hi == INF && x1.hi == INF) || (x2.lo == -INF && x1.lo == -INF);
+            Iv { lo: x2.lo - x1.hi, hi: x2.hi - x1.lo, nan }.sanitized()
+        }
+        REG_OP_MUL => {
+            let cands = [x2.lo * x1.lo, x2.lo * x1.hi, x2.hi * x1.lo, x2.hi * x1.hi];
+            let nan = nan_in
+                || (x2.contains_zero() && x1.may_inf())
+                || (x1.contains_zero() && x2.may_inf());
+            let lo = cands.iter().cloned().fold(INF, f64::min);
+            let hi = cands.iter().cloned().fold(-INF, f64::max);
+            Iv { lo, hi, nan }.sanitized()
+        }
+        REG_OP_DIV => {
+            // kernel: |divisor| < 1e-9 → 1.0, else x2 / x1. With the
+            // guard excluded, |quotient| ≤ |x2|max / 1e-9.
+            let guard_reachable = x1.lo < GUARD && x1.hi > -GUARD;
+            let divisor_possible = x1.hi >= GUARD || x1.lo <= -GUARD;
+            let mut v = if divisor_possible {
+                let m = if x2.may_inf() { INF } else { x2.max_abs() / GUARD };
+                Iv { lo: -m, hi: m, nan: nan_in || (x2.may_inf() && x1.may_inf()) }
+            } else {
+                Iv { lo: INF, hi: -INF, nan: nan_in } // empty; guard fills it
+            };
+            if guard_reachable || !divisor_possible {
+                v = v.union(Iv::point(1.0));
+            }
+            v.sanitized()
+        }
+        _ => Iv { lo: -INF, hi: INF, nan: true },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::tape::opcodes::*;
+
+    fn bool_ps() -> PrimSet {
+        problem_primset(ProblemKind::Mux6)
+    }
+
+    fn reg_ps() -> PrimSet {
+        problem_primset(ProblemKind::Quartic)
+    }
+
+    fn pad(kind: TapeKind, live: &[i32]) -> Vec<i32> {
+        let mut ops = vec![kind.nop(); TAPE_LEN as usize];
+        ops[..live.len()].copy_from_slice(live);
+        ops
+    }
+
+    fn zc() -> Vec<f32> {
+        vec![0.0; TAPE_LEN as usize]
+    }
+
+    #[test]
+    fn accepts_minimal_valid_tapes() {
+        let r = verify_tape_rows(&pad(TapeKind::Bool, &[0, 1, BOOL_OP_AND]), &zc(), &bool_ps(), TapeKind::Bool);
+        assert!(r.is_ok(), "{:?}", r.diagnostics);
+        let r = verify_tape_rows(&pad(TapeKind::Reg, &[0, 0, REG_OP_MUL]), &zc(), &reg_ps(), TapeKind::Reg);
+        assert!(r.is_ok(), "{:?}", r.diagnostics);
+        let (lo, hi) = r.output_bounds.unwrap();
+        assert!(lo == -INF && hi == INF); // f32 overflow to ±∞ modeled
+    }
+
+    #[test]
+    fn rejects_stack_underflow_and_net_depth() {
+        let r = verify_tape_rows(&pad(TapeKind::Bool, &[0, BOOL_OP_AND]), &zc(), &bool_ps(), TapeKind::Bool);
+        assert_eq!(r.first_error().unwrap().rule, "stack-underflow");
+        let r = verify_tape_rows(&pad(TapeKind::Bool, &[0, 1]), &zc(), &bool_ps(), TapeKind::Bool);
+        assert_eq!(r.first_error().unwrap().rule, "net-depth");
+    }
+
+    #[test]
+    fn rejects_cross_kind_and_unlisted_ops() {
+        // bool AND opcode (25) inside a reg tape is out of kernel range
+        let r = verify_tape_rows(&pad(TapeKind::Reg, &[0, 0, BOOL_OP_AND]), &zc(), &reg_ps(), TapeKind::Reg);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "op-range"));
+        // EXP is in the reg kernel but not in quartic's primitive set
+        let r = verify_tape_rows(&pad(TapeKind::Reg, &[0, REG_OP_EXP]), &zc(), &reg_ps(), TapeKind::Reg);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "op-whitelist"));
+        // terminal index 7 is a valid reg var but quartic only has x0
+        let r = verify_tape_rows(&pad(TapeKind::Reg, &[7]), &zc(), &reg_ps(), TapeKind::Reg);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "op-whitelist"));
+    }
+
+    #[test]
+    fn rejects_nan_const_and_interior_nop() {
+        let mut consts = zc();
+        consts[0] = f32::NAN;
+        let r = verify_tape_rows(&pad(TapeKind::Reg, &[REG_OP_CONST]), &consts, &reg_ps(), TapeKind::Reg);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "nan-const"));
+        let mut ops = pad(TapeKind::Bool, &[0]);
+        let last = ops.len() - 1;
+        ops[last] = 1; // live op after padding
+        let r = verify_tape_rows(&ops, &zc(), &bool_ps(), TapeKind::Bool);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "interior-nop"));
+    }
+
+    #[test]
+    fn bool_domain_proves_constants() {
+        // XOR(a0, a0) = 0 always
+        let r = verify_tape_rows(&pad(TapeKind::Bool, &[0, 0, BOOL_OP_XOR]), &zc(), &bool_ps(), TapeKind::Bool);
+        assert!(r.const_output);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "const-output"));
+        // OR(a0, NOT a0) = 1 always
+        let r = verify_tape_rows(
+            &pad(TapeKind::Bool, &[0, 0, BOOL_OP_NOT, BOOL_OP_OR]),
+            &zc(),
+            &bool_ps(),
+            TapeKind::Bool,
+        );
+        assert!(r.const_output);
+        // IF with a constant selector flags dead code
+        let r = verify_tape_rows(
+            &pad(TapeKind::Bool, &[0, 0, BOOL_OP_XOR, 1, 2, BOOL_OP_IF]),
+            &zc(),
+            &bool_ps(),
+            TapeKind::Bool,
+        );
+        assert!(r.diagnostics.iter().any(|d| d.rule == "dead-code"));
+        // a genuinely input-dependent tape is not flagged constant
+        let r = verify_tape_rows(&pad(TapeKind::Bool, &[0, 1, BOOL_OP_XOR]), &zc(), &bool_ps(), TapeKind::Bool);
+        assert!(!r.const_output);
+    }
+
+    #[test]
+    fn reg_domain_proves_exp_saturation() {
+        // sin stays in [-1, 1]
+        let r = verify_tape_rows(&pad(TapeKind::Reg, &[0, REG_OP_SIN]), &zc(), &reg_ps(), TapeKind::Reg);
+        assert_eq!(r.output_bounds.unwrap(), (-1.0, 1.0));
+        // MUL can overflow f32 to ∞; EXP of that still saturates ≤ e^50.
+        // quartic's set has no EXP, so use a custom set that does.
+        use crate::gp::primset::Prim;
+        let ps = PrimSet::new(
+            vec![
+                Prim { name: "x0", arity: 0, tape_op: 0 },
+                Prim { name: "*", arity: 2, tape_op: REG_OP_MUL },
+                Prim { name: "exp", arity: 1, tape_op: REG_OP_EXP },
+            ],
+            None,
+        );
+        let ops = pad(TapeKind::Reg, &[0, 0, REG_OP_MUL, REG_OP_EXP]);
+        let r = verify_tape_rows(&ops, &zc(), &ps, TapeKind::Reg);
+        assert!(r.is_ok(), "{:?}", r.diagnostics);
+        let (lo, hi) = r.output_bounds.unwrap();
+        assert!(lo >= 0.0 && hi <= 50.0f64.exp() * 1.0000001, "exp saturation bound violated: {hi}");
+        assert!(!r.may_nan);
+    }
+
+    #[test]
+    fn reg_domain_propagates_nan() {
+        // x - x over ±∞-capable inputs can be ∞ - ∞ = NaN
+        let r = verify_tape_rows(
+            &pad(TapeKind::Reg, &[0, 0, REG_OP_SUB]),
+            &zc(),
+            &reg_ps(),
+            TapeKind::Reg,
+        );
+        assert!(r.may_nan);
+        assert!(r.diagnostics.iter().any(|d| d.rule == "nan-range"));
+        // DIV's guard keeps the quotient NaN-free for finite inputs
+        let r = verify_tape_rows(
+            &pad(TapeKind::Reg, &[0, 0, REG_OP_DIV]),
+            &zc(),
+            &reg_ps(),
+            TapeKind::Reg,
+        );
+        assert!(!r.may_nan, "kernel DIV guard excludes NaN for finite operands");
+    }
+
+    #[test]
+    fn tree_level_budget_is_warning_not_error() {
+        let ps = reg_ps();
+        // a left-comb of 65 adds: too long for the tape, legal for GP
+        let n = 65;
+        let mut ops = Vec::new();
+        let mut consts = Vec::new();
+        for _ in 0..n / 2 {
+            ops.push(2u8); // '+' is prim index 2 (x0, erc, +, ...)
+            consts.push(0.0);
+        }
+        for _ in 0..(n - n / 2) {
+            ops.push(0u8); // x0 terminal
+            consts.push(0.0);
+        }
+        let tree = Tree { ops, consts };
+        assert!(tree.is_well_formed(&ps));
+        let r = verify_tree(&tree, &ps, Some(TapeKind::Reg));
+        assert!(r.is_ok());
+        assert!(r.diagnostics.iter().any(|d| d.rule == "budget"));
+    }
+
+    #[test]
+    fn problem_helpers_cover_all_kinds() {
+        for p in [
+            ProblemKind::Ant,
+            ProblemKind::Mux6,
+            ProblemKind::Mux11,
+            ProblemKind::Mux20,
+            ProblemKind::Parity5,
+            ProblemKind::Quartic,
+            ProblemKind::InterestPoint,
+        ] {
+            let ps = problem_primset(p);
+            assert!(!ps.prims.is_empty());
+            let kind = problem_tape_kind(p);
+            if let Some(k) = kind {
+                // every tapeable problem's functions must be whitelisted
+                assert!(ps.prims.iter().any(|pr| pr.tape_op >= 0 && pr.tape_op < k.nop()));
+            }
+        }
+    }
+
+    #[test]
+    fn report_plumbing() {
+        let mut r = VerifyReport::default();
+        assert!(r.is_ok());
+        r.warn(0, "const-output", "w");
+        assert!(r.is_ok());
+        assert!(r.ensure_ok("tape").is_ok());
+        r.error(3, "op-range", "bad");
+        assert!(!r.is_ok());
+        assert_eq!(r.error_count(), 1);
+        assert_eq!(r.warning_count(), 1);
+        let err = r.ensure_ok("tape").unwrap_err().to_string();
+        assert!(err.contains("op-range") && err.contains("tape"), "{err}");
+        let m = Metrics::new();
+        r.record(&m, "verify.test");
+        assert_eq!(m.counter("verify.test.rejected"), 1);
+        assert_eq!(m.counter("verify.test.warnings"), 1);
+    }
+}

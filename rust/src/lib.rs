@@ -30,7 +30,12 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment
 //! index, and `EXPERIMENTS.md` for paper-vs-measured results.
 
+// Volunteer payloads are untrusted input; the whole crate stays in
+// safe Rust (asserted by `vgp lint` rule `forbid-unsafe`).
+#![forbid(unsafe_code)]
+
 pub mod boinc;
+pub mod lint;
 pub mod churn;
 pub mod config;
 pub mod coordinator;

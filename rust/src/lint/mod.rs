@@ -1,0 +1,256 @@
+//! Repo determinism lint: project invariants the compiler can't check.
+//!
+//! The quorum validator compares payload bytes across anonymous hosts,
+//! so every code path that can influence a payload must be bit-identical
+//! across platforms, thread counts and hash seeds. Three classes of
+//! nondeterminism have bitten (or nearly bitten) this codebase and are
+//! mechanically banned here, plus one safety invariant:
+//!
+//! * **`unordered-map`** — no `HashMap`/`HashSet` in payload-affecting
+//!   modules (`gp/`, `boinc/exchange.rs`, `boinc/server.rs`): iteration
+//!   order depends on the hasher seed, so any fold/max/serialize over
+//!   one is a nondeterminism bug waiting for a tie. Use `BTreeMap`/
+//!   `BTreeSet`.
+//! * **`wall-clock`** — no `Instant::now`/`SystemTime` in deterministic
+//!   code paths (`gp/`, `sim/`, `coordinator/`, `boinc/` except
+//!   `boinc/net.rs`): the simulator runs in virtual time and WU
+//!   execution must be a pure function of the spec.
+//! * **`float-arith`** — no transcendental float calls (`.sin(`,
+//!   `.exp(`, `.ln(`, …) in `gp/`/`boinc/` outside the pinned kernels
+//!   in `gp/tape.rs`: libm results vary by platform, so stray float
+//!   math near the evaluation path risks the bit-identical contract.
+//! * **`forbid-unsafe`** — `lib.rs` must carry
+//!   `#![forbid(unsafe_code)]` and `main.rs` `#![deny(unsafe_code)]`:
+//!   volunteer payloads are untrusted input.
+//!
+//! Escape hatches, for code that is deliberate and audited:
+//! `// lint:allow(<rule>)` on the offending line or the line above
+//! suppresses one finding; `// lint:allow-file(<rule>)` anywhere in a
+//! file suppresses the rule for that file. Both should carry a short
+//! rationale after a colon.
+//!
+//! Scanning is line-based and deliberately simple: `//` comments are
+//! stripped before matching (so prose mentioning `HashMap` is fine),
+//! and everything from the first `#[cfg(test)]` to end-of-file is
+//! skipped — this repo keeps test modules at the tail of each file.
+//!
+//! Run as `vgp lint` (exit 1 on findings) or via `rust/tests/lint.rs`,
+//! both of which gate CI's `static-analysis` job.
+
+use std::path::Path;
+
+/// One lint violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the scanned source root, `/`-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: &'static str,
+    pub excerpt: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.excerpt)
+    }
+}
+
+/// Every rule the linter knows, with the substring patterns it bans.
+pub const RULES: &[(&str, &[&str])] = &[
+    ("unordered-map", &["HashMap", "HashSet"]),
+    ("wall-clock", &["Instant::now", "SystemTime"]),
+    ("float-arith", &[".sin(", ".cos(", ".tan(", ".exp(", ".ln(", ".sqrt(", ".powf(", ".powi("]),
+];
+
+/// Does `rule` apply to the file at `rel` (root-relative, `/`-separated)?
+fn in_scope(rule: &str, rel: &str) -> bool {
+    match rule {
+        "unordered-map" => {
+            rel.starts_with("gp/") || rel == "boinc/exchange.rs" || rel == "boinc/server.rs"
+        }
+        "wall-clock" => {
+            rel.starts_with("gp/")
+                || rel.starts_with("sim/")
+                || rel.starts_with("coordinator/")
+                || (rel.starts_with("boinc/") && rel != "boinc/net.rs")
+        }
+        "float-arith" => {
+            (rel.starts_with("gp/") || rel.starts_with("boinc/")) && rel != "gp/tape.rs"
+        }
+        _ => false,
+    }
+}
+
+/// Lint one file's source text. Pure function — the engine behind both
+/// [`lint_crate`] and the unit tests.
+pub fn lint_source(rel: &str, content: &str) -> Vec<Finding> {
+    let mut findings = Vec::new();
+
+    // whole-file safety invariant
+    if rel == "lib.rs" && !content.contains("#![forbid(unsafe_code)]") {
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: 1,
+            rule: "forbid-unsafe",
+            excerpt: "missing #![forbid(unsafe_code)]".to_string(),
+        });
+    }
+    if rel == "main.rs"
+        && !content.contains("#![deny(unsafe_code)]")
+        && !content.contains("#![forbid(unsafe_code)]")
+    {
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: 1,
+            rule: "forbid-unsafe",
+            excerpt: "missing #![deny(unsafe_code)]".to_string(),
+        });
+    }
+
+    let active: Vec<&(&str, &[&str])> = RULES.iter().filter(|(r, _)| in_scope(r, rel)).collect();
+    if active.is_empty() {
+        return findings;
+    }
+
+    let mut prev_allows = String::new();
+    for (idx, raw) in content.lines().enumerate() {
+        // test modules tail their files in this repo; nothing after the
+        // first #[cfg(test)] can affect payloads
+        if raw.trim_start().starts_with("#[cfg(test)]") {
+            break;
+        }
+        let code = raw.split("//").next().unwrap_or("");
+        for (rule, patterns) in &active {
+            if !patterns.iter().any(|p| code.contains(p)) {
+                continue;
+            }
+            let file_allow = format!("lint:allow-file({rule})");
+            let line_allow = format!("lint:allow({rule})");
+            if content.contains(&file_allow)
+                || raw.contains(&line_allow)
+                || prev_allows.contains(&line_allow)
+            {
+                continue;
+            }
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: idx + 1,
+                rule,
+                excerpt: raw.trim().to_string(),
+            });
+        }
+        prev_allows = if raw.trim_start().starts_with("//") { raw.to_string() } else { String::new() };
+    }
+    findings
+}
+
+/// Recursively lint every `.rs` file under `src_root` (the crate's
+/// `src/` directory). Files are visited in sorted order so output is
+/// stable.
+pub fn lint_crate(src_root: &Path) -> anyhow::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    files.sort();
+    let mut findings = Vec::new();
+    for rel in &files {
+        let content = std::fs::read_to_string(src_root.join(rel))?;
+        findings.extend(lint_source(rel, &content));
+    }
+    Ok(findings)
+}
+
+/// Number of `.rs` files that would be scanned (for reporting).
+pub fn count_rs(src_root: &Path) -> anyhow::Result<usize> {
+    let mut files = Vec::new();
+    collect_rs(src_root, src_root, &mut files)?;
+    Ok(files.len())
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .expect("walked path is under root")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_unordered_map_in_scope() {
+        let f = lint_source("gp/foo.rs", "use std::collections::HashMap;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "unordered-map");
+        assert_eq!(f[0].line, 1);
+        // same text out of scope is clean
+        assert!(lint_source("util/foo.rs", "use std::collections::HashMap;\n").is_empty());
+    }
+
+    #[test]
+    fn comments_and_test_modules_are_skipped() {
+        let src = "// HashMap is banned here, says this comment\nlet x = 1;\n#[cfg(test)]\nmod tests { use std::collections::HashMap; }\n";
+        assert!(lint_source("gp/foo.rs", src).is_empty());
+    }
+
+    #[test]
+    fn line_allow_suppresses_same_and_next_line() {
+        let same = "let t = Instant::now(); // lint:allow(wall-clock): bench only\n";
+        assert!(lint_source("coordinator/x.rs", same).is_empty());
+        let above = "// lint:allow(wall-clock): bench only\nlet t = Instant::now();\n";
+        assert!(lint_source("coordinator/x.rs", above).is_empty());
+        let wrong_rule = "// lint:allow(unordered-map)\nlet t = Instant::now();\n";
+        assert_eq!(lint_source("coordinator/x.rs", wrong_rule).len(), 1);
+    }
+
+    #[test]
+    fn file_allow_suppresses_whole_file() {
+        let src = "// lint:allow-file(float-arith): diagnostic bounds only\nlet a = x.exp();\nlet b = y.ln();\n";
+        assert!(lint_source("gp/verify.rs", src).is_empty());
+        let no_marker = "let a = x.exp();\nlet b = y.ln();\n";
+        assert_eq!(lint_source("gp/verify.rs", no_marker).len(), 2);
+    }
+
+    #[test]
+    fn tape_rs_is_the_pinned_kernel_exception() {
+        assert!(lint_source("gp/tape.rs", "let s = x.sin();\n").is_empty());
+        assert_eq!(lint_source("gp/eval.rs", "let s = x.sin();\n").len(), 1);
+        assert!(lint_source("boinc/net.rs", "let t = Instant::now();\n").is_empty());
+        assert_eq!(lint_source("boinc/client.rs", "let t = Instant::now();\n").len(), 1);
+    }
+
+    #[test]
+    fn forbid_unsafe_checks_crate_roots() {
+        let f = lint_source("lib.rs", "pub mod gp;\n");
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "forbid-unsafe");
+        assert!(lint_source("lib.rs", "#![forbid(unsafe_code)]\npub mod gp;\n").is_empty());
+        assert_eq!(lint_source("main.rs", "fn main() {}\n").len(), 1);
+        assert!(lint_source("main.rs", "#![deny(unsafe_code)]\nfn main() {}\n").is_empty());
+    }
+
+    #[test]
+    fn crate_tree_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+        let findings = lint_crate(&src).unwrap();
+        assert!(
+            findings.is_empty(),
+            "lint findings:\n{}",
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+        assert!(count_rs(&src).unwrap() > 20);
+    }
+}

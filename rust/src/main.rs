@@ -36,6 +36,12 @@
 //! 256-bit), `--schedule static|sorted|steal` picks the eval fan-out
 //! policy (size-sorted or work-stealing schedules tame skewed
 //! tree-walk populations like ant/interest-point).
+//!
+//! `vgp lint` runs the repo determinism lint (see [`vgp::lint`]) over
+//! the crate sources and exits non-zero on findings — the same scan
+//! that gates CI's `static-analysis` job.
+
+#![deny(unsafe_code)]
 
 use vgp::boinc::exchange::MigrationExchange;
 use vgp::boinc::net::{serve, Worker};
@@ -61,10 +67,12 @@ fn main() {
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
         "churn" => cmd_churn(&args),
+        "lint" => cmd_lint(&args),
         _ => {
-            eprintln!("usage: vgp <sim|serve|worker|churn> [--options]");
+            eprintln!("usage: vgp <sim|serve|worker|churn|lint> [--options]");
             eprintln!("  vgp sim --table 1|2|3   reproduce a paper table");
             eprintln!("  vgp sim --demes 4 --epochs 4 --epoch-gens 10   island-model campaign");
+            eprintln!("  vgp lint                run the repo determinism lint");
             0
         }
     };
@@ -134,18 +142,22 @@ fn island_campaign_from_args(args: &Args, name: &str, problem: ProblemKind) -> I
     c
 }
 
-/// `--eval-lanes N`, normalized onto the supported {1, 2, 4, 8}.
+/// `--eval-lanes N` — must be one of [`vgp::gp::tape::LANE_WIDTHS`];
+/// anything else exits with a curated message (no silent rounding).
 fn eval_lanes_of(args: &Args) -> usize {
-    vgp::gp::tape::normalize_lanes(
-        args.opt_u64("eval-lanes", vgp::gp::tape::DEFAULT_LANES as u64) as usize,
-    )
+    strict_lanes(args, "eval-lanes", vgp::gp::tape::DEFAULT_LANES)
 }
 
-/// `--reg-lanes N`, normalized onto the supported {1, 2, 4, 8}.
+/// `--reg-lanes N` — same strict contract as `--eval-lanes`.
 fn reg_lanes_of(args: &Args) -> usize {
-    vgp::gp::tape::normalize_lanes(
-        args.opt_u64("reg-lanes", vgp::gp::tape::DEFAULT_REG_LANES as u64) as usize,
-    )
+    strict_lanes(args, "reg-lanes", vgp::gp::tape::DEFAULT_REG_LANES)
+}
+
+fn strict_lanes(args: &Args, flag: &str, default: usize) -> usize {
+    vgp::gp::tape::parse_lanes(args.opt_u64(flag, default as u64) as usize).unwrap_or_else(|e| {
+        eprintln!("invalid --{flag}: {e:#}");
+        std::process::exit(2);
+    })
 }
 
 /// `--schedule static|sorted|steal`.
@@ -455,4 +467,32 @@ fn cmd_churn(args: &Args) -> i32 {
     );
     let _ = FIG1_CITIES_MUX11;
     0
+}
+
+/// `vgp lint [--src DIR]`: run the repo determinism lint over the
+/// crate sources. Exit 0 when clean, 1 on findings (the CI gate).
+fn cmd_lint(args: &Args) -> i32 {
+    let default_src = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+    let src = std::path::PathBuf::from(args.opt_str("src", default_src));
+    let findings = match vgp::lint::lint_crate(&src) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lint failed to scan {}: {e:#}", src.display());
+            return 2;
+        }
+    };
+    for f in &findings {
+        println!("{f}");
+    }
+    let nfiles = vgp::lint::count_rs(&src).unwrap_or(0);
+    if findings.is_empty() {
+        println!(
+            "lint clean: {nfiles} files, {} rules + forbid-unsafe, 0 findings",
+            vgp::lint::RULES.len()
+        );
+        0
+    } else {
+        eprintln!("lint: {} finding(s) in {nfiles} files", findings.len());
+        1
+    }
 }

@@ -72,7 +72,38 @@ impl ArtifactMeta {
         anyhow::ensure!(meta.bool_num_vars == opcodes::BOOL_NUM_VARS as usize, "num_vars drift");
         anyhow::ensure!(b.u64_of("op_if")? as i32 == opcodes::BOOL_OP_IF, "opcode drift");
         anyhow::ensure!(r.u64_of("op_div")? as i32 == opcodes::REG_OP_DIV, "opcode drift");
+        meta.verify().ensure_ok("artifact meta.json")?;
         Ok(meta)
+    }
+
+    /// Static verification of the untrusted artifact contract: batch
+    /// shapes and variable counts must be sane *before* literals are
+    /// sized from them (a hostile meta.json could otherwise request
+    /// multi-GB allocations or zero-size chunk loops). Part of the
+    /// [`crate::gp::verify`] trust-boundary layer; [`ArtifactMeta::load`]
+    /// enforces the error findings.
+    pub fn verify(&self) -> crate::gp::verify::VerifyReport {
+        let mut r = crate::gp::verify::VerifyReport::default();
+        const MAX_BATCH: usize = 1 << 20;
+        for (name, v) in [
+            ("bool.batch", self.bool_batch),
+            ("bool.words", self.bool_words),
+            ("reg.batch", self.reg_batch),
+            ("reg.cases", self.reg_cases),
+        ] {
+            if v == 0 {
+                r.error(usize::MAX, "meta-budget", format!("{name} is zero (chunking would divide by it)"));
+            } else if v > MAX_BATCH {
+                r.error(usize::MAX, "meta-budget", format!("{name} = {v} exceeds the {MAX_BATCH} sanity budget"));
+            }
+        }
+        if self.bool_num_vars > opcodes::BOOL_NUM_VARS as usize {
+            r.error(usize::MAX, "meta-budget", format!("bool num_vars {} exceeds the opcode space", self.bool_num_vars));
+        }
+        if self.reg_num_vars > opcodes::REG_NUM_VARS as usize {
+            r.error(usize::MAX, "meta-budget", format!("reg num_vars {} exceeds the opcode space", self.reg_num_vars));
+        }
+        r
     }
 }
 
@@ -466,6 +497,10 @@ impl crate::gp::Evaluator for BoolArtifactEvaluator<'_> {
     fn cost_per_eval(&self) -> f64 {
         320.0 * self.cases.ncases as f64
     }
+
+    fn compile_failures(&self) -> u64 {
+        self.arena.compile_failures()
+    }
 }
 
 /// [`crate::gp::Evaluator`] backed by the regression artifact — the
@@ -521,6 +556,10 @@ impl crate::gp::Evaluator for RegArtifactEvaluator<'_> {
     fn cost_per_eval(&self) -> f64 {
         200.0 * self.cases.ncases() as f64
     }
+
+    fn compile_failures(&self) -> u64 {
+        self.arena.compile_failures()
+    }
 }
 
 #[cfg(test)]
@@ -533,5 +572,26 @@ mod tests {
     fn meta_load_fails_cleanly_without_artifacts() {
         let err = ArtifactMeta::load("/nonexistent-dir").unwrap_err();
         assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn meta_verify_rejects_hostile_budgets() {
+        let sane = ArtifactMeta {
+            tape_len: opcodes::TAPE_LEN as usize,
+            stack_depth: opcodes::STACK_DEPTH as usize,
+            bool_batch: 256,
+            bool_words: 64,
+            bool_num_vars: opcodes::BOOL_NUM_VARS as usize,
+            reg_batch: 256,
+            reg_cases: 64,
+            reg_num_vars: opcodes::REG_NUM_VARS as usize,
+        };
+        assert!(sane.verify().is_ok());
+        let zero = ArtifactMeta { bool_batch: 0, ..sane.clone() };
+        assert!(!zero.verify().is_ok());
+        let huge = ArtifactMeta { reg_batch: 1 << 30, ..sane.clone() };
+        assert!(!huge.verify().is_ok());
+        let vars = ArtifactMeta { bool_num_vars: 99, ..sane };
+        assert!(!vars.verify().is_ok());
     }
 }

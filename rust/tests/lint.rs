@@ -1,0 +1,85 @@
+//! Determinism-lint integration tests: the shipped source tree must be
+//! clean under `vgp::lint` (the same engine `vgp lint` and CI's
+//! static-analysis job run), and the engine's scoping/escape-hatch
+//! behavior is pinned here from outside the crate.
+
+use std::path::Path;
+
+use vgp::lint::{count_rs, lint_crate, lint_source, RULES};
+
+#[test]
+fn shipped_source_tree_is_lint_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_crate(&src).unwrap();
+    assert!(
+        findings.is_empty(),
+        "determinism lint must be clean, found:\n{}",
+        findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    let n = count_rs(&src).unwrap();
+    assert!(n > 20, "scan walked only {n} files — wrong root?");
+}
+
+#[test]
+fn rule_table_covers_the_documented_invariants() {
+    let names: Vec<&str> = RULES.iter().map(|(r, _)| *r).collect();
+    for rule in ["unordered-map", "wall-clock", "float-arith"] {
+        assert!(names.contains(&rule), "missing rule {rule}");
+    }
+    for (_, patterns) in RULES {
+        assert!(!patterns.is_empty());
+    }
+}
+
+#[test]
+fn payload_affecting_scopes_are_enforced() {
+    // the three modules where hasher-order nondeterminism can reach
+    // quorum payloads
+    for rel in ["gp/islands.rs", "boinc/exchange.rs", "boinc/server.rs"] {
+        let f = lint_source(rel, "use std::collections::HashMap;\n");
+        assert_eq!(f.len(), 1, "{rel} must be in unordered-map scope");
+        assert_eq!(f[0].rule, "unordered-map");
+    }
+    // the network client measures real latency; virtual-time modules don't
+    assert!(lint_source("boinc/net.rs", "let t = Instant::now();\n").is_empty());
+    assert_eq!(lint_source("sim/mod.rs", "let t = Instant::now();\n").len(), 1);
+    // the pinned kernels are the one place float transcendentals live
+    assert!(lint_source("gp/tape.rs", "let y = x.exp();\n").is_empty());
+    assert_eq!(lint_source("gp/eval.rs", "let y = x.exp();\n").len(), 1);
+}
+
+#[test]
+fn escape_hatches_are_rule_scoped() {
+    let allowed = "// lint:allow(wall-clock): this is the measurement\nlet t = Instant::now();\n";
+    assert!(lint_source("coordinator/exec.rs", allowed).is_empty());
+    // an allow for a different rule must not leak
+    let wrong = "// lint:allow(float-arith)\nlet t = Instant::now();\n";
+    assert_eq!(lint_source("coordinator/exec.rs", wrong).len(), 1);
+    // file-scoped allow covers every occurrence of its rule only
+    let file = "// lint:allow-file(float-arith): diagnostic bounds\nlet a = x.exp();\nlet t = Instant::now();\n";
+    let f = lint_source("gp/verify.rs", file);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].rule, "wall-clock");
+}
+
+#[test]
+fn findings_render_with_location_and_rule() {
+    let f = &lint_source("gp/foo.rs", "let x = 1;\nuse std::collections::HashSet;\n")[0];
+    let s = f.to_string();
+    assert!(s.contains("gp/foo.rs:2:") && s.contains("[unordered-map]"), "{s}");
+}
+
+#[test]
+fn crate_roots_must_pin_unsafe_policy() {
+    let f = lint_source("lib.rs", "pub mod gp;\n");
+    assert_eq!(f.len(), 1);
+    assert_eq!(f[0].rule, "forbid-unsafe");
+    assert!(lint_source("lib.rs", "#![forbid(unsafe_code)]\n").is_empty());
+    assert!(lint_source("main.rs", "#![deny(unsafe_code)]\nfn main() {}\n").is_empty());
+    // and the real crate roots carry the attributes
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let lib = std::fs::read_to_string(src.join("lib.rs")).unwrap();
+    assert!(lib.contains("#![forbid(unsafe_code)]"));
+    let main = std::fs::read_to_string(src.join("main.rs")).unwrap();
+    assert!(main.contains("#![deny(unsafe_code)]"));
+}

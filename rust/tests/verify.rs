@@ -1,0 +1,222 @@
+//! Trust-boundary verifier tests: an adversarial corpus of malformed
+//! tapes that must all be rejected, property tests showing every valid
+//! evolved tree verifies clean (and verified tapes never panic the
+//! kernels), and the WU-spec boundary wiring in `coordinator::exec`.
+
+use vgp::coordinator::exec;
+use vgp::gp::engine::Checkpoint;
+use vgp::gp::init::ramped_half_and_half;
+use vgp::gp::islands::{IslandSpec, Migrant};
+use vgp::gp::primset::PrimSet;
+use vgp::gp::problems::multiplexer::Multiplexer;
+use vgp::gp::problems::ProblemKind;
+use vgp::gp::tape::{self, opcodes::*, RegCases};
+use vgp::gp::tree::Tree;
+use vgp::gp::verify::{problem_primset, problem_tape_kind, verify_tape_rows, verify_tree, TapeKind};
+use vgp::gp::Fitness;
+use vgp::util::json::Json;
+use vgp::util::prop::{assert_prop, check};
+use vgp::util::rng::Rng;
+
+const L: usize = TAPE_LEN as usize;
+
+fn pad(kind: TapeKind, live: &[i32]) -> Vec<i32> {
+    let mut ops = vec![kind.nop(); L];
+    ops[..live.len()].copy_from_slice(live);
+    ops
+}
+
+fn zc() -> Vec<f32> {
+    vec![0.0; L]
+}
+
+/// Every entry is a hostile payload no honest `compile` output can
+/// exhibit; the verifier must reject 100% of them.
+#[test]
+fn adversarial_corpus_is_fully_rejected() {
+    let bool_ps = problem_primset(ProblemKind::Mux6);
+    let reg_ps = problem_primset(ProblemKind::Quartic);
+    let parity_ps = problem_primset(ProblemKind::Parity5);
+
+    let nan_consts = {
+        let mut c = zc();
+        c[0] = f32::INFINITY;
+        c
+    };
+    let interior = {
+        let mut ops = pad(TapeKind::Bool, &[0, 1, BOOL_OP_AND]);
+        ops[L - 1] = 2; // live terminal after the NOP tail began
+        ops
+    };
+    let corpus: Vec<(&str, Vec<i32>, Vec<f32>, &PrimSet, TapeKind)> = vec![
+        ("stack underflow", pad(TapeKind::Bool, &[0, BOOL_OP_AND]), zc(), &bool_ps, TapeKind::Bool),
+        ("ternary underflow", pad(TapeKind::Bool, &[0, 1, BOOL_OP_IF]), zc(), &bool_ps, TapeKind::Bool),
+        ("two values left", pad(TapeKind::Bool, &[0, 1]), zc(), &bool_ps, TapeKind::Bool),
+        ("all NOPs", pad(TapeKind::Bool, &[]), zc(), &bool_ps, TapeKind::Bool),
+        ("oversized op row", vec![0; L + 1], vec![0.0; L + 1], &bool_ps, TapeKind::Bool),
+        ("truncated op row", vec![0; L - 1], vec![0.0; L - 1], &bool_ps, TapeKind::Bool),
+        ("misaligned const row", pad(TapeKind::Bool, &[0]), vec![0.0; L - 1], &bool_ps, TapeKind::Bool),
+        ("negative opcode", pad(TapeKind::Bool, &[-3]), zc(), &bool_ps, TapeKind::Bool),
+        ("out-of-range terminal", pad(TapeKind::Bool, &[17]), zc(), &bool_ps, TapeKind::Bool),
+        ("bool op in reg tape", pad(TapeKind::Reg, &[0, 0, BOOL_OP_AND]), zc(), &reg_ps, TapeKind::Reg),
+        ("reg terminal beyond quartic's x0", pad(TapeKind::Reg, &[5]), zc(), &reg_ps, TapeKind::Reg),
+        ("unlisted EXP in quartic", pad(TapeKind::Reg, &[0, REG_OP_EXP]), zc(), &reg_ps, TapeKind::Reg),
+        ("IF in the IF-less parity set", pad(TapeKind::Bool, &[0, 1, 2, BOOL_OP_IF]), zc(), &parity_ps, TapeKind::Bool),
+        ("non-finite constant", pad(TapeKind::Reg, &[REG_OP_CONST]), nan_consts, &reg_ps, TapeKind::Reg),
+        ("live op after padding", interior, zc(), &bool_ps, TapeKind::Bool),
+    ];
+
+    let mut rejected = 0;
+    let total = corpus.len();
+    for (name, ops, consts, ps, kind) in &corpus {
+        let r = verify_tape_rows(ops, consts, ps, *kind);
+        assert!(!r.is_ok(), "{name}: hostile tape passed verification");
+        assert!(r.first_error().is_some(), "{name}: rejection must carry a diagnostic");
+        rejected += 1;
+    }
+    assert_eq!(rejected, total, "corpus rejection must be 100%");
+}
+
+/// Stack-depth abuse: 17 pushes overflow STACK_DEPTH and would clobber
+/// the top slot in the kernel.
+#[test]
+fn deep_push_chain_is_rejected() {
+    let ps = problem_primset(ProblemKind::Mux6);
+    let mut live = vec![0i32; STACK_DEPTH as usize + 1];
+    // reduce back down so net-depth alone can't be the trigger
+    live.extend(vec![BOOL_OP_AND; STACK_DEPTH as usize]);
+    let r = verify_tape_rows(&pad(TapeKind::Bool, &live), &zc(), &ps, TapeKind::Bool);
+    assert!(r.diagnostics.iter().any(|d| d.rule == "stack-depth"), "{:?}", r.diagnostics);
+}
+
+/// Every tree evolution can produce — any size, any shape, over every
+/// problem's primitive set — must verify clean: the verifier's error
+/// rules only fire on payloads `compile` cannot emit.
+#[test]
+fn prop_valid_random_trees_verify_clean() {
+    for problem in [
+        ProblemKind::Ant,
+        ProblemKind::Mux6,
+        ProblemKind::Mux11,
+        ProblemKind::Mux20,
+        ProblemKind::Parity5,
+        ProblemKind::Quartic,
+        ProblemKind::InterestPoint,
+    ] {
+        let ps = problem_primset(problem);
+        let kind = problem_tape_kind(problem);
+        check(&format!("{problem:?} trees verify clean"), 120, |rng: &mut Rng| {
+            let pop = ramped_half_and_half(rng, &ps, 4, 2, 6);
+            for t in &pop {
+                let r = verify_tree(t, &ps, kind);
+                assert_prop(
+                    r.is_ok(),
+                    format!("valid tree rejected: {:?}", r.first_error()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}
+
+/// A tape that passes verification never panics the kernel and never
+/// produces an out-of-thin-air payload (bool hits bounded by the case
+/// count, reg SSE never NaN unless the verifier said it might be).
+#[test]
+fn prop_verified_tapes_never_panic_the_kernels() {
+    let m = Multiplexer::new(2);
+    let bool_ps = m.primset().clone();
+    check("verified bool tapes evaluate safely", 100, |rng: &mut Rng| {
+        let t = &ramped_half_and_half(rng, &bool_ps, 1, 2, 6)[0];
+        let Ok(tp) = tape::compile(t, &bool_ps, BOOL_NOP) else { return Ok(()) };
+        let r = vgp::gp::verify::verify_tape(&tp, &bool_ps, TapeKind::Bool);
+        assert_prop(r.is_ok(), format!("compiled tape rejected: {:?}", r.first_error()))?;
+        let hits = tape::eval_bool_native(&tp, &m.cases);
+        assert_prop(hits <= m.cases.ncases, "hits exceed case count")
+    });
+
+    let reg_ps = problem_primset(ProblemKind::Quartic);
+    let xs: Vec<f32> = (0..12).map(|i| -1.0 + i as f32 * 0.2).collect();
+    let cases = RegCases::new(vec![xs.clone()], vec![0.0; xs.len()]);
+    check("verified reg tapes evaluate safely", 100, |rng: &mut Rng| {
+        let t = &ramped_half_and_half(rng, &reg_ps, 1, 2, 6)[0];
+        let Ok(tp) = tape::compile(t, &reg_ps, REG_NOP) else { return Ok(()) };
+        let r = vgp::gp::verify::verify_tape(&tp, &reg_ps, TapeKind::Reg);
+        assert_prop(r.is_ok(), format!("compiled tape rejected: {:?}", r.first_error()))?;
+        let (lo, hi) = r.output_bounds.unwrap();
+        let (sse, _) = tape::eval_reg_native(&tp, &cases);
+        if !r.may_nan {
+            assert_prop(!sse.is_nan(), "NaN SSE from a tape proven NaN-free")?;
+        }
+        assert_prop(lo <= hi, "inverted output bounds")
+    });
+}
+
+fn island_spec(trees: Vec<Tree>, immigrants: Vec<Migrant>) -> IslandSpec {
+    IslandSpec {
+        problem: "mux6".into(),
+        population: trees.len().max(1),
+        deme: 0,
+        demes: 2,
+        epoch: 1,
+        epochs: 2,
+        epoch_gens: 1,
+        migration_k: 1,
+        seed: 7,
+        checkpoint: Some(Checkpoint {
+            gen: 1,
+            rng: [1, 2, 3, 4],
+            population: trees,
+            total_evals: 10,
+            best: None,
+        }),
+        immigrants,
+    }
+}
+
+/// The WU-spec parse boundary: a checkpoint of honest trees passes,
+/// one corrupted tree (or immigrant) rejects the whole spec with a
+/// located diagnostic.
+#[test]
+fn island_spec_boundary_accepts_valid_rejects_corrupted() {
+    let ps = problem_primset(ProblemKind::Mux6);
+    let mut rng = Rng::new(11);
+    let pop = ramped_half_and_half(&mut rng, &ps, 8, 2, 5);
+
+    let spec = island_spec(pop.clone(), Vec::new());
+    assert!(exec::verify_island_spec(&spec, &ps).is_ok(), "honest checkpoint must pass");
+
+    let mut bad_pop = pop.clone();
+    bad_pop[3] = Tree::new(vec![200], vec![0.0]);
+    let err = exec::verify_island_spec(&island_spec(bad_pop, Vec::new()), &ps).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("checkpoint tree 3"), "error must locate the tree: {msg}");
+
+    let bad_migrant = Migrant {
+        tree: Tree::new(vec![0], vec![f32::NAN]),
+        fitness: Fitness { raw: 0.0, hits: 0 },
+        from_deme: 1,
+    };
+    let err = exec::verify_island_spec(&island_spec(pop, vec![bad_migrant]), &ps).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("immigrant 0 from deme 1"), "error must locate the migrant: {msg}");
+}
+
+/// Hostile whole-run budgets are rejected at the exec entry point
+/// before any allocation is sized from them.
+#[test]
+fn hostile_run_spec_budgets_rejected_at_exec() {
+    let spec = |pop: u64, gens: u64| {
+        Json::obj()
+            .set("problem", "mux6")
+            .set("population", pop)
+            .set("generations", gens)
+            .set("seed", 1u64)
+    };
+    let err = exec::run_wu_native(&spec(0, 5)).unwrap_err();
+    assert!(format!("{err:#}").contains("population"), "{err:#}");
+    let err = exec::run_wu_native(&spec(10, 1_000_000_000)).unwrap_err();
+    assert!(format!("{err:#}").contains("generations"), "{err:#}");
+    // sane budgets still run
+    assert!(exec::run_wu_native(&spec(8, 2)).is_ok());
+}
