@@ -32,6 +32,8 @@ use crate::gp::islands::{AdaptiveMigration, Migrant, Topology};
 use crate::gp::primset::PrimSet;
 use crate::gp::problems::ProblemKind;
 use crate::gp::verify::{self, TapeKind};
+use crate::metrics::trace::TraceEvent;
+use crate::metrics::{Counter, Hist};
 use crate::util::json::Json;
 
 use super::server::ServerCore;
@@ -68,7 +70,7 @@ pub struct ExchangeConfig {
 }
 
 /// Observable exchange counters (campaign reporting + tests).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ExchangeStats {
     /// canonical island payloads banked
     pub banked: u64,
@@ -174,14 +176,34 @@ impl MigrationExchange {
         self.dead[deme][epoch]
     }
 
+    /// Campaign shape `(demes, epochs)` — dashboard/snapshot geometry.
+    pub fn dims(&self) -> (usize, usize) {
+        (self.cfg.demes, self.cfg.epochs)
+    }
+
+    /// One dashboard cell: the observable state of a `(deme, epoch)`
+    /// barrier — `dead` (chain cancelled), `banked` (quorum-complete),
+    /// `released` (dispatchable / in flight) or `held` (dependency-gated).
+    pub fn epoch_state(&self, deme: usize, epoch: usize) -> &'static str {
+        if self.dead[deme][epoch] {
+            "dead"
+        } else if self.banked.contains_key(&(deme, epoch)) {
+            "banked"
+        } else if self.released[deme][epoch] {
+            "released"
+        } else {
+            "held"
+        }
+    }
+
     /// Drive the exchange: bank newly assimilated payloads, cancel dead
     /// dependency chains, release every held WU whose dependencies are
     /// quorum-complete (or timed out). Called after reports and on the
     /// transitioner tick — both the DES and the TCP server loop do.
     pub fn poll(&mut self, core: &mut ServerCore, now: f64) {
         self.bank_new(core);
-        self.cancel_dead_chains(core);
-        self.boost_stragglers(core);
+        self.cancel_dead_chains(core, now);
+        self.boost_stragglers(core, now);
         self.release_ready(core, now);
     }
 
@@ -205,15 +227,19 @@ impl MigrationExchange {
                         .and_then(|m| verify::verify_tree(&m.tree, ps, *kind).ensure_ok("tree"));
                     match checked {
                         Ok(()) => {
-                            core.metrics.inc("exchange.verify.ok");
+                            core.metrics.inc(Counter::ExchangeVerifyOk);
                             kept.push(ej);
                         }
                         Err(err) => {
                             self.stats.quarantined += 1;
-                            core.metrics.inc("exchange.verify.rejected");
-                            eprintln!(
-                                "warning: exchange: quarantined emigrant {i} of deme {d} epoch {e}: {err:#}"
+                            core.metrics.inc(Counter::ExchangeVerifyRejected);
+                            core.trace.record(
+                                a.completed_at,
+                                None,
+                                Some((d, e)),
+                                TraceEvent::EmigrantQuarantined { wu: a.wu_id },
                             );
+                            crate::log_warn!("exchange: quarantined emigrant {i} of deme {d} epoch {e}: {err:#}");
                         }
                     }
                 }
@@ -225,15 +251,22 @@ impl MigrationExchange {
                 .and_then(Json::as_str)
                 .and_then(|s| u64::from_str_radix(s, 16).ok())
                 .map(f64::from_bits);
+            let n_emigrants = emigrants.len();
             self.banked.insert((d, e), Bank { checkpoint, emigrants, banked_at: a.completed_at, best_raw });
             self.stats.banked += 1;
+            core.trace.record(
+                a.completed_at,
+                Some(a.host_id),
+                Some((d, e)),
+                TraceEvent::Banked { wu: a.wu_id, emigrants: n_emigrants },
+            );
         }
         self.scanned = assimilated.len();
     }
 
     /// A deme whose WU died (error mask) can never produce the
     /// checkpoint its later epochs need: cancel the rest of its chain.
-    fn cancel_dead_chains(&mut self, core: &mut ServerCore) {
+    fn cancel_dead_chains(&mut self, core: &mut ServerCore, now: f64) {
         for d in 0..self.cfg.demes {
             for e in 0..self.cfg.epochs {
                 if self.dead[d][e] {
@@ -253,7 +286,13 @@ impl MigrationExchange {
                         if e2 > e {
                             core.cancel_wu(self.wu_ids[d][e2]);
                             self.stats.cancelled += 1;
-                            core.metrics.inc("exchange.cancelled");
+                            core.metrics.inc(Counter::ExchangeCancelled);
+                            core.trace.record(
+                                now,
+                                None,
+                                Some((d, e2)),
+                                TraceEvent::Cancelled { wu: self.wu_ids[d][e2] },
+                            );
                         }
                     }
                 }
@@ -272,7 +311,7 @@ impl MigrationExchange {
     /// timeout. Each WU is boosted at most once; payload determinism
     /// makes the race outcome-neutral, so this only moves *time*,
     /// never content.
-    fn boost_stragglers(&mut self, core: &mut ServerCore) {
+    fn boost_stragglers(&mut self, core: &mut ServerCore, now: f64) {
         if !self.cfg.boost_replicas {
             return;
         }
@@ -298,7 +337,8 @@ impl MigrationExchange {
                     if suspect && core.boost_wu(wu_id) {
                         self.boosted.insert(wu_id);
                         self.stats.boosted += 1;
-                        core.metrics.inc("exchange.boosted");
+                        core.metrics.inc(Counter::ExchangeBoosted);
+                        core.trace.record(now, None, Some((sd, se)), TraceEvent::Boosted { wu: wu_id });
                     }
                 }
             }
@@ -337,7 +377,13 @@ impl MigrationExchange {
                 for key in timed_out {
                     if self.written_off.insert(key) {
                         self.stats.timeouts += 1;
-                        core.metrics.inc("exchange.timeout");
+                        core.metrics.inc(Counter::ExchangeTimeout);
+                        core.trace.record(
+                            now,
+                            None,
+                            Some(key),
+                            TraceEvent::BarrierTimeout { wu: self.wu_ids[key.0][key.1] },
+                        );
                     }
                 }
                 let id = self.wu_ids[d][e];
@@ -364,7 +410,9 @@ impl MigrationExchange {
                 if n_imm == 0 {
                     self.stats.empty_releases += 1;
                 }
-                core.metrics.inc("exchange.released");
+                core.metrics.inc(Counter::ExchangeReleased);
+                core.metrics.observe(Hist::ExchangeImmigrants, n_imm as f64);
+                core.trace.record(now, None, Some((d, e)), TraceEvent::Released { wu: id, immigrants: n_imm as usize });
             }
         }
     }

@@ -154,7 +154,9 @@ fn dispatch(core: &Arc<Mutex<ServerCore>>, req: Request, now: f64) -> Reply {
             s.report_error(result_id, now);
             Reply::Ok
         }
-        Request::Stats => Reply::Stats { dump: s.metrics.dump() },
+        Request::Stats => Reply::Stats {
+            snapshot: crate::metrics::snapshot::FleetSnapshot::from_parts(&s, None, now).to_json(),
+        },
         Request::Shutdown => Reply::Ok,
     }
 }

@@ -74,7 +74,10 @@ pub enum Reply {
     Work { result_id: u64, wu_id: u64, wu_name: String, spec: Json, flops_est: f64, signature: String },
     NoWork { campaign_done: bool },
     Ok,
-    Stats { dump: String },
+    /// A structured fleet snapshot (`metrics::snapshot`, schema
+    /// `vgp.fleet.v1`) — replaces the old free-text `dump` string so
+    /// clients read typed fields instead of string-parsing a dump.
+    Stats { snapshot: Json },
     Error { message: String },
 }
 
@@ -96,7 +99,7 @@ impl Reply {
                 Json::obj().set("kind", "no_work").set("campaign_done", *campaign_done)
             }
             Reply::Ok => Json::obj().set("kind", "ok"),
-            Reply::Stats { dump } => Json::obj().set("kind", "stats").set("dump", dump.as_str()),
+            Reply::Stats { snapshot } => Json::obj().set("kind", "stats").set("snapshot", snapshot.clone()),
             Reply::Error { message } => {
                 Json::obj().set("kind", "error").set("message", message.as_str())
             }
@@ -118,7 +121,7 @@ impl Reply {
                 campaign_done: j.get("campaign_done").and_then(Json::as_bool).unwrap_or(false),
             },
             "ok" => Reply::Ok,
-            "stats" => Reply::Stats { dump: j.str_of("dump")?.to_string() },
+            "stats" => Reply::Stats { snapshot: j.get("snapshot").cloned().unwrap_or(Json::Null) },
             "error" => Reply::Error { message: j.str_of("message")?.to_string() },
             other => anyhow::bail!("unknown reply kind '{other}'"),
         })
@@ -165,7 +168,9 @@ mod tests {
             },
             Reply::NoWork { campaign_done: true },
             Reply::Ok,
-            Reply::Stats { dump: "wu.submitted = 3\n".into() },
+            Reply::Stats {
+                snapshot: Json::obj().set("schema", "vgp.fleet.v1").set("virtual_time", 12.0),
+            },
             Reply::Error { message: "bad host".into() },
         ];
         for r in replies {

@@ -9,7 +9,8 @@
 //! reproduction measures the *same* state machines the paper's BOINC
 //! server ran.
 
-use crate::metrics::Metrics;
+use crate::metrics::trace::{Trace, TraceEvent};
+use crate::metrics::{Counter, Gauge, Hist, Metrics};
 use crate::util::json::Json;
 
 use super::db::{Db, HostRow};
@@ -64,7 +65,18 @@ pub struct ServerCore {
     pub cfg: ServerConfig,
     pub key: SigningKey,
     pub metrics: Metrics,
+    /// WU-lifecycle trace ring (virtual-time keyed; disabled until
+    /// `trace.enable(cap)` — see `crate::metrics::trace`).
+    pub trace: Trace,
     assimilated: Vec<Assimilated>,
+}
+
+/// Pull the island `(deme, epoch)` causality id out of a WU spec, if
+/// the WU belongs to an island campaign.
+fn coord_of(spec: &Json) -> Option<(usize, usize)> {
+    let d = spec.get("deme")?.as_u64()?;
+    let e = spec.get("epoch")?.as_u64()?;
+    Some((d as usize, e as usize))
 }
 
 impl ServerCore {
@@ -74,8 +86,14 @@ impl ServerCore {
             cfg,
             key: SigningKey::new(b"vgp-project-key"),
             metrics: Metrics::new(),
+            trace: Trace::new(),
             assimilated: Vec::new(),
         }
+    }
+
+    /// Mirror the dispatch backlog into the in-flight gauge.
+    fn sync_in_flight_gauge(&self) {
+        self.metrics.set_gauge(Gauge::ResultsInFlight, self.db.in_progress_ids().len() as f64);
     }
 
     // ------------------------------------------------------------ intake
@@ -87,13 +105,16 @@ impl ServerCore {
     pub fn submit_wu(&mut self, wu: WorkUnit) -> u64 {
         let target = wu.target_nresults;
         let held = wu.held;
+        let coord = coord_of(&wu.spec);
         let id = self.db.insert_wu(wu);
         if !held {
             for _ in 0..target {
                 self.db.insert_result(ResultRecord::new(0, id));
             }
         }
-        self.metrics.add("wu.submitted", 1);
+        self.metrics.add(Counter::WuSubmitted, 1);
+        // submissions are campaign setup: generated at virtual time 0
+        self.trace.record(0.0, None, coord, TraceEvent::Generated { wu: id });
         id
     }
 
@@ -114,7 +135,7 @@ impl ServerCore {
         for _ in 0..target {
             self.db.insert_result(ResultRecord::new(0, wu_id));
         }
-        self.metrics.inc("wu.released");
+        self.metrics.inc(Counter::WuReleased);
     }
 
     /// Raise a WU's replication by one extra racing replica — the
@@ -138,7 +159,7 @@ impl ServerCore {
         };
         if ok {
             self.db.insert_result(ResultRecord::new(0, wu_id));
-            self.metrics.inc("wu.boosted");
+            self.metrics.inc(Counter::WuBoosted);
         }
         ok
     }
@@ -150,21 +171,23 @@ impl ServerCore {
         if let Some(w) = self.db.wu_mut(wu_id) {
             if !w.is_done() {
                 w.error_mask.couldnt_send = true;
-                self.metrics.inc("wu.cancelled");
+                self.metrics.inc(Counter::WuCancelled);
             }
         }
     }
 
     pub fn register_host(&mut self, host: HostRow) -> u64 {
-        self.metrics.inc("host.registered");
-        self.db.upsert_host(host)
+        self.metrics.inc(Counter::HostRegistered);
+        let id = self.db.upsert_host(host);
+        self.metrics.set_gauge(Gauge::HostsAttached, self.db.hosts.len() as f64);
+        id
     }
 
     pub fn heartbeat(&mut self, host_id: u64, now: f64) {
         if let Some(h) = self.db.host_mut(host_id) {
             h.last_heartbeat = now;
         }
-        self.metrics.inc("host.heartbeat");
+        self.metrics.inc(Counter::HostHeartbeat);
     }
 
     // --------------------------------------------------------- scheduler
@@ -191,7 +214,8 @@ impl ServerCore {
         // task at a time (success resets the counter, an error re-arms
         // the quarantine)
         if blocked {
-            self.metrics.inc("host.unreliable_refusal");
+            self.metrics.inc(Counter::HostUnreliableRefusal);
+            self.trace.record(now, Some(host_id), None, TraceEvent::HostQuarantined);
             return None;
         }
         // per-core task model: one in-flight result per core (BOINC
@@ -221,7 +245,7 @@ impl ServerCore {
                 if let Some(r) = self.db.result_mut(rid) {
                     r.server_state = ServerState::Over;
                 }
-                self.metrics.inc("result.didnt_need");
+                self.metrics.inc(Counter::ResultDidntNeed);
                 continue;
             }
             let already_here = redundant
@@ -256,7 +280,14 @@ impl ServerCore {
             h.in_flight += 1;
         }
         self.db.mark_in_progress(rid);
-        self.metrics.inc("result.dispatched");
+        self.metrics.inc(Counter::ResultDispatched);
+        self.sync_in_flight_gauge();
+        self.trace.record(
+            now,
+            Some(host_id),
+            coord_of(&wu.spec),
+            TraceEvent::Dispatched { wu: wu_id, result: rid },
+        );
         let sig = self.key.sign(wu.spec.to_string().as_bytes());
         Some((rid, wu, sig))
     }
@@ -265,7 +296,7 @@ impl ServerCore {
 
     /// Client reports success with a result payload.
     pub fn report_success(&mut self, rid: u64, now: f64, cpu_time: f64, payload: Json) {
-        let (wu_id, host_id) = {
+        let (wu_id, host_id, sent_at) = {
             let Some(r) = self.db.result_mut(rid) else { return };
             if r.server_state != ServerState::InProgress {
                 return; // late report after deadline reissue — drop
@@ -276,15 +307,20 @@ impl ServerCore {
             r.cpu_time = cpu_time;
             r.payload_hash = sha256_hex(payload.to_string().as_bytes());
             r.payload = Some(payload);
-            (r.wu_id, r.host_id)
+            (r.wu_id, r.host_id, r.sent_at)
         };
         if let Some(h) = self.db.host_mut(host_id) {
             h.consecutive_errors = 0; // success lifts the reliability block
             h.in_flight = h.in_flight.saturating_sub(1);
         }
-        self.metrics.inc("result.success");
+        self.metrics.inc(Counter::ResultSuccess);
+        self.metrics.observe(Hist::WuTurnaround, now - sent_at);
+        self.metrics.observe(Hist::WuCpu, cpu_time);
+        let coord = self.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+        self.trace.record(now, Some(host_id), coord, TraceEvent::Executed { wu: wu_id, result: rid, ok: true });
         self.transition_wu(wu_id, now);
         self.db.sweep_in_progress();
+        self.sync_in_flight_gauge();
     }
 
     /// Client reports failure (the paper's Java-heap-size errors, §4.2).
@@ -304,9 +340,12 @@ impl ServerCore {
             h.last_error_at = now;
             h.in_flight = h.in_flight.saturating_sub(1);
         }
-        self.metrics.inc("result.client_error");
+        self.metrics.inc(Counter::ResultClientError);
+        let coord = self.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+        self.trace.record(now, Some(host_id), coord, TraceEvent::Executed { wu: wu_id, result: rid, ok: false });
         self.transition_wu(wu_id, now);
         self.db.sweep_in_progress();
+        self.sync_in_flight_gauge();
     }
 
     // ------------------------------------------------------ transitioner
@@ -336,10 +375,14 @@ impl ServerCore {
             if let Some(h) = self.db.host_mut(host_id) {
                 h.in_flight = h.in_flight.saturating_sub(1);
             }
-            self.metrics.inc("result.no_reply");
+            self.metrics.inc(Counter::ResultNoReply);
+            let coord = self.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+            self.trace.record(now, Some(host_id), coord, TraceEvent::Expired { wu: wu_id, result: rid });
             self.transition_wu(wu_id, now);
         }
         self.db.sweep_in_progress();
+        self.sync_in_flight_gauge();
+        self.metrics.set_gauge(Gauge::VirtualTime, now);
     }
 
     /// The transitioner for one WU: validation, error masks, reissue.
@@ -352,6 +395,7 @@ impl ServerCore {
             max_error_results: usize,
             max_total_results: usize,
             flops_est: f64,
+            coord: Option<(usize, usize)>,
         }
         // held WUs are dependency-gated: no replicas exist yet and the
         // exchange owns their lifecycle until release
@@ -361,6 +405,7 @@ impl ServerCore {
                 max_error_results: w.max_error_results,
                 max_total_results: w.max_total_results,
                 flops_est: w.flops_est,
+                coord: coord_of(&w.spec),
             },
             _ => return,
         };
@@ -419,7 +464,13 @@ impl ServerCore {
                             h.error_results += 1;
                         }
                     }
-                    self.metrics.inc(if valid { "result.valid" } else { "result.invalid" });
+                    self.metrics.inc(if valid { Counter::ResultValid } else { Counter::ResultInvalid });
+                    self.trace.record(
+                        now,
+                        Some(host_id),
+                        wu.coord,
+                        TraceEvent::Validated { wu: wu_id, result: *rid, valid },
+                    );
                 }
                 // ---- assimilator
                 let payload = self
@@ -441,7 +492,8 @@ impl ServerCore {
                     payload,
                     completed_at: now,
                 });
-                self.metrics.inc("wu.assimilated");
+                self.metrics.inc(Counter::WuAssimilated);
+                self.trace.record(now, Some(canon.1), wu.coord, TraceEvent::Assimilated { wu: wu_id });
                 return;
             }
         }
@@ -449,12 +501,12 @@ impl ServerCore {
         // ---- error masks
         if errors > wu.max_error_results {
             self.db.wu_mut(wu_id).unwrap().error_mask.too_many_errors = true;
-            self.metrics.inc("wu.too_many_errors");
+            self.metrics.inc(Counter::WuTooManyErrors);
             return;
         }
         if total >= wu.max_total_results && pending == 0 {
             self.db.wu_mut(wu_id).unwrap().error_mask.too_many_total = true;
-            self.metrics.inc("wu.too_many_total");
+            self.metrics.inc(Counter::WuTooManyTotal);
             return;
         }
 
@@ -474,7 +526,7 @@ impl ServerCore {
             let need = wu.min_quorum - live;
             for _ in 0..need {
                 self.db.insert_result(ResultRecord::new(0, wu_id));
-                self.metrics.inc("result.reissued");
+                self.metrics.inc(Counter::ResultReissued);
             }
         }
     }

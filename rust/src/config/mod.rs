@@ -133,12 +133,26 @@ impl Config {
 }
 
 /// Tiny CLI argument helper: positional subcommand + `--key value` /
-/// `--flag` options (clap is unavailable offline).
+/// `--flag` options (clap is unavailable offline). Short verbosity
+/// switches (`-v`/`-vv` louder, `-q`/`-qq` quieter — any run of `v`s
+/// or `q`s) are recorded as flags, once per letter, so every `vgp`
+/// subcommand routes log level uniformly through
+/// [`Args::log_level`].
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+}
+
+/// Is this argument a short verbosity switch (`-v`, `-vv`, `-q`, …)?
+fn short_verbosity(a: &str) -> Option<&str> {
+    let body = a.strip_prefix('-')?;
+    if !body.is_empty() && (body.bytes().all(|b| b == b'v') || body.bytes().all(|b| b == b'q')) {
+        Some(body)
+    } else {
+        None
+    }
 }
 
 impl Args {
@@ -147,10 +161,17 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
-            if let Some(name) = a.strip_prefix("--") {
+            if let Some(body) = short_verbosity(a) {
+                for _ in 0..body.len() {
+                    out.flags.push(body[..1].to_string());
+                }
+            } else if let Some(name) = a.strip_prefix("--") {
                 if let Some((k, v)) = name.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
-                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                } else if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                    && short_verbosity(&argv[i + 1]).is_none()
+                {
                     out.options.insert(name.to_string(), argv[i + 1].clone());
                     i += 1;
                 } else {
@@ -188,6 +209,15 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Uniform log-level resolution for every subcommand: the default
+    /// level 2 (info), plus one per `-v`, minus one per `-q`, clamped
+    /// to `util::log`'s 0 (errors only) ..= 4 (trace) range.
+    pub fn log_level(&self) -> u8 {
+        let up = self.flags.iter().filter(|f| *f == "v").count() as i64;
+        let down = self.flags.iter().filter(|f| *f == "q").count() as i64;
+        (2 + up - down).clamp(0, 4) as u8
+    }
 }
 
 #[cfg(test)]
@@ -221,5 +251,25 @@ mod tests {
         assert_eq!(a.opt_u64("runs", 0), 10);
         assert_eq!(a.opt_u64("seed", 0), 42);
         assert!(a.has_flag("verbose"));
+        assert_eq!(a.log_level(), 2, "default level without -v/-q");
+    }
+
+    #[test]
+    fn short_verbosity_flags() {
+        let argv: Vec<String> = ["sim", "-v", "--runs", "-vv", "--seed", "42"].iter().map(|s| s.to_string()).collect();
+        let a = Args::parse(&argv);
+        // a short switch after a --key is NOT eaten as its value
+        assert!(a.opt("runs").is_none(), "--runs stays a flag, -vv stays verbosity");
+        assert!(a.has_flag("runs"));
+        assert_eq!(a.opt_u64("seed", 0), 42);
+        assert_eq!(a.log_level(), 4, "-v -vv = three steps up, clamped at trace");
+
+        let quiet = Args::parse(&["sim".to_string(), "-qq".to_string()]);
+        assert_eq!(quiet.log_level(), 0, "-qq reaches errors-only");
+        let negative: Vec<String> = ["sim", "-q", "-q", "-q"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(Args::parse(&negative).log_level(), 0, "clamped at 0");
+        // a plain negative-number-ish positional is untouched
+        let n = Args::parse(&["sim".to_string(), "-5".to_string()]);
+        assert_eq!(n.positional, vec!["sim", "-5"]);
     }
 }

@@ -128,9 +128,7 @@ pub fn verify_island_spec(ispec: &IslandSpec, ps: &PrimSet) -> Result<u64> {
 /// be silently scored worst with no trace anywhere).
 fn log_compile_failures(what: &str, failures: u64) {
     if failures > 0 {
-        eprintln!(
-            "warning: {what}: {failures} tree(s) failed tape compile (NOP-filled, scored worst)"
-        );
+        crate::log_warn!("{what}: {failures} tree(s) failed tape compile (NOP-filled, scored worst)");
     }
 }
 

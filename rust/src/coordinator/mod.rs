@@ -18,6 +18,7 @@ use crate::gp::islands::{AdaptiveMigration, Topology};
 use crate::gp::problems::ProblemKind;
 use crate::gp::tape;
 use crate::gp::tree::Tree;
+use crate::metrics::snapshot::FleetSnapshot;
 use crate::sim::{SimConfig, SimOutcome, Simulation};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -456,6 +457,10 @@ pub struct IslandReport {
     pub outcome: SimOutcome,
     pub best: Option<IslandBest>,
     pub stats: ExchangeStats,
+    /// end-of-campaign fleet snapshot (`metrics::snapshot`, schema
+    /// `vgp.fleet.v1`) — what `--metrics-out` writes and `vgp
+    /// dashboard` renders
+    pub snapshot: Json,
 }
 
 /// Simulate an island campaign on a host pool. Unlike
@@ -492,7 +497,8 @@ pub fn simulate_island_campaign(
     let outcome = sim.run_mut(REFERENCE_FLOPS);
     let best = campaign.merge_best(sim.core.assimilated());
     let stats = sim.exchange().map(|e| e.stats.clone()).unwrap_or_default();
-    IslandReport { campaign: campaign.name.clone(), outcome, best, stats }
+    let snapshot = FleetSnapshot::from_parts(&sim.core, sim.exchange(), outcome.makespan).to_json();
+    IslandReport { campaign: campaign.name.clone(), outcome, best, stats, snapshot }
 }
 
 /// A parameter sweep: the cross product of generations x population
@@ -526,6 +532,10 @@ pub struct CampaignReport {
     pub productive_hosts: usize,
     pub attached_hosts: usize,
     pub client_errors: u64,
+    /// end-of-campaign fleet snapshot (`metrics::snapshot`, schema
+    /// `vgp.fleet.v1`); `Json::Null` when the producer had no server
+    /// core to capture (e.g. a report rebuilt from bare numbers)
+    pub snapshot: Json,
 }
 
 impl CampaignReport {
@@ -541,6 +551,7 @@ impl CampaignReport {
             productive_hosts: o.productive_hosts,
             attached_hosts: o.attached_hosts,
             client_errors: o.client_errors,
+            snapshot: Json::Null,
         }
     }
 }
@@ -562,8 +573,10 @@ pub fn simulate_campaign(
     for wu in campaign.workunits() {
         sim.submit(wu);
     }
-    let out = sim.run(REFERENCE_FLOPS);
-    CampaignReport::from_outcome(&campaign.name, campaign.runs, &out)
+    let out = sim.run_mut(REFERENCE_FLOPS);
+    let mut report = CampaignReport::from_outcome(&campaign.name, campaign.runs, &out);
+    report.snapshot = FleetSnapshot::from_parts(&sim.core, None, out.makespan).to_json();
+    report
 }
 
 #[cfg(test)]
@@ -804,6 +817,10 @@ mod tests {
         assert_eq!(r.completed, 25);
         assert!(r.acceleration > 1.0, "acc {}", r.acceleration);
         assert!(r.t_seq > 0.0 && r.t_b > 0.0);
+        // the report carries a schema-valid fleet snapshot
+        let snap = FleetSnapshot::from_json(&r.snapshot).unwrap();
+        assert!(snap.metrics.counter(crate::metrics::Counter::ResultDispatched) > 0);
+        assert!(snap.campaign.is_none(), "plain campaigns have no island grid");
     }
 
     #[test]

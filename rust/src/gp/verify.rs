@@ -64,7 +64,7 @@ use crate::gp::problems::parity::PARITY_NAMES;
 use crate::gp::problems::ProblemKind;
 use crate::gp::tape::{self, opcodes, Tape, TapeError};
 use crate::gp::tree::Tree;
-use crate::metrics::Metrics;
+use crate::metrics::{Counter, Metrics};
 
 /// Which kernel a tape targets. Decides the NOP opcode, the opcode
 /// space, and which abstract domain runs.
@@ -169,18 +169,18 @@ impl VerifyReport {
         Ok(())
     }
 
-    /// Surface the outcome through a metrics registry:
-    /// `<prefix>.ok` / `<prefix>.rejected` counters plus
-    /// `<prefix>.warnings` accumulation.
-    pub fn record(&self, m: &Metrics, prefix: &str) {
+    /// Surface the outcome through the typed metrics registry:
+    /// `verify.ok` / `verify.rejected` counters plus `verify.warnings`
+    /// accumulation.
+    pub fn record(&self, m: &Metrics) {
         if self.is_ok() {
-            m.inc(&format!("{prefix}.ok"));
+            m.inc(Counter::VerifyOk);
         } else {
-            m.inc(&format!("{prefix}.rejected"));
+            m.inc(Counter::VerifyRejected);
         }
         let w = self.warning_count();
         if w > 0 {
-            m.add(&format!("{prefix}.warnings"), w as u64);
+            m.add(Counter::VerifyWarnings, w as u64);
         }
     }
 }
@@ -821,8 +821,8 @@ mod tests {
         let err = r.ensure_ok("tape").unwrap_err().to_string();
         assert!(err.contains("op-range") && err.contains("tape"), "{err}");
         let m = Metrics::new();
-        r.record(&m, "verify.test");
-        assert_eq!(m.counter("verify.test.rejected"), 1);
-        assert_eq!(m.counter("verify.test.warnings"), 1);
+        r.record(&m);
+        assert_eq!(m.counter("verify.rejected"), 1);
+        assert_eq!(m.counter("verify.warnings"), 1);
     }
 }

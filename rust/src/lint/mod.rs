@@ -19,6 +19,12 @@
 //!   `.exp(`, `.ln(`, …) in `gp/`/`boinc/` outside the pinned kernels
 //!   in `gp/tape.rs`: libm results vary by platform, so stray float
 //!   math near the evaluation path risks the bit-identical contract.
+//! * **`raw-print`** — no bare `println!`/`eprintln!` (or their
+//!   non-newline forms) outside `util/log.rs`, `metrics/dashboard.rs`
+//!   and `lint/` itself: stdout is reserved for report/dashboard output
+//!   (route through [`crate::metrics::dashboard::emit`]) and stderr for
+//!   the leveled log macros (`log_error!` … `log_trace!`), so `-v`/`-q`
+//!   verbosity routing actually governs every diagnostic.
 //! * **`forbid-unsafe`** — `lib.rs` must carry
 //!   `#![forbid(unsafe_code)]` and `main.rs` `#![deny(unsafe_code)]`:
 //!   volunteer payloads are untrusted input.
@@ -61,6 +67,7 @@ pub const RULES: &[(&str, &[&str])] = &[
     ("unordered-map", &["HashMap", "HashSet"]),
     ("wall-clock", &["Instant::now", "SystemTime"]),
     ("float-arith", &[".sin(", ".cos(", ".tan(", ".exp(", ".ln(", ".sqrt(", ".powf(", ".powi("]),
+    ("raw-print", &["println!", "eprintln!", "print!(", "eprint!("]),
 ];
 
 /// Does `rule` apply to the file at `rel` (root-relative, `/`-separated)?
@@ -77,6 +84,11 @@ fn in_scope(rule: &str, rel: &str) -> bool {
         }
         "float-arith" => {
             (rel.starts_with("gp/") || rel.starts_with("boinc/")) && rel != "gp/tape.rs"
+        }
+        // the two print funnels and the linter itself (whose RULES table
+        // spells the banned tokens) are the only places allowed to print
+        "raw-print" => {
+            rel != "util/log.rs" && rel != "metrics/dashboard.rs" && !rel.starts_with("lint/")
         }
         _ => false,
     }
@@ -230,6 +242,21 @@ mod tests {
         assert_eq!(lint_source("gp/eval.rs", "let s = x.sin();\n").len(), 1);
         assert!(lint_source("boinc/net.rs", "let t = Instant::now();\n").is_empty());
         assert_eq!(lint_source("boinc/client.rs", "let t = Instant::now();\n").len(), 1);
+    }
+
+    #[test]
+    fn raw_print_funnels_are_exempt() {
+        let src = "fn f() { println!(\"x\"); }\n";
+        let main = format!("#![deny(unsafe_code)]\n{src}");
+        assert_eq!(lint_source("main.rs", &main)[0].rule, "raw-print");
+        assert_eq!(lint_source("gp/eval.rs", src).len(), 1);
+        assert!(lint_source("util/log.rs", src).is_empty());
+        assert!(lint_source("metrics/dashboard.rs", src).is_empty());
+        assert!(lint_source("lint/mod.rs", src).is_empty());
+        let stderr = "fn f() { eprintln!(\"x\"); }\n";
+        assert_eq!(lint_source("sim/mod.rs", stderr)[0].rule, "raw-print");
+        let allowed = "fn f() { println!(\"x\"); } // lint:allow(raw-print): demo\n";
+        assert!(lint_source("sim/mod.rs", allowed).is_empty());
     }
 
     #[test]

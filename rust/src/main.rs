@@ -40,6 +40,13 @@
 //! `vgp lint` runs the repo determinism lint (see [`vgp::lint`]) over
 //! the crate sources and exits non-zero on findings — the same scan
 //! that gates CI's `static-analysis` job.
+//!
+//! Observability (see [`vgp::metrics`]): `--metrics-out FILE` on
+//! `sim`/`serve` writes a canonical fleet snapshot (schema
+//! `vgp.fleet.v1`), `--trace N` turns on the WU-lifecycle trace ring
+//! (N records, virtual-time keyed, payload-neutral), and
+//! `vgp dashboard --from FILE` renders the ASCII fleet view. `-v`/`-q`
+//! (repeatable) raise/lower the stderr log level on every subcommand.
 
 #![deny(unsafe_code)]
 
@@ -54,25 +61,34 @@ use vgp::coordinator::{
 use vgp::gp::eval::Schedule;
 use vgp::gp::islands::Topology;
 use vgp::gp::problems::ProblemKind;
-use vgp::metrics::ascii_plot;
+use vgp::metrics::dashboard::emit;
+use vgp::metrics::snapshot::{validate_snapshot_json, FleetSnapshot};
+use vgp::metrics::{ascii_plot, dashboard};
 use vgp::sim::SimConfig;
 use vgp::util::bench::Table;
+use vgp::util::json::Json;
 use vgp::util::rng::Rng;
 
 fn main() {
     let args = Args::from_env();
+    // uniform log-level routing: default info, -v/-vv louder, -q/-qq
+    // quieter, on every subcommand
+    vgp::util::log::set_level(args.log_level());
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "sim" => cmd_sim(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
         "churn" => cmd_churn(&args),
+        "dashboard" => cmd_dashboard(&args),
         "lint" => cmd_lint(&args),
         _ => {
-            eprintln!("usage: vgp <sim|serve|worker|churn|lint> [--options]");
-            eprintln!("  vgp sim --table 1|2|3   reproduce a paper table");
-            eprintln!("  vgp sim --demes 4 --epochs 4 --epoch-gens 10   island-model campaign");
-            eprintln!("  vgp lint                run the repo determinism lint");
+            emit("usage: vgp <sim|serve|worker|churn|dashboard|lint> [-v|-q] [--options]");
+            emit("  vgp sim --table 1|2|3   reproduce a paper table");
+            emit("  vgp sim --demes 4 --epochs 4 --epoch-gens 10   island-model campaign");
+            emit("  vgp sim ... --trace 4096 --metrics-out fleet.json   write a fleet snapshot");
+            emit("  vgp dashboard --from fleet.json   render the ASCII fleet view");
+            emit("  vgp lint                run the repo determinism lint");
             0
         }
     };
@@ -101,7 +117,7 @@ fn bool_flag(args: &Args, name: &str) -> bool {
 /// A bad island-campaign flag exits with a curated message, never a
 /// panic backtrace.
 fn exit_invalid_campaign(e: anyhow::Error) -> ! {
-    eprintln!("invalid island campaign: {e:#}");
+    vgp::log_error!("invalid island campaign: {e:#}");
     std::process::exit(2);
 }
 
@@ -155,7 +171,7 @@ fn reg_lanes_of(args: &Args) -> usize {
 
 fn strict_lanes(args: &Args, flag: &str, default: usize) -> usize {
     vgp::gp::tape::parse_lanes(args.opt_u64(flag, default as u64) as usize).unwrap_or_else(|e| {
-        eprintln!("invalid --{flag}: {e:#}");
+        vgp::log_error!("invalid --{flag}: {e:#}");
         std::process::exit(2);
     })
 }
@@ -163,6 +179,27 @@ fn strict_lanes(args: &Args, flag: &str, default: usize) -> usize {
 /// `--schedule static|sorted|steal`.
 fn schedule_of(args: &Args) -> Schedule {
     Schedule::parse(args.opt_str("schedule", "static")).expect("schedule")
+}
+
+/// `--trace N` — WU-lifecycle trace ring capacity (0 = off). The trace
+/// keys on virtual time and is payload-neutral: enabling it never
+/// changes a campaign byte (proven by `tests/observability.rs`).
+fn sim_config_of(args: &Args) -> SimConfig {
+    SimConfig { trace_capacity: args.opt_u64("trace", 0) as usize, ..SimConfig::default() }
+}
+
+/// `--metrics-out FILE`: persist a fleet snapshot (canonical JSON,
+/// schema `vgp.fleet.v1`) for later `vgp dashboard --from FILE`.
+fn write_metrics_out(args: &Args, snapshot: &Json) {
+    let Some(path) = args.opt("metrics-out") else { return };
+    if matches!(snapshot, Json::Null) {
+        vgp::log_warn!("--metrics-out: this run produced no fleet snapshot");
+        return;
+    }
+    match std::fs::write(path, format!("{snapshot}\n")) {
+        Ok(()) => vgp::log_info!("fleet snapshot written to {path}"),
+        Err(e) => vgp::log_error!("--metrics-out {path}: {e}"),
+    }
 }
 
 fn cmd_sim(args: &Args) -> i32 {
@@ -183,13 +220,15 @@ fn cmd_sim(args: &Args) -> i32 {
         let seed = cfg.u64_or("pool", "seed", 7);
         if cfg.get("campaign", "demes").is_some() {
             let c = IslandCampaign::from_config(&cfg).expect("campaign section");
-            let r = simulate_island_campaign(&c, &pool, &[("cfg", hosts)], SimConfig::default(), seed);
+            let r = simulate_island_campaign(&c, &pool, &[("cfg", hosts)], sim_config_of(args), seed);
             print_island_report(&r);
+            write_metrics_out(args, &r.snapshot);
             return 0;
         }
         let c = Campaign::from_config(&cfg).expect("campaign section");
-        let r = simulate_campaign(&c, &pool, &[("cfg", hosts)], SimConfig::default(), seed);
+        let r = simulate_campaign(&c, &pool, &[("cfg", hosts)], sim_config_of(args), seed);
         print_report(&r);
+        write_metrics_out(args, &r.snapshot);
         return 0;
     }
     // --demes N: island-model campaign (WUs are executed for real so
@@ -202,10 +241,11 @@ fn cmd_sim(args: &Args) -> i32 {
             &c,
             &pool_of(args, hosts),
             &[("cli", hosts)],
-            SimConfig::default(),
+            sim_config_of(args),
             args.opt_u64("seed", 7),
         );
         print_island_report(&r);
+        write_metrics_out(args, &r.snapshot);
         return 0;
     }
     let problem = ProblemKind::parse(args.opt_str("problem", "mux11")).expect("problem");
@@ -223,20 +263,21 @@ fn cmd_sim(args: &Args) -> i32 {
         // the DES models durations from FLOPs/host-rate; worker thread
         // fan-out only applies when WUs are actually executed (serve/
         // worker). Scale virtual hosts with --ncpus instead.
-        println!(
-            "note: --threads affects real WU execution (vgp serve/worker), not DES \
+        vgp::log_warn!(
+            "--threads affects real WU execution (vgp serve/worker), not DES \
              durations; use --ncpus to give simulated hosts more cores"
         );
     }
     let r =
-        simulate_campaign(&c, &pool_of(args, hosts), &[("cli", hosts)], SimConfig::default(), seed);
+        simulate_campaign(&c, &pool_of(args, hosts), &[("cli", hosts)], sim_config_of(args), seed);
     print_report(&r);
+    write_metrics_out(args, &r.snapshot);
     0
 }
 
 fn print_island_report(r: &IslandReport) {
     let o = &r.outcome;
-    println!(
+    emit(&format!(
         "islands {}: T_B={:.0}s acc={:.2} done={}/{} | migrations: {} released, {} migrants, {} timeouts, {} cancelled",
         r.campaign,
         o.makespan,
@@ -247,22 +288,22 @@ fn print_island_report(r: &IslandReport) {
         r.stats.immigrants_delivered,
         r.stats.timeouts,
         r.stats.cancelled
-    );
+    ));
     match &r.best {
-        Some(b) => println!(
+        Some(b) => emit(&format!(
             "best: raw={} hits={} from deme {} epoch {} ({} nodes)",
             b.raw,
             b.hits,
             b.deme,
             b.epoch,
             b.tree.len()
-        ),
-        None => println!("best: none (campaign produced no validated payloads)"),
+        )),
+        None => emit("best: none (campaign produced no validated payloads)"),
     }
 }
 
 fn print_report(r: &vgp::coordinator::CampaignReport) {
-    println!(
+    emit(&format!(
         "campaign {}: T_seq={:.0}s T_B={:.0}s acc={:.2} CP={:.1} GFLOPS done={}/{} hosts={}/{}",
         r.campaign,
         r.t_seq,
@@ -273,7 +314,7 @@ fn print_report(r: &vgp::coordinator::CampaignReport) {
         r.runs,
         r.productive_hosts,
         r.attached_hosts
-    );
+    ));
 }
 
 fn sim_table(which: &str) -> i32 {
@@ -357,7 +398,7 @@ fn sim_table(which: &str) -> i32 {
             table.print();
         }
         other => {
-            eprintln!("unknown table '{other}' (1|2|3)");
+            vgp::log_error!("unknown table '{other}' (1|2|3)");
             return 2;
         }
     }
@@ -371,32 +412,37 @@ fn cmd_serve(args: &Args) -> i32 {
     // --demes N: serve an island campaign — the migration exchange
     // runs in this loop, behind the assimilator, releasing each epoch
     // as its dependencies reach quorum
+    let trace_cap = args.opt_u64("trace", 0) as usize;
     if args.opt("demes").is_some() {
         let c = island_campaign_from_args(args, "served_islands", problem);
         let mut core = ServerCore::new(ServerConfig::default());
+        if trace_cap > 0 {
+            core.trace.enable(trace_cap);
+        }
         let mut ex = MigrationExchange::new(c.exchange_config());
         ex.install(&mut core, c.workunits());
         let handle = serve(core).expect("serve");
-        println!(
+        emit(&format!(
             "vgp island server on {} ({} demes x {} epochs of {}); Ctrl-C to stop",
             handle.addr,
             c.demes,
             c.epochs,
             problem.name()
-        );
+        ));
         loop {
             std::thread::sleep(std::time::Duration::from_secs(2));
             let mut core = handle.core.lock().unwrap();
             ex.poll(&mut core, handle.now());
+            write_metrics_out(args, &FleetSnapshot::from_parts(&core, Some(&ex), handle.now()).to_json());
             let st = core.db.stats();
-            println!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress);
+            emit(&format!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress));
             if core.is_complete() {
                 match c.merge_best(core.assimilated()) {
-                    Some(b) => println!(
+                    Some(b) => emit(&format!(
                         "campaign complete; best raw={} hits={} (deme {}, epoch {})",
                         b.raw, b.hits, b.deme, b.epoch
-                    ),
-                    None => println!("campaign complete; no validated payloads"),
+                    )),
+                    None => emit("campaign complete; no validated payloads"),
                 }
                 return 0;
             }
@@ -410,18 +456,22 @@ fn cmd_serve(args: &Args) -> i32 {
     c.reg_lanes = reg_lanes_of(args);
     c.schedule = schedule_of(args);
     let mut core = ServerCore::new(ServerConfig::default());
+    if trace_cap > 0 {
+        core.trace.enable(trace_cap);
+    }
     for wu in c.workunits() {
         core.submit_wu(wu);
     }
     let handle = serve(core).expect("serve");
-    println!("vgp server on {} ({runs} WUs of {}); Ctrl-C to stop", handle.addr, problem.name());
+    emit(&format!("vgp server on {} ({runs} WUs of {}); Ctrl-C to stop", handle.addr, problem.name()));
     loop {
         std::thread::sleep(std::time::Duration::from_secs(2));
         let core = handle.core.lock().unwrap();
+        write_metrics_out(args, &FleetSnapshot::from_parts(&core, None, handle.now()).to_json());
         let st = core.db.stats();
-        println!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress);
+        emit(&format!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress));
         if core.is_complete() {
-            println!("campaign complete");
+            emit("campaign complete");
             return 0;
         }
     }
@@ -445,13 +495,13 @@ fn cmd_worker(args: &Args) -> i32 {
     // server reissues them to a capable host.
     let rt = vgp::runtime::Runtime::autoload();
     if rt.is_some() {
-        println!("artifact runtime loaded: serving Method-2 (artifact-path) WUs");
+        vgp::log_info!("artifact runtime loaded: serving Method-2 (artifact-path) WUs");
     }
     let report = worker.run(addr, &key, &|spec| exec::run_wu_auto_rt(rt.as_ref(), spec)).expect("worker run");
-    println!(
+    emit(&format!(
         "worker done: {} completed, {} errors, {:.1}s cpu",
         report.completed, report.errors, report.cpu_time
-    );
+    ));
     0
 }
 
@@ -461,11 +511,53 @@ fn cmd_churn(args: &Args) -> i32 {
     let mut rng = Rng::new(args.opt_u64("seed", 9));
     let hosts = sample_pool(&mut rng, &PoolParams::volunteer(hosts_n), FIG1_CITIES_MUX20);
     let tr = churn_trace(&hosts, days);
-    println!(
-        "{}",
-        ascii_plot("active volunteer hosts per day (Fig 2)", &tr.days, &tr.active_hosts, 12)
-    );
+    emit(&ascii_plot("active volunteer hosts per day (Fig 2)", &tr.days, &tr.active_hosts, 12));
     let _ = FIG1_CITIES_MUX11;
+    0
+}
+
+/// `vgp dashboard --from fleet.json [--bench BENCH.json]
+/// [--require-nonzero a,b]`: schema-validate a snapshot written by
+/// `--metrics-out` and render the ASCII fleet view (hosts, campaign
+/// progress, exchange stats, counters, trace tail). `--require-nonzero`
+/// takes a comma-separated counter-name list and exits 1 when any is
+/// zero — the CI observability smoke gate.
+fn cmd_dashboard(args: &Args) -> i32 {
+    let Some(path) = args.opt("from") else {
+        vgp::log_error!("usage: vgp dashboard --from fleet.json [--bench FILE] [--require-nonzero a,b]");
+        return 2;
+    };
+    let snap = match validate_snapshot_json(path) {
+        Ok(s) => s,
+        Err(e) => {
+            vgp::log_error!("invalid snapshot {path}: {e:#}");
+            return 2;
+        }
+    };
+    for line in dashboard::render(&snap).lines() {
+        emit(line);
+    }
+    if let Some(bench) = args.opt("bench") {
+        match dashboard::render_bench(bench) {
+            Ok(panel) => {
+                for line in panel.lines() {
+                    emit(line);
+                }
+            }
+            Err(e) => {
+                vgp::log_error!("bench panel {bench}: {e:#}");
+                return 2;
+            }
+        }
+    }
+    if let Some(list) = args.opt("require-nonzero") {
+        let names: Vec<&str> = list.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+        if let Err(e) = dashboard::require_nonzero(&snap, &names) {
+            vgp::log_error!("require-nonzero: {e:#}");
+            return 1;
+        }
+        emit(&format!("require-nonzero ok: {}", names.join(", ")));
+    }
     0
 }
 
@@ -477,22 +569,22 @@ fn cmd_lint(args: &Args) -> i32 {
     let findings = match vgp::lint::lint_crate(&src) {
         Ok(f) => f,
         Err(e) => {
-            eprintln!("lint failed to scan {}: {e:#}", src.display());
+            vgp::log_error!("lint failed to scan {}: {e:#}", src.display());
             return 2;
         }
     };
     for f in &findings {
-        println!("{f}");
+        emit(&f.to_string());
     }
     let nfiles = vgp::lint::count_rs(&src).unwrap_or(0);
     if findings.is_empty() {
-        println!(
+        emit(&format!(
             "lint clean: {nfiles} files, {} rules + forbid-unsafe, 0 findings",
             vgp::lint::RULES.len()
-        );
+        ));
         0
     } else {
-        eprintln!("lint: {} finding(s) in {nfiles} files", findings.len());
+        vgp::log_error!("lint: {} finding(s) in {nfiles} files", findings.len());
         1
     }
 }

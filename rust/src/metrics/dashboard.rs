@@ -1,0 +1,282 @@
+//! Payload-neutral ASCII fleet dashboard.
+//!
+//! Renders a [`FleetSnapshot`] document — never live server state — so
+//! observing a run cannot perturb it. `vgp dashboard --from fleet.json`
+//! prints something like:
+//!
+//! ```text
+//! vgp fleet @ vt 86400s — 8 hosts (6 attached), 4 in flight
+//! == hosts ==
+//! | id | name | gflops | cores | in-flight | valid | errors | streak | state       |
+//! |----|------|--------|-------|-----------|-------|--------|--------|-------------|
+//! | 1  | h0   | 1.2    | 2     | 1         | 41    | 0      | 0      | ok          |
+//! | 2  | h1   | 0.8    | 1     | 0         | 12    | 9      | 5      | quarantined |
+//! == campaign 2 demes x 8 epochs (B banked, R released, . held, X dead) ==
+//! | deme | progress | banked | released | held | dead |
+//! |------|----------|--------|----------|------|------|
+//! | 0    | BBBBR... | 4      | 1        | 3    | 0    |
+//! | 1    | BBBR.... | 3      | 1        | 4    | 0    |
+//! == exchange ==
+//! | banked | released | immigrants | empty | timeouts | cancelled | boosted | quarantined |
+//! ...
+//! ```
+//!
+//! followed by the nonzero counters, histogram summaries and the trace
+//! tail (canonical JSON, one record per line).
+//!
+//! This module is also the crate's one sanctioned stdout surface: the
+//! `raw-print` lint rule bans bare `println!`/`eprintln!` everywhere
+//! else in `src/`, so report-style output funnels through [`emit`].
+
+use super::snapshot::FleetSnapshot;
+use super::{Counter, Gauge};
+use crate::util::bench::{BenchRecord, Table};
+use crate::util::json::Json;
+
+/// Print one line to stdout. The single sanctioned raw-print site for
+/// report output (see the `raw-print` lint rule).
+pub fn emit(line: &str) {
+    println!("{line}");
+}
+
+/// Render the full fleet view from a snapshot.
+pub fn render(snap: &FleetSnapshot) -> String {
+    let mut out = String::new();
+    let attached = snap.metrics.gauge(Gauge::HostsAttached);
+    let in_flight = snap.metrics.gauge(Gauge::ResultsInFlight);
+    out.push_str(&format!(
+        "vgp fleet @ vt {}s — {} hosts ({attached} attached), {in_flight} in flight\n",
+        snap.virtual_time,
+        snap.hosts.len()
+    ));
+
+    out.push_str("== hosts ==\n");
+    if snap.hosts.is_empty() {
+        out.push_str("(none)\n");
+    } else {
+        let mut t = Table::new(&["id", "name", "gflops", "cores", "in-flight", "valid", "errors", "streak", "state"]);
+        for h in &snap.hosts {
+            t.row(&[
+                h.id.to_string(),
+                h.name.clone(),
+                format!("{:.1}", h.flops / 1e9),
+                h.ncpus.to_string(),
+                h.in_flight.to_string(),
+                h.valid.to_string(),
+                h.errors.to_string(),
+                h.streak.to_string(),
+                if h.quarantined { "quarantined".to_string() } else { "ok".to_string() },
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+
+    if let Some(c) = &snap.campaign {
+        out.push_str(&format!(
+            "== campaign {} demes x {} epochs (B banked, R released, . held, X dead) ==\n",
+            c.demes, c.epochs
+        ));
+        let mut t = Table::new(&["deme", "progress", "banked", "released", "held", "dead"]);
+        for d in 0..c.demes {
+            let progress: String = c.cells[d]
+                .iter()
+                .map(|s| match s.as_str() {
+                    "banked" => 'B',
+                    "released" => 'R',
+                    "dead" => 'X',
+                    _ => '.',
+                })
+                .collect();
+            t.row(&[
+                d.to_string(),
+                progress,
+                c.count(d, "banked").to_string(),
+                c.count(d, "released").to_string(),
+                c.count(d, "held").to_string(),
+                c.count(d, "dead").to_string(),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str("== exchange ==\n");
+        let s = &c.stats;
+        let mut t = Table::new(&[
+            "banked",
+            "released",
+            "immigrants",
+            "empty",
+            "timeouts",
+            "cancelled",
+            "boosted",
+            "quarantined",
+        ]);
+        t.row(&[
+            s.banked.to_string(),
+            s.released.to_string(),
+            s.immigrants_delivered.to_string(),
+            s.empty_releases.to_string(),
+            s.timeouts.to_string(),
+            s.cancelled.to_string(),
+            s.boosted.to_string(),
+            s.quarantined.to_string(),
+        ]);
+        out.push_str(&t.render());
+    }
+
+    out.push_str("== counters (nonzero) ==\n");
+    let mut any = false;
+    for (c, v) in &snap.metrics.counters {
+        if *v > 0 {
+            out.push_str(&format!("{} = {v}\n", c.name()));
+            any = true;
+        }
+    }
+    if !any {
+        out.push_str("(none)\n");
+    }
+
+    out.push_str("== histograms ==\n");
+    for (h, d) in &snap.metrics.hists {
+        out.push_str(&format!("{}: n={} mean={:.3} sum={:.3}\n", h.name(), d.count, d.mean(), d.sum));
+    }
+
+    out.push_str("== trace ==\n");
+    let recorded = snap.trace.u64_of("recorded").unwrap_or(0);
+    let dropped = snap.trace.u64_of("dropped").unwrap_or(0);
+    out.push_str(&format!("recorded {recorded}, dropped {dropped}\n"));
+    if let Some(recent) = snap.trace.get("recent").and_then(Json::as_arr) {
+        for r in recent {
+            out.push_str(&format!("  {r}\n"));
+        }
+    }
+    out
+}
+
+/// Re-export the append-only perf trajectory (`BENCH_hotpath.json`) as
+/// metrics rows — the dashboard's bench panel.
+pub fn render_bench(path: &str) -> anyhow::Result<String> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    let parsed = Json::parse(&text)?;
+    let entries = parsed.as_arr().ok_or_else(|| anyhow::anyhow!("{path}: top level must be a JSON array"))?;
+    let mut t = Table::new(&["pr", "kernel", "threads", "scheduler", "lanes", "evals/s"]);
+    for e in entries {
+        let r = BenchRecord::from_json(e)?;
+        t.row(&[
+            r.pr,
+            r.kernel,
+            r.threads.to_string(),
+            r.scheduler,
+            r.lanes.to_string(),
+            format!("{:.3e}", r.evals_per_sec),
+        ]);
+    }
+    Ok(format!("== bench trajectory ({} entries) ==\n{}", entries.len(), t.render()))
+}
+
+/// Assert the named counters are nonzero in the snapshot (CI smoke
+/// check: a campaign that dispatched nothing produced a vacuous run).
+pub fn require_nonzero(snap: &FleetSnapshot, names: &[&str]) -> anyhow::Result<()> {
+    for name in names {
+        let c = Counter::from_name(name).ok_or_else(|| anyhow::anyhow!("unknown counter '{name}'"))?;
+        anyhow::ensure!(snap.metrics.counter(c) > 0, "counter '{name}' is zero in snapshot");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boinc::exchange::ExchangeStats;
+    use crate::metrics::snapshot::{CampaignView, HostView};
+    use crate::metrics::Metrics;
+
+    fn synthetic_snapshot() -> FleetSnapshot {
+        let m = Metrics::new();
+        m.add(Counter::ResultDispatched, 9);
+        m.inc(Counter::ResultValid);
+        m.set_gauge(Gauge::HostsAttached, 2.0);
+        m.observe(crate::metrics::Hist::WuTurnaround, 120.0);
+        FleetSnapshot {
+            virtual_time: 3600.0,
+            metrics: m.snapshot(),
+            hosts: vec![
+                HostView {
+                    id: 1,
+                    name: "h0".into(),
+                    flops: 1.2e9,
+                    ncpus: 2,
+                    in_flight: 1,
+                    valid: 41,
+                    errors: 0,
+                    streak: 0,
+                    quarantined: false,
+                    credit: 10.0,
+                },
+                HostView {
+                    id: 2,
+                    name: "h1".into(),
+                    flops: 8e8,
+                    ncpus: 1,
+                    in_flight: 0,
+                    valid: 12,
+                    errors: 9,
+                    streak: 5,
+                    quarantined: true,
+                    credit: 3.0,
+                },
+            ],
+            campaign: Some(CampaignView {
+                demes: 2,
+                epochs: 4,
+                cells: vec![
+                    vec!["banked".into(), "banked".into(), "released".into(), "held".into()],
+                    vec!["banked".into(), "released".into(), "held".into(), "dead".into()],
+                ],
+                stats: ExchangeStats { banked: 3, released: 2, immigrants_delivered: 5, ..Default::default() },
+            }),
+            trace: Json::obj()
+                .set("enabled", true)
+                .set("recorded", 12u64)
+                .set("dropped", 2u64)
+                .set("recent", Json::Arr(vec![Json::obj().set("vt", 10.0).set("seq", 0u64).set("event", "banked")])),
+        }
+    }
+
+    #[test]
+    fn render_covers_all_views() {
+        let text = render(&synthetic_snapshot());
+        // host table with reliability state
+        assert!(text.contains("== hosts =="));
+        assert!(text.contains("quarantined"), "host state column");
+        assert!(text.contains("| 2"), "second host row");
+        // campaign progress grid
+        assert!(text.contains("== campaign 2 demes x 4 epochs"));
+        assert!(text.contains("BBR."), "deme 0 progress string");
+        assert!(text.contains("BR.X"), "deme 1 progress string");
+        // exchange stats
+        assert!(text.contains("== exchange =="));
+        assert!(text.contains("immigrants"));
+        // counters / histograms / trace tail
+        assert!(text.contains("result.dispatched = 9"));
+        assert!(text.contains("wu.turnaround_secs: n=1"));
+        assert!(text.contains("recorded 12, dropped 2"));
+        assert!(text.contains("\"event\":\"banked\""));
+    }
+
+    #[test]
+    fn nonzero_gate() {
+        let snap = synthetic_snapshot();
+        assert!(require_nonzero(&snap, &["result.dispatched", "result.valid"]).is_ok());
+        let err = require_nonzero(&snap, &["wu.released"]).unwrap_err().to_string();
+        assert!(err.contains("wu.released"), "{err}");
+        assert!(require_nonzero(&snap, &["no.such.counter"]).is_err());
+    }
+
+    #[test]
+    fn bench_panel_renders_trajectory() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+        let text = render_bench(path).unwrap();
+        assert!(text.contains("== bench trajectory ("));
+        assert!(text.contains("| pr"), "table header");
+        assert!(text.lines().count() >= 5);
+    }
+}

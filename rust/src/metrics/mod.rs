@@ -1,60 +1,414 @@
-//! Metrics: named counters/accumulators, CSV export, and an ASCII
-//! time-series plotter (used for the Fig-2 host-churn trace).
+//! Fleet observability: a typed metrics registry (counters, gauges,
+//! fixed-bucket histograms — all with static names and label sets), a
+//! Prometheus text-exposition exporter, a canonical JSON snapshot, plus
+//! the CSV export and ASCII time-series plotter used for the Fig-2
+//! host-churn trace.
+//!
+//! Every metric is declared at compile time in the tables below; there
+//! are no string-keyed entries, so a typo'd metric name is a compile
+//! error, the snapshot schema is closed, and the Prometheus label sets
+//! (`vgp_results_total{event="valid"}` …) are static. The legacy
+//! string-keyed `counter("result.valid")` *read* accessor is kept for
+//! tests and external callers — it resolves against the static name
+//! table and returns 0 for unknown names.
+//!
+//! The registry is payload-neutral by construction: nothing in the
+//! WU-payload path reads a metric back, and recording takes interior
+//! mutability (`&Metrics`), so enabling or disabling observability
+//! cannot perturb canonical payload bytes (proven end-to-end by
+//! `tests/observability.rs`).
 
-use std::collections::BTreeMap;
+pub mod dashboard;
+pub mod snapshot;
+pub mod trace;
+
+use std::fmt::Write as _;
 use std::sync::Mutex;
 
-use crate::util::stats::Accum;
+use crate::util::json::Json;
 
-/// Thread-safe metrics registry. One per server / simulation run.
+macro_rules! metric_enum {
+    ($(#[$doc:meta])* $ty:ident { $($variant:ident => $name:literal, $family:literal, $label:literal;)* }) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        pub enum $ty {
+            $($variant,)*
+        }
+
+        impl $ty {
+            pub const ALL: &'static [$ty] = &[$($ty::$variant,)*];
+
+            /// Canonical dotted name (snapshot / dump / `counter()` key).
+            pub fn name(self) -> &'static str {
+                match self {
+                    $($ty::$variant => $name,)*
+                }
+            }
+
+            /// Prometheus family + static label value. An empty label
+            /// means the family has no `event` dimension.
+            pub fn family(self) -> (&'static str, &'static str) {
+                match self {
+                    $($ty::$variant => ($family, $label),)*
+                }
+            }
+
+            fn index(self) -> usize {
+                self as usize
+            }
+
+            pub fn from_name(name: &str) -> Option<$ty> {
+                Self::ALL.iter().copied().find(|m| m.name() == name)
+            }
+        }
+    };
+}
+
+metric_enum! {
+    /// Monotonic event counters. Names mirror the BOINC server-daemon
+    /// vocabulary (transitioner / validator / assimilator events).
+    Counter {
+        WuSubmitted => "wu.submitted", "vgp_workunits_total", "submitted";
+        WuReleased => "wu.released", "vgp_workunits_total", "released";
+        WuBoosted => "wu.boosted", "vgp_workunits_total", "boosted";
+        WuCancelled => "wu.cancelled", "vgp_workunits_total", "cancelled";
+        WuAssimilated => "wu.assimilated", "vgp_workunits_total", "assimilated";
+        WuTooManyErrors => "wu.too_many_errors", "vgp_workunits_total", "too_many_errors";
+        WuTooManyTotal => "wu.too_many_total", "vgp_workunits_total", "too_many_total";
+        HostRegistered => "host.registered", "vgp_host_rpcs_total", "registered";
+        HostHeartbeat => "host.heartbeat", "vgp_host_rpcs_total", "heartbeat";
+        HostUnreliableRefusal => "host.unreliable_refusal", "vgp_host_rpcs_total", "unreliable_refusal";
+        ResultDispatched => "result.dispatched", "vgp_results_total", "dispatched";
+        ResultSuccess => "result.success", "vgp_results_total", "success";
+        ResultClientError => "result.client_error", "vgp_results_total", "client_error";
+        ResultNoReply => "result.no_reply", "vgp_results_total", "no_reply";
+        ResultValid => "result.valid", "vgp_results_total", "valid";
+        ResultInvalid => "result.invalid", "vgp_results_total", "invalid";
+        ResultReissued => "result.reissued", "vgp_results_total", "reissued";
+        ResultDidntNeed => "result.didnt_need", "vgp_results_total", "didnt_need";
+        ExchangeVerifyOk => "exchange.verify.ok", "vgp_exchange_total", "verify_ok";
+        ExchangeVerifyRejected => "exchange.verify.rejected", "vgp_exchange_total", "verify_rejected";
+        ExchangeCancelled => "exchange.cancelled", "vgp_exchange_total", "cancelled";
+        ExchangeBoosted => "exchange.boosted", "vgp_exchange_total", "boosted";
+        ExchangeTimeout => "exchange.timeout", "vgp_exchange_total", "timeout";
+        ExchangeReleased => "exchange.released", "vgp_exchange_total", "released";
+        SimExecutorFailure => "sim.executor_failure", "vgp_sim_total", "executor_failure";
+        VerifyOk => "verify.ok", "vgp_verify_total", "ok";
+        VerifyRejected => "verify.rejected", "vgp_verify_total", "rejected";
+        VerifyWarnings => "verify.warnings", "vgp_verify_total", "warnings";
+    }
+}
+
+metric_enum! {
+    /// Last-write-wins instantaneous values.
+    Gauge {
+        HostsAttached => "hosts.attached", "vgp_hosts_attached", "";
+        ResultsInFlight => "results.in_flight", "vgp_results_in_flight", "";
+        VirtualTime => "sim.virtual_time", "vgp_virtual_time_seconds", "";
+    }
+}
+
+metric_enum! {
+    /// Fixed-bucket histograms (bucket edges are compile-time consts).
+    Hist {
+        WuTurnaround => "wu.turnaround_secs", "vgp_wu_turnaround_seconds", "";
+        WuCpu => "wu.cpu_secs", "vgp_wu_cpu_seconds", "";
+        ExchangeImmigrants => "exchange.immigrants", "vgp_exchange_immigrants", "";
+    }
+}
+
+impl Hist {
+    /// Upper bucket edges (virtual seconds / counts); an implicit +Inf
+    /// bucket follows the last edge.
+    pub fn buckets(self) -> &'static [f64] {
+        match self {
+            Hist::WuTurnaround => &[60.0, 300.0, 900.0, 3600.0, 14400.0, 86400.0],
+            Hist::WuCpu => &[10.0, 60.0, 600.0, 3600.0, 14400.0, 86400.0],
+            Hist::ExchangeImmigrants => &[0.0, 1.0, 2.0, 4.0, 8.0, 16.0],
+        }
+    }
+}
+
+/// `# HELP` strings, one per Prometheus family (families are shared by
+/// several counters via their static `event` label).
+const FAMILY_HELP: &[(&str, &str)] = &[
+    ("vgp_workunits_total", "workunit lifecycle events by kind"),
+    ("vgp_host_rpcs_total", "host scheduler-RPC events by kind"),
+    ("vgp_results_total", "result lifecycle events by kind"),
+    ("vgp_exchange_total", "island migration-exchange events by kind"),
+    ("vgp_sim_total", "simulation harness events by kind"),
+    ("vgp_verify_total", "spec/tape verification outcomes by kind"),
+    ("vgp_hosts_attached", "hosts currently attached to the fleet"),
+    ("vgp_results_in_flight", "results dispatched and not yet reported"),
+    ("vgp_virtual_time_seconds", "current DES virtual time"),
+    ("vgp_wu_turnaround_seconds", "dispatch-to-report turnaround (virtual time)"),
+    ("vgp_wu_cpu_seconds", "reported CPU time per result"),
+    ("vgp_exchange_immigrants", "immigrants delivered per epoch release"),
+];
+
+fn family_help(family: &str) -> &'static str {
+    FAMILY_HELP.iter().find(|(f, _)| *f == family).map(|(_, h)| *h).unwrap_or("")
+}
+
+#[derive(Clone, Debug, Default)]
+struct HistData {
+    counts: Vec<u64>, // buckets().len() + 1 (+Inf)
+    sum: f64,
+    count: u64,
+}
+
 #[derive(Default)]
+struct State {
+    counters: Vec<u64>,
+    gauges: Vec<f64>,
+    hists: Vec<HistData>,
+}
+
+/// Thread-safe typed metrics registry. One per server / simulation run.
 pub struct Metrics {
-    counters: Mutex<BTreeMap<String, u64>>,
-    accums: Mutex<BTreeMap<String, Accum>>,
+    state: Mutex<State>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        let state = State {
+            counters: vec![0; Counter::ALL.len()],
+            gauges: vec![0.0; Gauge::ALL.len()],
+            hists: Hist::ALL
+                .iter()
+                .map(|h| HistData { counts: vec![0; h.buckets().len() + 1], sum: 0.0, count: 0 })
+                .collect(),
+        };
+        Metrics { state: Mutex::new(state) }
     }
 
-    pub fn inc(&self, name: &str) {
-        self.add(name, 1);
+    pub fn inc(&self, c: Counter) {
+        self.add(c, 1);
     }
 
-    pub fn add(&self, name: &str, n: u64) {
-        let mut c = self.counters.lock().unwrap();
-        *c.entry(name.to_string()).or_insert(0) += n;
+    pub fn add(&self, c: Counter, n: u64) {
+        self.state.lock().unwrap().counters[c.index()] += n;
     }
 
-    pub fn observe(&self, name: &str, value: f64) {
-        let mut a = self.accums.lock().unwrap();
-        a.entry(name.to_string()).or_default().add(value);
+    pub fn get(&self, c: Counter) -> u64 {
+        self.state.lock().unwrap().counters[c.index()]
     }
 
+    pub fn set_gauge(&self, g: Gauge, v: f64) {
+        self.state.lock().unwrap().gauges[g.index()] = v;
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.state.lock().unwrap().gauges[g.index()]
+    }
+
+    pub fn observe(&self, h: Hist, v: f64) {
+        let mut s = self.state.lock().unwrap();
+        let d = &mut s.hists[h.index()];
+        let edges = h.buckets();
+        let slot = edges.iter().position(|&e| v <= e).unwrap_or(edges.len());
+        d.counts[slot] += 1;
+        d.sum += v;
+        d.count += 1;
+    }
+
+    /// Legacy name-keyed read accessor (tests, external tooling).
+    /// Resolves against the static counter table; unknown names read 0.
     pub fn counter(&self, name: &str) -> u64 {
-        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+        Counter::from_name(name).map(|c| self.get(c)).unwrap_or(0)
     }
 
-    pub fn summary(&self, name: &str) -> Option<(u64, f64, f64)> {
-        let a = self.accums.lock().unwrap();
-        a.get(name).map(|acc| (acc.count(), acc.mean(), acc.std()))
-    }
-
-    pub fn dump(&self) -> String {
-        let mut out = String::new();
-        for (k, v) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("{k} = {v}\n"));
+    /// Structured point-in-time snapshot of every registered metric.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let s = self.state.lock().unwrap();
+        MetricsSnapshot {
+            counters: Counter::ALL.iter().map(|&c| (c, s.counters[c.index()])).collect(),
+            gauges: Gauge::ALL.iter().map(|&g| (g, s.gauges[g.index()])).collect(),
+            hists: Hist::ALL
+                .iter()
+                .map(|&h| {
+                    let d = &s.hists[h.index()];
+                    (
+                        h,
+                        HistSnapshot {
+                            buckets: h.buckets(),
+                            counts: d.counts.clone(),
+                            sum: d.sum,
+                            count: d.count,
+                        },
+                    )
+                })
+                .collect(),
         }
-        for (k, a) in self.accums.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "{k}: n={} mean={:.4} std={:.4} min={:.4} max={:.4}\n",
-                a.count(),
-                a.mean(),
-                a.std(),
-                a.min(),
-                a.max()
+    }
+
+    /// Human-readable text render. Superseded by [`Metrics::snapshot`]
+    /// (typed) — do not string-parse this output; it is kept only as a
+    /// terminal convenience.
+    pub fn dump(&self) -> String {
+        self.snapshot().render()
+    }
+
+    /// Prometheus text exposition (version 0.0.4).
+    pub fn prometheus(&self) -> String {
+        self.snapshot().prometheus()
+    }
+}
+
+/// Typed snapshot of the registry: the structured replacement for
+/// string-parsing `dump()` output.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub counters: Vec<(Counter, u64)>,
+    pub gauges: Vec<(Gauge, f64)>,
+    pub hists: Vec<(Hist, HistSnapshot)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct HistSnapshot {
+    pub buckets: &'static [f64],
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl HistSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn counter(&self, c: Counter) -> u64 {
+        self.counters.iter().find(|(k, _)| *k == c).map(|(_, v)| *v).unwrap_or(0)
+    }
+
+    pub fn gauge(&self, g: Gauge) -> f64 {
+        self.gauges.iter().find(|(k, _)| *k == g).map(|(_, v)| *v).unwrap_or(0.0)
+    }
+
+    /// Canonical JSON (BTreeMap-ordered object keys, so the rendering
+    /// is byte-stable for a given state).
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (c, v) in &self.counters {
+            counters = counters.set(c.name(), *v);
+        }
+        let mut gauges = Json::obj();
+        for (g, v) in &self.gauges {
+            gauges = gauges.set(g.name(), *v);
+        }
+        let mut hists = Json::obj();
+        for (h, d) in &self.hists {
+            hists = hists.set(
+                h.name(),
+                Json::obj()
+                    .set("buckets", d.buckets.to_vec())
+                    .set("counts", Json::Arr(d.counts.iter().map(|&n| Json::from(n)).collect()))
+                    .set("sum", d.sum)
+                    .set("count", d.count),
+            );
+        }
+        Json::obj().set("counters", counters).set("gauges", gauges).set("histograms", hists)
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<MetricsSnapshot> {
+        let counters = j.get("counters").ok_or_else(|| anyhow::anyhow!("missing 'counters'"))?;
+        let gauges = j.get("gauges").ok_or_else(|| anyhow::anyhow!("missing 'gauges'"))?;
+        let hists = j.get("histograms").ok_or_else(|| anyhow::anyhow!("missing 'histograms'"))?;
+        let mut snap = MetricsSnapshot { counters: Vec::new(), gauges: Vec::new(), hists: Vec::new() };
+        for &c in Counter::ALL {
+            let v = counters.u64_of(c.name())?;
+            snap.counters.push((c, v));
+        }
+        for &g in Gauge::ALL {
+            let v = gauges.f64_of(g.name())?;
+            snap.gauges.push((g, v));
+        }
+        for &h in Hist::ALL {
+            let d = hists.get(h.name()).ok_or_else(|| anyhow::anyhow!("missing histogram '{}'", h.name()))?;
+            let counts: Vec<u64> = d
+                .get("counts")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("histogram '{}' missing counts", h.name()))?
+                .iter()
+                .filter_map(Json::as_u64)
+                .collect();
+            if counts.len() != h.buckets().len() + 1 {
+                anyhow::bail!(
+                    "histogram '{}' has {} count slots, schema requires {}",
+                    h.name(),
+                    counts.len(),
+                    h.buckets().len() + 1
+                );
+            }
+            snap.hists.push((
+                h,
+                HistSnapshot { buckets: h.buckets(), counts, sum: d.f64_of("sum")?, count: d.u64_of("count")? },
             ));
+        }
+        Ok(snap)
+    }
+
+    /// Human-readable dump (one `name = value` line per metric).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (c, v) in &self.counters {
+            let _ = writeln!(out, "{} = {v}", c.name());
+        }
+        for (g, v) in &self.gauges {
+            let _ = writeln!(out, "{} = {v}", g.name());
+        }
+        for (h, d) in &self.hists {
+            let _ = writeln!(out, "{}: n={} mean={:.4} sum={:.4}", h.name(), d.count, d.mean(), d.sum);
+        }
+        out
+    }
+
+    /// Prometheus text exposition (version 0.0.4): counters grouped
+    /// into families with static `event` labels, gauges bare, and
+    /// histograms as cumulative `_bucket{le=…}` series.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = "";
+        for (c, v) in &self.counters {
+            let (family, label) = c.family();
+            if family != last_family {
+                let _ = writeln!(out, "# HELP {family} {}", family_help(family));
+                let _ = writeln!(out, "# TYPE {family} counter");
+                last_family = family;
+            }
+            let _ = writeln!(out, "{family}{{event=\"{label}\"}} {v}");
+        }
+        for (g, v) in &self.gauges {
+            let (family, _) = g.family();
+            let _ = writeln!(out, "# HELP {family} {}", family_help(family));
+            let _ = writeln!(out, "# TYPE {family} gauge");
+            let _ = writeln!(out, "{family} {v}");
+        }
+        for (h, d) in &self.hists {
+            let (family, _) = h.family();
+            let _ = writeln!(out, "# HELP {family} {}", family_help(family));
+            let _ = writeln!(out, "# TYPE {family} histogram");
+            let mut cum = 0u64;
+            for (i, edge) in d.buckets.iter().enumerate() {
+                cum += d.counts[i];
+                let _ = writeln!(out, "{family}_bucket{{le=\"{edge}\"}} {cum}");
+            }
+            cum += d.counts[d.buckets.len()];
+            let _ = writeln!(out, "{family}_bucket{{le=\"+Inf\"}} {cum}");
+            let _ = writeln!(out, "{family}_sum {}", d.sum);
+            let _ = writeln!(out, "{family}_count {}", d.count);
         }
         out
     }
@@ -110,17 +464,77 @@ mod tests {
     use super::*;
 
     #[test]
-    fn counters_and_accums() {
+    fn typed_counters_and_legacy_reads() {
         let m = Metrics::new();
-        m.inc("wu.dispatched");
-        m.add("wu.dispatched", 4);
-        m.observe("rpc.latency", 1.0);
-        m.observe("rpc.latency", 3.0);
-        assert_eq!(m.counter("wu.dispatched"), 5);
-        let (n, mean, _) = m.summary("rpc.latency").unwrap();
-        assert_eq!(n, 2);
-        assert!((mean - 2.0).abs() < 1e-12);
-        assert!(m.dump().contains("wu.dispatched = 5"));
+        m.inc(Counter::ResultDispatched);
+        m.add(Counter::ResultDispatched, 4);
+        assert_eq!(m.get(Counter::ResultDispatched), 5);
+        // legacy name-keyed read resolves through the static table
+        assert_eq!(m.counter("result.dispatched"), 5);
+        assert_eq!(m.counter("no.such.metric"), 0);
+        assert!(m.dump().contains("result.dispatched = 5"));
+    }
+
+    #[test]
+    fn gauges_last_write_wins() {
+        let m = Metrics::new();
+        m.set_gauge(Gauge::HostsAttached, 3.0);
+        m.set_gauge(Gauge::HostsAttached, 7.0);
+        assert_eq!(m.gauge(Gauge::HostsAttached), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_fill() {
+        let m = Metrics::new();
+        m.observe(Hist::WuTurnaround, 30.0); // <= 60
+        m.observe(Hist::WuTurnaround, 500.0); // <= 900
+        m.observe(Hist::WuTurnaround, 1e9); // +Inf
+        let snap = m.snapshot();
+        let (_, d) = snap.hists.iter().find(|(h, _)| *h == Hist::WuTurnaround).unwrap();
+        assert_eq!(d.count, 3);
+        assert_eq!(d.counts[0], 1);
+        assert_eq!(d.counts[2], 1);
+        assert_eq!(*d.counts.last().unwrap(), 1);
+        assert!((d.sum - (30.0 + 500.0 + 1e9)).abs() < 1e-3);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_is_canonical() {
+        let m = Metrics::new();
+        m.inc(Counter::WuSubmitted);
+        m.set_gauge(Gauge::VirtualTime, 120.5);
+        m.observe(Hist::WuCpu, 42.0);
+        let snap = m.snapshot();
+        let j = snap.to_json();
+        let back = MetricsSnapshot::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string());
+        assert_eq!(back.counter(Counter::WuSubmitted), 1);
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let m = Metrics::new();
+        m.inc(Counter::ResultValid);
+        m.observe(Hist::WuTurnaround, 100.0);
+        let text = m.prometheus();
+        assert!(text.contains("# TYPE vgp_results_total counter"));
+        assert!(text.contains("vgp_results_total{event=\"valid\"} 1"));
+        assert!(text.contains("# TYPE vgp_wu_turnaround_seconds histogram"));
+        assert!(text.contains("vgp_wu_turnaround_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("vgp_wu_turnaround_seconds_count 1"));
+        // every family referenced by a metric has HELP text
+        for &c in Counter::ALL {
+            assert!(!family_help(c.family().0).is_empty(), "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn metric_names_are_unique() {
+        for (i, &a) in Counter::ALL.iter().enumerate() {
+            for &b in &Counter::ALL[i + 1..] {
+                assert_ne!(a.name(), b.name());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,392 @@
+//! Fleet snapshot: one canonical JSON document (`schema: vgp.fleet.v1`)
+//! capturing the observable state of a run — the typed metrics
+//! registry, the host table, island-campaign progress, migration
+//! exchange stats and the trace-ring tail — at a single virtual-time
+//! instant.
+//!
+//! The snapshot is the contract between producers (`vgp sim
+//! --metrics-out`, the serve-mode `Stats` RPC, campaign reports) and
+//! the payload-neutral consumer (`vgp dashboard`): everything the
+//! dashboard renders comes from this document, never from live server
+//! state, so observing a run cannot perturb it. Rendering is canonical
+//! (BTreeMap-ordered object keys via [`Json`]) and schema-validated on
+//! read, mirroring `util::bench::validate_bench_json`.
+
+use crate::boinc::exchange::{ExchangeStats, MigrationExchange};
+use crate::boinc::server::ServerCore;
+use crate::util::json::Json;
+
+use super::MetricsSnapshot;
+
+/// Schema tag stamped into (and required of) every fleet snapshot.
+pub const SCHEMA: &str = "vgp.fleet.v1";
+
+/// How many trace-ring tail records ride along in a snapshot.
+const TRACE_KEEP: usize = 64;
+
+/// One row of the dashboard's host table: identity, capacity, and the
+/// reliability state the scheduler acts on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostView {
+    pub id: u64,
+    pub name: String,
+    pub flops: f64,
+    pub ncpus: u64,
+    pub in_flight: u64,
+    pub valid: u64,
+    pub errors: u64,
+    /// consecutive-error streak (the reliability gate's input)
+    pub streak: u64,
+    /// true when the scheduler would refuse this host work right now
+    /// (same predicate as `ServerCore::request_work`'s gate)
+    pub quarantined: bool,
+    pub credit: f64,
+}
+
+impl HostView {
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("id", self.id)
+            .set("name", self.name.as_str())
+            .set("flops", self.flops)
+            .set("ncpus", self.ncpus)
+            .set("in_flight", self.in_flight)
+            .set("valid", self.valid)
+            .set("errors", self.errors)
+            .set("streak", self.streak)
+            .set("quarantined", self.quarantined)
+            .set("credit", self.credit)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<HostView> {
+        Ok(HostView {
+            id: j.u64_of("id")?,
+            name: j.str_of("name")?.to_string(),
+            flops: j.f64_of("flops")?,
+            ncpus: j.u64_of("ncpus")?,
+            in_flight: j.u64_of("in_flight")?,
+            valid: j.u64_of("valid")?,
+            errors: j.u64_of("errors")?,
+            streak: j.u64_of("streak")?,
+            quarantined: j.get("quarantined").and_then(Json::as_bool).ok_or_else(|| {
+                anyhow::anyhow!("host {}: missing bool 'quarantined'", j.u64_of("id").unwrap_or(0))
+            })?,
+            credit: j.f64_of("credit")?,
+        })
+    }
+}
+
+/// Island-campaign progress: the `[deme][epoch]` state grid plus the
+/// exchange's observable counters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignView {
+    pub demes: usize,
+    pub epochs: usize,
+    /// per-cell state: `held | released | banked | dead`
+    pub cells: Vec<Vec<String>>,
+    pub stats: ExchangeStats,
+}
+
+const CELL_STATES: &[&str] = &["held", "released", "banked", "dead"];
+
+fn stats_to_json(s: &ExchangeStats) -> Json {
+    Json::obj()
+        .set("banked", s.banked)
+        .set("released", s.released)
+        .set("immigrants_delivered", s.immigrants_delivered)
+        .set("empty_releases", s.empty_releases)
+        .set("timeouts", s.timeouts)
+        .set("cancelled", s.cancelled)
+        .set("boosted", s.boosted)
+        .set("quarantined", s.quarantined)
+}
+
+fn stats_from_json(j: &Json) -> anyhow::Result<ExchangeStats> {
+    Ok(ExchangeStats {
+        banked: j.u64_of("banked")?,
+        released: j.u64_of("released")?,
+        immigrants_delivered: j.u64_of("immigrants_delivered")?,
+        empty_releases: j.u64_of("empty_releases")?,
+        timeouts: j.u64_of("timeouts")?,
+        cancelled: j.u64_of("cancelled")?,
+        boosted: j.u64_of("boosted")?,
+        quarantined: j.u64_of("quarantined")?,
+    })
+}
+
+impl CampaignView {
+    /// Count of cells in `state` for one deme row.
+    pub fn count(&self, deme: usize, state: &str) -> usize {
+        self.cells[deme].iter().filter(|s| s == &state).count()
+    }
+
+    fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|row| Json::Arr(row.iter().map(|s| Json::from(s.as_str())).collect()))
+            .collect();
+        Json::obj()
+            .set("demes", self.demes)
+            .set("epochs", self.epochs)
+            .set("cells", Json::Arr(rows))
+            .set("stats", stats_to_json(&self.stats))
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<CampaignView> {
+        let demes = j.u64_of("demes")? as usize;
+        let epochs = j.u64_of("epochs")? as usize;
+        let rows = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("campaign: missing 'cells' array"))?;
+        anyhow::ensure!(rows.len() == demes, "campaign: {} cell rows, demes = {demes}", rows.len());
+        let mut cells = Vec::with_capacity(demes);
+        for (d, row) in rows.iter().enumerate() {
+            let row = row.as_arr().ok_or_else(|| anyhow::anyhow!("campaign: cells[{d}] is not an array"))?;
+            anyhow::ensure!(row.len() == epochs, "campaign: deme {d} has {} cells, epochs = {epochs}", row.len());
+            let mut out = Vec::with_capacity(epochs);
+            for (e, cell) in row.iter().enumerate() {
+                let s = cell.as_str().ok_or_else(|| anyhow::anyhow!("campaign: cells[{d}][{e}] is not a string"))?;
+                anyhow::ensure!(CELL_STATES.contains(&s), "campaign: cells[{d}][{e}]: unknown state '{s}'");
+                out.push(s.to_string());
+            }
+            cells.push(out);
+        }
+        let stats = j
+            .get("stats")
+            .ok_or_else(|| anyhow::anyhow!("campaign: missing 'stats'"))
+            .and_then(stats_from_json)?;
+        Ok(CampaignView { demes, epochs, cells, stats })
+    }
+}
+
+/// The whole-fleet snapshot document. Producers build it with
+/// [`FleetSnapshot::from_parts`]; the dashboard rebuilds it from disk
+/// (or the wire) with [`FleetSnapshot::from_json`].
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    /// DES virtual time the snapshot was taken at (seconds).
+    pub virtual_time: f64,
+    pub metrics: MetricsSnapshot,
+    pub hosts: Vec<HostView>,
+    /// present only for island campaigns
+    pub campaign: Option<CampaignView>,
+    /// trace section (`Trace::to_json`): counts + ring tail
+    pub trace: Json,
+}
+
+impl FleetSnapshot {
+    /// Capture the observable state of a run. Read-only over every
+    /// input — taking a snapshot cannot perturb the run.
+    pub fn from_parts(core: &ServerCore, exchange: Option<&MigrationExchange>, now: f64) -> FleetSnapshot {
+        let hosts = core
+            .db
+            .hosts
+            .values()
+            .map(|h| HostView {
+                id: h.id,
+                name: h.name.clone(),
+                flops: h.flops,
+                ncpus: h.ncpus as u64,
+                in_flight: h.in_flight as u64,
+                valid: h.valid_results,
+                errors: h.error_results,
+                streak: h.consecutive_errors,
+                // same predicate as the scheduler's reliability gate
+                quarantined: h.consecutive_errors >= core.cfg.reliability_error_threshold
+                    && (now < h.last_error_at + core.cfg.reliability_probation || h.in_flight > 0),
+                credit: h.credit,
+            })
+            .collect();
+        let campaign = exchange.map(|ex| {
+            let (demes, epochs) = ex.dims();
+            let cells = (0..demes)
+                .map(|d| (0..epochs).map(|e| ex.epoch_state(d, e).to_string()).collect())
+                .collect();
+            CampaignView { demes, epochs, cells, stats: ex.stats.clone() }
+        });
+        FleetSnapshot {
+            virtual_time: now,
+            metrics: core.metrics.snapshot(),
+            hosts,
+            campaign,
+            trace: core.trace.to_json(TRACE_KEEP),
+        }
+    }
+
+    /// Canonical JSON rendering (byte-stable for a given state).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("schema", SCHEMA)
+            .set("virtual_time", self.virtual_time)
+            .set("metrics", self.metrics.to_json())
+            .set("hosts", Json::Arr(self.hosts.iter().map(HostView::to_json).collect()))
+            .set("trace", self.trace.clone());
+        if let Some(c) = &self.campaign {
+            j = j.set("campaign", c.to_json());
+        }
+        j
+    }
+
+    /// Parse and validate a snapshot document. Every schema violation
+    /// is an error — the dashboard never renders half-valid data.
+    pub fn from_json(j: &Json) -> anyhow::Result<FleetSnapshot> {
+        let schema = j.str_of("schema")?;
+        anyhow::ensure!(schema == SCHEMA, "unsupported snapshot schema '{schema}' (want {SCHEMA})");
+        let vt = j.f64_of("virtual_time")?;
+        anyhow::ensure!(vt.is_finite() && vt >= 0.0, "virtual_time must be finite and >= 0 (got {vt})");
+        let metrics = j
+            .get("metrics")
+            .ok_or_else(|| anyhow::anyhow!("missing 'metrics'"))
+            .and_then(MetricsSnapshot::from_json)?;
+        let hosts = j
+            .get("hosts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("missing 'hosts' array"))?
+            .iter()
+            .map(HostView::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let campaign = match j.get("campaign") {
+            Some(c) => Some(CampaignView::from_json(c)?),
+            None => None,
+        };
+        let trace = j.get("trace").cloned().ok_or_else(|| anyhow::anyhow!("missing 'trace' section"))?;
+        trace.u64_of("recorded").map_err(|_| anyhow::anyhow!("trace section missing 'recorded'"))?;
+        trace.u64_of("dropped").map_err(|_| anyhow::anyhow!("trace section missing 'dropped'"))?;
+        Ok(FleetSnapshot { virtual_time: vt, metrics, hosts, campaign, trace })
+    }
+
+    /// Write the snapshot to `path` (canonical JSON + trailing newline).
+    pub fn write(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| anyhow::anyhow!("writing snapshot {path}: {e}"))
+    }
+}
+
+/// Read + schema-validate a snapshot file (the CI smoke job's check,
+/// mirroring `util::bench::validate_bench_json`).
+pub fn validate_snapshot_json(path: &str) -> anyhow::Result<FleetSnapshot> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+    FleetSnapshot::from_json(&Json::parse(&text)?).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boinc::db::HostRow;
+    use crate::boinc::server::ServerConfig;
+    use crate::boinc::workunit::WorkUnit;
+    use crate::metrics::Counter;
+
+    fn host(id_hint: &str, flops: f64) -> HostRow {
+        HostRow {
+            id: 0,
+            name: id_hint.into(),
+            city: "Badajoz".into(),
+            flops,
+            ncpus: 2,
+            on_frac: 1.0,
+            active_frac: 1.0,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
+            credit: 0.0,
+        }
+    }
+
+    fn snap_from_small_run() -> FleetSnapshot {
+        let mut core = ServerCore::new(ServerConfig::default());
+        core.trace.enable(32);
+        let h = core.register_host(host("h0", 1e9));
+        core.register_host(host("h1", 2e9));
+        core.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let (rid, _, _) = core.request_work(h, 0.0).unwrap();
+        core.report_success(rid, 100.0, 90.0, Json::obj().set("hits", 3u64));
+        FleetSnapshot::from_parts(&core, None, 100.0)
+    }
+
+    #[test]
+    fn roundtrip_is_canonical_and_validates() {
+        let snap = snap_from_small_run();
+        assert_eq!(snap.hosts.len(), 2);
+        assert_eq!(snap.metrics.counter(Counter::ResultDispatched), 1);
+        assert!(snap.trace.u64_of("recorded").unwrap() >= 2, "generated + dispatched at least");
+        let j = snap.to_json();
+        let back = FleetSnapshot::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), j.to_string(), "canonical roundtrip");
+        assert_eq!(back.hosts, snap.hosts);
+    }
+
+    #[test]
+    fn quarantine_flag_mirrors_scheduler_gate() {
+        let cfg = ServerConfig { reliability_error_threshold: 2, reliability_probation: 1000.0, ..Default::default() };
+        let mut core = ServerCore::new(cfg);
+        let h = core.register_host(host("bad", 1e9));
+        for _ in 0..2 {
+            core.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        }
+        for _ in 0..2 {
+            let (rid, _, _) = core.request_work(h, 0.0).unwrap();
+            core.report_error(rid, 1.0);
+        }
+        let snap = FleetSnapshot::from_parts(&core, None, 1.0);
+        assert!(snap.hosts[0].quarantined, "inside probation window");
+        assert_eq!(snap.hosts[0].streak, 2);
+        let later = FleetSnapshot::from_parts(&core, None, 5000.0);
+        assert!(!later.hosts[0].quarantined, "probation elapsed, probe allowed");
+    }
+
+    #[test]
+    fn schema_violations_are_rejected() {
+        let good = snap_from_small_run().to_json();
+        // wrong schema tag
+        let bad = Json::parse(&good.to_string()).unwrap().set("schema", "vgp.fleet.v0");
+        assert!(FleetSnapshot::from_json(&bad).is_err());
+        // missing sections
+        for key in ["metrics", "hosts", "trace", "virtual_time"] {
+            let mut without = Json::obj();
+            if let Json::Obj(map) = &good {
+                for (k, v) in map {
+                    if k != key {
+                        without = without.set(k.as_str(), v.clone());
+                    }
+                }
+            }
+            assert!(FleetSnapshot::from_json(&without).is_err(), "must reject missing '{key}'");
+        }
+        // campaign cell with an unknown state string
+        let with_campaign = Json::parse(&good.to_string()).unwrap().set(
+            "campaign",
+            Json::obj()
+                .set("demes", 1u64)
+                .set("epochs", 1u64)
+                .set("cells", Json::Arr(vec![Json::Arr(vec![Json::from("limbo")])]))
+                .set("stats", stats_to_json(&ExchangeStats::default())),
+        );
+        assert!(FleetSnapshot::from_json(&with_campaign).is_err());
+    }
+
+    #[test]
+    fn campaign_counts() {
+        let c = CampaignView {
+            demes: 2,
+            epochs: 3,
+            cells: vec![
+                vec!["banked".into(), "released".into(), "held".into()],
+                vec!["banked".into(), "banked".into(), "dead".into()],
+            ],
+            stats: ExchangeStats::default(),
+        };
+        assert_eq!(c.count(0, "banked"), 1);
+        assert_eq!(c.count(1, "banked"), 2);
+        assert_eq!(c.count(1, "dead"), 1);
+        let j = c.to_json();
+        let back = CampaignView::from_json(&j).unwrap();
+        assert_eq!(back, c);
+    }
+}

@@ -1,0 +1,287 @@
+//! WU-lifecycle tracing: a bounded ring buffer of typed events keyed on
+//! **virtual time** (the DES clock — never the wall clock, so the
+//! repo's `wall-clock` lint rule holds for every caller).
+//!
+//! # Event vocabulary
+//!
+//! The normal life of a workunit reads, in order:
+//!
+//! | event        | recorded by                  | meaning                                          |
+//! |--------------|------------------------------|--------------------------------------------------|
+//! | `generated`  | `ServerCore::submit_wu`      | WU entered the queue (vt 0 — campaign setup)     |
+//! | `dispatched` | `ServerCore::request_work`   | a result replica was handed to a host            |
+//! | `executed`   | `report_success/report_error`| the host reported back (ok = success RPC)        |
+//! | `expired`    | `ServerCore::tick`           | a replica's deadline passed with no reply        |
+//! | `validated`  | transitioner (quorum check)  | replica judged against the quorum (valid flag)   |
+//! | `assimilated`| transitioner                 | canonical payload banked into `assimilated()`    |
+//!
+//! Island campaigns append the migration-exchange / barrier events:
+//!
+//! | event                  | recorded by                 | meaning                                       |
+//! |------------------------|-----------------------------|-----------------------------------------------|
+//! | `banked`               | `MigrationExchange` (bank)  | epoch WU's checkpoint + emigrants banked      |
+//! | `emigrant_quarantined` | `MigrationExchange` (bank)  | an emigrant failed re-verification            |
+//! | `released`             | exchange barrier open       | next-epoch WU released with immigrant set     |
+//! | `boosted`              | exchange straggler race     | extra replica raced against a straggler       |
+//! | `cancelled`            | exchange dead-chain sweep   | WU cancelled (its chain was written off)      |
+//! | `barrier_timeout`      | exchange timeout sweep      | barrier gave up waiting on a deme's epoch     |
+//! | `host_quarantined`     | `ServerCore::request_work`  | work refused: host inside reliability probation |
+//!
+//! # Causality ids
+//!
+//! Every record carries two optional causality ids: the host id (for
+//! per-host timelines: `Trace::for_host`) and the `(deme, epoch)`
+//! coordinate (for per-barrier timelines: `Trace::for_coord`). Records
+//! are additionally stamped with a monotonically increasing `seq` so
+//! same-virtual-time events keep a total order.
+//!
+//! # Payload neutrality
+//!
+//! Recording is strictly write-only bookkeeping behind `&self`: no code
+//! in the payload path ever reads the ring back, and the buffer is
+//! disabled (capacity 0) unless explicitly enabled, so tracing cannot
+//! change a canonical payload byte (`tests/observability.rs` proves
+//! this end-to-end).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+
+/// A typed WU-lifecycle / barrier event. See the module docs for the
+/// full vocabulary and who records what.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    Generated { wu: u64 },
+    Dispatched { wu: u64, result: u64 },
+    Executed { wu: u64, result: u64, ok: bool },
+    Expired { wu: u64, result: u64 },
+    Validated { wu: u64, result: u64, valid: bool },
+    Assimilated { wu: u64 },
+    Banked { wu: u64, emigrants: usize },
+    EmigrantQuarantined { wu: u64 },
+    Released { wu: u64, immigrants: usize },
+    Boosted { wu: u64 },
+    Cancelled { wu: u64 },
+    BarrierTimeout { wu: u64 },
+    HostQuarantined,
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Generated { .. } => "generated",
+            TraceEvent::Dispatched { .. } => "dispatched",
+            TraceEvent::Executed { .. } => "executed",
+            TraceEvent::Expired { .. } => "expired",
+            TraceEvent::Validated { .. } => "validated",
+            TraceEvent::Assimilated { .. } => "assimilated",
+            TraceEvent::Banked { .. } => "banked",
+            TraceEvent::EmigrantQuarantined { .. } => "emigrant_quarantined",
+            TraceEvent::Released { .. } => "released",
+            TraceEvent::Boosted { .. } => "boosted",
+            TraceEvent::Cancelled { .. } => "cancelled",
+            TraceEvent::BarrierTimeout { .. } => "barrier_timeout",
+            TraceEvent::HostQuarantined => "host_quarantined",
+        }
+    }
+
+    fn fields(&self, j: Json) -> Json {
+        match *self {
+            TraceEvent::Generated { wu }
+            | TraceEvent::Assimilated { wu }
+            | TraceEvent::EmigrantQuarantined { wu }
+            | TraceEvent::Boosted { wu }
+            | TraceEvent::Cancelled { wu }
+            | TraceEvent::BarrierTimeout { wu } => j.set("wu", wu),
+            TraceEvent::Dispatched { wu, result } | TraceEvent::Expired { wu, result } => {
+                j.set("wu", wu).set("result", result)
+            }
+            TraceEvent::Executed { wu, result, ok } => j.set("wu", wu).set("result", result).set("ok", ok),
+            TraceEvent::Validated { wu, result, valid } => j.set("wu", wu).set("result", result).set("valid", valid),
+            TraceEvent::Banked { wu, emigrants } => j.set("wu", wu).set("emigrants", emigrants),
+            TraceEvent::Released { wu, immigrants } => j.set("wu", wu).set("immigrants", immigrants),
+            TraceEvent::HostQuarantined => j,
+        }
+    }
+}
+
+/// One ring-buffer record: virtual time + total-order seq + causality
+/// ids + the typed event.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceRecord {
+    /// DES virtual time (seconds) the event happened at.
+    pub vt: f64,
+    /// Monotonic sequence number (total order within a run).
+    pub seq: u64,
+    /// Per-host causality id (None for server-internal events).
+    pub host: Option<u64>,
+    /// Per-(deme, epoch) causality id (None outside island campaigns).
+    pub coord: Option<(usize, usize)>,
+    pub event: TraceEvent,
+}
+
+impl TraceRecord {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj().set("vt", self.vt).set("seq", self.seq).set("event", self.event.kind());
+        if let Some(h) = self.host {
+            j = j.set("host", h);
+        }
+        if let Some((d, e)) = self.coord {
+            j = j.set("deme", d).set("epoch", e);
+        }
+        self.event.fields(j)
+    }
+}
+
+#[derive(Default)]
+struct Ring {
+    cap: usize,
+    next_seq: u64,
+    dropped: u64,
+    buf: VecDeque<TraceRecord>,
+}
+
+/// Bounded, thread-safe trace ring. Disabled (capacity 0) by default;
+/// `record` is a cheap early-return until `enable` is called. Interior
+/// mutability (`&self`) so shared-ref stages like the exchange's
+/// bank pass can record.
+#[derive(Default)]
+pub struct Trace {
+    enabled: AtomicBool,
+    inner: Mutex<Ring>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    /// Turn tracing on with a ring capacity (oldest records are dropped
+    /// — and counted — once the ring is full).
+    pub fn enable(&self, capacity: usize) {
+        let mut r = self.inner.lock().unwrap();
+        r.cap = capacity;
+        self.enabled.store(capacity > 0, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one event at virtual time `vt`. No-op while disabled.
+    pub fn record(&self, vt: f64, host: Option<u64>, coord: Option<(usize, usize)>, event: TraceEvent) {
+        if !self.is_enabled() {
+            return;
+        }
+        let mut r = self.inner.lock().unwrap();
+        let seq = r.next_seq;
+        r.next_seq += 1;
+        if r.buf.len() == r.cap {
+            r.buf.pop_front();
+            r.dropped += 1;
+        }
+        r.buf.push_back(TraceRecord { vt, seq, host, coord, event });
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total records evicted from the full ring.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    /// Total records ever recorded (including since-evicted ones).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Snapshot of the ring contents, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        self.inner.lock().unwrap().buf.iter().cloned().collect()
+    }
+
+    /// Per-host timeline (causality id filter).
+    pub fn for_host(&self, host: u64) -> Vec<TraceRecord> {
+        self.records().into_iter().filter(|r| r.host == Some(host)).collect()
+    }
+
+    /// Per-(deme, epoch) timeline (causality id filter).
+    pub fn for_coord(&self, deme: usize, epoch: usize) -> Vec<TraceRecord> {
+        self.records().into_iter().filter(|r| r.coord == Some((deme, epoch))).collect()
+    }
+
+    /// Canonical JSON summary: counts plus the most recent `keep`
+    /// records (the ring tail).
+    pub fn to_json(&self, keep: usize) -> Json {
+        let recs = self.records();
+        let tail = recs.len().saturating_sub(keep);
+        Json::obj()
+            .set("enabled", self.is_enabled())
+            .set("recorded", self.recorded())
+            .set("dropped", self.dropped())
+            .set("recent", Json::Arr(recs[tail..].iter().map(TraceRecord::to_json).collect()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_ring_records_nothing() {
+        let t = Trace::new();
+        t.record(1.0, Some(1), None, TraceEvent::Generated { wu: 7 });
+        assert!(t.is_empty());
+        assert_eq!(t.recorded(), 0);
+    }
+
+    #[test]
+    fn ring_bounds_and_drop_count() {
+        let t = Trace::new();
+        t.enable(3);
+        for i in 0..5u64 {
+            t.record(i as f64, None, None, TraceEvent::Generated { wu: i });
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.dropped(), 2);
+        assert_eq!(t.recorded(), 5);
+        let recs = t.records();
+        assert_eq!(recs[0].seq, 2, "oldest two evicted");
+        assert_eq!(recs[2].vt, 4.0);
+    }
+
+    #[test]
+    fn causality_filters() {
+        let t = Trace::new();
+        t.enable(16);
+        t.record(1.0, Some(3), Some((0, 1)), TraceEvent::Dispatched { wu: 9, result: 1 });
+        t.record(2.0, Some(4), Some((1, 1)), TraceEvent::Dispatched { wu: 10, result: 2 });
+        t.record(3.0, Some(3), Some((0, 1)), TraceEvent::Executed { wu: 9, result: 1, ok: true });
+        assert_eq!(t.for_host(3).len(), 2);
+        assert_eq!(t.for_coord(0, 1).len(), 2);
+        assert_eq!(t.for_coord(1, 1).len(), 1);
+        assert_eq!(t.for_host(99).len(), 0);
+    }
+
+    #[test]
+    fn json_has_vocabulary_kinds() {
+        let t = Trace::new();
+        t.enable(8);
+        t.record(5.0, Some(1), Some((0, 0)), TraceEvent::Banked { wu: 2, emigrants: 3 });
+        t.record(6.0, None, Some((0, 1)), TraceEvent::Released { wu: 4, immigrants: 2 });
+        let j = t.to_json(8);
+        let s = j.to_string();
+        assert!(s.contains("\"event\":\"banked\""));
+        assert!(s.contains("\"immigrants\":2"));
+        assert!(s.contains("\"deme\":0"));
+        assert_eq!(j.get("recorded").unwrap().as_u64().unwrap(), 2);
+    }
+}

@@ -239,7 +239,7 @@ impl Runtime {
         match Runtime::load(&dir) {
             Ok(rt) => Some(rt),
             Err(e) => {
-                eprintln!("warning: artifacts present at {dir}/ but failed to load: {e:#}");
+                crate::log_warn!("artifacts present at {dir}/ but failed to load: {e:#}");
                 None
             }
         }

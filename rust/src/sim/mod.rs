@@ -32,6 +32,7 @@ use crate::boinc::exchange::MigrationExchange;
 use crate::boinc::server::{ServerConfig, ServerCore};
 use crate::boinc::workunit::WorkUnit;
 use crate::churn::{ComputingPower, SimHost};
+use crate::metrics::{Counter, Gauge};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
@@ -51,6 +52,10 @@ pub struct SimConfig {
     pub tick_interval: f64,
     /// hard stop (safety), virtual seconds
     pub max_virtual_time: f64,
+    /// WU-lifecycle trace ring capacity (`crate::metrics::trace`);
+    /// 0 keeps tracing off. Tracing is payload-neutral — enabling it
+    /// cannot change a canonical payload byte (tests prove it).
+    pub trace_capacity: usize,
 }
 
 impl Default for SimConfig {
@@ -60,6 +65,7 @@ impl Default for SimConfig {
             transfer_overhead: 30.0,
             tick_interval: 600.0,
             max_virtual_time: 120.0 * 86400.0,
+            trace_capacity: 0,
         }
     }
 }
@@ -145,8 +151,12 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(cfg: SimConfig, server_cfg: ServerConfig, hosts: Vec<SimHost>, seed: u64) -> Self {
+        let core = ServerCore::new(server_cfg);
+        if cfg.trace_capacity > 0 {
+            core.trace.enable(cfg.trace_capacity);
+        }
         Simulation {
-            core: ServerCore::new(server_cfg),
+            core,
             host_ids: vec![0; hosts.len()],
             attached: vec![false; hosts.len()],
             active: vec![0; hosts.len()],
@@ -252,6 +262,8 @@ impl Simulation {
                 }
                 Ev::Depart(i) => {
                     self.attached[i] = false;
+                    let n = self.attached.iter().filter(|&&a| a).count();
+                    self.core.metrics.set_gauge(Gauge::HostsAttached, n as f64);
                     // in-flight work is silently lost; the server's
                     // deadline pass turns it into NO_REPLY later
                 }
@@ -315,8 +327,8 @@ impl Simulation {
                                         // failure is an infrastructure bug
                                         // (bad spec / missing artifacts),
                                         // not simulated churn
-                                        eprintln!("sim: WU execution failed: {e:#}");
-                                        self.core.metrics.inc("sim.executor_failure");
+                                        crate::log_warn!("sim: WU execution failed: {e:#}");
+                                        self.core.metrics.inc(Counter::SimExecutorFailure);
                                         None
                                     }
                                     None => None,
@@ -375,9 +387,9 @@ impl Simulation {
             attached_hosts: self.hosts.len(),
             cp_gflops: cp.gflops(),
             completions,
-            client_errors: self.core.metrics.counter("result.client_error"),
-            no_replies: self.core.metrics.counter("result.no_reply"),
-            executor_failures: self.core.metrics.counter("sim.executor_failure"),
+            client_errors: self.core.metrics.get(Counter::ResultClientError),
+            no_replies: self.core.metrics.get(Counter::ResultNoReply),
+            executor_failures: self.core.metrics.get(Counter::SimExecutorFailure),
         }
     }
 }

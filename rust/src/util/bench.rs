@@ -69,10 +69,10 @@ impl Bench {
             std_ns: stats::std(&samples),
             min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
         };
-        println!(
+        crate::metrics::dashboard::emit(&format!(
             "bench {:<44} {:>12.0} ns/iter (±{:>10.0}, min {:>12.0}, n={})",
             res.name, res.mean_ns, res.std_ns, res.min_ns, res.iters
-        );
+        ));
         res
     }
 
@@ -80,7 +80,7 @@ impl Bench {
     pub fn run_throughput<F: FnMut()>(&self, name: &str, units: f64, unit_name: &str, f: F) -> BenchResult {
         let res = self.run(name, f);
         let per_sec = units * res.per_sec();
-        println!("      {:<44} {per_sec:>14.3e} {unit_name}/s", "");
+        crate::metrics::dashboard::emit(&format!("      {:<44} {per_sec:>14.3e} {unit_name}/s", ""));
         res
     }
 }
@@ -117,6 +117,20 @@ impl BenchRecord {
             .set("scheduler", self.scheduler.as_str())
             .set("lanes", self.lanes as u64)
             .set("evals_per_sec", self.evals_per_sec)
+    }
+
+    /// Parse one trajectory entry (a missing `kernel` means `"bool"` —
+    /// pre-PR-4 entries predate the field). Used by `vgp dashboard` to
+    /// re-export `BENCH_hotpath.json` as metrics rows.
+    pub fn from_json(j: &Json) -> anyhow::Result<BenchRecord> {
+        Ok(BenchRecord {
+            pr: j.str_of("pr")?.to_string(),
+            kernel: j.get("kernel").and_then(Json::as_str).unwrap_or("bool").to_string(),
+            threads: j.u64_of("threads")? as usize,
+            scheduler: j.str_of("scheduler")?.to_string(),
+            lanes: j.u64_of("lanes")? as usize,
+            evals_per_sec: j.f64_of("evals_per_sec")?,
+        })
     }
 }
 
@@ -193,25 +207,34 @@ impl Table {
         self.rows.push(cells.to_vec());
     }
 
-    pub fn print(&self) {
+    /// Render the table as markdown-style text (one trailing newline).
+    pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
                 widths[i] = widths[i].max(c.chars().count());
             }
         }
+        let mut out = String::new();
         let line = |f: &dyn Fn(usize) -> String| {
             let cells: Vec<String> = (0..widths.len()).map(f).collect();
-            println!("| {} |", cells.join(" | "));
+            format!("| {} |\n", cells.join(" | "))
         };
-        line(&|i| format!("{:<w$}", self.headers[i], w = widths[i]));
-        println!(
-            "|{}|",
+        out.push_str(&line(&|i| format!("{:<w$}", self.headers[i], w = widths[i])));
+        out.push_str(&format!(
+            "|{}|\n",
             widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
-        );
+        ));
         for row in &self.rows {
             let row = row.clone();
-            line(&|i| format!("{:<w$}", row[i], w = widths[i]));
+            out.push_str(&line(&|i| format!("{:<w$}", row[i], w = widths[i])));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        for line in self.render().lines() {
+            crate::metrics::dashboard::emit(line);
         }
     }
 }
@@ -241,6 +264,30 @@ mod tests {
         t.row(&["22".into(), "yy".into()]);
         t.print(); // visual; just must not panic
         assert_eq!(t.rows.len(), 2);
+        let r = t.render();
+        assert_eq!(r.lines().count(), 4, "header + rule + 2 rows");
+        assert!(r.contains("| 22 | yy |"));
+    }
+
+    #[test]
+    fn bench_record_json_roundtrip() {
+        let rec = BenchRecord {
+            pr: "pr7".into(),
+            kernel: "reg".into(),
+            threads: 8,
+            scheduler: "steal".into(),
+            lanes: 8,
+            evals_per_sec: 2.5e6,
+        };
+        let back = BenchRecord::from_json(&rec.to_json()).unwrap();
+        assert_eq!(back.pr, "pr7");
+        assert_eq!(back.threads, 8);
+        // pre-PR-4 entries: missing kernel reads as "bool"
+        let legacy = Json::parse(
+            r#"{"evals_per_sec":410000,"lanes":1,"pr":"pr3-est","scheduler":"static","threads":1}"#,
+        )
+        .unwrap();
+        assert_eq!(BenchRecord::from_json(&legacy).unwrap().kernel, "bool");
     }
 
     #[test]

@@ -42,6 +42,12 @@ macro_rules! log_debug {
         if $crate::util::log::level() >= 3 { $crate::util::log::emit("DEBUG", format_args!($($t)*)) }
     };
 }
+#[macro_export]
+macro_rules! log_trace {
+    ($($t:tt)*) => {
+        if $crate::util::log::level() >= 4 { $crate::util::log::emit("TRACE", format_args!($($t)*)) }
+    };
+}
 
 #[cfg(test)]
 mod tests {
@@ -51,6 +57,9 @@ mod tests {
         super::set_level(4);
         assert_eq!(super::level(), 4);
         log_debug!("visible at level 4: {}", 42);
+        log_trace!("visible at level 4: {}", 43);
+        super::set_level(3);
+        log_trace!("suppressed at level 3: {}", 44);
         super::set_level(old);
     }
 }

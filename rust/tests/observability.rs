@@ -1,0 +1,195 @@
+//! Observability acceptance: the fleet-observability layer (typed
+//! metrics, WU-lifecycle trace, fleet snapshots, dashboard) is
+//! **payload-neutral** — turning all of it on must not change a single
+//! canonical payload byte or campaign fingerprint:
+//!
+//! * driving the same island campaign with the trace ring off and on
+//!   (capacity 4096) yields byte-identical assimilated payloads, at
+//!   worker thread counts 1 and 8, on both execution paths (Method 1
+//!   native; Method 2 artifact, when artifacts are built);
+//! * a full DES run with tracing on reproduces the traced-off run's
+//!   makespan, exchange stats and merged best bit for bit;
+//! * the end-of-campaign snapshot schema-validates and the dashboard
+//!   renders host/campaign/exchange views from it, with the CI smoke
+//!   counters (`result.dispatched`, `result.valid`,
+//!   `exchange.released`) nonzero.
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::exchange::MigrationExchange;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::churn::PoolParams;
+use vgp::coordinator::{exec, simulate_island_campaign, IslandCampaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::metrics::dashboard;
+use vgp::metrics::snapshot::FleetSnapshot;
+use vgp::runtime::Runtime;
+use vgp::sim::SimConfig;
+use vgp::util::json::Json;
+
+fn campaign(name: &str, demes: usize, epochs: usize) -> IslandCampaign {
+    let mut c = IslandCampaign::new(name, ProblemKind::Mux6, demes, epochs, 4, 60);
+    c.migration_k = 2;
+    c.seed = 5;
+    c
+}
+
+fn host(name: &str) -> HostRow {
+    HostRow {
+        id: 0,
+        name: name.into(),
+        city: "lab".into(),
+        flops: 1e9,
+        ncpus: 2,
+        on_frac: 1.0,
+        active_frac: 1.0,
+        registered_at: 0.0,
+        last_heartbeat: 0.0,
+        error_results: 0,
+        valid_results: 0,
+        consecutive_errors: 0,
+        last_error_at: 0.0,
+        in_flight: 0,
+        credit: 0.0,
+    }
+}
+
+/// Drive a campaign against `ServerCore` + exchange by hand; `trace`
+/// toggles the WU-lifecycle ring. Returns the name-sorted
+/// "wu_name payload" lines — the full content fingerprint.
+fn drive(
+    c: &IslandCampaign,
+    threads: usize,
+    trace: bool,
+    exec_fn: &dyn Fn(&Json) -> Json,
+) -> Vec<String> {
+    let mut c = c.clone();
+    c.threads = threads;
+    let mut core = ServerCore::new(ServerConfig::default());
+    if trace {
+        core.trace.enable(4096);
+    }
+    let mut ex = MigrationExchange::new(c.exchange_config());
+    ex.install(&mut core, c.workunits());
+    let hosts: Vec<u64> = (0..4).map(|i| core.register_host(host(&format!("h{i}")))).collect();
+    let mut now = 0.0;
+    for _round in 0..1000 {
+        now += 60.0;
+        ex.poll(&mut core, now);
+        let mut done: Vec<(u64, Json)> = Vec::new();
+        for &h in &hosts {
+            while let Some((rid, wu, _sig)) = core.request_work(h, now) {
+                done.push((rid, exec_fn(&wu.spec)));
+            }
+        }
+        for (rid, payload) in done {
+            core.report_success(rid, now, 1.0, payload);
+        }
+        ex.poll(&mut core, now);
+        if core.is_complete() {
+            break;
+        }
+    }
+    assert!(core.is_complete(), "campaign must finish");
+    if trace {
+        assert!(!core.trace.is_empty(), "an enabled trace must actually record events");
+    } else {
+        assert!(core.trace.is_empty(), "a disabled trace must stay empty");
+    }
+    let mut lines: Vec<String> =
+        core.assimilated().iter().map(|a| format!("{} {}", a.wu_name, a.payload)).collect();
+    lines.sort();
+    lines
+}
+
+#[test]
+fn tracing_is_payload_neutral_on_the_native_path_at_threads_1_and_8() {
+    let c = campaign("neutral", 3, 3);
+    let native = |spec: &Json| exec::run_island_wu_native(spec).unwrap();
+    let base = drive(&c, 1, false, &native);
+    assert!(!base.is_empty());
+    for threads in [1usize, 8] {
+        let traced = drive(&c, threads, true, &native);
+        assert_eq!(base, traced, "threads={threads}: tracing must not change a payload byte");
+    }
+}
+
+#[test]
+fn tracing_is_payload_neutral_on_the_artifact_path() {
+    // same gate as tests/runtime_artifacts.rs: Method 2 needs the AOT
+    // artifact bundle on disk
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = Runtime::load("artifacts").expect("runtime load");
+    let mut c = campaign("neutral_art", 2, 2);
+    c.path = exec::ExecPath::Artifact;
+    let art = |spec: &Json| exec::run_wu_auto_rt(Some(&rt), spec).unwrap();
+    let base = drive(&c, 1, false, &art);
+    assert!(!base.is_empty());
+    for threads in [1usize, 8] {
+        let traced = drive(&c, threads, true, &art);
+        assert_eq!(base, traced, "threads={threads}: artifact-path payloads must be trace-independent");
+    }
+}
+
+#[test]
+fn full_sim_with_tracing_reproduces_the_untraced_campaign_fingerprint() {
+    let c = campaign("simneutral", 3, 3);
+    let pool = PoolParams::lab(8);
+    let quiet = simulate_island_campaign(&c, &pool, &[("lab", 8)], SimConfig::default(), 9);
+    let traced = simulate_island_campaign(
+        &c,
+        &pool,
+        &[("lab", 8)],
+        SimConfig { trace_capacity: 4096, ..SimConfig::default() },
+        9,
+    );
+    // time, content and exchange trajectory are all bit-identical
+    assert_eq!(
+        quiet.outcome.makespan.to_bits(),
+        traced.outcome.makespan.to_bits(),
+        "tracing must not perturb the DES schedule"
+    );
+    assert_eq!(quiet.outcome.completed, traced.outcome.completed);
+    assert_eq!(quiet.stats, traced.stats, "exchange stats must match");
+    let (qb, tb) = (quiet.best.expect("best"), traced.best.expect("best"));
+    assert_eq!(qb.raw.to_bits(), tb.raw.to_bits(), "merged best fitness must match");
+    assert_eq!(qb.tree.to_json().to_string(), tb.tree.to_json().to_string(), "merged best tree must match");
+    // the only permitted difference: the traced run carries records
+    let quiet_snap = FleetSnapshot::from_json(&quiet.snapshot).expect("schema-valid snapshot");
+    let traced_snap = FleetSnapshot::from_json(&traced.snapshot).expect("schema-valid snapshot");
+    assert_eq!(quiet_snap.trace.u64_of("recorded").unwrap(), 0);
+    assert!(traced_snap.trace.u64_of("recorded").unwrap() > 0);
+}
+
+#[test]
+fn dashboard_renders_a_real_sim_snapshot_and_the_smoke_gate_passes() {
+    let c = campaign("dash", 2, 2);
+    let r = simulate_island_campaign(
+        &c,
+        &PoolParams::lab(6),
+        &[("lab", 6)],
+        SimConfig { trace_capacity: 512, ..SimConfig::default() },
+        3,
+    );
+    let snap = FleetSnapshot::from_json(&r.snapshot).expect("schema-valid snapshot");
+    // the CI observability-smoke assertion: a live campaign has
+    // dispatched, validated and released work
+    dashboard::require_nonzero(
+        &snap,
+        &["wu.submitted", "result.dispatched", "result.valid", "exchange.released"],
+    )
+    .expect("campaign counters must be nonzero");
+    let text = dashboard::render(&snap);
+    assert!(text.contains("== hosts =="), "host view:\n{text}");
+    assert!(text.contains("== campaign 2 demes x 2 epochs"), "campaign view:\n{text}");
+    assert!(text.contains("== exchange =="), "exchange view:\n{text}");
+    assert!(text.contains("result.dispatched"), "counter rows:\n{text}");
+    assert!(text.contains("== trace =="), "trace tail:\n{text}");
+    // every deme ends banked in a completed campaign
+    let campaign_view = snap.campaign.as_ref().expect("island campaign view");
+    for d in 0..campaign_view.demes {
+        assert_eq!(campaign_view.count(d, "banked"), campaign_view.epochs, "deme {d} fully banked");
+    }
+}
