@@ -153,6 +153,17 @@ impl Db {
         &self.in_progress
     }
 
+    /// Ground truth for the per-host `in_flight` counter: how many
+    /// results are actually `InProgress` on this host right now. The
+    /// property suite asserts `HostRow::in_flight` never drifts from
+    /// this under any request/report/tick/boost interleaving.
+    pub fn in_progress_for_host(&self, host_id: u64) -> usize {
+        self.results
+            .values()
+            .filter(|r| r.server_state == ServerState::InProgress && r.host_id == host_id)
+            .count()
+    }
+
     pub fn sweep_in_progress(&mut self) {
         let results = &self.results;
         self.in_progress

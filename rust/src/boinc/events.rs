@@ -1,0 +1,900 @@
+//! The pure functional server core:
+//! `apply(&mut CoreState, Event) -> Vec<Effect>`.
+//!
+//! Every transition the scheduler / transitioner / validator /
+//! assimilator can make is expressed as an [`Event`] applied to
+//! [`CoreState`] (the DB tables + config + assimilation log), returning
+//! [`Effect`]s — metrics, trace records and data markers — **as data**.
+//! The imperative shells ([`super::server::ServerCore`],
+//! [`super::exchange::MigrationExchange`]) append each public-API event
+//! to the write-ahead log ([`super::wal`]) *before* applying it, then
+//! interpret the effects at the edge — so observability wiring is
+//! effect interpretation, not logic, and a crashed server replays its
+//! log back to the exact pre-crash state.
+//!
+//! # Event vocabulary
+//!
+//! | event            | origin                          | semantics                                   |
+//! |------------------|---------------------------------|---------------------------------------------|
+//! | `SubmitWu`       | campaign intake                 | insert WU (+ initial replicas unless held)  |
+//! | `InstallIsland`  | `MigrationExchange::install`    | `SubmitWu` + `(deme, epoch)` binding        |
+//! | `RegisterHost`   | host attach RPC                 | upsert host row                             |
+//! | `Heartbeat`      | any host RPC                    | liveness timestamp                          |
+//! | `RequestWork`    | scheduler RPC                   | reliability gate + feeder scan + dispatch   |
+//! | `ReportSuccess`  | client upload                   | validate/assimilate via the transitioner    |
+//! | `ReportError`    | client upload                   | reliability bookkeeping + transitioner      |
+//! | `Tick`           | transitioner cadence            | deadline expiry sweep                       |
+//! | `Release`        | exchange barrier open           | un-hold a WU with a patched spec            |
+//! | `Boost`          | exchange straggler race         | +1 racing replica on a distinct host        |
+//! | `Cancel`         | exchange dead-chain sweep       | poison a WU that can never run              |
+//! | `Poll`           | `MigrationExchange::poll`       | marker: exchange stages re-run on replay    |
+//!
+//! `Poll` carries no core transition of its own: the exchange's stages
+//! (bank / cancel / boost / release) are deterministic functions of
+//! core state plus the exchange's books, and they route every core
+//! mutation back through `apply` as `Cancel`/`Boost`/`Release` events
+//! (applied, not re-logged — the logged `Poll` already implies them).
+//!
+//! # Determinism
+//!
+//! `apply` reads no clock, no RNG and does no I/O. The same initial
+//! state and event sequence produce byte-identical state *and*
+//! byte-identical effect order, so a WAL replay regenerates the metrics
+//! registry and the trace ring (including `seq` stamps) exactly —
+//! proven by `tests/wal_replay.rs` at every kill index.
+//!
+//! # Deadline boundary rule (pinned)
+//!
+//! [`Event::Tick`] expires a replica only when `deadline < now` —
+//! **strictly** past it. A report arriving at exactly `now == deadline`
+//! therefore beats the expiry regardless of caller order:
+//! report-then-tick succeeds trivially, and tick-then-report leaves the
+//! replica `InProgress` for the report to claim. DES fingerprints
+//! cannot flip on the boundary.
+
+use crate::metrics::trace::TraceEvent;
+use crate::metrics::{Counter, Gauge, Hist};
+use crate::util::json::Json;
+
+use super::db::{Db, HostRow};
+use super::server::{Assimilated, ServerConfig};
+use super::signature::sha256_hex;
+use super::workunit::{Outcome, ResultRecord, ServerState, ValidateState, WorkUnit};
+
+/// Everything the pure core may read or write: the relational tables,
+/// the tuning knobs and the assimilation log. Borrowed from the owning
+/// [`super::server::ServerCore`] for the duration of one `apply`.
+pub struct CoreState<'a> {
+    pub db: &'a mut Db,
+    pub cfg: &'a ServerConfig,
+    pub assimilated: &'a mut Vec<Assimilated>,
+}
+
+/// One input to the state machine. See the module docs for the full
+/// vocabulary; [`Event::to_json`] / [`Event::from_json`] define the
+/// WAL wire shape (canonical JSON, one record per line).
+#[derive(Clone, Debug)]
+pub enum Event {
+    SubmitWu { wu: WorkUnit },
+    /// [`Event::SubmitWu`] plus the `(deme, epoch)` coordinate binding
+    /// the exchange needs to rebuild its WU-id books on replay.
+    InstallIsland { deme: usize, epoch: usize, wu: WorkUnit },
+    RegisterHost { host: HostRow },
+    Heartbeat { host_id: u64, now: f64 },
+    RequestWork { host_id: u64, now: f64 },
+    ReportSuccess { result_id: u64, now: f64, cpu_time: f64, payload: Json },
+    ReportError { result_id: u64, now: f64 },
+    Tick { now: f64 },
+    Release { wu_id: u64, spec: Json },
+    Boost { wu_id: u64 },
+    Cancel { wu_id: u64 },
+    /// Exchange poll marker: `apply` is a no-op; on replay the exchange
+    /// shell re-runs its stages at this point in the sequence.
+    Poll { now: f64 },
+}
+
+/// One output of the state machine. The first group is interpreted at
+/// the shell edge (metrics registry + trace ring); the second group is
+/// pure data markers the calling shell reads back (return values,
+/// exchange bookkeeping) — no-ops in the interpreter.
+#[derive(Clone, Debug)]
+pub enum Effect {
+    MetricInc(Counter),
+    MetricObserve(Hist, f64),
+    GaugeSet(Gauge, f64),
+    TraceEmit { vt: f64, host: Option<u64>, coord: Option<(usize, usize)>, event: TraceEvent },
+    /// A WU was inserted (carries the assigned id).
+    Submitted { wu: u64 },
+    /// A host row was upserted (carries the assigned id).
+    Registered { host: u64 },
+    /// A result replica was handed to a host.
+    Dispatch { host: u64, wu: u64, result: u64 },
+    /// The validator judged a replica against the quorum.
+    Validate { wu: u64, result: u64, valid: bool },
+    /// The canonical payload was banked into the assimilation log.
+    Assimilate { wu: u64 },
+    /// The transitioner created a fresh replica to re-reach quorum.
+    Reissue { wu: u64, result: u64 },
+    /// Work was refused: the host is inside reliability probation.
+    Quarantine { host: u64 },
+    /// A held WU was released with its patched spec.
+    ReleaseHeld { wu: u64 },
+    /// A racing replica was added ([`Event::Boost`] succeeded).
+    Boosted { wu: u64, result: u64 },
+}
+
+/// Apply one event to the core state, returning the effects in
+/// emission order. Pure: no clock, no RNG, no I/O.
+pub fn apply(s: &mut CoreState<'_>, ev: Event) -> Vec<Effect> {
+    match ev {
+        Event::SubmitWu { wu } | Event::InstallIsland { wu, .. } => submit_wu(s, wu),
+        Event::RegisterHost { host } => register_host(s, host),
+        Event::Heartbeat { host_id, now } => heartbeat(s, host_id, now),
+        Event::RequestWork { host_id, now } => request_work(s, host_id, now),
+        Event::ReportSuccess { result_id, now, cpu_time, payload } => {
+            report_success(s, result_id, now, cpu_time, payload)
+        }
+        Event::ReportError { result_id, now } => report_error(s, result_id, now),
+        Event::Tick { now } => tick(s, now),
+        Event::Release { wu_id, spec } => release_wu(s, wu_id, spec),
+        Event::Boost { wu_id } => boost_wu(s, wu_id),
+        Event::Cancel { wu_id } => cancel_wu(s, wu_id),
+        Event::Poll { .. } => Vec::new(),
+    }
+}
+
+/// The WU id a successful submit carries ([`Effect::Submitted`]).
+pub fn submitted_id(fx: &[Effect]) -> Option<u64> {
+    fx.iter().find_map(|f| match f {
+        Effect::Submitted { wu } => Some(*wu),
+        _ => None,
+    })
+}
+
+/// The host id a register carries ([`Effect::Registered`]).
+pub fn registered_id(fx: &[Effect]) -> Option<u64> {
+    fx.iter().find_map(|f| match f {
+        Effect::Registered { host } => Some(*host),
+        _ => None,
+    })
+}
+
+/// The `(result, wu)` pair a dispatch carries ([`Effect::Dispatch`]).
+pub fn dispatched(fx: &[Effect]) -> Option<(u64, u64)> {
+    fx.iter().find_map(|f| match f {
+        Effect::Dispatch { result, wu, .. } => Some((*result, *wu)),
+        _ => None,
+    })
+}
+
+/// Did a [`Event::Boost`] actually add a replica?
+pub fn boosted(fx: &[Effect]) -> bool {
+    fx.iter().any(|f| matches!(f, Effect::Boosted { .. }))
+}
+
+/// Pull the island `(deme, epoch)` causality id out of a WU spec, if
+/// the WU belongs to an island campaign.
+fn coord_of(spec: &Json) -> Option<(usize, usize)> {
+    let d = spec.get("deme")?.as_u64()?;
+    let e = spec.get("epoch")?.as_u64()?;
+    Some((d as usize, e as usize))
+}
+
+/// Mirror the dispatch backlog into the in-flight gauge.
+fn gauge_in_flight(s: &CoreState<'_>) -> Effect {
+    Effect::GaugeSet(Gauge::ResultsInFlight, s.db.in_progress_ids().len() as f64)
+}
+
+fn submit_wu(s: &mut CoreState<'_>, wu: WorkUnit) -> Vec<Effect> {
+    let target = wu.target_nresults;
+    let held = wu.held;
+    let coord = coord_of(&wu.spec);
+    let id = s.db.insert_wu(wu);
+    if !held {
+        for _ in 0..target {
+            s.db.insert_result(ResultRecord::new(0, id));
+        }
+    }
+    vec![
+        Effect::MetricInc(Counter::WuSubmitted),
+        // submissions are campaign setup: generated at virtual time 0
+        Effect::TraceEmit { vt: 0.0, host: None, coord, event: TraceEvent::Generated { wu: id } },
+        Effect::Submitted { wu: id },
+    ]
+}
+
+fn release_wu(s: &mut CoreState<'_>, wu_id: u64, spec: Json) -> Vec<Effect> {
+    let target = {
+        let Some(w) = s.db.wu_mut(wu_id) else { return Vec::new() };
+        if !w.held {
+            return Vec::new();
+        }
+        w.held = false;
+        w.spec = spec;
+        w.target_nresults
+    };
+    for _ in 0..target {
+        s.db.insert_result(ResultRecord::new(0, wu_id));
+    }
+    vec![Effect::MetricInc(Counter::WuReleased), Effect::ReleaseHeld { wu: wu_id }]
+}
+
+fn boost_wu(s: &mut CoreState<'_>, wu_id: u64) -> Vec<Effect> {
+    let ok = match s.db.wu_mut(wu_id) {
+        Some(w) if !w.is_done() && !w.held => {
+            w.target_nresults += 1;
+            // keep the error-mask headroom invariant: a boost must
+            // not push an otherwise-healthy WU into too_many_total
+            w.max_total_results += 1;
+            true
+        }
+        _ => false,
+    };
+    if !ok {
+        return Vec::new();
+    }
+    let rid = s.db.insert_result(ResultRecord::new(0, wu_id));
+    vec![Effect::MetricInc(Counter::WuBoosted), Effect::Boosted { wu: wu_id, result: rid }]
+}
+
+fn cancel_wu(s: &mut CoreState<'_>, wu_id: u64) -> Vec<Effect> {
+    if let Some(w) = s.db.wu_mut(wu_id) {
+        if !w.is_done() {
+            w.error_mask.couldnt_send = true;
+            return vec![Effect::MetricInc(Counter::WuCancelled)];
+        }
+    }
+    Vec::new()
+}
+
+fn register_host(s: &mut CoreState<'_>, host: HostRow) -> Vec<Effect> {
+    let id = s.db.upsert_host(host);
+    vec![
+        Effect::MetricInc(Counter::HostRegistered),
+        Effect::GaugeSet(Gauge::HostsAttached, s.db.hosts.len() as f64),
+        Effect::Registered { host: id },
+    ]
+}
+
+fn heartbeat(s: &mut CoreState<'_>, host_id: u64, now: f64) -> Vec<Effect> {
+    if let Some(h) = s.db.host_mut(host_id) {
+        h.last_heartbeat = now;
+    }
+    vec![Effect::MetricInc(Counter::HostHeartbeat)]
+}
+
+fn request_work(s: &mut CoreState<'_>, host_id: u64, now: f64) -> Vec<Effect> {
+    // BUGFIX (PR 8): an unregistered host id used to fall through on a
+    // synthetic (1e9 FLOPS, unblocked, unsaturated) profile and walk
+    // away with a real WU whose in_flight bookkeeping nobody tracked.
+    // Refuse the RPC outright — a ghost doesn't heartbeat either.
+    if s.db.host(host_id).is_none() {
+        return vec![Effect::MetricInc(Counter::UnknownHostRefusal)];
+    }
+    let mut fx = heartbeat(s, host_id, now);
+    let (host_flops, blocked, saturated) = {
+        let h = s.db.host(host_id).expect("checked above");
+        let quarantined = h.consecutive_errors >= s.cfg.reliability_error_threshold
+            // post-probation, allow ONE probe task at a time: a
+            // still-suspect host must prove itself before it can fill
+            // all its cores again
+            && (now < h.last_error_at + s.cfg.reliability_probation || h.in_flight > 0);
+        (h.flops, quarantined, h.in_flight >= h.ncpus.max(1))
+    };
+    // reliability gate: a host failing its last N tasks in a row is
+    // quarantined; after the probation window it gets one probe task
+    // at a time (success resets the counter, an error re-arms it)
+    if blocked {
+        fx.push(Effect::MetricInc(Counter::HostUnreliableRefusal));
+        fx.push(Effect::TraceEmit {
+            vt: now,
+            host: Some(host_id),
+            coord: None,
+            event: TraceEvent::HostQuarantined,
+        });
+        fx.push(Effect::Quarantine { host: host_id });
+        return fx;
+    }
+    // per-core task model: one in-flight result per core (BOINC
+    // schedules one task per CPU), so multi-core volunteers queue
+    // up to ncpus concurrent WUs
+    if saturated {
+        return fx;
+    }
+    // redundancy must span distinct hosts (BOINC "one result per
+    // user per WU"); non-redundant WUs may be retried anywhere.
+    // Scan PAST replicas this host cannot take instead of bouncing
+    // on the queue head: a boosted race replica parked at the front
+    // must not starve the suspect host of every WU queued behind it
+    // (head-of-line blocking that could deadlock a degraded pool).
+    let mut bounced: Vec<u64> = Vec::new();
+    let mut picked: Option<(u64, u64)> = None;
+    while let Some(rid) = s.db.pop_unsent() {
+        let wu_id = s.db.result(rid).expect("result exists").wu_id;
+        let (done, redundant) = {
+            let w = s.db.wu(wu_id).expect("wu exists");
+            (w.is_done(), w.target_nresults > 1)
+        };
+        if done {
+            // a leftover race replica of an already-finished WU
+            // (the boosted straggler recovered first): retire it
+            // instead of dispatching dead work to a volunteer
+            if let Some(r) = s.db.result_mut(rid) {
+                r.server_state = ServerState::Over;
+            }
+            fx.push(Effect::MetricInc(Counter::ResultDidntNeed));
+            continue;
+        }
+        let already_here = redundant
+            && s.db
+                .results_of_wu(wu_id)
+                .iter()
+                .any(|r| r.host_id == host_id && r.server_state != ServerState::Unsent);
+        if already_here {
+            bounced.push(rid);
+        } else {
+            picked = Some((rid, wu_id));
+            break;
+        }
+    }
+    // bounced replicas return to the queue front in original order
+    for rid in bounced.into_iter().rev() {
+        s.db.push_unsent(rid);
+    }
+    let Some((rid, wu_id)) = picked else { return fx };
+    let (flops_est, delay_bound, coord) = {
+        let w = s.db.wu(wu_id).expect("wu exists");
+        (w.flops_est, w.delay_bound, coord_of(&w.spec))
+    };
+    let est = flops_est / host_flops.max(1e6);
+    let deadline = now + (s.cfg.deadline_slack * est).max(delay_bound);
+    {
+        let r = s.db.result_mut(rid).unwrap();
+        r.host_id = host_id;
+        r.server_state = ServerState::InProgress;
+        r.sent_at = now;
+        r.deadline = deadline;
+    }
+    if let Some(h) = s.db.host_mut(host_id) {
+        h.in_flight += 1;
+    }
+    s.db.mark_in_progress(rid);
+    fx.push(Effect::MetricInc(Counter::ResultDispatched));
+    fx.push(gauge_in_flight(s));
+    fx.push(Effect::TraceEmit {
+        vt: now,
+        host: Some(host_id),
+        coord,
+        event: TraceEvent::Dispatched { wu: wu_id, result: rid },
+    });
+    fx.push(Effect::Dispatch { host: host_id, wu: wu_id, result: rid });
+    fx
+}
+
+fn report_success(s: &mut CoreState<'_>, rid: u64, now: f64, cpu_time: f64, payload: Json) -> Vec<Effect> {
+    let late = match s.db.result(rid) {
+        None => return Vec::new(),
+        Some(r) if r.server_state != ServerState::InProgress => Some((r.wu_id, r.host_id)),
+        Some(_) => None,
+    };
+    // BUGFIX (PR 8): a late-but-valid success whose replica was already
+    // expired and reissued used to vanish with no metric or trace —
+    // wasted volunteer work the dashboard couldn't see. Account for it;
+    // the state stays untouched (terminal results are absorbing).
+    if let Some((wu_id, host_id)) = late {
+        let coord = s.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+        return vec![
+            Effect::MetricInc(Counter::ResultLateSuccess),
+            Effect::TraceEmit {
+                vt: now,
+                host: Some(host_id),
+                coord,
+                event: TraceEvent::LateReport { wu: wu_id, result: rid },
+            },
+        ];
+    }
+    let (wu_id, host_id, sent_at) = {
+        let r = s.db.result_mut(rid).expect("checked above");
+        r.server_state = ServerState::Over;
+        r.outcome = Outcome::Success;
+        r.received_at = now;
+        r.cpu_time = cpu_time;
+        r.payload_hash = sha256_hex(payload.to_string().as_bytes());
+        r.payload = Some(payload);
+        (r.wu_id, r.host_id, r.sent_at)
+    };
+    if let Some(h) = s.db.host_mut(host_id) {
+        h.consecutive_errors = 0; // success lifts the reliability block
+        h.in_flight = h.in_flight.saturating_sub(1);
+    }
+    let mut fx = vec![
+        Effect::MetricInc(Counter::ResultSuccess),
+        Effect::MetricObserve(Hist::WuTurnaround, now - sent_at),
+        Effect::MetricObserve(Hist::WuCpu, cpu_time),
+    ];
+    let coord = s.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+    fx.push(Effect::TraceEmit {
+        vt: now,
+        host: Some(host_id),
+        coord,
+        event: TraceEvent::Executed { wu: wu_id, result: rid, ok: true },
+    });
+    transition_wu(s, wu_id, now, &mut fx);
+    s.db.sweep_in_progress();
+    fx.push(gauge_in_flight(s));
+    fx
+}
+
+fn report_error(s: &mut CoreState<'_>, rid: u64, now: f64) -> Vec<Effect> {
+    let (wu_id, host_id) = {
+        let Some(r) = s.db.result_mut(rid) else { return Vec::new() };
+        if r.server_state != ServerState::InProgress {
+            // a late error has nothing left to account: the replica was
+            // already expired or retired (late *successes* are counted —
+            // see [`Event::ReportSuccess`])
+            return Vec::new();
+        }
+        r.server_state = ServerState::Over;
+        r.outcome = Outcome::ClientError;
+        r.received_at = now;
+        (r.wu_id, r.host_id)
+    };
+    if let Some(h) = s.db.host_mut(host_id) {
+        h.consecutive_errors += 1;
+        h.last_error_at = now;
+        h.in_flight = h.in_flight.saturating_sub(1);
+    }
+    let coord = s.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+    let mut fx = vec![
+        Effect::MetricInc(Counter::ResultClientError),
+        Effect::TraceEmit {
+            vt: now,
+            host: Some(host_id),
+            coord,
+            event: TraceEvent::Executed { wu: wu_id, result: rid, ok: false },
+        },
+    ];
+    transition_wu(s, wu_id, now, &mut fx);
+    s.db.sweep_in_progress();
+    fx.push(gauge_in_flight(s));
+    fx
+}
+
+fn tick(s: &mut CoreState<'_>, now: f64) -> Vec<Effect> {
+    // deadline boundary rule (pinned, PR 8): strictly-less-than, so a
+    // report at exactly `now == deadline` beats the expiry sweep in
+    // either caller order — see the module docs
+    let expired: Vec<u64> = s
+        .db
+        .in_progress_ids()
+        .iter()
+        .copied()
+        .filter(|id| {
+            s.db.result(*id)
+                .map(|r| r.server_state == ServerState::InProgress && r.deadline < now)
+                .unwrap_or(false)
+        })
+        .collect();
+    let mut fx = Vec::new();
+    for rid in expired {
+        let (wu_id, host_id) = {
+            let r = s.db.result_mut(rid).unwrap();
+            r.server_state = ServerState::Over;
+            r.outcome = Outcome::NoReply;
+            (r.wu_id, r.host_id)
+        };
+        if let Some(h) = s.db.host_mut(host_id) {
+            h.in_flight = h.in_flight.saturating_sub(1);
+        }
+        fx.push(Effect::MetricInc(Counter::ResultNoReply));
+        let coord = s.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
+        fx.push(Effect::TraceEmit {
+            vt: now,
+            host: Some(host_id),
+            coord,
+            event: TraceEvent::Expired { wu: wu_id, result: rid },
+        });
+        transition_wu(s, wu_id, now, &mut fx);
+    }
+    s.db.sweep_in_progress();
+    fx.push(gauge_in_flight(s));
+    fx.push(Effect::GaugeSet(Gauge::VirtualTime, now));
+    fx
+}
+
+/// The transitioner for one WU: validation, error masks, reissue.
+fn transition_wu(s: &mut CoreState<'_>, wu_id: u64, now: f64, fx: &mut Vec<Effect>) {
+    // copy only the scalar policy fields — cloning the whole WU
+    // (incl. the spec Json) on every report dominated the RPC
+    // profile (see EXPERIMENTS.md §Perf)
+    struct Policy {
+        min_quorum: usize,
+        max_error_results: usize,
+        max_total_results: usize,
+        flops_est: f64,
+        coord: Option<(usize, usize)>,
+    }
+    // held WUs are dependency-gated: no replicas exist yet and the
+    // exchange owns their lifecycle until release
+    let wu = match s.db.wu(wu_id) {
+        Some(w) if !w.is_done() && !w.held => Policy {
+            min_quorum: w.min_quorum,
+            max_error_results: w.max_error_results,
+            max_total_results: w.max_total_results,
+            flops_est: w.flops_est,
+            coord: coord_of(&w.spec),
+        },
+        _ => return,
+    };
+    let results = s.db.results_of_wu(wu_id);
+    let successes: Vec<(u64, u64, String, f64)> = results
+        .iter()
+        .filter(|r| r.outcome == Outcome::Success && r.validate_state != ValidateState::Invalid)
+        .map(|r| (r.id, r.host_id, r.payload_hash.clone(), r.received_at))
+        .collect();
+    let errors = results
+        .iter()
+        .filter(|r| {
+            matches!(r.outcome, Outcome::ClientError | Outcome::NoReply | Outcome::ValidateError)
+        })
+        .count();
+    let total = results.len();
+    let pending = results.iter().filter(|r| r.server_state != ServerState::Over).count();
+
+    // ---- validator: find a quorum of agreeing payload hashes
+    if successes.len() >= wu.min_quorum {
+        // BTreeMap so equal-size quorum groups tie-break on payload
+        // hash, not hasher iteration order (determinism contract)
+        let mut groups: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
+        for (i, su) in successes.iter().enumerate() {
+            groups.entry(su.2.as_str()).or_default().push(i);
+        }
+        if let Some((_, grp)) = groups
+            .iter()
+            .filter(|(_, g)| g.len() >= wu.min_quorum)
+            .max_by_key(|(_, g)| g.len())
+        {
+            // canonical result: earliest-received member of the group
+            let canon_idx = *grp
+                .iter()
+                .min_by(|&&a, &&b| successes[a].3.partial_cmp(&successes[b].3).unwrap())
+                .unwrap();
+            let canon = &successes[canon_idx];
+            let valid_ids: Vec<u64> = grp.iter().map(|&i| successes[i].0).collect();
+            let all_ids: Vec<u64> = successes.iter().map(|su| su.0).collect();
+            let credit = s.cfg.credit_per_gflop * wu.flops_est / 1e9;
+            for rid in &all_ids {
+                let valid = valid_ids.contains(rid);
+                let host_id = {
+                    let r = s.db.result_mut(*rid).unwrap();
+                    r.validate_state = if valid { ValidateState::Valid } else { ValidateState::Invalid };
+                    r.host_id
+                };
+                if let Some(h) = s.db.host_mut(host_id) {
+                    if valid {
+                        h.valid_results += 1;
+                        h.credit += credit;
+                    } else {
+                        h.error_results += 1;
+                    }
+                }
+                fx.push(Effect::MetricInc(if valid {
+                    Counter::ResultValid
+                } else {
+                    Counter::ResultInvalid
+                }));
+                fx.push(Effect::TraceEmit {
+                    vt: now,
+                    host: Some(host_id),
+                    coord: wu.coord,
+                    event: TraceEvent::Validated { wu: wu_id, result: *rid, valid },
+                });
+                fx.push(Effect::Validate { wu: wu_id, result: *rid, valid });
+            }
+            // ---- assimilator
+            let payload = s.db.result(canon.0).and_then(|r| r.payload.clone()).unwrap_or(Json::Null);
+            let wu_name = {
+                let w = s.db.wu_mut(wu_id).unwrap();
+                w.canonical_result = Some(canon.0);
+                w.assimilated = true;
+                w.name.clone()
+            };
+            s.assimilated.push(Assimilated {
+                wu_id,
+                wu_name,
+                result_id: canon.0,
+                host_id: canon.1,
+                payload,
+                completed_at: now,
+            });
+            fx.push(Effect::MetricInc(Counter::WuAssimilated));
+            fx.push(Effect::TraceEmit {
+                vt: now,
+                host: Some(canon.1),
+                coord: wu.coord,
+                event: TraceEvent::Assimilated { wu: wu_id },
+            });
+            fx.push(Effect::Assimilate { wu: wu_id });
+            return;
+        }
+    }
+
+    // ---- error masks
+    if errors > wu.max_error_results {
+        s.db.wu_mut(wu_id).unwrap().error_mask.too_many_errors = true;
+        fx.push(Effect::MetricInc(Counter::WuTooManyErrors));
+        return;
+    }
+    if total >= wu.max_total_results && pending == 0 {
+        s.db.wu_mut(wu_id).unwrap().error_mask.too_many_total = true;
+        fx.push(Effect::MetricInc(Counter::WuTooManyTotal));
+        return;
+    }
+
+    // ---- reissue: keep enough live replications to reach quorum.
+    // Progress toward quorum is the LARGEST AGREEING group, not the
+    // raw success count — two disagreeing results are inconclusive
+    // (BOINC validate_state INCONCLUSIVE) and need a tie-breaker.
+    let max_group = {
+        let mut groups: std::collections::BTreeMap<&str, usize> = Default::default();
+        for su in &successes {
+            *groups.entry(su.2.as_str()).or_default() += 1;
+        }
+        groups.values().copied().max().unwrap_or(0)
+    };
+    let live = pending + max_group;
+    if live < wu.min_quorum && total < wu.max_total_results {
+        let need = wu.min_quorum - live;
+        for _ in 0..need {
+            let rid = s.db.insert_result(ResultRecord::new(0, wu_id));
+            fx.push(Effect::MetricInc(Counter::ResultReissued));
+            fx.push(Effect::Reissue { wu: wu_id, result: rid });
+        }
+    }
+}
+
+// --------------------------------------------------------- WAL codec
+
+fn wu_to_json(w: &WorkUnit) -> Json {
+    Json::obj()
+        .set("name", w.name.clone())
+        .set("spec", w.spec.clone())
+        .set("flops_est", w.flops_est)
+        .set("target_nresults", w.target_nresults as u64)
+        .set("min_quorum", w.min_quorum as u64)
+        .set("max_error_results", w.max_error_results as u64)
+        .set("max_total_results", w.max_total_results as u64)
+        .set("delay_bound", w.delay_bound)
+        .set("held", w.held)
+}
+
+fn wu_from_json(j: &Json) -> anyhow::Result<WorkUnit> {
+    let spec = field(j, "spec")?.clone();
+    let mut w = WorkUnit::new(0, j.str_of("name")?, spec, j.f64_of("flops_est")?);
+    w.target_nresults = j.u64_of("target_nresults")? as usize;
+    w.min_quorum = j.u64_of("min_quorum")? as usize;
+    w.max_error_results = j.u64_of("max_error_results")? as usize;
+    w.max_total_results = j.u64_of("max_total_results")? as usize;
+    w.delay_bound = j.f64_of("delay_bound")?;
+    w.held = bool_field(j, "held")?;
+    Ok(w)
+}
+
+fn host_to_json(h: &HostRow) -> Json {
+    Json::obj()
+        .set("id", h.id)
+        .set("name", h.name.clone())
+        .set("city", h.city.clone())
+        .set("flops", h.flops)
+        .set("ncpus", h.ncpus)
+        .set("on_frac", h.on_frac)
+        .set("active_frac", h.active_frac)
+        .set("registered_at", h.registered_at)
+        .set("last_heartbeat", h.last_heartbeat)
+        .set("error_results", h.error_results)
+        .set("valid_results", h.valid_results)
+        .set("consecutive_errors", h.consecutive_errors)
+        .set("last_error_at", h.last_error_at)
+        .set("in_flight", h.in_flight)
+        .set("credit", h.credit)
+}
+
+fn host_from_json(j: &Json) -> anyhow::Result<HostRow> {
+    Ok(HostRow {
+        id: j.u64_of("id")?,
+        name: j.str_of("name")?.to_string(),
+        city: j.str_of("city")?.to_string(),
+        flops: j.f64_of("flops")?,
+        ncpus: j.u64_of("ncpus")? as u32,
+        on_frac: j.f64_of("on_frac")?,
+        active_frac: j.f64_of("active_frac")?,
+        registered_at: j.f64_of("registered_at")?,
+        last_heartbeat: j.f64_of("last_heartbeat")?,
+        error_results: j.u64_of("error_results")?,
+        valid_results: j.u64_of("valid_results")?,
+        consecutive_errors: j.u64_of("consecutive_errors")?,
+        last_error_at: j.f64_of("last_error_at")?,
+        in_flight: j.u64_of("in_flight")? as u32,
+        credit: j.f64_of("credit")?,
+    })
+}
+
+fn field<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow::anyhow!("event record missing field {key:?}"))
+}
+
+fn bool_field(j: &Json, key: &str) -> anyhow::Result<bool> {
+    field(j, key)?.as_bool().ok_or_else(|| anyhow::anyhow!("event field {key:?} not a bool"))
+}
+
+impl Event {
+    /// Canonical-JSON wire shape (`{"t": "<kind>", ...}`) — one WAL
+    /// record's `event` value. Finite `f64`s roundtrip bit-exactly
+    /// through [`Json`]'s canonical printer/parser.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::SubmitWu { wu } => Json::obj().set("t", "submit_wu").set("wu", wu_to_json(wu)),
+            Event::InstallIsland { deme, epoch, wu } => Json::obj()
+                .set("t", "install_island")
+                .set("deme", *deme as u64)
+                .set("epoch", *epoch as u64)
+                .set("wu", wu_to_json(wu)),
+            Event::RegisterHost { host } => {
+                Json::obj().set("t", "register_host").set("host", host_to_json(host))
+            }
+            Event::Heartbeat { host_id, now } => {
+                Json::obj().set("t", "heartbeat").set("host", *host_id).set("now", *now)
+            }
+            Event::RequestWork { host_id, now } => {
+                Json::obj().set("t", "request_work").set("host", *host_id).set("now", *now)
+            }
+            Event::ReportSuccess { result_id, now, cpu_time, payload } => Json::obj()
+                .set("t", "report_success")
+                .set("result", *result_id)
+                .set("now", *now)
+                .set("cpu", *cpu_time)
+                .set("payload", payload.clone()),
+            Event::ReportError { result_id, now } => {
+                Json::obj().set("t", "report_error").set("result", *result_id).set("now", *now)
+            }
+            Event::Tick { now } => Json::obj().set("t", "tick").set("now", *now),
+            Event::Release { wu_id, spec } => {
+                Json::obj().set("t", "release").set("wu", *wu_id).set("spec", spec.clone())
+            }
+            Event::Boost { wu_id } => Json::obj().set("t", "boost").set("wu", *wu_id),
+            Event::Cancel { wu_id } => Json::obj().set("t", "cancel").set("wu", *wu_id),
+            Event::Poll { now } => Json::obj().set("t", "poll").set("now", *now),
+        }
+    }
+
+    /// Inverse of [`Event::to_json`]; named errors on malformed or
+    /// unknown records (the WAL reader surfaces them with line context).
+    pub fn from_json(j: &Json) -> anyhow::Result<Event> {
+        let t = j.str_of("t")?;
+        let ev = match t {
+            "submit_wu" => Event::SubmitWu { wu: wu_from_json(field(j, "wu")?)? },
+            "install_island" => Event::InstallIsland {
+                deme: j.u64_of("deme")? as usize,
+                epoch: j.u64_of("epoch")? as usize,
+                wu: wu_from_json(field(j, "wu")?)?,
+            },
+            "register_host" => Event::RegisterHost { host: host_from_json(field(j, "host")?)? },
+            "heartbeat" => Event::Heartbeat { host_id: j.u64_of("host")?, now: j.f64_of("now")? },
+            "request_work" => {
+                Event::RequestWork { host_id: j.u64_of("host")?, now: j.f64_of("now")? }
+            }
+            "report_success" => Event::ReportSuccess {
+                result_id: j.u64_of("result")?,
+                now: j.f64_of("now")?,
+                cpu_time: j.f64_of("cpu")?,
+                payload: field(j, "payload")?.clone(),
+            },
+            "report_error" => {
+                Event::ReportError { result_id: j.u64_of("result")?, now: j.f64_of("now")? }
+            }
+            "tick" => Event::Tick { now: j.f64_of("now")? },
+            "release" => {
+                Event::Release { wu_id: j.u64_of("wu")?, spec: field(j, "spec")?.clone() }
+            }
+            "boost" => Event::Boost { wu_id: j.u64_of("wu")? },
+            "cancel" => Event::Cancel { wu_id: j.u64_of("wu")? },
+            "poll" => Event::Poll { now: j.f64_of("now")? },
+            other => anyhow::bail!("unknown event kind {other:?}"),
+        };
+        Ok(ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: &Event) {
+        let wire = ev.to_json().to_string();
+        let back = Event::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), wire, "codec must roundtrip byte-identically");
+    }
+
+    #[test]
+    fn event_codec_roundtrips_every_variant() {
+        let mut wu = WorkUnit::new(0, "isl_d00_e01", Json::obj().set("deme", 0u64).set("epoch", 1u64), 1.66e11);
+        wu.held = true;
+        wu.delay_bound = 604800.5; // non-integral f64 must survive
+        let host = HostRow {
+            id: 0,
+            name: "h".into(),
+            city: "Mérida".into(),
+            flops: 1.3e9,
+            ncpus: 4,
+            on_frac: 0.81,
+            active_frac: 0.7,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
+            credit: 0.0,
+        };
+        // 0.1 + 0.2 is the classic non-representable sum: exact-bits
+        // roundtrip through the canonical printer is the contract
+        let t = 0.1 + 0.2;
+        for ev in [
+            Event::SubmitWu { wu: wu.clone() },
+            Event::InstallIsland { deme: 3, epoch: 1, wu },
+            Event::RegisterHost { host },
+            Event::Heartbeat { host_id: 7, now: t },
+            Event::RequestWork { host_id: 7, now: t },
+            Event::ReportSuccess {
+                result_id: 9,
+                now: t,
+                cpu_time: 133.7,
+                payload: Json::obj().set("hits", 64u64),
+            },
+            Event::ReportError { result_id: 9, now: t },
+            Event::Tick { now: t },
+            Event::Release { wu_id: 2, spec: Json::obj().set("immigrants", Json::Arr(vec![])) },
+            Event::Boost { wu_id: 2 },
+            Event::Cancel { wu_id: 2 },
+            Event::Poll { now: t },
+        ] {
+            roundtrip(&ev);
+        }
+    }
+
+    #[test]
+    fn unknown_event_kind_is_a_named_error() {
+        let j = Json::parse(r#"{"t":"frobnicate"}"#).unwrap();
+        let err = Event::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("frobnicate"), "error names the bad kind: {err}");
+    }
+
+    #[test]
+    fn apply_submit_yields_submitted_marker() {
+        let mut db = Db::new();
+        let cfg = ServerConfig::default();
+        let mut assimilated = Vec::new();
+        let mut s = CoreState { db: &mut db, cfg: &cfg, assimilated: &mut assimilated };
+        let fx = apply(&mut s, Event::SubmitWu { wu: WorkUnit::new(0, "wu", Json::obj(), 1e9) });
+        let id = submitted_id(&fx).expect("submit marker");
+        assert!(db.wu(id).is_some());
+        assert_eq!(db.results_of_wu(id).len(), 1, "initial replica created");
+    }
+
+    #[test]
+    fn apply_refuses_unknown_host_without_heartbeat() {
+        let mut db = Db::new();
+        let cfg = ServerConfig::default();
+        let mut assimilated = Vec::new();
+        let mut s = CoreState { db: &mut db, cfg: &cfg, assimilated: &mut assimilated };
+        apply(&mut s, Event::SubmitWu { wu: WorkUnit::new(0, "wu", Json::obj(), 1e9) });
+        let fx = apply(&mut s, Event::RequestWork { host_id: 404, now: 1.0 });
+        assert!(dispatched(&fx).is_none(), "ghost host must get no work");
+        assert!(
+            matches!(fx.as_slice(), [Effect::MetricInc(Counter::UnknownHostRefusal)]),
+            "exactly one refusal effect, no heartbeat: {fx:?}"
+        );
+        assert_eq!(db.unsent_count(), 1, "the replica stays queued");
+    }
+}

@@ -36,6 +36,7 @@ use crate::metrics::trace::TraceEvent;
 use crate::metrics::{Counter, Hist};
 use crate::util::json::Json;
 
+use super::events::{self, Event};
 use super::server::ServerCore;
 use super::workunit::{ServerState, WorkUnit};
 
@@ -103,8 +104,9 @@ struct Bank {
 }
 
 /// The migration broker. Owns no results — it reads the assimilator's
-/// output and drives held WUs through [`ServerCore::release_wu`] /
-/// [`ServerCore::cancel_wu`].
+/// output and drives held WUs through the pure core's `Release` /
+/// `Cancel` / `Boost` events ([`super::events`]), applied via the
+/// [`ServerCore`] shell.
 pub struct MigrationExchange {
     cfg: ExchangeConfig,
     /// `[deme][epoch]` → WU id (pre-assigned at install)
@@ -152,15 +154,29 @@ impl MigrationExchange {
     /// Submit the campaign's WUs: epoch-0 WUs dispatch immediately,
     /// later epochs are held until their dependencies complete. WU ids
     /// are fixed here, so downstream state is arrival-order free.
+    ///
+    /// Each WU is logged as an `InstallIsland` event (not a bare
+    /// `SubmitWu`): the `(deme, epoch)` binding rides the WAL, so a
+    /// crash replay rebuilds the exchange's WU-id grid alongside the
+    /// core ([`super::wal::replay`] routes it to
+    /// [`MigrationExchange::install_one`]).
     pub fn install(&mut self, core: &mut ServerCore, wus: Vec<(usize, usize, WorkUnit)>) {
         for (d, e, wu) in wus {
-            debug_assert_eq!(wu.held, e > 0, "epoch-0 ready, later epochs held");
-            let id = core.submit_wu(wu);
-            self.wu_ids[d][e] = id;
-            self.coords.insert(id, (d, e));
-            if e == 0 {
-                self.released[d][0] = true;
-            }
+            core.log_event(&Event::InstallIsland { deme: d, epoch: e, wu: wu.clone() });
+            self.install_one(core, d, e, wu);
+        }
+    }
+
+    /// Install a single `(deme, epoch)` WU — the live path after
+    /// logging, and the replay path for a logged `InstallIsland`.
+    pub(crate) fn install_one(&mut self, core: &mut ServerCore, d: usize, e: usize, wu: WorkUnit) {
+        debug_assert_eq!(wu.held, e > 0, "epoch-0 ready, later epochs held");
+        let fx = core.apply_replayed(Event::SubmitWu { wu });
+        let id = events::submitted_id(&fx).expect("submit always assigns an id");
+        self.wu_ids[d][e] = id;
+        self.coords.insert(id, (d, e));
+        if e == 0 {
+            self.released[d][0] = true;
         }
     }
 
@@ -200,7 +216,20 @@ impl MigrationExchange {
     /// dependency chains, release every held WU whose dependencies are
     /// quorum-complete (or timed out). Called after reports and on the
     /// transitioner tick — both the DES and the TCP server loop do.
+    ///
+    /// Only the `Poll` marker is WAL-logged: the stages' cancel / boost
+    /// / release decisions are deterministic consequences of core state
+    /// plus the exchange's books, so replaying the marker re-derives
+    /// them exactly ([`super::wal::replay`] routes it to
+    /// [`MigrationExchange::poll_stages`]).
     pub fn poll(&mut self, core: &mut ServerCore, now: f64) {
+        core.log_event(&Event::Poll { now });
+        self.poll_stages(core, now);
+    }
+
+    /// The four poll stages — the live path after logging, and the
+    /// replay path for a logged `Poll`.
+    pub(crate) fn poll_stages(&mut self, core: &mut ServerCore, now: f64) {
         self.bank_new(core);
         self.cancel_dead_chains(core, now);
         self.boost_stragglers(core, now);
@@ -284,7 +313,9 @@ impl MigrationExchange {
                     if !self.dead[d][e2] {
                         self.dead[d][e2] = true;
                         if e2 > e {
-                            core.cancel_wu(self.wu_ids[d][e2]);
+                            // poll-implied transition: applied, not
+                            // re-logged (the Poll record covers it)
+                            core.apply_replayed(Event::Cancel { wu_id: self.wu_ids[d][e2] });
                             self.stats.cancelled += 1;
                             core.metrics.inc(Counter::ExchangeCancelled);
                             core.trace.record(
@@ -334,7 +365,7 @@ impl MigrationExchange {
                         r.server_state == ServerState::InProgress
                             && core.db.host(r.host_id).map(|h| h.consecutive_errors > 0).unwrap_or(false)
                     });
-                    if suspect && core.boost_wu(wu_id) {
+                    if suspect && events::boosted(&core.apply_replayed(Event::Boost { wu_id })) {
                         self.boosted.insert(wu_id);
                         self.stats.boosted += 1;
                         core.metrics.inc(Counter::ExchangeBoosted);
@@ -403,7 +434,7 @@ impl MigrationExchange {
                         .collect();
                     spec = spec.set("migration_k", adaptive.k_for(&history) as u64);
                 }
-                core.release_wu(id, spec);
+                core.apply_replayed(Event::Release { wu_id: id, spec });
                 self.released[d][e] = true;
                 self.stats.released += 1;
                 self.stats.immigrants_delivered += n_imm;

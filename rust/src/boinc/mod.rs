@@ -7,12 +7,20 @@
 //! * [`workunit`] — WU/result state machines: server state
 //!   (UNSENT/IN_PROGRESS/OVER), outcomes (SUCCESS/CLIENT_ERROR/NO_REPLY),
 //!   validate states, error masks.
+//! * [`events`] — the **pure functional core**: every scheduler /
+//!   transitioner / validator / assimilator transition as
+//!   `apply(&mut CoreState, Event) -> Vec<Effect>`, with metrics and
+//!   trace emission as effect *data*. `ServerCore` and
+//!   `MigrationExchange` are thin shells over it.
 //! * [`server`] — `ServerCore`: scheduler RPC (work fetch), the
 //!   transitioner (replication to quorum, retry on timeout/error), the
 //!   validator (quorum agreement, credit) and the assimilator. The core
 //!   is *time-explicit*: every entry point takes `now` seconds, so the
 //!   same code runs under the TCP front-end (wall clock) and the
 //!   discrete-event simulator (virtual clock).
+//! * [`wal`] — sha256-chained write-ahead log of [`events::Event`]
+//!   records; a restarted server replays it to the exact pre-crash
+//!   state (`vgp serve --wal FILE`).
 //! * [`signature`] — SHA-256 checksums + HMAC code signing (the paper's
 //!   "only signed applications can be distributed").
 //! * [`protocol`] — JSON scheduler-RPC messages.
@@ -26,11 +34,13 @@
 //!   structure.
 
 pub mod db;
+pub mod events;
 pub mod exchange;
 pub mod net;
 pub mod protocol;
 pub mod server;
 pub mod signature;
+pub mod wal;
 pub mod workunit;
 
 pub use exchange::{ExchangeConfig, ExchangeStats, MigrationExchange};

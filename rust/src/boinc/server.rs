@@ -8,14 +8,24 @@
 //! and under the discrete-event simulator ([`crate::sim`]) — the
 //! reproduction measures the *same* state machines the paper's BOINC
 //! server ran.
+//!
+//! Since PR 8 the transition logic itself lives in the pure core
+//! ([`super::events`]): `ServerCore` is a thin shell that (1) appends
+//! each public-API event to the write-ahead log ([`super::wal`]) when
+//! one is attached, (2) applies it via [`events::apply`], and (3)
+//! interprets the returned effects at the edge — metrics increments and
+//! trace records are effect *data*, not side effects of the logic. The
+//! same three steps minus the logging are the crash-replay path.
 
-use crate::metrics::trace::{Trace, TraceEvent};
-use crate::metrics::{Counter, Gauge, Hist, Metrics};
+use crate::metrics::trace::Trace;
+use crate::metrics::Metrics;
 use crate::util::json::Json;
 
 use super::db::{Db, HostRow};
-use super::signature::{sha256_hex, SigningKey};
-use super::workunit::{Outcome, ResultRecord, ServerState, ValidateState, WorkUnit};
+use super::events::{self, CoreState, Effect, Event};
+use super::signature::SigningKey;
+use super::wal::WalWriter;
+use super::workunit::WorkUnit;
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -69,14 +79,9 @@ pub struct ServerCore {
     /// `trace.enable(cap)` — see `crate::metrics::trace`).
     pub trace: Trace,
     assimilated: Vec<Assimilated>,
-}
-
-/// Pull the island `(deme, epoch)` causality id out of a WU spec, if
-/// the WU belongs to an island campaign.
-fn coord_of(spec: &Json) -> Option<(usize, usize)> {
-    let d = spec.get("deme")?.as_u64()?;
-    let e = spec.get("epoch")?.as_u64()?;
-    Some((d as usize, e as usize))
+    /// When attached, every event is appended (and flushed) here
+    /// *before* it is applied — see [`super::wal`].
+    wal: Option<WalWriter>,
 }
 
 impl ServerCore {
@@ -88,12 +93,65 @@ impl ServerCore {
             metrics: Metrics::new(),
             trace: Trace::new(),
             assimilated: Vec::new(),
+            wal: None,
         }
     }
 
-    /// Mirror the dispatch backlog into the in-flight gauge.
-    fn sync_in_flight_gauge(&self) {
-        self.metrics.set_gauge(Gauge::ResultsInFlight, self.db.in_progress_ids().len() as f64);
+    // -------------------------------------------------- the event shell
+
+    /// Attach a write-ahead log: every subsequent event is durably
+    /// appended before it is applied. Attach *after* a crash replay so
+    /// new events extend the existing chain.
+    pub fn attach_wal(&mut self, wal: WalWriter) {
+        self.wal = Some(wal);
+    }
+
+    /// Append an event to the WAL, if one is attached. An append
+    /// failure (disk full, path vanished) disables persistence but
+    /// keeps the server running — crash recovery degrades, live
+    /// service does not.
+    pub(crate) fn log_event(&mut self, ev: &Event) {
+        if let Some(w) = self.wal.as_mut() {
+            if let Err(err) = w.append(ev) {
+                crate::log_error!("wal: append failed, disabling persistence: {err:#}");
+                self.wal = None;
+            }
+        }
+    }
+
+    /// Apply an event through the pure core and interpret its effects
+    /// **without logging** — the replay path ([`super::wal::replay`])
+    /// and the exchange's poll-implied transitions use this directly.
+    pub(crate) fn apply_replayed(&mut self, ev: Event) -> Vec<Effect> {
+        let fx = events::apply(
+            &mut CoreState { db: &mut self.db, cfg: &self.cfg, assimilated: &mut self.assimilated },
+            ev,
+        );
+        self.interpret(&fx);
+        fx
+    }
+
+    /// Log, apply, interpret: the live path for every public entry point.
+    fn dispatch(&mut self, ev: Event) -> Vec<Effect> {
+        self.log_event(&ev);
+        self.apply_replayed(ev)
+    }
+
+    /// The effect interpreter: metrics and trace effects hit the
+    /// registries; data markers are for the calling shell and no-op
+    /// here. This is the ONLY place observability side effects happen.
+    fn interpret(&self, fx: &[Effect]) {
+        for f in fx {
+            match f {
+                Effect::MetricInc(c) => self.metrics.inc(*c),
+                Effect::MetricObserve(h, v) => self.metrics.observe(*h, *v),
+                Effect::GaugeSet(g, v) => self.metrics.set_gauge(*g, *v),
+                Effect::TraceEmit { vt, host, coord, event } => {
+                    self.trace.record(*vt, *host, *coord, event.clone());
+                }
+                _ => {}
+            }
+        }
     }
 
     // ------------------------------------------------------------ intake
@@ -103,19 +161,8 @@ impl ServerCore {
     /// island epochs), in which case replicas are deferred to
     /// [`ServerCore::release_wu`].
     pub fn submit_wu(&mut self, wu: WorkUnit) -> u64 {
-        let target = wu.target_nresults;
-        let held = wu.held;
-        let coord = coord_of(&wu.spec);
-        let id = self.db.insert_wu(wu);
-        if !held {
-            for _ in 0..target {
-                self.db.insert_result(ResultRecord::new(0, id));
-            }
-        }
-        self.metrics.add(Counter::WuSubmitted, 1);
-        // submissions are campaign setup: generated at virtual time 0
-        self.trace.record(0.0, None, coord, TraceEvent::Generated { wu: id });
-        id
+        let fx = self.dispatch(Event::SubmitWu { wu });
+        events::submitted_id(&fx).expect("submit always assigns an id")
     }
 
     /// Release a held WU: patch its spec (the migration exchange fills
@@ -123,19 +170,7 @@ impl ServerCore {
     /// dependencies are quorum-complete) and create the initial
     /// replications so the scheduler can dispatch it.
     pub fn release_wu(&mut self, wu_id: u64, spec: Json) {
-        let target = {
-            let Some(w) = self.db.wu_mut(wu_id) else { return };
-            if !w.held {
-                return;
-            }
-            w.held = false;
-            w.spec = spec;
-            w.target_nresults
-        };
-        for _ in 0..target {
-            self.db.insert_result(ResultRecord::new(0, wu_id));
-        }
-        self.metrics.inc(Counter::WuReleased);
+        self.dispatch(Event::Release { wu_id, spec });
     }
 
     /// Raise a WU's replication by one extra racing replica — the
@@ -147,388 +182,67 @@ impl ServerCore {
     /// No-op on done, held, or unknown WUs. Returns whether a replica
     /// was actually added.
     pub fn boost_wu(&mut self, wu_id: u64) -> bool {
-        let ok = match self.db.wu_mut(wu_id) {
-            Some(w) if !w.is_done() && !w.held => {
-                w.target_nresults += 1;
-                // keep the error-mask headroom invariant: a boost must
-                // not push an otherwise-healthy WU into too_many_total
-                w.max_total_results += 1;
-                true
-            }
-            _ => false,
-        };
-        if ok {
-            self.db.insert_result(ResultRecord::new(0, wu_id));
-            self.metrics.inc(Counter::WuBoosted);
-        }
-        ok
+        events::boosted(&self.dispatch(Event::Boost { wu_id }))
     }
 
     /// Administratively terminate a WU that can never run (its island
     /// dependency chain died): sets the couldnt_send error mask so the
     /// campaign completes instead of deadlocking.
     pub fn cancel_wu(&mut self, wu_id: u64) {
-        if let Some(w) = self.db.wu_mut(wu_id) {
-            if !w.is_done() {
-                w.error_mask.couldnt_send = true;
-                self.metrics.inc(Counter::WuCancelled);
-            }
-        }
+        self.dispatch(Event::Cancel { wu_id });
     }
 
     pub fn register_host(&mut self, host: HostRow) -> u64 {
-        self.metrics.inc(Counter::HostRegistered);
-        let id = self.db.upsert_host(host);
-        self.metrics.set_gauge(Gauge::HostsAttached, self.db.hosts.len() as f64);
-        id
+        let fx = self.dispatch(Event::RegisterHost { host });
+        events::registered_id(&fx).expect("register always assigns an id")
     }
 
     pub fn heartbeat(&mut self, host_id: u64, now: f64) {
-        if let Some(h) = self.db.host_mut(host_id) {
-            h.last_heartbeat = now;
-        }
-        self.metrics.inc(Counter::HostHeartbeat);
+        self.dispatch(Event::Heartbeat { host_id, now });
     }
 
     // --------------------------------------------------------- scheduler
 
     /// Scheduler RPC: a host asks for work. Returns the dispatched
     /// result id, the WU (payload spec) and the application signature
-    /// the client must verify before running.
+    /// the client must verify before running. Unregistered host ids are
+    /// refused outright (`Counter::UnknownHostRefusal`).
     pub fn request_work(&mut self, host_id: u64, now: f64) -> Option<(u64, WorkUnit, String)> {
-        self.heartbeat(host_id, now);
-        let (host_flops, blocked, saturated) = match self.db.host(host_id) {
-            Some(h) => {
-                let quarantined = h.consecutive_errors >= self.cfg.reliability_error_threshold
-                    // post-probation, allow ONE probe task at a time:
-                    // a still-suspect host must prove itself before it
-                    // can fill all its cores again
-                    && (now < h.last_error_at + self.cfg.reliability_probation
-                        || h.in_flight > 0);
-                (h.flops, quarantined, h.in_flight >= h.ncpus.max(1))
-            }
-            None => (1e9, false, false),
-        };
-        // reliability gate: a host failing its last N tasks in a row is
-        // quarantined; after the probation window it gets one probe
-        // task at a time (success resets the counter, an error re-arms
-        // the quarantine)
-        if blocked {
-            self.metrics.inc(Counter::HostUnreliableRefusal);
-            self.trace.record(now, Some(host_id), None, TraceEvent::HostQuarantined);
-            return None;
-        }
-        // per-core task model: one in-flight result per core (BOINC
-        // schedules one task per CPU), so multi-core volunteers queue
-        // up to ncpus concurrent WUs
-        if saturated {
-            return None;
-        }
-        // redundancy must span distinct hosts (BOINC "one result per
-        // user per WU"); non-redundant WUs may be retried anywhere.
-        // Scan PAST replicas this host cannot take instead of bouncing
-        // on the queue head: a boosted race replica parked at the front
-        // must not starve the suspect host of every WU queued behind it
-        // (head-of-line blocking that could deadlock a degraded pool).
-        let mut bounced: Vec<u64> = Vec::new();
-        let mut picked: Option<(u64, u64)> = None;
-        while let Some(rid) = self.db.pop_unsent() {
-            let wu_id = self.db.result(rid).expect("result exists").wu_id;
-            let (done, redundant) = {
-                let w = self.db.wu(wu_id).expect("wu exists");
-                (w.is_done(), w.target_nresults > 1)
-            };
-            if done {
-                // a leftover race replica of an already-finished WU
-                // (the boosted straggler recovered first): retire it
-                // instead of dispatching dead work to a volunteer
-                if let Some(r) = self.db.result_mut(rid) {
-                    r.server_state = ServerState::Over;
-                }
-                self.metrics.inc(Counter::ResultDidntNeed);
-                continue;
-            }
-            let already_here = redundant
-                && self
-                    .db
-                    .results_of_wu(wu_id)
-                    .iter()
-                    .any(|r| r.host_id == host_id && r.server_state != ServerState::Unsent);
-            if already_here {
-                bounced.push(rid);
-            } else {
-                picked = Some((rid, wu_id));
-                break;
-            }
-        }
-        // bounced replicas return to the queue front in original order
-        for rid in bounced.into_iter().rev() {
-            self.db.push_unsent(rid);
-        }
-        let (rid, wu_id) = picked?;
-        let wu = self.db.wu(wu_id).expect("wu exists").clone();
-        let est = wu.flops_est / host_flops.max(1e6);
-        let deadline = now + (self.cfg.deadline_slack * est).max(wu.delay_bound);
-        {
-            let r = self.db.result_mut(rid).unwrap();
-            r.host_id = host_id;
-            r.server_state = ServerState::InProgress;
-            r.sent_at = now;
-            r.deadline = deadline;
-        }
-        if let Some(h) = self.db.host_mut(host_id) {
-            h.in_flight += 1;
-        }
-        self.db.mark_in_progress(rid);
-        self.metrics.inc(Counter::ResultDispatched);
-        self.sync_in_flight_gauge();
-        self.trace.record(
-            now,
-            Some(host_id),
-            coord_of(&wu.spec),
-            TraceEvent::Dispatched { wu: wu_id, result: rid },
-        );
+        let fx = self.dispatch(Event::RequestWork { host_id, now });
+        let (rid, wu_id) = events::dispatched(&fx)?;
+        let wu = self.db.wu(wu_id).expect("dispatched wu exists").clone();
+        // code signing stays at the shell edge: the signature is
+        // derived state (recomputable from the spec), not a transition
         let sig = self.key.sign(wu.spec.to_string().as_bytes());
         Some((rid, wu, sig))
     }
 
     // ----------------------------------------------------------- reports
 
-    /// Client reports success with a result payload.
+    /// Client reports success with a result payload. A late success on
+    /// an already-terminal replica (expired + reissued) leaves state
+    /// untouched but is accounted: `Counter::ResultLateSuccess` + a
+    /// `late_report` trace event (wasted volunteer work is visible).
     pub fn report_success(&mut self, rid: u64, now: f64, cpu_time: f64, payload: Json) {
-        let (wu_id, host_id, sent_at) = {
-            let Some(r) = self.db.result_mut(rid) else { return };
-            if r.server_state != ServerState::InProgress {
-                return; // late report after deadline reissue — drop
-            }
-            r.server_state = ServerState::Over;
-            r.outcome = Outcome::Success;
-            r.received_at = now;
-            r.cpu_time = cpu_time;
-            r.payload_hash = sha256_hex(payload.to_string().as_bytes());
-            r.payload = Some(payload);
-            (r.wu_id, r.host_id, r.sent_at)
-        };
-        if let Some(h) = self.db.host_mut(host_id) {
-            h.consecutive_errors = 0; // success lifts the reliability block
-            h.in_flight = h.in_flight.saturating_sub(1);
-        }
-        self.metrics.inc(Counter::ResultSuccess);
-        self.metrics.observe(Hist::WuTurnaround, now - sent_at);
-        self.metrics.observe(Hist::WuCpu, cpu_time);
-        let coord = self.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
-        self.trace.record(now, Some(host_id), coord, TraceEvent::Executed { wu: wu_id, result: rid, ok: true });
-        self.transition_wu(wu_id, now);
-        self.db.sweep_in_progress();
-        self.sync_in_flight_gauge();
+        self.dispatch(Event::ReportSuccess { result_id: rid, now, cpu_time, payload });
     }
 
     /// Client reports failure (the paper's Java-heap-size errors, §4.2).
     pub fn report_error(&mut self, rid: u64, now: f64) {
-        let (wu_id, host_id) = {
-            let Some(r) = self.db.result_mut(rid) else { return };
-            if r.server_state != ServerState::InProgress {
-                return;
-            }
-            r.server_state = ServerState::Over;
-            r.outcome = Outcome::ClientError;
-            r.received_at = now;
-            (r.wu_id, r.host_id)
-        };
-        if let Some(h) = self.db.host_mut(host_id) {
-            h.consecutive_errors += 1;
-            h.last_error_at = now;
-            h.in_flight = h.in_flight.saturating_sub(1);
-        }
-        self.metrics.inc(Counter::ResultClientError);
-        let coord = self.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
-        self.trace.record(now, Some(host_id), coord, TraceEvent::Executed { wu: wu_id, result: rid, ok: false });
-        self.transition_wu(wu_id, now);
-        self.db.sweep_in_progress();
-        self.sync_in_flight_gauge();
+        self.dispatch(Event::ReportError { result_id: rid, now });
     }
 
     // ------------------------------------------------------ transitioner
 
     /// Periodic pass: expire deadlines (hosts that churned away) and
     /// re-run transitions.
+    ///
+    /// Deadline boundary rule (pinned): expiry is **strictly**
+    /// `deadline < now`, so a report arriving at exactly
+    /// `now == deadline` beats the expiry in either caller order — see
+    /// the [`super::events`] module docs.
     pub fn tick(&mut self, now: f64) {
-        let expired: Vec<u64> = self
-            .db
-            .in_progress_ids()
-            .iter()
-            .copied()
-            .filter(|id| {
-                self.db
-                    .result(*id)
-                    .map(|r| r.server_state == ServerState::InProgress && r.deadline < now)
-                    .unwrap_or(false)
-            })
-            .collect();
-        for rid in expired {
-            let (wu_id, host_id) = {
-                let r = self.db.result_mut(rid).unwrap();
-                r.server_state = ServerState::Over;
-                r.outcome = Outcome::NoReply;
-                (r.wu_id, r.host_id)
-            };
-            if let Some(h) = self.db.host_mut(host_id) {
-                h.in_flight = h.in_flight.saturating_sub(1);
-            }
-            self.metrics.inc(Counter::ResultNoReply);
-            let coord = self.db.wu(wu_id).and_then(|w| coord_of(&w.spec));
-            self.trace.record(now, Some(host_id), coord, TraceEvent::Expired { wu: wu_id, result: rid });
-            self.transition_wu(wu_id, now);
-        }
-        self.db.sweep_in_progress();
-        self.sync_in_flight_gauge();
-        self.metrics.set_gauge(Gauge::VirtualTime, now);
-    }
-
-    /// The transitioner for one WU: validation, error masks, reissue.
-    fn transition_wu(&mut self, wu_id: u64, now: f64) {
-        // copy only the scalar policy fields — cloning the whole WU
-        // (incl. the spec Json) on every report dominated the RPC
-        // profile (see EXPERIMENTS.md §Perf)
-        struct Policy {
-            min_quorum: usize,
-            max_error_results: usize,
-            max_total_results: usize,
-            flops_est: f64,
-            coord: Option<(usize, usize)>,
-        }
-        // held WUs are dependency-gated: no replicas exist yet and the
-        // exchange owns their lifecycle until release
-        let wu = match self.db.wu(wu_id) {
-            Some(w) if !w.is_done() && !w.held => Policy {
-                min_quorum: w.min_quorum,
-                max_error_results: w.max_error_results,
-                max_total_results: w.max_total_results,
-                flops_est: w.flops_est,
-                coord: coord_of(&w.spec),
-            },
-            _ => return,
-        };
-        let results = self.db.results_of_wu(wu_id);
-        let successes: Vec<(u64, u64, String, f64)> = results
-            .iter()
-            .filter(|r| r.outcome == Outcome::Success && r.validate_state != ValidateState::Invalid)
-            .map(|r| (r.id, r.host_id, r.payload_hash.clone(), r.received_at))
-            .collect();
-        let errors = results
-            .iter()
-            .filter(|r| {
-                matches!(r.outcome, Outcome::ClientError | Outcome::NoReply | Outcome::ValidateError)
-            })
-            .count();
-        let total = results.len();
-        let pending = results
-            .iter()
-            .filter(|r| r.server_state != ServerState::Over)
-            .count();
-
-        // ---- validator: find a quorum of agreeing payload hashes
-        if successes.len() >= wu.min_quorum {
-            // BTreeMap so equal-size quorum groups tie-break on payload
-            // hash, not hasher iteration order (determinism contract)
-            let mut groups: std::collections::BTreeMap<&str, Vec<usize>> = Default::default();
-            for (i, s) in successes.iter().enumerate() {
-                groups.entry(s.2.as_str()).or_default().push(i);
-            }
-            if let Some((_, grp)) = groups
-                .iter()
-                .filter(|(_, g)| g.len() >= wu.min_quorum)
-                .max_by_key(|(_, g)| g.len())
-            {
-                // canonical result: earliest-received member of the group
-                let canon_idx =
-                    *grp.iter().min_by(|&&a, &&b| successes[a].3.partial_cmp(&successes[b].3).unwrap()).unwrap();
-                let canon = &successes[canon_idx];
-                let valid_ids: Vec<u64> =
-                    grp.iter().map(|&i| successes[i].0).collect();
-                let all_ids: Vec<u64> = successes.iter().map(|s| s.0).collect();
-                let credit = self.cfg.credit_per_gflop * wu.flops_est / 1e9;
-                for rid in &all_ids {
-                    let valid = valid_ids.contains(rid);
-                    let host_id = {
-                        let r = self.db.result_mut(*rid).unwrap();
-                        r.validate_state =
-                            if valid { ValidateState::Valid } else { ValidateState::Invalid };
-                        r.host_id
-                    };
-                    if let Some(h) = self.db.host_mut(host_id) {
-                        if valid {
-                            h.valid_results += 1;
-                            h.credit += credit;
-                        } else {
-                            h.error_results += 1;
-                        }
-                    }
-                    self.metrics.inc(if valid { Counter::ResultValid } else { Counter::ResultInvalid });
-                    self.trace.record(
-                        now,
-                        Some(host_id),
-                        wu.coord,
-                        TraceEvent::Validated { wu: wu_id, result: *rid, valid },
-                    );
-                }
-                // ---- assimilator
-                let payload = self
-                    .db
-                    .result(canon.0)
-                    .and_then(|r| r.payload.clone())
-                    .unwrap_or(Json::Null);
-                let wu_name = {
-                    let w = self.db.wu_mut(wu_id).unwrap();
-                    w.canonical_result = Some(canon.0);
-                    w.assimilated = true;
-                    w.name.clone()
-                };
-                self.assimilated.push(Assimilated {
-                    wu_id,
-                    wu_name,
-                    result_id: canon.0,
-                    host_id: canon.1,
-                    payload,
-                    completed_at: now,
-                });
-                self.metrics.inc(Counter::WuAssimilated);
-                self.trace.record(now, Some(canon.1), wu.coord, TraceEvent::Assimilated { wu: wu_id });
-                return;
-            }
-        }
-
-        // ---- error masks
-        if errors > wu.max_error_results {
-            self.db.wu_mut(wu_id).unwrap().error_mask.too_many_errors = true;
-            self.metrics.inc(Counter::WuTooManyErrors);
-            return;
-        }
-        if total >= wu.max_total_results && pending == 0 {
-            self.db.wu_mut(wu_id).unwrap().error_mask.too_many_total = true;
-            self.metrics.inc(Counter::WuTooManyTotal);
-            return;
-        }
-
-        // ---- reissue: keep enough live replications to reach quorum.
-        // Progress toward quorum is the LARGEST AGREEING group, not the
-        // raw success count — two disagreeing results are inconclusive
-        // (BOINC validate_state INCONCLUSIVE) and need a tie-breaker.
-        let max_group = {
-            let mut groups: std::collections::BTreeMap<&str, usize> = Default::default();
-            for s in &successes {
-                *groups.entry(s.2.as_str()).or_default() += 1;
-            }
-            groups.values().copied().max().unwrap_or(0)
-        };
-        let live = pending + max_group;
-        if live < wu.min_quorum && total < wu.max_total_results {
-            let need = wu.min_quorum - live;
-            for _ in 0..need {
-                self.db.insert_result(ResultRecord::new(0, wu_id));
-                self.metrics.inc(Counter::ResultReissued);
-            }
-        }
+        self.dispatch(Event::Tick { now });
     }
 
     // ------------------------------------------------------------- query
@@ -552,6 +266,7 @@ impl ServerCore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::boinc::workunit::{Outcome, ServerState};
 
     fn host(flops: f64) -> HostRow {
         HostRow {
@@ -856,6 +571,7 @@ mod tests {
     #[test]
     fn late_report_after_reissue_is_dropped() {
         let mut s = ServerCore::new(ServerConfig::default());
+        s.trace.enable(64);
         let h = s.register_host(host(1e9));
         let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
         wu.delay_bound = 10.0;
@@ -865,5 +581,66 @@ mod tests {
         let before = s.metrics.counter("result.success");
         s.report_success(r1, 2_000.0, 10.0, payload(1));
         assert_eq!(s.metrics.counter("result.success"), before, "late report ignored");
+        // PR 8: the drop is no longer *silent* — wasted volunteer work
+        // is counted and traced for the dashboard
+        assert_eq!(s.metrics.counter("result.late_success"), 1);
+        assert!(
+            s.trace.records().iter().any(|r| r.event.kind() == "late_report"),
+            "late success must leave a trace event"
+        );
+    }
+
+    #[test]
+    fn unknown_host_request_is_refused() {
+        let mut s = ServerCore::new(ServerConfig::default());
+        s.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        // regression (PR 8): this used to dispatch a real WU to the
+        // ghost host id on a synthetic 1e9-FLOPS profile, leaking an
+        // in_flight slot nobody could ever release
+        assert!(s.request_work(77, 0.0).is_none(), "unregistered host must get nothing");
+        assert_eq!(s.metrics.counter("host.unknown_refusal"), 1);
+        assert_eq!(s.db.unsent_count(), 1, "the replica stays queued for a real host");
+        let h = s.register_host(host(1e9));
+        assert!(s.request_work(h, 1.0).is_some(), "a registered host still gets it");
+    }
+
+    #[test]
+    fn report_at_deadline_beats_tick_in_either_caller_order() {
+        // pinned boundary semantics: expiry is strictly `deadline < now`,
+        // so at now == deadline the report wins regardless of whether
+        // the DES fires the tick before or after the upload
+        for report_first in [true, false] {
+            let mut s = ServerCore::new(ServerConfig::default());
+            let h = s.register_host(host(1e9));
+            let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+            wu.delay_bound = 100.0;
+            s.submit_wu(wu);
+            let (rid, _, _) = s.request_work(h, 0.0).unwrap();
+            let deadline = s.db.result(rid).unwrap().deadline;
+            if report_first {
+                s.report_success(rid, deadline, 1.0, payload(9));
+                s.tick(deadline);
+            } else {
+                s.tick(deadline);
+                s.report_success(rid, deadline, 1.0, payload(9));
+            }
+            assert_eq!(
+                s.db.result(rid).unwrap().outcome,
+                Outcome::Success,
+                "report at now == deadline must win (report_first = {report_first})"
+            );
+            assert_eq!(s.metrics.counter("result.no_reply"), 0, "no expiry on the boundary");
+            assert!(s.is_complete());
+            // strictly past the deadline the tick does expire
+            let mut s2 = ServerCore::new(ServerConfig::default());
+            let h2 = s2.register_host(host(1e9));
+            let mut wu2 = WorkUnit::new(0, "wu2", Json::obj(), 1e9);
+            wu2.delay_bound = 100.0;
+            s2.submit_wu(wu2);
+            let (r2, _, _) = s2.request_work(h2, 0.0).unwrap();
+            let d2 = s2.db.result(r2).unwrap().deadline;
+            s2.tick(d2 + 1e-9);
+            assert_eq!(s2.db.result(r2).unwrap().outcome, Outcome::NoReply);
+        }
     }
 }

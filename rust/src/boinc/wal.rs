@@ -1,0 +1,277 @@
+//! Write-ahead log: crash recovery for the server core.
+//!
+//! Every public-API event the shells accept ([`super::server::ServerCore`],
+//! [`super::exchange::MigrationExchange`]) is appended here *before* it
+//! is applied, as one canonical-JSON line per record. Because the core
+//! is pure ([`super::events::apply`] reads no clock/RNG/I/O), replaying
+//! the log through the same `apply` regenerates the exact pre-crash
+//! state — DB tables, metrics registry, trace ring and assimilation
+//! log, bit for bit (`tests/wal_replay.rs` proves it at every kill
+//! index).
+//!
+//! # Format (`vgp.wal.v1`)
+//!
+//! Line 0 is a header, line `n ≥ 1` is record `n`:
+//!
+//! ```text
+//! {"h": sha256("vgp.wal.v1"), "i": 0, "schema": "vgp.wal.v1"}
+//! {"event": {...}, "h": H_n, "i": n, "prev": H_{n-1}}
+//! ```
+//!
+//! with `H_n = sha256(H_{n-1} + "|" + canonical_json(event))` — the
+//! same sha256 machinery `boinc::signature` uses for payload hashes.
+//! The chain makes truncation-then-splice, reordering and in-place
+//! tampering all detectable on open; the reader names which it found.
+//! Canonical JSON (sorted keys, shortest-roundtrip floats via
+//! `util/json`) makes the hash chain independent of field order, and
+//! packed population checkpoints ride inside event specs as the
+//! `util/codec` base64 blobs they already are — the WAL inherits that
+//! compression for free.
+//!
+//! # Replay semantics
+//!
+//! [`replay`] feeds events back through the pure core **without
+//! re-logging** (`ServerCore::apply_replayed`). Two event kinds route
+//! through the exchange shell so its books (WU-id grid, banked
+//! emigrants, release/dead flags) rebuild alongside the core:
+//! `InstallIsland` → `MigrationExchange::install_one`, and `Poll` →
+//! `MigrationExchange::poll_stages`. The exchange's internal
+//! cancel/boost/release decisions are deterministic consequences of
+//! core state, so they are *not* individually logged — the logged
+//! `Poll` implies them, and a kill mid-poll replays the whole poll.
+//! Replay needs no evaluator/executor either: result payloads ride the
+//! `ReportSuccess` events themselves (see `coordinator/exec.rs`).
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Write as _};
+
+use anyhow::{bail, Context};
+
+use crate::util::json::Json;
+
+use super::events::Event;
+use super::exchange::MigrationExchange;
+use super::server::ServerCore;
+use super::signature::sha256_hex;
+
+/// Schema tag written in the header and hashed into the genesis link.
+pub const WAL_SCHEMA: &str = "vgp.wal.v1";
+
+fn genesis_hash() -> String {
+    sha256_hex(WAL_SCHEMA.as_bytes())
+}
+
+fn chain_hash(prev: &str, event_json: &str) -> String {
+    sha256_hex(format!("{prev}|{event_json}").as_bytes())
+}
+
+/// Append-only writer holding the chain head.
+pub struct WalWriter {
+    file: File,
+    prev: String,
+    next_index: u64,
+}
+
+impl WalWriter {
+    /// Start a fresh log at `path` (truncates) and write the header.
+    pub fn create(path: &str) -> anyhow::Result<WalWriter> {
+        let mut file = File::create(path).with_context(|| format!("wal: create {path}"))?;
+        let header = Json::obj()
+            .set("schema", WAL_SCHEMA)
+            .set("i", 0u64)
+            .set("h", genesis_hash());
+        writeln!(file, "{header}").with_context(|| format!("wal: write header to {path}"))?;
+        file.flush()?;
+        Ok(WalWriter { file, prev: genesis_hash(), next_index: 1 })
+    }
+
+    /// Open an existing log for appending — verifying the whole chain
+    /// and returning the replayable events — or create a fresh one if
+    /// `path` does not exist yet. `events` is empty exactly when the
+    /// log is fresh (header only or newly created).
+    pub fn open_or_create(path: &str) -> anyhow::Result<(Vec<Event>, WalWriter)> {
+        if !std::path::Path::new(path).exists() {
+            return Ok((Vec::new(), WalWriter::create(path)?));
+        }
+        let (events, prev, next_index) = read_chain(path)?;
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("wal: open {path} for append"))?;
+        Ok((events, WalWriter { file, prev, next_index }))
+    }
+
+    /// Append one event record, extending the hash chain, and flush —
+    /// the record must be durable before the event is applied.
+    pub fn append(&mut self, ev: &Event) -> anyhow::Result<()> {
+        let event_json = ev.to_json();
+        let h = chain_hash(&self.prev, &event_json.to_string());
+        let record = Json::obj()
+            .set("event", event_json)
+            .set("h", h.clone())
+            .set("i", self.next_index)
+            .set("prev", self.prev.clone());
+        writeln!(self.file, "{record}").context("wal: append record")?;
+        self.file.flush().context("wal: flush")?;
+        self.prev = h;
+        self.next_index += 1;
+        Ok(())
+    }
+}
+
+/// Read and verify a log, returning the event sequence.
+pub fn read_events(path: &str) -> anyhow::Result<Vec<Event>> {
+    Ok(read_chain(path)?.0)
+}
+
+/// Full verification pass: header schema + genesis hash, then per
+/// record index contiguity, chain linkage and hash integrity. Returns
+/// `(events, chain_head, next_index)` so a writer can resume.
+fn read_chain(path: &str) -> anyhow::Result<(Vec<Event>, String, u64)> {
+    let file = File::open(path).with_context(|| format!("wal: open {path}"))?;
+    let mut lines = BufReader::new(file).lines();
+    let header_line = match lines.next() {
+        Some(l) => l.context("wal: read header")?,
+        None => bail!("wal: {path} is empty (no header)"),
+    };
+    let header = Json::parse(&header_line).with_context(|| format!("wal: {path} header"))?;
+    let schema = header.str_of("schema")?;
+    if schema != WAL_SCHEMA {
+        bail!("wal: {path} has schema {schema:?}, expected {WAL_SCHEMA:?}");
+    }
+    if header.str_of("h")? != genesis_hash() {
+        bail!("wal: {path} header hash does not match the {WAL_SCHEMA} genesis hash");
+    }
+    let mut events = Vec::new();
+    let mut prev = genesis_hash();
+    let mut next_index = 1u64;
+    for (lineno, line) in lines.enumerate() {
+        let line = line.with_context(|| format!("wal: read {path}:{}", lineno + 2))?;
+        if line.trim().is_empty() {
+            continue; // a torn final write can leave a blank tail line
+        }
+        let rec = Json::parse(&line).with_context(|| format!("wal: parse {path}:{}", lineno + 2))?;
+        let i = rec.u64_of("i")?;
+        if i != next_index {
+            bail!(
+                "wal: {path} record {i} where {next_index} expected — \
+                 log truncated or spliced"
+            );
+        }
+        if rec.str_of("prev")? != prev {
+            bail!("wal: {path} record {i} prev-hash mismatch — records reordered or removed");
+        }
+        let event_json = rec.get("event").context("wal: record missing event")?;
+        let h = chain_hash(&prev, &event_json.to_string());
+        if rec.str_of("h")? != h {
+            bail!("wal: {path} record {i} hash mismatch — event payload altered");
+        }
+        events.push(Event::from_json(event_json).with_context(|| format!("wal: record {i}"))?);
+        prev = h;
+        next_index += 1;
+    }
+    Ok((events, prev, next_index))
+}
+
+/// Replay a verified event sequence into a fresh core (and exchange,
+/// for island campaigns). Never writes to the WAL — attach a writer
+/// *after* replaying so new events continue the existing chain.
+pub fn replay(core: &mut ServerCore, mut exchange: Option<&mut MigrationExchange>, events: Vec<Event>) {
+    for ev in events {
+        match (ev, exchange.as_deref_mut()) {
+            (Event::InstallIsland { deme, epoch, wu }, Some(ex)) => {
+                ex.install_one(core, deme, epoch, wu);
+            }
+            (Event::Poll { now }, Some(ex)) => ex.poll_stages(core, now),
+            (ev, _) => {
+                core.apply_replayed(ev);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("vgp_wal_{}_{name}.jsonl", std::process::id()));
+        p.to_string_lossy().into_owned()
+    }
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::Tick { now: 60.0 },
+            Event::Heartbeat { host_id: 1, now: 60.5 },
+            Event::Poll { now: 120.25 },
+        ]
+    }
+
+    #[test]
+    fn chain_roundtrips_and_resumes() {
+        let path = tmp("roundtrip");
+        let mut w = WalWriter::create(&path).unwrap();
+        w.append(&sample_events()[0]).unwrap();
+        w.append(&sample_events()[1]).unwrap();
+        drop(w);
+        // resume appending: the chain head must carry across reopen
+        let (events, mut w) = WalWriter::open_or_create(&path).unwrap();
+        assert_eq!(events.len(), 2);
+        w.append(&sample_events()[2]).unwrap();
+        drop(w);
+        let events = read_events(&path).unwrap();
+        assert_eq!(events.len(), 3);
+        assert_eq!(
+            events.iter().map(|e| e.to_json().to_string()).collect::<Vec<_>>(),
+            sample_events().iter().map(|e| e.to_json().to_string()).collect::<Vec<_>>(),
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tampered_record_is_rejected() {
+        let path = tmp("tamper");
+        let mut w = WalWriter::create(&path).unwrap();
+        for ev in sample_events() {
+            w.append(&ev).unwrap();
+        }
+        drop(w);
+        let dirty = std::fs::read_to_string(&path).unwrap().replace("60.5", "61.5");
+        std::fs::write(&path, dirty).unwrap();
+        let err = read_events(&path).unwrap_err().to_string();
+        assert!(err.contains("altered"), "tamper must name the failure: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn spliced_log_is_rejected() {
+        let path = tmp("splice");
+        let mut w = WalWriter::create(&path).unwrap();
+        for ev in sample_events() {
+            w.append(&ev).unwrap();
+        }
+        drop(w);
+        // drop the middle record: indices jump 1 -> 3
+        let spliced: Vec<String> = std::fs::read_to_string(&path)
+            .unwrap()
+            .lines()
+            .enumerate()
+            .filter(|(i, _)| *i != 2)
+            .map(|(_, l)| l.to_string())
+            .collect();
+        std::fs::write(&path, spliced.join("\n") + "\n").unwrap();
+        let err = read_events(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated or spliced"), "splice must be named: {err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fresh_path_yields_empty_replay() {
+        let path = tmp("fresh");
+        std::fs::remove_file(&path).ok();
+        let (events, _w) = WalWriter::open_or_create(&path).unwrap();
+        assert!(events.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -9,6 +9,11 @@
 //!
 //! Both return the canonical result payload (deterministic for a given
 //! spec, so quorum validation agrees across honest hosts).
+//!
+//! Crash recovery never calls into this module: the server's WAL
+//! records `ReportSuccess` events with their payload bytes inline
+//! (see [`crate::boinc::wal`]), so replay reconstructs server state
+//! without re-executing a single workunit.
 
 use anyhow::{Context, Result};
 

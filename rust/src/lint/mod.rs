@@ -7,10 +7,10 @@
 //! mechanically banned here, plus one safety invariant:
 //!
 //! * **`unordered-map`** — no `HashMap`/`HashSet` in payload-affecting
-//!   modules (`gp/`, `boinc/exchange.rs`, `boinc/server.rs`): iteration
-//!   order depends on the hasher seed, so any fold/max/serialize over
-//!   one is a nondeterminism bug waiting for a tie. Use `BTreeMap`/
-//!   `BTreeSet`.
+//!   modules (`gp/`, `boinc/exchange.rs`, `boinc/server.rs`,
+//!   `boinc/events.rs`): iteration order depends on the hasher seed, so
+//!   any fold/max/serialize over one is a nondeterminism bug waiting
+//!   for a tie. Use `BTreeMap`/`BTreeSet`.
 //! * **`wall-clock`** — no `Instant::now`/`SystemTime` in deterministic
 //!   code paths (`gp/`, `sim/`, `coordinator/`, `boinc/` except
 //!   `boinc/net.rs`): the simulator runs in virtual time and WU
@@ -25,6 +25,12 @@
 //!   (route through [`crate::metrics::dashboard::emit`]) and stderr for
 //!   the leveled log macros (`log_error!` … `log_trace!`), so `-v`/`-q`
 //!   verbosity routing actually governs every diagnostic.
+//! * **`core-mutation`** — no direct `Db` mutator calls
+//!   (`.db.insert_wu(`, `.db.result_mut(`, …) in `boinc/` outside the
+//!   pure core (`boinc/events.rs`) and `boinc/db.rs` itself: every
+//!   state transition must flow through `events::apply` so the WAL
+//!   captures it and crash replay reconstructs identical state. Shells
+//!   may read the db freely; they mutate it only by dispatching events.
 //! * **`forbid-unsafe`** — `lib.rs` must carry
 //!   `#![forbid(unsafe_code)]` and `main.rs` `#![deny(unsafe_code)]`:
 //!   volunteer payloads are untrusted input.
@@ -68,13 +74,31 @@ pub const RULES: &[(&str, &[&str])] = &[
     ("wall-clock", &["Instant::now", "SystemTime"]),
     ("float-arith", &[".sin(", ".cos(", ".tan(", ".exp(", ".ln(", ".sqrt(", ".powf(", ".powi("]),
     ("raw-print", &["println!", "eprintln!", "print!(", "eprint!("]),
+    (
+        "core-mutation",
+        &[
+            ".db.insert_wu(",
+            ".db.insert_result(",
+            ".db.upsert_host(",
+            ".db.wu_mut(",
+            ".db.result_mut(",
+            ".db.host_mut(",
+            ".db.pop_unsent(",
+            ".db.push_unsent(",
+            ".db.mark_in_progress(",
+            ".db.sweep_in_progress(",
+        ],
+    ),
 ];
 
 /// Does `rule` apply to the file at `rel` (root-relative, `/`-separated)?
 fn in_scope(rule: &str, rel: &str) -> bool {
     match rule {
         "unordered-map" => {
-            rel.starts_with("gp/") || rel == "boinc/exchange.rs" || rel == "boinc/server.rs"
+            rel.starts_with("gp/")
+                || rel == "boinc/exchange.rs"
+                || rel == "boinc/server.rs"
+                || rel == "boinc/events.rs"
         }
         "wall-clock" => {
             rel.starts_with("gp/")
@@ -89,6 +113,10 @@ fn in_scope(rule: &str, rel: &str) -> bool {
         // spells the banned tokens) are the only places allowed to print
         "raw-print" => {
             rel != "util/log.rs" && rel != "metrics/dashboard.rs" && !rel.starts_with("lint/")
+        }
+        // the pure core owns all mutation; db.rs defines the mutators
+        "core-mutation" => {
+            rel.starts_with("boinc/") && rel != "boinc/events.rs" && rel != "boinc/db.rs"
         }
         _ => false,
     }
@@ -257,6 +285,24 @@ mod tests {
         assert_eq!(lint_source("sim/mod.rs", stderr)[0].rule, "raw-print");
         let allowed = "fn f() { println!(\"x\"); } // lint:allow(raw-print): demo\n";
         assert!(lint_source("sim/mod.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn core_mutation_confined_to_pure_core() {
+        let src = "let id = core.db.insert_wu(wu);\n";
+        let f = lint_source("boinc/server.rs", src);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "core-mutation");
+        assert_eq!(lint_source("boinc/exchange.rs", "s.db.result_mut(rid);\n").len(), 1);
+        // the pure core and the Db definition itself are the two homes
+        assert!(lint_source("boinc/events.rs", src).is_empty());
+        assert!(lint_source("boinc/db.rs", src).is_empty());
+        // reads are always fine
+        assert!(lint_source("boinc/server.rs", "let w = self.db.wu(id);\n").is_empty());
+        // out of boinc/ the rule does not apply
+        assert!(lint_source("metrics/snapshot.rs", src).is_empty());
+        let allowed = "core.db.insert_wu(wu); // lint:allow(core-mutation): migration shim\n";
+        assert!(lint_source("boinc/net.rs", allowed).is_empty());
     }
 
     #[test]

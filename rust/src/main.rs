@@ -47,6 +47,11 @@
 //! (N records, virtual-time keyed, payload-neutral), and
 //! `vgp dashboard --from FILE` renders the ASCII fleet view. `-v`/`-q`
 //! (repeatable) raise/lower the stderr log level on every subcommand.
+//!
+//! Crash recovery (see [`vgp::boinc::wal`]): `--wal FILE` on
+//! `sim`/`serve` appends every server event to a sha256-chained
+//! write-ahead log; restarting `vgp serve --wal FILE` replays the log
+//! to the exact pre-crash state before accepting new connections.
 
 #![deny(unsafe_code)]
 
@@ -184,8 +189,15 @@ fn schedule_of(args: &Args) -> Schedule {
 /// `--trace N` — WU-lifecycle trace ring capacity (0 = off). The trace
 /// keys on virtual time and is payload-neutral: enabling it never
 /// changes a campaign byte (proven by `tests/observability.rs`).
+/// `--wal FILE` — append every server event to a sha256-chained
+/// write-ahead log ([`vgp::boinc::wal`]); a crashed run replays to its
+/// exact pre-crash state.
 fn sim_config_of(args: &Args) -> SimConfig {
-    SimConfig { trace_capacity: args.opt_u64("trace", 0) as usize, ..SimConfig::default() }
+    SimConfig {
+        trace_capacity: args.opt_u64("trace", 0) as usize,
+        wal: args.opt("wal").map(str::to_string),
+        ..SimConfig::default()
+    }
 }
 
 /// `--metrics-out FILE`: persist a fleet snapshot (canonical JSON,
@@ -405,6 +417,15 @@ fn sim_table(which: &str) -> i32 {
     0
 }
 
+/// `--wal FILE` on `serve`: verify + load any existing event log for
+/// crash replay, and open the writer that will extend its hash chain.
+fn open_wal_or_die(path: &str) -> (Vec<vgp::boinc::events::Event>, vgp::boinc::wal::WalWriter) {
+    vgp::boinc::wal::WalWriter::open_or_create(path).unwrap_or_else(|e| {
+        vgp::log_error!("--wal {path}: {e:#}");
+        std::process::exit(2);
+    })
+}
+
 fn cmd_serve(args: &Args) -> i32 {
     let problem = ProblemKind::parse(args.opt_str("problem", "mux6")).expect("problem");
     let pop = args.opt_u64("population", 200) as usize;
@@ -420,7 +441,22 @@ fn cmd_serve(args: &Args) -> i32 {
             core.trace.enable(trace_cap);
         }
         let mut ex = MigrationExchange::new(c.exchange_config());
-        ex.install(&mut core, c.workunits());
+        match args.opt("wal") {
+            Some(path) => {
+                let (events, writer) = open_wal_or_die(path);
+                if events.is_empty() {
+                    core.attach_wal(writer);
+                    ex.install(&mut core, c.workunits());
+                } else {
+                    // crash recovery: rebuild core + exchange from the
+                    // log, then extend the same chain with new events
+                    emit(&format!("replaying {} WAL events from {path}", events.len()));
+                    vgp::boinc::wal::replay(&mut core, Some(&mut ex), events);
+                    core.attach_wal(writer);
+                }
+            }
+            None => ex.install(&mut core, c.workunits()),
+        }
         let handle = serve(core).expect("serve");
         emit(&format!(
             "vgp island server on {} ({} demes x {} epochs of {}); Ctrl-C to stop",
@@ -459,8 +495,25 @@ fn cmd_serve(args: &Args) -> i32 {
     if trace_cap > 0 {
         core.trace.enable(trace_cap);
     }
-    for wu in c.workunits() {
-        core.submit_wu(wu);
+    match args.opt("wal") {
+        Some(path) => {
+            let (events, writer) = open_wal_or_die(path);
+            if events.is_empty() {
+                core.attach_wal(writer);
+                for wu in c.workunits() {
+                    core.submit_wu(wu);
+                }
+            } else {
+                emit(&format!("replaying {} WAL events from {path}", events.len()));
+                vgp::boinc::wal::replay(&mut core, None, events);
+                core.attach_wal(writer);
+            }
+        }
+        None => {
+            for wu in c.workunits() {
+                core.submit_wu(wu);
+            }
+        }
     }
     let handle = serve(core).expect("serve");
     emit(&format!("vgp server on {} ({runs} WUs of {}); Ctrl-C to stop", handle.addr, problem.name()));

@@ -78,6 +78,7 @@ metric_enum! {
         HostRegistered => "host.registered", "vgp_host_rpcs_total", "registered";
         HostHeartbeat => "host.heartbeat", "vgp_host_rpcs_total", "heartbeat";
         HostUnreliableRefusal => "host.unreliable_refusal", "vgp_host_rpcs_total", "unreliable_refusal";
+        UnknownHostRefusal => "host.unknown_refusal", "vgp_host_rpcs_total", "unknown_refusal";
         ResultDispatched => "result.dispatched", "vgp_results_total", "dispatched";
         ResultSuccess => "result.success", "vgp_results_total", "success";
         ResultClientError => "result.client_error", "vgp_results_total", "client_error";
@@ -86,6 +87,7 @@ metric_enum! {
         ResultInvalid => "result.invalid", "vgp_results_total", "invalid";
         ResultReissued => "result.reissued", "vgp_results_total", "reissued";
         ResultDidntNeed => "result.didnt_need", "vgp_results_total", "didnt_need";
+        ResultLateSuccess => "result.late_success", "vgp_results_total", "late_success";
         ExchangeVerifyOk => "exchange.verify.ok", "vgp_exchange_total", "verify_ok";
         ExchangeVerifyRejected => "exchange.verify.rejected", "vgp_exchange_total", "verify_rejected";
         ExchangeCancelled => "exchange.cancelled", "vgp_exchange_total", "cancelled";

@@ -12,6 +12,7 @@
 //! | `dispatched` | `ServerCore::request_work`   | a result replica was handed to a host            |
 //! | `executed`   | `report_success/report_error`| the host reported back (ok = success RPC)        |
 //! | `expired`    | `ServerCore::tick`           | a replica's deadline passed with no reply        |
+//! | `late_report`| `report_success`             | success arrived for an already-terminal replica (wasted volunteer work) |
 //! | `validated`  | transitioner (quorum check)  | replica judged against the quorum (valid flag)   |
 //! | `assimilated`| transitioner                 | canonical payload banked into `assimilated()`    |
 //!
@@ -57,6 +58,7 @@ pub enum TraceEvent {
     Dispatched { wu: u64, result: u64 },
     Executed { wu: u64, result: u64, ok: bool },
     Expired { wu: u64, result: u64 },
+    LateReport { wu: u64, result: u64 },
     Validated { wu: u64, result: u64, valid: bool },
     Assimilated { wu: u64 },
     Banked { wu: u64, emigrants: usize },
@@ -75,6 +77,7 @@ impl TraceEvent {
             TraceEvent::Dispatched { .. } => "dispatched",
             TraceEvent::Executed { .. } => "executed",
             TraceEvent::Expired { .. } => "expired",
+            TraceEvent::LateReport { .. } => "late_report",
             TraceEvent::Validated { .. } => "validated",
             TraceEvent::Assimilated { .. } => "assimilated",
             TraceEvent::Banked { .. } => "banked",
@@ -95,9 +98,9 @@ impl TraceEvent {
             | TraceEvent::Boosted { wu }
             | TraceEvent::Cancelled { wu }
             | TraceEvent::BarrierTimeout { wu } => j.set("wu", wu),
-            TraceEvent::Dispatched { wu, result } | TraceEvent::Expired { wu, result } => {
-                j.set("wu", wu).set("result", result)
-            }
+            TraceEvent::Dispatched { wu, result }
+            | TraceEvent::Expired { wu, result }
+            | TraceEvent::LateReport { wu, result } => j.set("wu", wu).set("result", result),
             TraceEvent::Executed { wu, result, ok } => j.set("wu", wu).set("result", result).set("ok", ok),
             TraceEvent::Validated { wu, result, valid } => j.set("wu", wu).set("result", result).set("valid", valid),
             TraceEvent::Banked { wu, emigrants } => j.set("wu", wu).set("emigrants", emigrants),

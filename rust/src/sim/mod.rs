@@ -56,6 +56,10 @@ pub struct SimConfig {
     /// 0 keeps tracing off. Tracing is payload-neutral — enabling it
     /// cannot change a canonical payload byte (tests prove it).
     pub trace_capacity: usize,
+    /// When set, every server event is appended to this write-ahead
+    /// log (`crate::boinc::wal`) before it is applied, so a crashed
+    /// run can be replayed to its exact pre-crash state.
+    pub wal: Option<String>,
 }
 
 impl Default for SimConfig {
@@ -66,6 +70,7 @@ impl Default for SimConfig {
             tick_interval: 600.0,
             max_virtual_time: 120.0 * 86400.0,
             trace_capacity: 0,
+            wal: None,
         }
     }
 }
@@ -151,9 +156,15 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(cfg: SimConfig, server_cfg: ServerConfig, hosts: Vec<SimHost>, seed: u64) -> Self {
-        let core = ServerCore::new(server_cfg);
+        let mut core = ServerCore::new(server_cfg);
         if cfg.trace_capacity > 0 {
             core.trace.enable(cfg.trace_capacity);
+        }
+        if let Some(path) = &cfg.wal {
+            match crate::boinc::wal::WalWriter::create(path) {
+                Ok(w) => core.attach_wal(w),
+                Err(e) => crate::log_error!("sim: wal {path}: {e:#}"),
+            }
         }
         Simulation {
             core,

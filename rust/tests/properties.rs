@@ -212,6 +212,240 @@ fn prop_terminal_result_states_absorbing() {
     });
 }
 
+/// Random middleware interleavings: after EVERY step, each host's
+/// cached `in_flight` counter must equal the number of InProgress
+/// result rows the DB actually holds for it — the invariant the
+/// feeder's per-host capacity check and the reliability quarantine
+/// both lean on (a drift here silently starves or floods a host).
+#[test]
+fn prop_in_flight_matches_in_progress_rows() {
+    check("in_flight == InProgress rows per host", 60, |rng: &mut Rng| {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let hosts: Vec<u64> = (0..3)
+            .map(|i| {
+                s.register_host(HostRow {
+                    id: 0,
+                    name: format!("h{i}"),
+                    city: "x".into(),
+                    flops: 1e9,
+                    ncpus: 1 + rng.below(3) as u32,
+                    on_frac: 1.0,
+                    active_frac: 1.0,
+                    registered_at: 0.0,
+                    last_heartbeat: 0.0,
+                    error_results: 0,
+                    valid_results: 0,
+                    consecutive_errors: 0,
+                    last_error_at: 0.0,
+                    in_flight: 0,
+                    credit: 0.0,
+                })
+            })
+            .collect();
+        let wu_ids: Vec<u64> = (0..6)
+            .map(|i| {
+                s.submit_wu(
+                    WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), 1e9)
+                        .with_redundancy(1 + rng.below(2), 1),
+                )
+            })
+            .collect();
+        let mut outstanding: Vec<u64> = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..80 {
+            now += rng.uniform(1.0, 30.0);
+            match rng.below(5) {
+                0 | 1 => {
+                    let h = hosts[rng.below(hosts.len())];
+                    if let Some((rid, _, _)) = s.request_work(h, now) {
+                        outstanding.push(rid);
+                    }
+                }
+                2 => {
+                    if !outstanding.is_empty() {
+                        let rid = outstanding.swap_remove(rng.below(outstanding.len()));
+                        if rng.chance(0.7) {
+                            s.report_success(rid, now, 1.0, Json::obj().set("ok", true));
+                        } else {
+                            s.report_error(rid, now);
+                        }
+                    }
+                }
+                3 => s.tick(now),
+                _ => {
+                    s.boost_wu(wu_ids[rng.below(wu_ids.len())]);
+                }
+            }
+            for &h in &hosts {
+                let cached = s.db.host(h).unwrap().in_flight as usize;
+                let rows = s.db.in_progress_for_host(h);
+                assert_prop(cached == rows, format!("host {h}: cached in_flight {cached} != {rows} InProgress rows"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// A held WU (a not-yet-released island epoch) must never grow result
+/// rows, no matter what the fleet does — replicas appear only at
+/// `release_wu`, and from then on the barrier WU behaves normally.
+#[test]
+fn prop_held_wus_never_dispatch_until_released() {
+    check("held WUs grow no replicas", 60, |rng: &mut Rng| {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let h = s.register_host(HostRow {
+            id: 0,
+            name: "h".into(),
+            city: "x".into(),
+            flops: 1e9,
+            ncpus: 4,
+            on_frac: 1.0,
+            active_frac: 1.0,
+            registered_at: 0.0,
+            last_heartbeat: 0.0,
+            error_results: 0,
+            valid_results: 0,
+            consecutive_errors: 0,
+            last_error_at: 0.0,
+            in_flight: 0,
+            credit: 0.0,
+        });
+        let mut held = Vec::new();
+        let mut ready = Vec::new();
+        for i in 0..6u64 {
+            let mut wu = WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i), 1e9);
+            if i % 2 == 0 {
+                wu.held = true;
+                held.push(s.submit_wu(wu));
+            } else {
+                ready.push(s.submit_wu(wu));
+            }
+        }
+        let mut outstanding: Vec<u64> = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..40 {
+            now += rng.uniform(1.0, 30.0);
+            match rng.below(4) {
+                0 | 1 => {
+                    if let Some((rid, _, _)) = s.request_work(h, now) {
+                        if rng.chance(0.8) {
+                            s.report_success(rid, now, 1.0, Json::obj().set("ok", true));
+                        } else {
+                            outstanding.push(rid);
+                        }
+                    }
+                }
+                2 => s.tick(now),
+                _ => {
+                    s.boost_wu(held[rng.below(held.len())]);
+                }
+            }
+            for &id in &held {
+                assert_prop(s.db.wu(id).unwrap().held, "held flag dropped without release")?;
+                assert_prop(s.db.results_of_wu(id).is_empty(), format!("held wu {id} grew result rows"))?;
+            }
+        }
+        // drain the host's slots so capacity can't mask the dispatch…
+        for rid in outstanding.drain(..) {
+            s.report_success(rid, now, 1.0, Json::obj().set("ok", true));
+        }
+        // …then release one: it must dispatch and complete like any other
+        let id = held[rng.below(held.len())];
+        s.release_wu(id, Json::obj().set("released", true));
+        let mut released_rid = None;
+        while let Some((rid, wu, _)) = s.request_work(h, now + 1.0) {
+            if wu.id == id {
+                released_rid = Some(rid);
+                break;
+            }
+            // a still-queued ready replica rode ahead; report it honestly
+            s.report_success(rid, now + 1.0, 1.0, Json::obj().set("ok", true));
+        }
+        let rid = released_rid.ok_or("released WU never dispatched".to_string())?;
+        s.report_success(rid, now + 2.0, 1.0, Json::obj().set("ok", true));
+        assert_prop(s.db.wu(id).unwrap().assimilated, "released WU assimilates")
+    });
+}
+
+/// Assimilation is monotone and the canonical choice immutable: the
+/// assimilated log only grows, a WU's `assimilated` flag never clears,
+/// and once `canonical_result` is chosen no later event changes it.
+#[test]
+fn prop_assimilation_monotone_and_canonical_immutable() {
+    check("assimilation monotone, canonical sticky", 60, |rng: &mut Rng| {
+        let mut s = ServerCore::new(ServerConfig::default());
+        let hosts: Vec<u64> = (0..3)
+            .map(|i| {
+                s.register_host(HostRow {
+                    id: 0,
+                    name: format!("h{i}"),
+                    city: "x".into(),
+                    flops: 1e9,
+                    ncpus: 2,
+                    on_frac: 1.0,
+                    active_frac: 1.0,
+                    registered_at: 0.0,
+                    last_heartbeat: 0.0,
+                    error_results: 0,
+                    valid_results: 0,
+                    consecutive_errors: 0,
+                    last_error_at: 0.0,
+                    in_flight: 0,
+                    credit: 0.0,
+                })
+            })
+            .collect();
+        let wu_ids: Vec<u64> = (0..5)
+            .map(|i| {
+                s.submit_wu(
+                    WorkUnit::new(0, format!("wu{i}"), Json::obj().set("i", i as u64), 1e9)
+                        .with_redundancy(1 + rng.below(3), 1 + rng.below(2)),
+                )
+            })
+            .collect();
+        let mut outstanding: Vec<u64> = Vec::new();
+        let mut n_assimilated = 0usize;
+        let mut canonical: Vec<Option<u64>> = vec![None; wu_ids.len()];
+        let mut now = 0.0;
+        for _ in 0..120 {
+            now += rng.uniform(1.0, 40.0);
+            match rng.below(4) {
+                0 | 1 => {
+                    let h = hosts[rng.below(hosts.len())];
+                    if let Some((rid, _, _)) = s.request_work(h, now) {
+                        outstanding.push(rid);
+                    }
+                }
+                2 => {
+                    if !outstanding.is_empty() {
+                        let rid = outstanding.swap_remove(rng.below(outstanding.len()));
+                        // honest quorum: payload is a pure function of the WU
+                        let wu_id = s.db.result(rid).unwrap().wu_id;
+                        let i = s.db.wu(wu_id).unwrap().spec.u64_of("i").unwrap();
+                        s.report_success(rid, now, 1.0, Json::obj().set("v", i));
+                    }
+                }
+                _ => s.tick(now),
+            }
+            assert_prop(s.assimilated().len() >= n_assimilated, "assimilated log shrank")?;
+            n_assimilated = s.assimilated().len();
+            for (k, &id) in wu_ids.iter().enumerate() {
+                let w = s.db.wu(id).unwrap();
+                match (canonical[k], w.canonical_result) {
+                    (Some(a), b) => {
+                        assert_prop(b == Some(a), format!("wu {id} canonical changed"))?;
+                    }
+                    (None, b) => canonical[k] = b,
+                }
+                if canonical[k].is_some() {
+                    assert_prop(w.assimilated, "canonical chosen but not assimilated")?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_regression_tape_matches_scalar_eval() {
     let ps = regression_set(1);

@@ -1,0 +1,205 @@
+//! Crash-recovery acceptance for the WAL + pure-core refactor: a
+//! server killed after *any* logged event and restarted via
+//! [`vgp::boinc::wal::replay`] must reach bit-identical state to an
+//! uninterrupted run — DB-backed fleet snapshot, metrics registry,
+//! trace ring and assimilated payload hashes, on both the native
+//! (Method-1) and artifact (Method-2) campaign paths. CI pins the
+//! worker thread axis through `VGP_EVAL_THREADS` (1 and 8) like the
+//! determinism suite.
+
+use vgp::boinc::db::HostRow;
+use vgp::boinc::events::Event;
+use vgp::boinc::exchange::MigrationExchange;
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::signature::sha256_hex;
+use vgp::boinc::wal::{self, WalWriter};
+use vgp::coordinator::{exec, IslandCampaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::metrics::snapshot::FleetSnapshot;
+use vgp::util::json::Json;
+
+fn host(name: &str) -> HostRow {
+    HostRow {
+        id: 0,
+        name: name.into(),
+        city: "lab".into(),
+        flops: 1e9,
+        ncpus: 2,
+        on_frac: 1.0,
+        active_frac: 1.0,
+        registered_at: 0.0,
+        last_heartbeat: 0.0,
+        error_results: 0,
+        valid_results: 0,
+        consecutive_errors: 0,
+        last_error_at: 0.0,
+        in_flight: 0,
+        credit: 0.0,
+    }
+}
+
+fn tmp(name: &str) -> String {
+    let mut p = std::env::temp_dir();
+    p.push(format!("vgp_walreplay_{}_{name}.jsonl", std::process::id()));
+    p.to_string_lossy().into_owned()
+}
+
+/// Worker thread counts: pinned by CI via `VGP_EVAL_THREADS` (the 1-
+/// and 8-thread legs), a two-point spread otherwise.
+fn matrix_threads() -> Vec<usize> {
+    match std::env::var("VGP_EVAL_THREADS") {
+        Ok(v) => vec![v.parse().expect("VGP_EVAL_THREADS must be a thread count")],
+        Err(_) => vec![1, 8],
+    }
+}
+
+/// Drive an island campaign to completion against a WAL-attached core,
+/// executing each dispatched spec through `run`. Returns the finished
+/// server pieces plus the final virtual time.
+fn drive_with_wal(
+    c: &IslandCampaign,
+    wal_path: &str,
+    nhosts: usize,
+    mut run: impl FnMut(&Json) -> Json,
+) -> (ServerCore, MigrationExchange, f64) {
+    let mut core = ServerCore::new(ServerConfig::default());
+    core.trace.enable(256);
+    core.attach_wal(WalWriter::create(wal_path).unwrap());
+    let mut ex = MigrationExchange::new(c.exchange_config());
+    ex.install(&mut core, c.workunits());
+    let hosts: Vec<u64> = (0..nhosts).map(|i| core.register_host(host(&format!("h{i}")))).collect();
+    let mut now = 0.0;
+    for _round in 0..1000 {
+        now += 60.0;
+        ex.poll(&mut core, now);
+        let mut done: Vec<(u64, Json)> = Vec::new();
+        for &h in &hosts {
+            while let Some((rid, wu, _sig)) = core.request_work(h, now) {
+                done.push((rid, run(&wu.spec)));
+            }
+        }
+        for (rid, payload) in done {
+            core.report_success(rid, now, 1.0, payload);
+        }
+        ex.poll(&mut core, now);
+        if core.is_complete() {
+            break;
+        }
+    }
+    assert!(core.is_complete(), "campaign must finish");
+    (core, ex, now)
+}
+
+/// Bit-level state fingerprint: the full fleet snapshot JSON (hosts,
+/// metrics, trace tail, exchange epoch grid + stats) plus the sha256
+/// of every assimilated canonical payload.
+fn fingerprint(core: &ServerCore, ex: &MigrationExchange, now: f64) -> String {
+    let snap = FleetSnapshot::from_parts(core, Some(ex), now).to_json().to_string();
+    let payloads: Vec<String> = core
+        .assimilated()
+        .iter()
+        .map(|a| format!("{} {}", a.wu_name, sha256_hex(a.payload.to_string().as_bytes())))
+        .collect();
+    format!("{snap}\n{}", payloads.join("\n"))
+}
+
+/// The kill-at-every-event-index sweep: for each prefix length `k`,
+/// replay `events[..k]` into a fresh server (the state a restart
+/// recovers), then feed the remaining `events[k..]` (the same inputs
+/// arriving after the restart) and demand the baseline fingerprint.
+fn assert_replay_identical_at_every_index(
+    c: &IslandCampaign,
+    events: &[Event],
+    want: &str,
+    final_now: f64,
+) {
+    for k in 0..=events.len() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        core.trace.enable(256);
+        let mut ex = MigrationExchange::new(c.exchange_config());
+        wal::replay(&mut core, Some(&mut ex), events[..k].to_vec());
+        wal::replay(&mut core, Some(&mut ex), events[k..].to_vec());
+        assert!(core.is_complete(), "kill at index {k}: replayed campaign incomplete");
+        assert_eq!(fingerprint(&core, &ex, final_now), want, "kill at index {k}");
+    }
+}
+
+#[test]
+fn kill_at_every_event_index_replays_bit_identical_native() {
+    for threads in matrix_threads() {
+        let mut c = IslandCampaign::new("walnat", ProblemKind::Mux6, 3, 3, 4, 60);
+        c.migration_k = 2;
+        c.seed = 5;
+        c.threads = threads;
+        let path = tmp(&format!("native_t{threads}"));
+        let (core, ex, final_now) = drive_with_wal(&c, &path, 4, |spec| exec::run_island_wu_native(spec).unwrap());
+        let want = fingerprint(&core, &ex, final_now);
+        let events = wal::read_events(&path).unwrap();
+        assert!(events.len() > 40, "campaign must log a real stream, got {}", events.len());
+        assert_replay_identical_at_every_index(&c, &events, &want, final_now);
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn kill_at_every_event_index_replays_bit_identical_artifact() {
+    if !std::path::Path::new("artifacts/meta.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let rt = vgp::runtime::Runtime::load("artifacts").expect("runtime load");
+    let mut c = IslandCampaign::new("walart", ProblemKind::Mux6, 2, 2, 3, 50);
+    c.path = exec::ExecPath::Artifact;
+    c.seed = 3;
+    let path = tmp("artifact");
+    let (core, ex, final_now) = drive_with_wal(&c, &path, 1, |spec| exec::run_wu_auto_rt(Some(&rt), spec).unwrap());
+    let want = fingerprint(&core, &ex, final_now);
+    let events = wal::read_events(&path).unwrap();
+    assert!(events.len() > 10, "campaign must log a real stream, got {}", events.len());
+    assert_replay_identical_at_every_index(&c, &events, &want, final_now);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn restart_resumes_the_same_chain_it_left() {
+    // a restart opens the same file, replays, and keeps appending: the
+    // chain head must carry across so the extended log still verifies
+    let mut c = IslandCampaign::new("walres", ProblemKind::Mux6, 2, 2, 3, 40);
+    c.seed = 7;
+    let path = tmp("resume");
+    let (core, ex, final_now) = drive_with_wal(&c, &path, 2, |spec| exec::run_island_wu_native(spec).unwrap());
+    let want = fingerprint(&core, &ex, final_now);
+    let (events, writer) = WalWriter::open_or_create(&path).unwrap();
+    let mut core2 = ServerCore::new(ServerConfig::default());
+    core2.trace.enable(256);
+    let mut ex2 = MigrationExchange::new(c.exchange_config());
+    wal::replay(&mut core2, Some(&mut ex2), events);
+    core2.attach_wal(writer);
+    assert_eq!(fingerprint(&core2, &ex2, final_now), want, "recovered state diverges");
+    // post-restart events extend the verified chain
+    core2.tick(final_now + 60.0);
+    let n_before = wal::read_events(&path).unwrap().len();
+    core2.tick(final_now + 120.0);
+    assert_eq!(wal::read_events(&path).unwrap().len(), n_before + 1, "chain must extend");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tampered_campaign_log_is_refused_on_restart() {
+    let mut c = IslandCampaign::new("waltam", ProblemKind::Mux6, 2, 2, 3, 40);
+    c.seed = 7;
+    let path = tmp("tamper");
+    drive_with_wal(&c, &path, 2, |spec| exec::run_island_wu_native(spec).unwrap());
+    // flip one event byte: the first poll's virtual time
+    let dirty = std::fs::read_to_string(&path)
+        .unwrap()
+        .replacen("{\"now\":60,\"t\":\"poll\"}", "{\"now\":61,\"t\":\"poll\"}", 1);
+    assert!(dirty.contains("\"t\":\"poll\""), "drive must have logged a poll");
+    std::fs::write(&path, dirty).unwrap();
+    let err = match WalWriter::open_or_create(&path) {
+        Ok(_) => panic!("tampered log must be refused"),
+        Err(e) => format!("{e:#}"),
+    };
+    assert!(err.contains("altered"), "tamper must be named on restart: {err}");
+    std::fs::remove_file(&path).ok();
+}
