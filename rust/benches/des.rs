@@ -1,0 +1,212 @@
+//! DES engine throughput at fleet scale (§Perf in EXPERIMENTS.md):
+//! drives the full simulator — calendar-queue event loop, slab host
+//! state, deadline-wheel server — through volunteer campaigns at
+//! 10^4 / 10^5 / 10^6 hosts and appends `kernel: "des"` rows
+//! (`{hosts, scenario, scheduler, events_per_sec, peak_rss_mb}`) to
+//! the repo perf trajectory (`BENCH_hotpath.json`, override path with
+//! VGP_BENCH_JSON, tag entries with BENCH_PR). The reference
+//! `BinaryHeap` loop is timed alongside at the largest size so the
+//! calendar queue's advantage is measured, not assumed.
+//!
+//! **Smoke mode** (`VGP_BENCH_SMOKE=1`, the CI bench-smoke job): one
+//! 10^4-host campaign per churn scenario on the calendar queue plus a
+//! heap baseline, schema-validated append, and a regression gate: if
+//! the trajectory already holds a *measured* row for the same
+//! `(hosts, scheduler, scenario)` config (pr tag not ending in
+//! `-est` — analytic seed rows don't gate), the new throughput must
+//! reach 80% of it or the bench exits nonzero.
+
+use std::time::Instant;
+
+use vgp::boinc::server::ServerConfig;
+use vgp::boinc::workunit::WorkUnit;
+use vgp::churn::{HostSlab, PoolParams, Scenario};
+use vgp::sim::queue::QueueKind;
+use vgp::sim::{SimConfig, Simulation};
+use vgp::util::bench::{append_bench_json, validate_bench_json, BenchRecord};
+use vgp::util::json::Json;
+use vgp::util::rng::Rng;
+
+/// Peak resident set (VmHWM) in MiB, if the kernel exposes it.
+fn peak_rss_mb() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb / 1024.0)
+}
+
+struct DesRun {
+    events_per_sec: f64,
+    events: u64,
+    completed: usize,
+    total_wus: usize,
+    wall_s: f64,
+}
+
+/// One volunteer campaign: `hosts` volunteers arriving over six hours,
+/// `hosts/20` work units (min 50) of ~13 min each on the mean host.
+/// The campaign drains well inside the six-hour horizon; the residual
+/// poll traffic afterwards is exactly the steady-state load a fleet
+/// this size puts on the scheduler.
+fn run_des(hosts: usize, scenario: Scenario, queue: QueueKind, seed: u64) -> DesRun {
+    let params = PoolParams::volunteer(hosts).with_scenario(scenario);
+    let params = PoolParams {
+        arrival_spread_days: 0.25, // all arrivals inside the horizon
+        mean_lifetime_days: 0.5,
+        ..params
+    };
+    let mut rng = Rng::new(seed);
+    let slab = HostSlab::sample(&mut rng, &params, &[]);
+    let cfg = SimConfig {
+        queue,
+        poll_interval: 300.0,
+        tick_interval: 600.0,
+        max_virtual_time: 6.0 * 3600.0,
+        ..SimConfig::default()
+    };
+    let mut sim = Simulation::from_slab(cfg, ServerConfig::default(), slab, seed);
+    let n_wus = (hosts / 20).max(50);
+    for i in 0..n_wus {
+        sim.submit(WorkUnit::new(0, format!("wu_{i}"), Json::obj().set("i", i as u64), 1e12));
+    }
+    let t0 = Instant::now();
+    let out = sim.run_mut(1.3e9 * 0.9);
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    DesRun {
+        events_per_sec: out.events_processed as f64 / wall_s,
+        events: out.events_processed,
+        completed: out.completed,
+        total_wus: out.total_wus,
+        wall_s,
+    }
+}
+
+/// Last *measured* throughput for this config in the trajectory, if
+/// any. Analytic seed rows (pr tag ending `-est`) never gate.
+fn last_measured(entries: &[Json], hosts: u64, scheduler: &str, scenario: &str) -> Option<f64> {
+    entries
+        .iter()
+        .filter(|e| {
+            e.get("kernel").and_then(Json::as_str) == Some("des")
+                && e.get("hosts").and_then(Json::as_u64) == Some(hosts)
+                && e.get("scheduler").and_then(Json::as_str) == Some(scheduler)
+                && e.get("scenario").and_then(Json::as_str) == Some(scenario)
+                && e.get("pr").and_then(Json::as_str).map(|p| !p.ends_with("-est")).unwrap_or(false)
+        })
+        .filter_map(|e| e.get("events_per_sec").and_then(Json::as_f64))
+        .next_back()
+}
+
+fn main() {
+    let smoke = std::env::var("VGP_BENCH_SMOKE").map(|v| v == "1" || v == "true").unwrap_or(false);
+    let pr_tag = std::env::var("BENCH_PR").unwrap_or_else(|_| "dev".to_string());
+    let json_path = std::env::var("VGP_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json").to_string()
+    });
+    let prior: Vec<Json> = std::fs::read_to_string(&json_path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.as_arr().map(<[Json]>::to_vec))
+        .unwrap_or_default();
+
+    // (hosts, scenario, queue): the smoke matrix sweeps every churn
+    // scenario at 10^4 hosts; the full run scales the diurnal fleet to
+    // a million hosts, heap baseline alongside at the top size
+    let mut matrix: Vec<(usize, Scenario, QueueKind)> = Vec::new();
+    if smoke {
+        for &sc in Scenario::ALL {
+            matrix.push((10_000, sc, QueueKind::Calendar));
+        }
+        matrix.push((10_000, Scenario::Steady, QueueKind::Heap));
+    } else {
+        for hosts in [10_000, 100_000, 1_000_000] {
+            matrix.push((hosts, Scenario::Diurnal, QueueKind::Calendar));
+        }
+        matrix.push((1_000_000, Scenario::Diurnal, QueueKind::Heap));
+    }
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut gate_failed = false;
+    for (i, &(hosts, scenario, queue)) in matrix.iter().enumerate() {
+        let r = run_des(hosts, scenario, queue, 1234 + i as u64);
+        let rss = peak_rss_mb();
+        println!(
+            "des {:>9} hosts  {:<10} {:<8} {:>12.3e} events/s  ({} events, {}/{} wus, {:.2}s wall, rss {})",
+            hosts,
+            scenario.name(),
+            queue.name(),
+            r.events_per_sec,
+            r.events,
+            r.completed,
+            r.total_wus,
+            r.wall_s,
+            rss.map(|m| format!("{m:.0} MiB")).unwrap_or_else(|| "n/a".into()),
+        );
+        assert!(r.completed > 0, "campaign must make progress ({hosts} hosts, {scenario:?})");
+        if let Some(old) = last_measured(&prior, hosts as u64, queue.name(), scenario.name()) {
+            if r.events_per_sec < 0.8 * old {
+                println!(
+                    "REGRESSION: {} hosts / {} / {}: {:.3e} events/s < 80% of last measured {:.3e}",
+                    hosts,
+                    scenario.name(),
+                    queue.name(),
+                    r.events_per_sec,
+                    old
+                );
+                gate_failed = true;
+            }
+        }
+        records.push(BenchRecord {
+            pr: pr_tag.clone(),
+            kernel: "des".to_string(),
+            threads: 1,
+            scheduler: queue.name().to_string(),
+            lanes: 0,
+            // mirrored so dashboards plot one throughput column
+            evals_per_sec: r.events_per_sec,
+            hosts: Some(hosts as u64),
+            events_per_sec: Some(r.events_per_sec),
+            scenario: Some(scenario.name().to_string()),
+            peak_rss_mb: rss,
+        });
+    }
+
+    // the smoke contract CI relies on: every scenario measured on the
+    // calendar queue plus the heap baseline
+    if smoke {
+        for &sc in Scenario::ALL {
+            assert!(
+                records.iter().any(|r| r.scheduler == "calendar"
+                    && r.scenario.as_deref() == Some(sc.name())),
+                "smoke run must measure scenario '{}'",
+                sc.name()
+            );
+        }
+        assert!(records.iter().any(|r| r.scheduler == "heap"), "smoke run must measure the heap baseline");
+    }
+
+    match append_bench_json(&json_path, &records) {
+        Ok(()) => {
+            println!("appended {} records to {json_path}", records.len());
+            match validate_bench_json(&json_path) {
+                Ok(n) => println!("{json_path} schema OK ({n} entries)"),
+                Err(e) => {
+                    println!("{json_path} schema INVALID: {e:#}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        // local runs tolerate an unwritable trajectory; the CI smoke
+        // job must not (its uploaded artifact would be stale)
+        Err(e) if smoke => {
+            println!("could not write {json_path}: {e}");
+            std::process::exit(1);
+        }
+        Err(e) => println!("could not write {json_path}: {e} (records printed above)"),
+    }
+    if gate_failed {
+        println!("DES throughput regression gate failed");
+        std::process::exit(1);
+    }
+    println!("done");
+}

@@ -339,6 +339,7 @@ fn main() {
             scheduler: "static".to_string(),
             lanes,
             evals_per_sec: 256.0 * res.per_sec(),
+            ..Default::default()
         });
     }
     let mut throughputs: Vec<(usize, f64)> = Vec::new();
@@ -366,6 +367,7 @@ fn main() {
                 scheduler: schedule.name().to_string(),
                 lanes: tape::DEFAULT_LANES,
                 evals_per_sec: 256.0 * res.per_sec(),
+                ..Default::default()
             });
             if schedule == Schedule::Static {
                 throughputs.push((threads, res.per_sec()));
@@ -423,6 +425,7 @@ fn main() {
         scheduler: "static".to_string(),
         lanes: 0,
         evals_per_sec: rpop.len() as f64 * old_reg.per_sec(),
+        ..Default::default()
     });
     let mut reg_scratch = tape::RegScratch::new(rcases.ncases());
     let mut reg_l4_rate = 0.0f64;
@@ -451,6 +454,7 @@ fn main() {
             scheduler: "static".to_string(),
             lanes,
             evals_per_sec: rpop.len() as f64 * res.per_sec(),
+            ..Default::default()
         });
     }
     println!(
@@ -481,6 +485,7 @@ fn main() {
                 scheduler: schedule.name().to_string(),
                 lanes: tape::DEFAULT_REG_LANES,
                 evals_per_sec: rpop.len() as f64 * res.per_sec(),
+                ..Default::default()
             });
         }
     }

@@ -2,10 +2,29 @@
 //! Tables for hosts, work units and results with the secondary indices
 //! the scheduler/transitioner/validator need. Single-writer semantics
 //! (the `ServerCore` owns the DB); the TCP front-end serializes access.
+//!
+//! In-progress results are tracked by a **deadline wheel**: an ordered
+//! set keyed on `(deadline, dispatch order)` plus a per-host counter.
+//! The transitioner's expiry pass pops only the entries whose deadline
+//! actually passed (O(expired · log n), never a full-table scan), and
+//! `in_progress_for_host` is a map lookup instead of walking every
+//! result row — both load-bearing at million-host fleet sizes.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 use super::workunit::{ResultRecord, ServerState, WorkUnit};
+
+/// Order-preserving map from a non-NaN `f64` deadline to a `u64` sort
+/// key: `a < b ⇔ dl_key(a) < dl_key(b)` (same construction as
+/// `sim::queue::time_key`; duplicated to keep `boinc` free of `sim`).
+fn dl_key(t: f64) -> u64 {
+    let b = t.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | (1 << 63)
+    }
+}
 
 /// A registered volunteer host (BOINC `host` row).
 #[derive(Clone, Debug)]
@@ -50,8 +69,17 @@ pub struct Db {
     by_wu: HashMap<u64, Vec<u64>>,
     /// index: unsent result ids in FIFO order (the feeder's shmem queue)
     unsent: VecDeque<u64>,
-    /// index: in-progress result ids (for deadline scans)
-    in_progress: Vec<u64>,
+    /// deadline wheel: `(dl_key(deadline), dispatch_seq, result_id)`
+    /// for every InProgress result, ordered by expiry
+    wheel: BTreeSet<(u64, u64, u64)>,
+    /// result_id -> (dl_key(deadline), dispatch_seq, host_id): the
+    /// wheel coordinates needed to retire an entry in O(log n)
+    ip_meta: BTreeMap<u64, (u64, u64, u64)>,
+    /// host_id -> count of InProgress results on that host
+    ip_by_host: BTreeMap<u64, u32>,
+    /// monotone dispatch counter; expiry batches replay in dispatch
+    /// order so the wheel reproduces the legacy scan order exactly
+    dispatch_seq: u64,
     next_wu_id: u64,
     next_result_id: u64,
 }
@@ -145,29 +173,78 @@ impl Db {
         self.unsent.push_front(id);
     }
 
-    pub fn mark_in_progress(&mut self, id: u64) {
-        self.in_progress.push(id);
+    // ------------------------------------------------- in-progress index
+    /// Record a dispatch: the result entered `InProgress` on `host_id`
+    /// with the given expiry. O(log n).
+    pub fn mark_in_progress(&mut self, id: u64, host_id: u64, deadline: f64) {
+        self.dispatch_seq += 1;
+        let key = dl_key(deadline);
+        debug_assert!(!self.ip_meta.contains_key(&id), "result {id} marked twice");
+        self.wheel.insert((key, self.dispatch_seq, id));
+        self.ip_meta.insert(id, (key, self.dispatch_seq, host_id));
+        *self.ip_by_host.entry(host_id).or_insert(0) += 1;
     }
 
-    pub fn in_progress_ids(&self) -> &[u64] {
-        &self.in_progress
+    /// Retire a result that left `InProgress` (success, error or
+    /// cancellation). O(log n); a no-op for untracked ids.
+    pub fn retire_in_progress(&mut self, id: u64) {
+        if let Some((key, seq, host_id)) = self.ip_meta.remove(&id) {
+            self.wheel.remove(&(key, seq, id));
+            if let Some(n) = self.ip_by_host.get_mut(&host_id) {
+                *n -= 1;
+                if *n == 0 {
+                    self.ip_by_host.remove(&host_id);
+                }
+            }
+        }
     }
 
-    /// Ground truth for the per-host `in_flight` counter: how many
-    /// results are actually `InProgress` on this host right now. The
-    /// property suite asserts `HostRow::in_flight` never drifts from
-    /// this under any request/report/tick/boost interleaving.
+    /// Remove and return every tracked result whose deadline is
+    /// **strictly** before `now` (the pinned expiry boundary rule), in
+    /// dispatch order — the same order the legacy full-table scan
+    /// visited them. O(expired · log n), independent of fleet size.
+    pub fn take_expired(&mut self, now: f64) -> Vec<u64> {
+        let bound = dl_key(now);
+        let mut batch: Vec<(u64, u64)> = Vec::new();
+        for &(key, seq, id) in self.wheel.range(..(bound, 0, 0)) {
+            debug_assert!(key < bound);
+            batch.push((seq, id));
+        }
+        batch.sort_unstable();
+        let ids: Vec<u64> = batch.iter().map(|&(_, id)| id).collect();
+        for &id in &ids {
+            debug_assert_eq!(
+                self.results.get(&id).map(|r| r.server_state),
+                Some(ServerState::InProgress),
+                "wheel entry {id} drifted from the results table"
+            );
+            self.retire_in_progress(id);
+        }
+        ids
+    }
+
+    /// Number of results currently `InProgress` (exact: entries are
+    /// retired the moment they transition, there is no sweep lag).
+    pub fn in_progress_len(&self) -> usize {
+        self.ip_meta.len()
+    }
+
+    /// How many results are `InProgress` on this host right now — the
+    /// ground truth for the `HostRow::in_flight` counter, answered
+    /// from the per-host index in O(log n). The debug build re-derives
+    /// it with the legacy full scan so the index can never drift
+    /// silently.
     pub fn in_progress_for_host(&self, host_id: u64) -> usize {
-        self.results
-            .values()
-            .filter(|r| r.server_state == ServerState::InProgress && r.host_id == host_id)
-            .count()
-    }
-
-    pub fn sweep_in_progress(&mut self) {
-        let results = &self.results;
-        self.in_progress
-            .retain(|id| results.get(id).map(|r| r.server_state == ServerState::InProgress).unwrap_or(false));
+        let n = self.ip_by_host.get(&host_id).copied().unwrap_or(0) as usize;
+        debug_assert_eq!(
+            n,
+            self.results
+                .values()
+                .filter(|r| r.server_state == ServerState::InProgress && r.host_id == host_id)
+                .count(),
+            "per-host in-progress index drifted for host {host_id}"
+        );
+        n
     }
 
     /// All WUs assimilated (campaign complete)?
@@ -182,7 +259,7 @@ impl Db {
             wus_done: self.wus.values().filter(|w| w.is_done()).count(),
             results: self.results.len(),
             unsent: self.unsent.len(),
-            in_progress: self.in_progress.len(),
+            in_progress: self.ip_meta.len(),
         }
     }
 }
@@ -255,17 +332,76 @@ mod tests {
         assert_eq!(db.results_of_wu(wu2).len(), 1);
     }
 
-    #[test]
-    fn sweep_in_progress_drops_finished() {
-        let mut db = Db::new();
-        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+    /// Hand-drive a result through dispatch/retire and check every
+    /// index view stays exact at each step.
+    fn dispatch(db: &mut Db, wu: u64, host_id: u64, deadline: f64) -> u64 {
         let r = db.insert_result(ResultRecord::new(0, wu));
         db.pop_unsent();
-        db.result_mut(r).unwrap().server_state = ServerState::InProgress;
-        db.mark_in_progress(r);
-        assert_eq!(db.in_progress_ids().len(), 1);
+        let rec = db.result_mut(r).unwrap();
+        rec.server_state = ServerState::InProgress;
+        rec.host_id = host_id;
+        rec.deadline = deadline;
+        db.mark_in_progress(r, host_id, deadline);
+        r
+    }
+
+    #[test]
+    fn wheel_retires_on_transition() {
+        let mut db = Db::new();
+        let h = db.upsert_host(host("a"));
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let r = dispatch(&mut db, wu, h, 100.0);
+        assert_eq!(db.in_progress_len(), 1);
+        assert_eq!(db.in_progress_for_host(h), 1);
         db.result_mut(r).unwrap().server_state = ServerState::Over;
-        db.sweep_in_progress();
-        assert!(db.in_progress_ids().is_empty());
+        db.retire_in_progress(r);
+        assert_eq!(db.in_progress_len(), 0);
+        assert_eq!(db.in_progress_for_host(h), 0);
+        db.retire_in_progress(r); // idempotent
+        assert_eq!(db.stats().in_progress, 0);
+    }
+
+    #[test]
+    fn wheel_expires_strictly_past_deadline_in_dispatch_order() {
+        let mut db = Db::new();
+        let h1 = db.upsert_host(host("a"));
+        let h2 = db.upsert_host(host("b"));
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        // dispatch order r1, r2, r3 with deadlines 50, 200, 50
+        let r1 = dispatch(&mut db, wu, h1, 50.0);
+        let r2 = dispatch(&mut db, wu, h2, 200.0);
+        let r3 = dispatch(&mut db, wu, h1, 50.0);
+        assert_eq!(db.in_progress_for_host(h1), 2);
+        // boundary rule: deadline == now does NOT expire
+        assert!(db.take_expired(50.0).is_empty());
+        assert_eq!(db.in_progress_len(), 3);
+        // strictly past: both 50.0 entries pop, in dispatch order
+        for id in db.take_expired(50.0001) {
+            db.result_mut(id).unwrap().server_state = ServerState::Over;
+        }
+        assert_eq!(db.in_progress_len(), 1);
+        assert_eq!(db.in_progress_for_host(h1), 0);
+        assert_eq!(db.in_progress_for_host(h2), 1);
+        let _ = (r1, r3);
+        // the survivor expires later
+        let late = db.take_expired(1e9);
+        assert_eq!(late, vec![r2]);
+        db.result_mut(r2).unwrap().server_state = ServerState::Over;
+        assert_eq!(db.in_progress_len(), 0);
+    }
+
+    #[test]
+    fn expiry_batch_preserves_dispatch_order_not_deadline_order() {
+        let mut db = Db::new();
+        let h = db.upsert_host(host("a"));
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        // later dispatch gets the EARLIER deadline
+        let r1 = dispatch(&mut db, wu, h, 300.0);
+        let r2 = dispatch(&mut db, wu, h, 100.0);
+        let expired = db.take_expired(1000.0);
+        assert_eq!(expired, vec![r1, r2], "legacy scan order = dispatch order");
+        for id in expired {
+            db.result_mut(id).unwrap().server_state = ServerState::Over;
+        }
     }
 }

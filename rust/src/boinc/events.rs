@@ -182,7 +182,7 @@ fn coord_of(spec: &Json) -> Option<(usize, usize)> {
 
 /// Mirror the dispatch backlog into the in-flight gauge.
 fn gauge_in_flight(s: &CoreState<'_>) -> Effect {
-    Effect::GaugeSet(Gauge::ResultsInFlight, s.db.in_progress_ids().len() as f64)
+    Effect::GaugeSet(Gauge::ResultsInFlight, s.db.in_progress_len() as f64)
 }
 
 fn submit_wu(s: &mut CoreState<'_>, wu: WorkUnit) -> Vec<Effect> {
@@ -358,7 +358,7 @@ fn request_work(s: &mut CoreState<'_>, host_id: u64, now: f64) -> Vec<Effect> {
     if let Some(h) = s.db.host_mut(host_id) {
         h.in_flight += 1;
     }
-    s.db.mark_in_progress(rid);
+    s.db.mark_in_progress(rid, host_id, deadline);
     fx.push(Effect::MetricInc(Counter::ResultDispatched));
     fx.push(gauge_in_flight(s));
     fx.push(Effect::TraceEmit {
@@ -403,6 +403,7 @@ fn report_success(s: &mut CoreState<'_>, rid: u64, now: f64, cpu_time: f64, payl
         r.payload = Some(payload);
         (r.wu_id, r.host_id, r.sent_at)
     };
+    s.db.retire_in_progress(rid);
     if let Some(h) = s.db.host_mut(host_id) {
         h.consecutive_errors = 0; // success lifts the reliability block
         h.in_flight = h.in_flight.saturating_sub(1);
@@ -420,7 +421,6 @@ fn report_success(s: &mut CoreState<'_>, rid: u64, now: f64, cpu_time: f64, payl
         event: TraceEvent::Executed { wu: wu_id, result: rid, ok: true },
     });
     transition_wu(s, wu_id, now, &mut fx);
-    s.db.sweep_in_progress();
     fx.push(gauge_in_flight(s));
     fx
 }
@@ -439,6 +439,7 @@ fn report_error(s: &mut CoreState<'_>, rid: u64, now: f64) -> Vec<Effect> {
         r.received_at = now;
         (r.wu_id, r.host_id)
     };
+    s.db.retire_in_progress(rid);
     if let Some(h) = s.db.host_mut(host_id) {
         h.consecutive_errors += 1;
         h.last_error_at = now;
@@ -455,7 +456,6 @@ fn report_error(s: &mut CoreState<'_>, rid: u64, now: f64) -> Vec<Effect> {
         },
     ];
     transition_wu(s, wu_id, now, &mut fx);
-    s.db.sweep_in_progress();
     fx.push(gauge_in_flight(s));
     fx
 }
@@ -463,18 +463,11 @@ fn report_error(s: &mut CoreState<'_>, rid: u64, now: f64) -> Vec<Effect> {
 fn tick(s: &mut CoreState<'_>, now: f64) -> Vec<Effect> {
     // deadline boundary rule (pinned, PR 8): strictly-less-than, so a
     // report at exactly `now == deadline` beats the expiry sweep in
-    // either caller order — see the module docs
-    let expired: Vec<u64> = s
-        .db
-        .in_progress_ids()
-        .iter()
-        .copied()
-        .filter(|id| {
-            s.db.result(*id)
-                .map(|r| r.server_state == ServerState::InProgress && r.deadline < now)
-                .unwrap_or(false)
-        })
-        .collect();
+    // either caller order — see the module docs. The wheel hands back
+    // only the actually-expired entries (O(expired), not O(in-flight))
+    // in dispatch order — the order the legacy full scan visited them,
+    // so trace seqs and reissue ids are unchanged.
+    let expired: Vec<u64> = s.db.take_expired(now);
     let mut fx = Vec::new();
     for rid in expired {
         let (wu_id, host_id) = {
@@ -496,7 +489,6 @@ fn tick(s: &mut CoreState<'_>, now: f64) -> Vec<Effect> {
         });
         transition_wu(s, wu_id, now, &mut fx);
     }
-    s.db.sweep_in_progress();
     fx.push(gauge_in_flight(s));
     fx.push(Effect::GaugeSet(Gauge::VirtualTime, now));
     fx

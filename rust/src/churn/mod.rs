@@ -11,6 +11,18 @@
 //! Hardware calibration is 2007-era desktops (~0.5–3 GFLOPS sustained,
 //! matching the paper's 80 GFLOPS for ~45 hosts incl. overcounting of
 //! multi-core).
+//!
+//! Beyond the paper's steady churn model, [`Scenario`] shapes the
+//! sampled population into the fleet regimes of Anderson & Fedak's
+//! "Computational and Storage Potential of Volunteer Computing" and
+//! the NodIO browser-volunteer work (PAPERS.md): diurnal on/off
+//! cycles, flash crowds, correlated outages and ephemeral
+//! seconds-scale clients.
+//!
+//! Million-host pools are held in a [`HostSlab`] — structure-of-arrays
+//! columns plus an interned city table, with host names formatted
+//! lazily at registration — instead of a `Vec` of per-host structs
+//! with two owned `String`s each.
 
 use crate::util::rng::Rng;
 
@@ -40,6 +52,60 @@ pub enum PoolKind {
     VirtualizedLab,
 }
 
+/// Fleet-shaping regime applied on top of the base pool parameters
+/// when sampling. `Steady` is the paper's original churn model and
+/// draws the exact same RNG stream as before the scenario library
+/// existed, so historical trajectories are unchanged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scenario {
+    /// the paper's model: uniform arrival spread, exponential lifetime
+    Steady,
+    /// arrivals biased toward daytime hours (Anderson–Fedak diurnal
+    /// availability): same arrival day, time-of-day resampled with a
+    /// noon-peaked triangular distribution
+    Diurnal,
+    /// a publicity spike: 90% of the pool arrives within the first
+    /// hour and churns away ~4× faster than steady volunteers
+    FlashCrowd,
+    /// a correlated failure (campus power cut) at t = 1 day: half the
+    /// pool departs at the outage if still attached
+    Outage,
+    /// NodIO-style browser volunteers: ~0.1× desktop FLOPS and
+    /// seconds-scale sojourn (mean 120 s tab lifetime)
+    Ephemeral,
+}
+
+impl Scenario {
+    pub const ALL: &'static [Scenario] = &[
+        Scenario::Steady,
+        Scenario::Diurnal,
+        Scenario::FlashCrowd,
+        Scenario::Outage,
+        Scenario::Ephemeral,
+    ];
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        match s {
+            "steady" => Some(Scenario::Steady),
+            "diurnal" => Some(Scenario::Diurnal),
+            "flashcrowd" | "flash-crowd" => Some(Scenario::FlashCrowd),
+            "outage" => Some(Scenario::Outage),
+            "ephemeral" => Some(Scenario::Ephemeral),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Diurnal => "diurnal",
+            Scenario::FlashCrowd => "flashcrowd",
+            Scenario::Outage => "outage",
+            Scenario::Ephemeral => "ephemeral",
+        }
+    }
+}
+
 /// Parameters of a host population.
 #[derive(Clone, Debug)]
 pub struct PoolParams {
@@ -66,6 +132,8 @@ pub struct PoolParams {
     /// (2007-era pools were effectively single-core — BOINC's
     /// overcounting of multi-core is the paper's 80-GFLOPS footnote)
     pub ncpus: u32,
+    /// fleet regime shaping the sampled arrivals/lifetimes/speeds
+    pub scenario: Scenario,
 }
 
 impl PoolParams {
@@ -82,12 +150,19 @@ impl PoolParams {
             efficiency: 0.95,
             client_error_rate: 0.0,
             ncpus: 1,
+            scenario: Scenario::Steady,
         }
     }
 
     /// Same pool with multi-core hosts (the `ncpus` column of eq. 2).
     pub fn with_ncpus(mut self, ncpus: u32) -> PoolParams {
         self.ncpus = ncpus.max(1);
+        self
+    }
+
+    /// Same pool under a different fleet regime.
+    pub fn with_scenario(mut self, scenario: Scenario) -> PoolParams {
+        self.scenario = scenario;
         self
     }
 
@@ -107,6 +182,7 @@ impl PoolParams {
             efficiency: 0.9,
             client_error_rate: 0.05,
             ncpus: 1,
+            scenario: Scenario::Steady,
         }
     }
 
@@ -125,6 +201,7 @@ impl PoolParams {
             efficiency: 0.85,
             client_error_rate: 0.02,
             ncpus: 1,
+            scenario: Scenario::Steady,
         }
     }
 }
@@ -164,47 +241,217 @@ impl SimHost {
     }
 }
 
+/// A host population as structure-of-arrays columns: the DES indexes
+/// these slabs directly instead of chasing `SimHost` structs, and the
+/// per-host strings a `Vec<SimHost>` would carry are replaced by an
+/// interned city table plus lazily formatted names — at 10^6 hosts
+/// that is two `String` allocations total instead of two million.
+pub struct HostSlab {
+    pub flops: Vec<f64>,
+    pub ncpus: Vec<u32>,
+    pub arrival: Vec<f64>,
+    pub departure: Vec<f64>,
+    pub on_frac: Vec<f64>,
+    pub active_frac: Vec<f64>,
+    pub efficiency: Vec<f64>,
+    pub client_error_rate: Vec<f64>,
+    /// per-host index into `cities`
+    city_id: Vec<u32>,
+    /// interned city names
+    cities: Vec<String>,
+    /// explicit names, only when they deviate from the canonical
+    /// `host{i:03}` pattern (hand-built pools in tests)
+    names: Option<Vec<String>>,
+}
+
+impl HostSlab {
+    fn with_capacity(n: usize) -> HostSlab {
+        HostSlab {
+            flops: Vec::with_capacity(n),
+            ncpus: Vec::with_capacity(n),
+            arrival: Vec::with_capacity(n),
+            departure: Vec::with_capacity(n),
+            on_frac: Vec::with_capacity(n),
+            active_frac: Vec::with_capacity(n),
+            efficiency: Vec::with_capacity(n),
+            client_error_rate: Vec::with_capacity(n),
+            city_id: Vec::with_capacity(n),
+            cities: Vec::new(),
+            names: None,
+        }
+    }
+
+    fn intern(&mut self, city: &str) -> u32 {
+        match self.cities.iter().position(|c| c == city) {
+            Some(i) => i as u32,
+            None => {
+                self.cities.push(city.to_string());
+                (self.cities.len() - 1) as u32
+            }
+        }
+    }
+
+    /// Sample a population. Draws the identical RNG stream as the
+    /// pre-slab `sample_pool` for [`Scenario::Steady`]; other
+    /// scenarios add their shaping draws after the base draws of each
+    /// host, so a given `(seed, scenario)` is reproducible.
+    pub fn sample(rng: &mut Rng, params: &PoolParams, cities: &[(&str, usize)]) -> HostSlab {
+        let mut slab = HostSlab::with_capacity(params.hosts);
+        // round-robin city assignment as cumulative spans — never a
+        // per-host materialized list
+        let spans: Vec<(usize, u32)> =
+            cities.iter().map(|(c, n)| (*n, slab.intern(c))).collect();
+        let other = slab.intern("other");
+        let (mut span, mut used) = (0usize, 0usize);
+        for _ in 0..params.hosts {
+            while span < spans.len() && used >= spans[span].0 {
+                span += 1;
+                used = 0;
+            }
+            let city = if span < spans.len() {
+                used += 1;
+                spans[span].1
+            } else {
+                other
+            };
+            let mut flops = if params.speed_sigma > 0.0 {
+                rng.log_normal(params.mean_gflops * 1e9, params.speed_sigma)
+            } else {
+                params.mean_gflops * 1e9
+            };
+            let mut arrival = if params.arrival_spread_days > 0.0 {
+                rng.uniform(0.0, params.arrival_spread_days * 86400.0)
+            } else {
+                0.0
+            };
+            let mut lifetime = rng.exp(params.mean_lifetime_days * 86400.0);
+            let on_frac = rng.fraction(params.on_frac);
+            let active_frac = rng.fraction(params.active_frac);
+            match params.scenario {
+                Scenario::Steady => {}
+                Scenario::Diurnal => {
+                    // keep the arrival day, resample the time-of-day
+                    // with a noon-peaked triangular density
+                    let day = (arrival / 86400.0).floor();
+                    let tod = 86400.0 * (rng.f64() + rng.f64()) / 2.0;
+                    arrival = day * 86400.0 + tod;
+                }
+                Scenario::FlashCrowd => {
+                    if rng.chance(0.9) {
+                        arrival = rng.uniform(0.0, 3600.0);
+                        lifetime *= 0.25;
+                    }
+                }
+                Scenario::Outage => {
+                    let cut = 86400.0;
+                    if rng.chance(0.5) && arrival < cut && arrival + lifetime > cut {
+                        lifetime = cut - arrival;
+                    }
+                }
+                Scenario::Ephemeral => {
+                    flops *= 0.1;
+                    lifetime = rng.exp(120.0);
+                }
+            }
+            slab.flops.push(flops);
+            slab.ncpus.push(params.ncpus.max(1));
+            slab.arrival.push(arrival);
+            slab.departure.push(arrival + lifetime);
+            slab.on_frac.push(on_frac);
+            slab.active_frac.push(active_frac);
+            slab.efficiency.push(params.efficiency);
+            slab.client_error_rate.push(params.client_error_rate);
+            slab.city_id.push(city);
+        }
+        slab
+    }
+
+    /// Pack an existing host list (keeps custom names if any deviate
+    /// from the canonical `host{i:03}` pattern).
+    pub fn from_hosts(hosts: &[SimHost]) -> HostSlab {
+        let mut slab = HostSlab::with_capacity(hosts.len());
+        let mut canonical = true;
+        for (i, h) in hosts.iter().enumerate() {
+            let id = slab.intern(&h.city);
+            slab.flops.push(h.flops);
+            slab.ncpus.push(h.ncpus);
+            slab.arrival.push(h.arrival);
+            slab.departure.push(h.departure);
+            slab.on_frac.push(h.on_frac);
+            slab.active_frac.push(h.active_frac);
+            slab.efficiency.push(h.efficiency);
+            slab.client_error_rate.push(h.client_error_rate);
+            slab.city_id.push(id);
+            canonical = canonical && h.name == format!("host{i:03}");
+        }
+        if !canonical {
+            slab.names = Some(hosts.iter().map(|h| h.name.clone()).collect());
+        }
+        slab
+    }
+
+    pub fn len(&self) -> usize {
+        self.flops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flops.is_empty()
+    }
+
+    /// The host's registration name, formatted on demand.
+    pub fn name_of(&self, i: usize) -> String {
+        match &self.names {
+            Some(n) => n[i].clone(),
+            None => format!("host{i:03}"),
+        }
+    }
+
+    pub fn city_of(&self, i: usize) -> &str {
+        &self.cities[self.city_id[i] as usize]
+    }
+
+    /// Per-core effective rate (same formula as
+    /// [`SimHost::effective_flops`]).
+    pub fn effective_flops(&self, i: usize) -> f64 {
+        self.flops[i] * self.on_frac[i] * self.active_frac[i] * self.efficiency[i]
+    }
+
+    pub fn lifetime(&self, i: usize) -> f64 {
+        (self.departure[i] - self.arrival[i]).max(0.0)
+    }
+
+    /// Materialize one host (compat with struct-shaped consumers).
+    pub fn host(&self, i: usize) -> SimHost {
+        SimHost {
+            name: self.name_of(i),
+            city: self.city_of(i).to_string(),
+            flops: self.flops[i],
+            ncpus: self.ncpus[i],
+            arrival: self.arrival[i],
+            departure: self.departure[i],
+            on_frac: self.on_frac[i],
+            active_frac: self.active_frac[i],
+            efficiency: self.efficiency[i],
+            client_error_rate: self.client_error_rate[i],
+        }
+    }
+
+    /// Materialize the whole pool (small-pool compat path).
+    pub fn to_hosts(&self) -> Vec<SimHost> {
+        (0..self.len()).map(|i| self.host(i)).collect()
+    }
+}
+
 /// Sample a host population from pool parameters; cities are assigned
-/// round-robin from `cities` (Fig 1 reproduction).
+/// round-robin from `cities` (Fig 1 reproduction). Struct-shaped
+/// convenience wrapper over [`HostSlab::sample`] — million-host
+/// callers should keep the slab instead.
 pub fn sample_pool(
     rng: &mut Rng,
     params: &PoolParams,
     cities: &[(&str, usize)],
 ) -> Vec<SimHost> {
-    let mut city_list: Vec<&str> = Vec::new();
-    for (c, n) in cities {
-        for _ in 0..*n {
-            city_list.push(c);
-        }
-    }
-    let mut hosts = Vec::with_capacity(params.hosts);
-    for i in 0..params.hosts {
-        let city = city_list.get(i).copied().unwrap_or("other");
-        let flops = if params.speed_sigma > 0.0 {
-            rng.log_normal(params.mean_gflops * 1e9, params.speed_sigma)
-        } else {
-            params.mean_gflops * 1e9
-        };
-        let arrival = if params.arrival_spread_days > 0.0 {
-            rng.uniform(0.0, params.arrival_spread_days * 86400.0)
-        } else {
-            0.0
-        };
-        let lifetime = rng.exp(params.mean_lifetime_days * 86400.0);
-        hosts.push(SimHost {
-            name: format!("host{i:03}"),
-            city: city.to_string(),
-            flops,
-            ncpus: params.ncpus.max(1),
-            arrival,
-            departure: arrival + lifetime,
-            on_frac: rng.fraction(params.on_frac),
-            active_frac: rng.fraction(params.active_frac),
-            efficiency: params.efficiency,
-            client_error_rate: params.client_error_rate,
-        });
-    }
-    hosts
+    HostSlab::sample(rng, params, cities).to_hosts()
 }
 
 /// Anderson–Fedak available computing power (paper eq. 2):
@@ -242,6 +489,25 @@ impl ComputingPower {
             mean_eff: mean(&|h| h.efficiency),
             mean_onfrac: mean(&|h| h.on_frac),
             mean_active: mean(&|h| h.active_frac),
+            redundancy,
+            share,
+        }
+    }
+
+    /// [`ComputingPower::from_pool`] over slab columns — identical
+    /// summation order, so the estimate is bit-equal to the struct
+    /// path on an equivalent pool.
+    pub fn from_slab(slab: &HostSlab, window_days: f64, redundancy: f64, share: f64) -> Self {
+        let n = slab.len().max(1) as f64;
+        let mean = |f: &dyn Fn(usize) -> f64| (0..slab.len()).map(|i| f(i)).sum::<f64>() / n;
+        ComputingPower {
+            arrival_rate_per_day: n / window_days.max(1e-9),
+            mean_life_days: mean(&|i| (slab.lifetime(i) / 86400.0).min(window_days)),
+            mean_ncpus: mean(&|i| slab.ncpus[i] as f64),
+            mean_flops: mean(&|i| slab.flops[i]),
+            mean_eff: mean(&|i| slab.efficiency[i]),
+            mean_onfrac: mean(&|i| slab.on_frac[i]),
+            mean_active: mean(&|i| slab.active_frac[i]),
             redundancy,
             share,
         }
@@ -327,6 +593,93 @@ mod tests {
     }
 
     #[test]
+    fn slab_roundtrips_through_hosts() {
+        let mut rng = Rng::new(6);
+        let params = PoolParams::volunteer(45);
+        let slab = HostSlab::sample(&mut rng, &params, FIG1_CITIES_MUX11);
+        assert_eq!(slab.len(), 45);
+        let hosts = slab.to_hosts();
+        let back = HostSlab::from_hosts(&hosts);
+        assert!(back.names.is_none(), "canonical names must stay lazy");
+        for i in 0..slab.len() {
+            assert_eq!(slab.name_of(i), hosts[i].name);
+            assert_eq!(slab.city_of(i), hosts[i].city);
+            assert_eq!(slab.flops[i], back.flops[i]);
+            assert_eq!(slab.departure[i], back.departure[i]);
+            assert_eq!(slab.effective_flops(i), hosts[i].effective_flops());
+        }
+        // custom names survive the pack
+        let mut named = hosts.clone();
+        named[3].name = "bespoke".into();
+        let packed = HostSlab::from_hosts(&named);
+        assert_eq!(packed.name_of(3), "bespoke");
+        assert_eq!(packed.name_of(0), "host000");
+    }
+
+    #[test]
+    fn slab_city_interning_matches_round_robin() {
+        let mut rng = Rng::new(9);
+        let slab = HostSlab::sample(&mut rng, &PoolParams::volunteer(50), FIG1_CITIES_MUX11);
+        let caceres = (0..slab.len()).filter(|&i| slab.city_of(i) == "Cáceres").count();
+        assert_eq!(caceres, 25);
+        // 45 city-listed hosts, then overflow into "other"
+        assert_eq!(slab.city_of(44), "Mérida");
+        assert_eq!(slab.city_of(45), "other");
+        assert!(slab.cities.len() <= 4, "cities are interned, not repeated");
+    }
+
+    #[test]
+    fn steady_scenario_draws_identical_stream() {
+        // the scenario library must not perturb historical pools: the
+        // Steady slab path and a with_scenario(Steady) round agree
+        // with an independently seeded baseline draw
+        let mut r1 = Rng::new(77);
+        let base = sample_pool(&mut r1, &PoolParams::volunteer(20), FIG1_CITIES_MUX20);
+        let mut r2 = Rng::new(77);
+        let explicit = sample_pool(
+            &mut r2,
+            &PoolParams::volunteer(20).with_scenario(Scenario::Steady),
+            FIG1_CITIES_MUX20,
+        );
+        for (a, b) in base.iter().zip(&explicit) {
+            assert_eq!(a.flops, b.flops);
+            assert_eq!(a.arrival, b.arrival);
+            assert_eq!(a.departure, b.departure);
+        }
+    }
+
+    #[test]
+    fn scenarios_shape_the_pool() {
+        let sample = |s: Scenario| {
+            let mut rng = Rng::new(123);
+            HostSlab::sample(&mut rng, &PoolParams::volunteer(400).with_scenario(s), &[])
+        };
+        // flash crowd: most arrivals inside the first hour
+        let fc = sample(Scenario::FlashCrowd);
+        let early = (0..fc.len()).filter(|&i| fc.arrival[i] <= 3600.0).count();
+        assert!(early > 300, "flash crowd arrives early: {early}/400");
+        // outage: a departure spike exactly at the cut
+        let out = sample(Scenario::Outage);
+        let at_cut = (0..out.len()).filter(|&i| (out.departure[i] - 86400.0).abs() < 1e-6).count();
+        assert!(at_cut > 50, "correlated outage departures: {at_cut}/400");
+        // ephemeral: weak, short-lived clients
+        let eph = sample(Scenario::Ephemeral);
+        let mean_life: f64 =
+            (0..eph.len()).map(|i| eph.lifetime(i)).sum::<f64>() / eph.len() as f64;
+        assert!(mean_life < 600.0, "seconds-scale sojourn: {mean_life}");
+        assert!(eph.flops.iter().sum::<f64>() / 400.0 < 0.5e9, "browser-class FLOPS");
+        // diurnal: arrivals keep their day but move within it
+        let st = sample(Scenario::Steady);
+        let di = sample(Scenario::Diurnal);
+        let moved = (0..400).filter(|&i| st.arrival[i] != di.arrival[i]).count();
+        assert!(moved > 350, "diurnal reshapes time-of-day: {moved}");
+        for name in ["steady", "diurnal", "flashcrowd", "outage", "ephemeral"] {
+            assert_eq!(Scenario::parse(name).unwrap().name(), name);
+        }
+        assert!(Scenario::parse("lunar").is_none());
+    }
+
+    #[test]
     fn ncpus_scales_throughput_and_samples_into_hosts() {
         let mut rng = Rng::new(8);
         let hosts = sample_pool(&mut rng, &PoolParams::lab(3).with_ncpus(4), &[("lab", 3)]);
@@ -348,6 +701,16 @@ mod tests {
         let cp = ComputingPower::from_pool(&hosts, 5.35, 1.0, 1.0);
         let g = cp.gflops();
         assert!(g > 15.0 && g < 250.0, "CP {g} GFLOPS out of paper scale");
+    }
+
+    #[test]
+    fn cp_from_slab_is_bit_equal_to_from_pool() {
+        let mut rng = Rng::new(3);
+        let slab = HostSlab::sample(&mut rng, &PoolParams::volunteer(45), FIG1_CITIES_MUX11);
+        let a = ComputingPower::from_pool(&slab.to_hosts(), 5.35, 1.0, 1.0);
+        let b = ComputingPower::from_slab(&slab, 5.35, 1.0, 1.0);
+        assert_eq!(a.flops().to_bits(), b.flops().to_bits(), "identical summation order");
+        assert_eq!(a.mean_life_days.to_bits(), b.mean_life_days.to_bits());
     }
 
     #[test]

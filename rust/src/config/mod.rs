@@ -24,6 +24,8 @@
 //! hosts = 45
 //! ncpus = 2          # cores per simulated host (per-core WU queue)
 //! churn = volunteer
+//! scenario = steady  # fleet regime: steady | diurnal | flashcrowd |
+//!                    # outage | ephemeral (churn::Scenario)
 //! seed = 7
 //! ```
 //!

@@ -86,7 +86,8 @@ pub const RULES: &[(&str, &[&str])] = &[
             ".db.pop_unsent(",
             ".db.push_unsent(",
             ".db.mark_in_progress(",
-            ".db.sweep_in_progress(",
+            ".db.retire_in_progress(",
+            ".db.take_expired(",
         ],
     ),
 ];

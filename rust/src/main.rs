@@ -22,12 +22,16 @@
 //! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval,
 //!                                      # runs both WU kinds)
 //! vgp churn --days 30                  # Fig-2 style churn trace
+//! vgp churn --scenario flashcrowd      # shaped fleet regime
 //! ```
 //!
 //! `--threads N` fans each WU's fitness evaluation across N cores
 //! (gp::eval batch pool; payloads stay bit-identical), `--ncpus N`
 //! gives every simulated host N cores, each computing one queued WU
-//! (the DES per-core task model).
+//! (the DES per-core task model). `--scenario steady|diurnal|
+//! flashcrowd|outage|ephemeral` (on `sim` and `churn`; INI key
+//! `[pool] scenario`) shapes the sampled fleet's arrival/lifetime
+//! regime — see [`vgp::churn::Scenario`].
 //!
 //! Performance knobs (all bit-identical — pure throughput):
 //! `--eval-lanes 1|2|4|8` sets the boolean kernel's SIMD lane-block
@@ -58,7 +62,7 @@
 use vgp::boinc::exchange::MigrationExchange;
 use vgp::boinc::net::{serve, Worker};
 use vgp::boinc::server::{ServerConfig, ServerCore};
-use vgp::churn::{churn_trace, sample_pool, PoolParams, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
+use vgp::churn::{churn_trace, sample_pool, PoolParams, Scenario, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
 use vgp::config::{Args, Config};
 use vgp::coordinator::{
     exec, simulate_campaign, simulate_island_campaign, Campaign, IslandCampaign, IslandReport,
@@ -69,6 +73,7 @@ use vgp::gp::problems::ProblemKind;
 use vgp::metrics::dashboard::emit;
 use vgp::metrics::snapshot::{validate_snapshot_json, FleetSnapshot};
 use vgp::metrics::{ascii_plot, dashboard};
+use vgp::sim::queue::QueueKind;
 use vgp::sim::SimConfig;
 use vgp::util::bench::Table;
 use vgp::util::json::Json;
@@ -100,17 +105,28 @@ fn main() {
     std::process::exit(code);
 }
 
-fn pool_from(kind: &str, hosts: usize, ncpus: u32) -> PoolParams {
+fn pool_from(kind: &str, hosts: usize, ncpus: u32, scenario: &str) -> PoolParams {
     let pool = match kind {
         "volunteer" => PoolParams::volunteer(hosts),
         "virtual" => PoolParams::virtualized_lab(hosts),
         _ => PoolParams::lab(hosts),
     };
-    pool.with_ncpus(ncpus)
+    let scenario = Scenario::parse(scenario).unwrap_or_else(|| {
+        vgp::log_error!(
+            "unknown scenario '{scenario}' (steady|diurnal|flashcrowd|outage|ephemeral)"
+        );
+        std::process::exit(2);
+    });
+    pool.with_ncpus(ncpus).with_scenario(scenario)
 }
 
 fn pool_of(args: &Args, hosts: usize) -> PoolParams {
-    pool_from(args.opt_str("pool", "lab"), hosts, args.opt_u64("ncpus", 1) as u32)
+    pool_from(
+        args.opt_str("pool", "lab"),
+        hosts,
+        args.opt_u64("ncpus", 1) as u32,
+        args.opt_str("scenario", "steady"),
+    )
 }
 
 /// `--flag` or `--flag true|1|yes|on` (the Args parser eats a bare
@@ -193,9 +209,18 @@ fn schedule_of(args: &Args) -> Schedule {
 /// write-ahead log ([`vgp::boinc::wal`]); a crashed run replays to its
 /// exact pre-crash state.
 fn sim_config_of(args: &Args) -> SimConfig {
+    // --queue heap selects the reference BinaryHeap loop; trajectories
+    // are bit-identical either way (sim::queue differential tests), so
+    // this is purely a perf/debug knob
+    let queue = args.opt_str("queue", "calendar");
+    let queue = QueueKind::parse(queue).unwrap_or_else(|| {
+        vgp::log_error!("unknown event queue '{queue}' (calendar|heap)");
+        std::process::exit(2);
+    });
     SimConfig {
         trace_capacity: args.opt_u64("trace", 0) as usize,
         wal: args.opt("wal").map(str::to_string),
+        queue,
         ..SimConfig::default()
     }
 }
@@ -228,6 +253,7 @@ fn cmd_sim(args: &Args) -> i32 {
             cfg.str_or("pool", "churn", "lab"),
             hosts,
             cfg.u64_or("pool", "ncpus", 1) as u32,
+            cfg.str_or("pool", "scenario", "steady"),
         );
         let seed = cfg.u64_or("pool", "seed", 7);
         if cfg.get("campaign", "demes").is_some() {
@@ -561,10 +587,15 @@ fn cmd_worker(args: &Args) -> i32 {
 fn cmd_churn(args: &Args) -> i32 {
     let days = args.opt_u64("days", 30) as usize;
     let hosts_n = args.opt_u64("hosts", 41) as usize;
+    let params = pool_from("volunteer", hosts_n, 1, args.opt_str("scenario", "steady"));
     let mut rng = Rng::new(args.opt_u64("seed", 9));
-    let hosts = sample_pool(&mut rng, &PoolParams::volunteer(hosts_n), FIG1_CITIES_MUX20);
+    let hosts = sample_pool(&mut rng, &params, FIG1_CITIES_MUX20);
     let tr = churn_trace(&hosts, days);
-    emit(&ascii_plot("active volunteer hosts per day (Fig 2)", &tr.days, &tr.active_hosts, 12));
+    let title = format!(
+        "active volunteer hosts per day (Fig 2, {} scenario)",
+        params.scenario.name()
+    );
+    emit(&ascii_plot(&title, &tr.days, &tr.active_hosts, 12));
     let _ = FIG1_CITIES_MUX11;
     0
 }

@@ -12,6 +12,17 @@
 //! pass reissues it). Ties are broken by sequence number, so a given
 //! seed reproduces the identical trajectory.
 //!
+//! **Million-host engine:** events are scheduled through a calendar
+//! queue ([`queue::EventQueue`], amortized O(1) push/pop; the
+//! reference `BinaryHeap` stays selectable for differential proofs),
+//! host state lives in a structure-of-arrays [`HostSlab`] (interned
+//! cities, lazily formatted names — no per-host `String` churn on the
+//! register path), and the loop does no O(fleet) work per event: the
+//! attached-host count is maintained incrementally and termination is
+//! a pending-work counter, not a queue scan. Server-side, `tick`
+//! expiry and per-host in-progress queries ride the deadline wheel in
+//! [`crate::boinc::db`].
+//!
 //! **Per-core task model:** a host queues up to `ncpus` concurrent WUs
 //! (BOINC schedules one task per CPU), each computing at the host's
 //! per-core effective rate — so island epochs genuinely overlap on
@@ -24,17 +35,18 @@
 //! real* — island campaigns need true checkpoints/emigrants for the
 //! attached [`MigrationExchange`] to route between epochs.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+pub mod queue;
 
 use crate::boinc::db::HostRow;
 use crate::boinc::exchange::MigrationExchange;
 use crate::boinc::server::{ServerConfig, ServerCore};
 use crate::boinc::workunit::WorkUnit;
-use crate::churn::{ComputingPower, SimHost};
+use crate::churn::{ComputingPower, HostSlab, SimHost};
 use crate::metrics::{Counter, Gauge};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
+
+use queue::{EventQueue, QueueKind};
 
 /// Executes a WU spec at (virtual) completion time, producing the
 /// result payload a real client would upload. Must be deterministic in
@@ -60,6 +72,10 @@ pub struct SimConfig {
     /// log (`crate::boinc::wal`) before it is applied, so a crashed
     /// run can be replayed to its exact pre-crash state.
     pub wal: Option<String>,
+    /// Event-queue implementation. Calendar and Heap pop in the
+    /// identical total order, so this knob cannot change a trajectory
+    /// — only how fast it runs (proven by the differential tests).
+    pub queue: QueueKind,
 }
 
 impl Default for SimConfig {
@@ -71,45 +87,18 @@ impl Default for SimConfig {
             max_virtual_time: 120.0 * 86400.0,
             trace_capacity: 0,
             wal: None,
+            queue: QueueKind::Calendar,
         }
     }
 }
 
-#[derive(Debug)]
+#[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrive(usize),
     Depart(usize),
     Poll(usize),
     Complete { host: usize, rid: u64, ok: bool, cpu: f64 },
     Tick,
-}
-
-struct Scheduled {
-    at: f64,
-    seq: u64,
-    ev: Ev,
-}
-
-impl PartialEq for Scheduled {
-    fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
-    }
-}
-impl Eq for Scheduled {}
-impl PartialOrd for Scheduled {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Scheduled {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by (time, seq)
-        other
-            .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
 }
 
 /// Result of one simulated campaign.
@@ -137,15 +126,19 @@ pub struct SimOutcome {
     /// where the runtime cannot serve the spec) — infrastructure
     /// problems, counted separately from simulated client churn
     pub executor_failures: u64,
+    /// DES events popped (the `benches/des.rs` throughput numerator)
+    pub events_processed: u64,
 }
 
 /// A prepared simulation: server + WUs + host pool.
 pub struct Simulation {
     pub core: ServerCore,
-    pub hosts: Vec<SimHost>,
     pub cfg: SimConfig,
+    slab: HostSlab,
     host_ids: Vec<u64>,
     attached: Vec<bool>,
+    /// attached-host count, maintained incrementally (never recounted)
+    attached_count: usize,
     /// WUs currently computing on each host (per-core task model:
     /// bounded by the host's ncpus)
     active: Vec<u32>,
@@ -156,6 +149,12 @@ pub struct Simulation {
 
 impl Simulation {
     pub fn new(cfg: SimConfig, server_cfg: ServerConfig, hosts: Vec<SimHost>, seed: u64) -> Self {
+        Simulation::from_slab(cfg, server_cfg, HostSlab::from_hosts(&hosts), seed)
+    }
+
+    /// Build directly from slab columns — the million-host entry
+    /// point, skipping any per-host struct materialization.
+    pub fn from_slab(cfg: SimConfig, server_cfg: ServerConfig, slab: HostSlab, seed: u64) -> Self {
         let mut core = ServerCore::new(server_cfg);
         if cfg.trace_capacity > 0 {
             core.trace.enable(cfg.trace_capacity);
@@ -168,15 +167,21 @@ impl Simulation {
         }
         Simulation {
             core,
-            host_ids: vec![0; hosts.len()],
-            attached: vec![false; hosts.len()],
-            active: vec![0; hosts.len()],
-            hosts,
+            host_ids: vec![0; slab.len()],
+            attached: vec![false; slab.len()],
+            attached_count: 0,
+            active: vec![0; slab.len()],
+            slab,
             cfg,
             rng: Rng::new(seed ^ 0x51315),
             exchange: None,
             executor: None,
         }
+    }
+
+    /// The simulated pool, in slab form.
+    pub fn hosts(&self) -> &HostSlab {
+        &self.slab
     }
 
     pub fn submit(&mut self, wu: WorkUnit) -> u64 {
@@ -222,39 +227,48 @@ impl Simulation {
     pub fn run_mut(&mut self, reference_flops: f64) -> SimOutcome {
         let t_seq = self.sequential_time(reference_flops);
         let total_wus = self.core.db.wus.len();
-        let mut heap: BinaryHeap<Scheduled> = BinaryHeap::new();
-        let mut seq = 0u64;
-        let push = |heap: &mut BinaryHeap<Scheduled>, seq: &mut u64, at: f64, ev: Ev| {
-            *seq += 1;
-            heap.push(Scheduled { at, seq: *seq, ev });
+        let mut q: EventQueue<Ev> = EventQueue::new(self.cfg.queue);
+        // queued events that are not departures; `is_complete() &&
+        // pending_work == 0` is the O(1) termination test that replaces
+        // scanning the whole queue for a non-Depart entry
+        let mut pending_work: u64 = 0;
+        let push = |q: &mut EventQueue<Ev>, pw: &mut u64, at: f64, ev: Ev| {
+            if !matches!(ev, Ev::Depart(_)) {
+                *pw += 1;
+            }
+            q.push(at, ev);
         };
 
-        for i in 0..self.hosts.len() {
-            push(&mut heap, &mut seq, self.hosts[i].arrival, Ev::Arrive(i));
+        for i in 0..self.slab.len() {
+            push(&mut q, &mut pending_work, self.slab.arrival[i], Ev::Arrive(i));
         }
-        push(&mut heap, &mut seq, self.cfg.tick_interval, Ev::Tick);
+        push(&mut q, &mut pending_work, self.cfg.tick_interval, Ev::Tick);
 
         #[allow(unused_assignments)]
         let mut now = 0.0;
         let mut last_comm: f64 = 0.0;
         let mut first_reg = f64::INFINITY;
+        let mut events_processed: u64 = 0;
 
-        while let Some(Scheduled { at, ev, .. }) = heap.pop() {
+        while let Some((at, ev)) = q.pop() {
             now = at;
+            events_processed += 1;
+            if !matches!(ev, Ev::Depart(_)) {
+                pending_work -= 1;
+            }
             if now > self.cfg.max_virtual_time {
                 break;
             }
             match ev {
                 Ev::Arrive(i) => {
-                    let h = &self.hosts[i];
                     let id = self.core.register_host(HostRow {
                         id: 0,
-                        name: h.name.clone(),
-                        city: h.city.clone(),
-                        flops: h.flops,
-                        ncpus: h.ncpus,
-                        on_frac: h.on_frac,
-                        active_frac: h.active_frac,
+                        name: self.slab.name_of(i),
+                        city: self.slab.city_of(i).to_string(),
+                        flops: self.slab.flops[i],
+                        ncpus: self.slab.ncpus[i],
+                        on_frac: self.slab.on_frac[i],
+                        active_frac: self.slab.active_frac[i],
                         registered_at: now,
                         last_heartbeat: now,
                         error_results: 0,
@@ -266,20 +280,25 @@ impl Simulation {
                     });
                     self.host_ids[i] = id;
                     self.attached[i] = true;
+                    self.attached_count += 1;
                     first_reg = first_reg.min(now);
                     last_comm = last_comm.max(now);
-                    push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
-                    push(&mut heap, &mut seq, self.hosts[i].departure, Ev::Depart(i));
+                    push(&mut q, &mut pending_work, now + 1.0, Ev::Poll(i));
+                    push(&mut q, &mut pending_work, self.slab.departure[i], Ev::Depart(i));
                 }
                 Ev::Depart(i) => {
-                    self.attached[i] = false;
-                    let n = self.attached.iter().filter(|&&a| a).count();
-                    self.core.metrics.set_gauge(Gauge::HostsAttached, n as f64);
+                    if self.attached[i] {
+                        self.attached[i] = false;
+                        self.attached_count -= 1;
+                    }
+                    self.core
+                        .metrics
+                        .set_gauge(Gauge::HostsAttached, self.attached_count as f64);
                     // in-flight work is silently lost; the server's
                     // deadline pass turns it into NO_REPLY later
                 }
                 Ev::Poll(i) => {
-                    if !self.attached[i] || self.active[i] >= self.hosts[i].ncpus.max(1) {
+                    if !self.attached[i] || self.active[i] >= self.slab.ncpus[i].max(1) {
                         continue; // saturated: the next Complete re-polls
                     }
                     if self.core.is_complete() {
@@ -289,28 +308,32 @@ impl Simulation {
                     match self.core.request_work(self.host_ids[i], now) {
                         Some((rid, wu, _sig)) => {
                             self.active[i] += 1;
-                            let h = &self.hosts[i];
                             // per-core task model: each concurrent WU
                             // computes on ONE core at the host's
                             // effective per-core rate; ncpus shows up as
                             // queue width, not as a rate multiplier
-                            let compute = wu.flops_est / h.effective_flops().max(1e3);
+                            let compute = wu.flops_est / self.slab.effective_flops(i).max(1e3);
                             let dur = compute + self.cfg.transfer_overhead;
-                            let ok = !self.rng.chance(h.client_error_rate);
+                            let ok = !self.rng.chance(self.slab.client_error_rate[i]);
                             // client errors surface early (crash on start)
                             let at = if ok { now + dur } else { now + dur.min(60.0) };
                             push(
-                                &mut heap,
-                                &mut seq,
+                                &mut q,
+                                &mut pending_work,
                                 at,
                                 Ev::Complete { host: i, rid, ok, cpu: compute },
                             );
                             // multi-core hosts keep fetching until their
                             // cores are full
-                            push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
+                            push(&mut q, &mut pending_work, now + 1.0, Ev::Poll(i));
                         }
                         None => {
-                            push(&mut heap, &mut seq, now + self.cfg.poll_interval, Ev::Poll(i));
+                            push(
+                                &mut q,
+                                &mut pending_work,
+                                now + self.cfg.poll_interval,
+                                Ev::Poll(i),
+                            );
                         }
                     }
                 }
@@ -364,7 +387,7 @@ impl Simulation {
                     if let Some(ex) = self.exchange.as_mut() {
                         ex.poll(&mut self.core, now);
                     }
-                    push(&mut heap, &mut seq, now + 1.0, Ev::Poll(i));
+                    push(&mut q, &mut pending_work, now + 1.0, Ev::Poll(i));
                 }
                 Ev::Tick => {
                     self.core.tick(now);
@@ -372,11 +395,11 @@ impl Simulation {
                         ex.poll(&mut self.core, now);
                     }
                     if !self.core.is_complete() {
-                        push(&mut heap, &mut seq, now + self.cfg.tick_interval, Ev::Tick);
+                        push(&mut q, &mut pending_work, now + self.cfg.tick_interval, Ev::Tick);
                     }
                 }
             }
-            if self.core.is_complete() && heap.iter().all(|s| matches!(s.ev, Ev::Depart(_))) {
+            if self.core.is_complete() && pending_work == 0 {
                 break;
             }
         }
@@ -387,7 +410,7 @@ impl Simulation {
         let productive: std::collections::HashSet<u64> =
             self.core.assimilated().iter().map(|a| a.host_id).collect();
         let window_days = makespan / 86400.0;
-        let cp = ComputingPower::from_pool(&self.hosts, window_days.max(0.1), 1.0, 1.0);
+        let cp = ComputingPower::from_slab(&self.slab, window_days.max(0.1), 1.0, 1.0);
         SimOutcome {
             makespan,
             t_seq,
@@ -395,12 +418,13 @@ impl Simulation {
             completed: completions.len(),
             total_wus,
             productive_hosts: productive.len(),
-            attached_hosts: self.hosts.len(),
+            attached_hosts: self.slab.len(),
             cp_gflops: cp.gflops(),
             completions,
             client_errors: self.core.metrics.get(Counter::ResultClientError),
             no_replies: self.core.metrics.get(Counter::ResultNoReply),
             executor_failures: self.core.metrics.get(Counter::SimExecutorFailure),
+            events_processed,
         }
     }
 }
@@ -408,7 +432,8 @@ impl Simulation {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::churn::{sample_pool, PoolParams, FIG1_CITIES_MUX11};
+    use crate::churn::{sample_pool, PoolParams, Scenario, FIG1_CITIES_MUX11};
+    use crate::metrics::snapshot::FleetSnapshot;
     use crate::util::json::Json;
 
     fn wus(n: usize, flops: f64) -> Vec<WorkUnit> {
@@ -434,6 +459,7 @@ mod tests {
         assert_eq!(out.completed, 25);
         assert_eq!(out.client_errors, 0);
         assert!(out.speedup > 1.0, "5 dedicated hosts must beat 1: {}", out.speedup);
+        assert!(out.events_processed > 25, "every WU takes several events");
     }
 
     #[test]
@@ -550,6 +576,7 @@ mod tests {
         let b = lab_sim(5, 10, 1e11);
         assert_eq!(a.makespan, b.makespan);
         assert_eq!(a.completions, b.completions);
+        assert_eq!(a.events_processed, b.events_processed);
     }
 
     #[test]
@@ -571,5 +598,46 @@ mod tests {
         let out = sim.run(1.3e9 * 0.95);
         assert_eq!(out.completed, 6, "reissue must recover lost work");
         assert!(out.no_replies >= 1, "the dead host's WU must expire");
+    }
+
+    /// The tentpole differential proof: for every scenario in the
+    /// library, the calendar-queue loop reproduces the heap loop's
+    /// fleet snapshot **byte-identically** (canonical `vgp.fleet.v1`
+    /// JSON: host rows, WU counters, metrics registry — everything),
+    /// along with the full outcome trajectory.
+    #[test]
+    fn calendar_queue_is_bit_identical_to_heap_on_every_scenario() {
+        for &scenario in Scenario::ALL {
+            let run = |kind: QueueKind| {
+                let mut rng = Rng::new(42);
+                let params = PoolParams::volunteer(60).with_scenario(scenario);
+                let slab = crate::churn::HostSlab::sample(&mut rng, &params, FIG1_CITIES_MUX11);
+                let mut sim = Simulation::from_slab(
+                    SimConfig { queue: kind, ..SimConfig::default() },
+                    ServerConfig::default(),
+                    slab,
+                    42,
+                );
+                for wu in wus(40, 1e10) {
+                    sim.submit(wu);
+                }
+                let out = sim.run_mut(1.3e9 * 0.9);
+                let snap =
+                    FleetSnapshot::from_parts(&sim.core, None, out.makespan).to_json().to_string();
+                (snap, out)
+            };
+            let (snap_h, out_h) = run(QueueKind::Heap);
+            let (snap_c, out_c) = run(QueueKind::Calendar);
+            assert_eq!(
+                snap_h,
+                snap_c,
+                "fleet snapshot diverged under scenario {:?}",
+                scenario
+            );
+            assert_eq!(out_h.completions, out_c.completions, "{scenario:?}");
+            assert_eq!(out_h.makespan, out_c.makespan, "{scenario:?}");
+            assert_eq!(out_h.events_processed, out_c.events_processed, "{scenario:?}");
+            assert_eq!(out_h.no_replies, out_c.no_replies, "{scenario:?}");
+        }
     }
 }

@@ -87,36 +87,61 @@ impl Bench {
 
 /// One hot-path measurement destined for the append-only perf log
 /// (`BENCH_hotpath.json` at the repo root). Schema:
-/// `{pr, kernel, threads, scheduler, lanes, evals_per_sec}`.
-/// Entries recorded before PR 4 predate the `kernel` field; readers
-/// should treat a missing `kernel` as `"bool"`.
-#[derive(Clone, Debug)]
+/// `{pr, kernel, threads, scheduler, lanes, evals_per_sec}` plus, for
+/// DES rows (`kernel: "des"`), `{hosts, events_per_sec, scenario,
+/// peak_rss_mb}`. Entries recorded before PR 4 predate the `kernel`
+/// field; readers should treat a missing `kernel` as `"bool"`.
+#[derive(Clone, Debug, Default)]
 pub struct BenchRecord {
     /// which PR / commit recorded this entry (e.g. "pr3")
     pub pr: String,
     /// which kernel was measured: "bool" (u64 lane blocks), "reg"
-    /// (packed-column f32 lane blocks) or "reg-legacy" (the verbatim
+    /// (packed-column f32 lane blocks), "reg-legacy" (the verbatim
     /// pre-PR-4 scalar kernel timed for the speedup ratio; lanes = 0)
+    /// or "des" (the simulator event loop, `benches/des.rs`)
     pub kernel: String,
     pub threads: usize,
-    /// `gp::eval::Schedule` name: static | sorted | steal
+    /// `gp::eval::Schedule` name (static | sorted | steal) for GP
+    /// kernels; the event-queue name (calendar | heap) for DES rows
     pub scheduler: String,
     /// kernel lane width (u64 words or f32 values per block; 0 marks
-    /// a legacy baseline with no lane loop)
+    /// a legacy baseline with no lane loop, and all DES rows)
     pub lanes: usize,
-    /// individual program evaluations per second
+    /// individual program evaluations per second; DES rows mirror
+    /// `events_per_sec` here so dashboards plot one throughput column
     pub evals_per_sec: f64,
+    /// DES rows only: simulated fleet size
+    pub hosts: Option<u64>,
+    /// DES rows only: events popped per wall-clock second
+    pub events_per_sec: Option<f64>,
+    /// DES rows only: churn scenario name (`crate::churn::Scenario`)
+    pub scenario: Option<String>,
+    /// DES rows only: peak resident set (VmHWM) in MiB, if readable
+    pub peak_rss_mb: Option<f64>,
 }
 
 impl BenchRecord {
     pub fn to_json(&self) -> Json {
-        Json::obj()
+        let mut j = Json::obj()
             .set("pr", self.pr.as_str())
             .set("kernel", self.kernel.as_str())
             .set("threads", self.threads as u64)
             .set("scheduler", self.scheduler.as_str())
             .set("lanes", self.lanes as u64)
-            .set("evals_per_sec", self.evals_per_sec)
+            .set("evals_per_sec", self.evals_per_sec);
+        if let Some(h) = self.hosts {
+            j = j.set("hosts", h);
+        }
+        if let Some(eps) = self.events_per_sec {
+            j = j.set("events_per_sec", eps);
+        }
+        if let Some(s) = &self.scenario {
+            j = j.set("scenario", s.as_str());
+        }
+        if let Some(r) = self.peak_rss_mb {
+            j = j.set("peak_rss_mb", r);
+        }
+        j
     }
 
     /// Parse one trajectory entry (a missing `kernel` means `"bool"` —
@@ -130,6 +155,10 @@ impl BenchRecord {
             scheduler: j.str_of("scheduler")?.to_string(),
             lanes: j.u64_of("lanes")? as usize,
             evals_per_sec: j.f64_of("evals_per_sec")?,
+            hosts: j.get("hosts").and_then(Json::as_u64),
+            events_per_sec: j.get("events_per_sec").and_then(Json::as_f64),
+            scenario: j.get("scenario").and_then(Json::as_str).map(str::to_string),
+            peak_rss_mb: j.get("peak_rss_mb").and_then(Json::as_f64),
         })
     }
 }
@@ -154,11 +183,14 @@ pub fn append_bench_json(path: &str, records: &[BenchRecord]) -> anyhow::Result<
 }
 
 /// Validate the perf-trajectory schema: a JSON array whose entries
-/// each carry `{pr: str, threads: u64 >= 1, scheduler: static|sorted|
-/// steal, lanes: u64, evals_per_sec: finite f64 > 0}` and, when
-/// present, `kernel` in `{bool, reg, reg-legacy}` (entries recorded
-/// before PR 4 predate the field and imply `bool`). Returns the entry
-/// count so callers (the bench-smoke CI job) can assert coverage.
+/// each carry `{pr: str, threads: u64 >= 1, lanes: u64, evals_per_sec:
+/// finite f64 > 0}` and, when present, `kernel` in `{bool, reg,
+/// reg-legacy, des}` (entries recorded before PR 4 predate the field
+/// and imply `bool`). GP rows take `scheduler` in `{static, sorted,
+/// steal}`; DES rows (`kernel: "des"`) instead name their event queue
+/// (`calendar | heap`) and must carry `hosts >= 1` and a positive
+/// finite `events_per_sec`. Returns the entry count so callers (the
+/// bench-smoke CI job) can assert coverage.
 pub fn validate_bench_json(path: &str) -> anyhow::Result<usize> {
     let text = std::fs::read_to_string(path).map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
     let parsed = Json::parse(&text)?;
@@ -169,24 +201,40 @@ pub fn validate_bench_json(path: &str) -> anyhow::Result<usize> {
     for (i, e) in entries.iter().enumerate() {
         anyhow::ensure!(!e.str_of("pr")?.is_empty(), "{path} entry {i}: empty pr tag");
         anyhow::ensure!(e.u64_of("threads")? >= 1, "{path} entry {i}: threads must be >= 1");
-        let sched = e.str_of("scheduler")?;
+        let kernel = match e.get("kernel") {
+            Some(k) => k
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("{path} entry {i}: kernel must be a string"))?,
+            None => "bool",
+        };
         anyhow::ensure!(
-            matches!(sched, "static" | "sorted" | "steal"),
-            "{path} entry {i}: unknown scheduler '{sched}' (static|sorted|steal)"
+            matches!(kernel, "bool" | "reg" | "reg-legacy" | "des"),
+            "{path} entry {i}: unknown kernel '{kernel}' (bool|reg|reg-legacy|des)"
         );
-        e.u64_of("lanes")?; // 0 is legal: it marks a no-lane legacy baseline
+        let sched = e.str_of("scheduler")?;
+        if kernel == "des" {
+            anyhow::ensure!(
+                matches!(sched, "calendar" | "heap"),
+                "{path} entry {i}: unknown DES queue '{sched}' (calendar|heap)"
+            );
+            anyhow::ensure!(e.u64_of("hosts")? >= 1, "{path} entry {i}: des row needs hosts >= 1");
+            let eps = e.f64_of("events_per_sec")?;
+            anyhow::ensure!(
+                eps.is_finite() && eps > 0.0,
+                "{path} entry {i}: events_per_sec must be a positive, finite number (got {eps})"
+            );
+        } else {
+            anyhow::ensure!(
+                matches!(sched, "static" | "sorted" | "steal"),
+                "{path} entry {i}: unknown scheduler '{sched}' (static|sorted|steal)"
+            );
+        }
+        e.u64_of("lanes")?; // 0 is legal: no-lane legacy baselines and DES rows
         let eps = e.f64_of("evals_per_sec")?;
         anyhow::ensure!(
             eps.is_finite() && eps > 0.0,
             "{path} entry {i}: evals_per_sec must be a positive, finite number (got {eps})"
         );
-        if let Some(k) = e.get("kernel") {
-            let k = k.as_str().ok_or_else(|| anyhow::anyhow!("{path} entry {i}: kernel must be a string"))?;
-            anyhow::ensure!(
-                matches!(k, "bool" | "reg" | "reg-legacy"),
-                "{path} entry {i}: unknown kernel '{k}' (bool|reg|reg-legacy)"
-            );
-        }
     }
     Ok(entries.len())
 }
@@ -278,10 +326,30 @@ mod tests {
             scheduler: "steal".into(),
             lanes: 8,
             evals_per_sec: 2.5e6,
+            ..Default::default()
         };
         let back = BenchRecord::from_json(&rec.to_json()).unwrap();
         assert_eq!(back.pr, "pr7");
         assert_eq!(back.threads, 8);
+        assert_eq!(back.hosts, None, "GP rows carry no DES fields");
+        assert!(!rec.to_json().to_string().contains("hosts"), "optional fields stay absent");
+        // DES rows round-trip their extra columns
+        let des = BenchRecord {
+            pr: "pr9".into(),
+            kernel: "des".into(),
+            threads: 1,
+            scheduler: "calendar".into(),
+            lanes: 0,
+            evals_per_sec: 1.8e6,
+            hosts: Some(1_000_000),
+            events_per_sec: Some(1.8e6),
+            scenario: Some("diurnal".into()),
+            peak_rss_mb: Some(512.0),
+        };
+        let back = BenchRecord::from_json(&des.to_json()).unwrap();
+        assert_eq!(back.hosts, Some(1_000_000));
+        assert_eq!(back.events_per_sec, Some(1.8e6));
+        assert_eq!(back.scenario.as_deref(), Some("diurnal"));
         // pre-PR-4 entries: missing kernel reads as "bool"
         let legacy = Json::parse(
             r#"{"evals_per_sec":410000,"lanes":1,"pr":"pr3-est","scheduler":"static","threads":1}"#,
@@ -302,6 +370,7 @@ mod tests {
             scheduler: "static".into(),
             lanes: 4,
             evals_per_sec: 1.25e6,
+            ..Default::default()
         };
         append_bench_json(&path, &[rec("pr3", 1), rec("pr3", 8)]).unwrap();
         append_bench_json(&path, &[rec("pr4", 1)]).unwrap();
@@ -333,6 +402,7 @@ mod tests {
             scheduler: "steal".into(),
             lanes: 8,
             evals_per_sec: 3.2e6,
+            ..Default::default()
         };
         append_bench_json(&path, &[rec]).unwrap();
         assert_eq!(validate_bench_json(&path).unwrap(), 1);
@@ -343,8 +413,16 @@ mod tests {
         )
         .unwrap();
         assert_eq!(validate_bench_json(&path).unwrap(), 1);
+        // a well-formed DES row passes
+        std::fs::write(
+            &path,
+            r#"[{"evals_per_sec":1800000,"events_per_sec":1800000,"hosts":1000000,"kernel":"des","lanes":0,"pr":"pr9","scenario":"diurnal","scheduler":"calendar","threads":1}]"#,
+        )
+        .unwrap();
+        assert_eq!(validate_bench_json(&path).unwrap(), 1);
         // rejected shapes: wrong top level, bad scheduler, bad kernel,
-        // non-positive rate, zero threads
+        // non-positive rate, zero threads, malformed DES rows (GP
+        // scheduler name, missing hosts, missing events_per_sec)
         for bad in [
             r#"{"pr":"x"}"#,
             r#"[{"evals_per_sec":1.0,"lanes":1,"pr":"x","scheduler":"fifo","threads":1}]"#,
@@ -352,6 +430,9 @@ mod tests {
             r#"[{"evals_per_sec":0,"lanes":1,"pr":"x","scheduler":"static","threads":1}]"#,
             r#"[{"evals_per_sec":1.0,"lanes":1,"pr":"x","scheduler":"static","threads":0}]"#,
             r#"[{"lanes":1,"pr":"x","scheduler":"static","threads":1}]"#,
+            r#"[{"evals_per_sec":1.0,"events_per_sec":1.0,"hosts":10,"kernel":"des","lanes":0,"pr":"x","scheduler":"static","threads":1}]"#,
+            r#"[{"evals_per_sec":1.0,"events_per_sec":1.0,"kernel":"des","lanes":0,"pr":"x","scheduler":"calendar","threads":1}]"#,
+            r#"[{"evals_per_sec":1.0,"hosts":10,"kernel":"des","lanes":0,"pr":"x","scheduler":"calendar","threads":1}]"#,
         ] {
             std::fs::write(&path, bad).unwrap();
             assert!(validate_bench_json(&path).is_err(), "must reject: {bad}");
@@ -362,9 +443,18 @@ mod tests {
     #[test]
     fn committed_trajectory_passes_validation() {
         // the repo-root perf log must always satisfy the schema the
-        // bench-smoke CI job enforces on its uploaded artifact (21
-        // committed pr3-est/pr4-est entries; local bench runs append)
+        // bench-smoke CI job enforces on its uploaded artifact (21 GP
+        // entries through PR 8 plus the PR 9 DES rows; local bench
+        // runs append)
         let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
-        assert!(validate_bench_json(path).unwrap() >= 21, "trajectory entries went missing");
+        assert!(validate_bench_json(path).unwrap() >= 25, "trajectory entries went missing");
+        // at least one committed row must exercise the DES shape
+        let parsed = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+        let has_des = parsed
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|e| e.get("kernel").and_then(Json::as_str) == Some("des"));
+        assert!(has_des, "trajectory must carry the PR 9 DES rows");
     }
 }
