@@ -15,7 +15,7 @@
 
 use std::time::Instant;
 
-use vgp::boinc::net::{serve, Worker};
+use vgp::boinc::net::{serve, Connection, Worker};
 use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::coordinator::{exec, Campaign};
 use vgp::gp::problems::ProblemKind;
@@ -75,7 +75,8 @@ fn main() -> anyhow::Result<()> {
                 poll_interval: std::time::Duration::from_millis(50),
             };
             barrier.wait();
-            worker.run(addr, &key, &move |spec| exec::run_wu_artifact(&rt, spec))
+            let mut conn = Connection::connect(addr).expect("connect to server");
+            worker.run(&mut conn, &key, &move |spec| exec::run_wu_artifact(&rt, spec))
         }));
     }
     barrier.wait();
@@ -89,10 +90,10 @@ fn main() -> anyhow::Result<()> {
 
     // ---------- report
     let (assimilated, best_traj) = {
-        let core = handle.core.lock().unwrap();
+        let svc = handle.service.lock().unwrap();
         let payloads: Vec<Json> =
-            core.assimilated().iter().map(|a| a.payload.clone()).collect();
-        (core.assimilated().len(), payloads)
+            svc.core.assimilated().iter().map(|a| a.payload.clone()).collect();
+        (svc.core.assimilated().len(), payloads)
     };
     handle.shutdown();
 

@@ -1,0 +1,714 @@
+//! The multi-daemon server pipeline — BOINC's classic process layout
+//! (feeder → shared dispatch cache → scheduler, with validator /
+//! assimilator / transitioner loops behind it) rebuilt over the pure
+//! event core.
+//!
+//! ```text
+//!             ┌────────┐  unsent queue   ┌────────────────┐
+//!  Db (core) →│ feeder │───────────────▶│ dispatch cache  │ 64 shards
+//!             └────────┘  peek, no pop   │ (spec + HMAC,  │ (fib hash)
+//!                                        │  pre-signed)   │
+//!                                        └───────┬────────┘
+//!                    RequestWork RPC             │ O(1) hit
+//!  client ──────────────────────────▶ scheduler ─┴─▶ Reply::Work
+//!                                        │ Event::RequestWork
+//!                                        ▼
+//!                                  boinc::events (pure core, WAL)
+//!                                        │ effects
+//!            ┌───────────────┬───────────┴────────────┐
+//!            ▼               ▼                        ▼
+//!      q_dispatchable   q_validated             q_assimilated
+//!       (feeder loop)  (validator loop)      (assimilator loop)
+//! ```
+//!
+//! Every state transition is still an [`Event`] through
+//! [`events::apply`] and the WAL — the daemons are *readers*: the
+//! feeder peeks the unsent queue and pre-signs specs into a bounded
+//! sharded cache, the scheduler answers `RequestWork` from that cache
+//! (zero `Db` result-row scans on the request path — asserted against
+//! [`Db::scans`](super::db::Db::scans) in tests), and the
+//! validator/assimilator/transitioner loops drain typed queues fed by
+//! the effects the core returns. Crash recovery and every determinism
+//! proof hold unchanged, because replaying the WAL rebuilds the same
+//! core state the daemons are a pure function of.
+//!
+//! WU/host bookkeeping is sharded by id hash ([`shard_of`], 64 ways) so
+//! the per-request bookkeeping stays O(1)-ish at the million-host
+//! fleet sizes the PR 9 slab/calendar engine reaches.
+//!
+//! Telemetry here ([`DaemonStats`]) is deliberately **outside** the
+//! typed metrics registry: cache hit rates and legacy-frame counts are
+//! transport-dependent, and keeping them out of
+//! `MetricsSnapshot` preserves the byte-identity proofs between the
+//! direct and pipeline drivers (and the closed `vgp.fleet.v1` schema).
+//!
+//! Every entry point takes `now` explicitly — this module never reads
+//! a clock, so the identical pipeline runs under the TCP reactor
+//! (wall time) and the DES loopback (virtual time).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::metrics::snapshot::FleetSnapshot;
+use crate::metrics::Counter;
+use crate::util::json::Json;
+
+use super::db::HostRow;
+use super::events::{self, Effect, Event};
+use super::exchange::MigrationExchange;
+use super::protocol::{ErrorCode, Reply, Request};
+use super::server::ServerCore;
+
+/// Number of shards for the dispatch cache and host lanes. A power of
+/// two so the fibonacci hash's top bits index directly.
+pub const SHARDS: usize = 64;
+
+/// Deterministic 64-way shard router (fibonacci hashing): no
+/// `RandomState`, so shard placement is identical on every run and
+/// replica — a determinism-lint requirement, not just a nicety.
+pub fn shard_of(key: u64) -> usize {
+    (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 58) as usize
+}
+
+/// Pipeline tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct DaemonConfig {
+    /// dispatch-cache capacity per shard (bounded memory: at most
+    /// `SHARDS * cache_per_shard` pre-signed specs live at once)
+    pub cache_per_shard: usize,
+    /// how deep the feeder peeks into the unsent queue per refill
+    pub feed_batch: usize,
+    /// wall-clock upkeep cadence for the socket reactor, seconds (the
+    /// DES ignores this and drives ticks in virtual time)
+    pub tick_interval: f64,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig { cache_per_shard: 64, feed_batch: 256, tick_interval: 2.0 }
+    }
+}
+
+/// Pipeline telemetry. Plain counters, intentionally not part of the
+/// typed metrics registry (see the module docs): transport-dependent
+/// numbers must never reach `vgp.fleet.v1` snapshots or payloads.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DaemonStats {
+    /// scheduler replies served straight from the dispatch cache
+    pub cache_hits: u64,
+    /// dispatches that had to fall back to a `Db` row read + fresh sign
+    pub cache_misses: u64,
+    /// entries the feeder loop inserted into the cache
+    pub fed: u64,
+    /// done-WU entries the assimilator/GC evicted from the cache
+    pub evicted: u64,
+    /// pre-`vgp.rpc.v1` bare frames decoded by the shim
+    pub legacy_frames: u64,
+    /// validator-queue records drained
+    pub validated: u64,
+    /// assimilator-queue records drained
+    pub assimilated: u64,
+    /// transitioner passes run
+    pub ticks: u64,
+}
+
+/// A feeder-cache entry: everything `Reply::Work` needs, with the
+/// spec pre-serialized and HMAC-signed **once** instead of per
+/// dispatch. Valid for the WU's whole dispatchable life: a spec is
+/// immutable from the moment its first replica exists (held WUs have
+/// no replicas until release patches the spec, boosts only add
+/// replicas), so a cached signature can never go stale.
+#[derive(Clone, Debug)]
+struct CachedWu {
+    wu_id: u64,
+    name: String,
+    spec: Json,
+    flops_est: f64,
+    signature: String,
+}
+
+/// The feeder's bounded, sharded dispatch cache.
+struct Feeder {
+    cap_per_shard: usize,
+    shards: Vec<BTreeMap<u64, CachedWu>>,
+}
+
+impl Feeder {
+    fn new(cap_per_shard: usize) -> Feeder {
+        Feeder { cap_per_shard, shards: (0..SHARDS).map(|_| BTreeMap::new()).collect() }
+    }
+
+    fn get(&self, wu_id: u64) -> Option<&CachedWu> {
+        self.shards[shard_of(wu_id)].get(&wu_id)
+    }
+
+    fn contains(&self, wu_id: u64) -> bool {
+        self.shards[shard_of(wu_id)].contains_key(&wu_id)
+    }
+
+    /// Insert unless the target shard is at capacity (bounded cache:
+    /// overflow WUs simply fall back to the `Db` path on dispatch).
+    fn insert(&mut self, entry: CachedWu) -> bool {
+        let shard = &mut self.shards[shard_of(entry.wu_id)];
+        if shard.len() >= self.cap_per_shard && !shard.contains_key(&entry.wu_id) {
+            return false;
+        }
+        shard.insert(entry.wu_id, entry);
+        true
+    }
+
+    fn evict(&mut self, wu_id: u64) -> bool {
+        self.shards[shard_of(wu_id)].remove(&wu_id).is_some()
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(BTreeMap::len).sum()
+    }
+
+    fn shard_loads(&self) -> Vec<usize> {
+        self.shards.iter().map(BTreeMap::len).collect()
+    }
+}
+
+/// Per-host scheduler bookkeeping, sharded by host-id hash.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HostLane {
+    pub dispatched: u64,
+    pub valid: u64,
+    pub invalid: u64,
+    pub quarantines: u64,
+}
+
+struct HostShards {
+    shards: Vec<BTreeMap<u64, HostLane>>,
+}
+
+impl HostShards {
+    fn new() -> HostShards {
+        HostShards { shards: (0..SHARDS).map(|_| BTreeMap::new()).collect() }
+    }
+
+    fn lane(&mut self, host_id: u64) -> &mut HostLane {
+        self.shards[shard_of(host_id)].entry(host_id).or_default()
+    }
+
+    fn get(&self, host_id: u64) -> Option<&HostLane> {
+        self.shards[shard_of(host_id)].get(&host_id)
+    }
+}
+
+/// The daemon set: feeder + scheduler fast path + the typed queues the
+/// validator/assimilator loops drain. Owns no core state — everything
+/// authoritative lives in [`ServerCore`] behind events.
+pub struct Daemons {
+    pub cfg: DaemonConfig,
+    pub stats: DaemonStats,
+    feeder: Feeder,
+    hosts: HostShards,
+    /// WUs that (re)gained dispatchable replicas — the feeder loop's
+    /// fast feed (submit / release / boost / reissue effects)
+    q_dispatchable: VecDeque<u64>,
+    /// `(wu, result, valid)` validator verdicts awaiting lane rollup
+    q_validated: VecDeque<(u64, u64, bool)>,
+    /// WUs whose canonical payload was banked — assimilator loop input
+    q_assimilated: VecDeque<u64>,
+}
+
+impl Daemons {
+    pub fn new(cfg: DaemonConfig) -> Daemons {
+        Daemons {
+            feeder: Feeder::new(cfg.cache_per_shard),
+            hosts: HostShards::new(),
+            q_dispatchable: VecDeque::new(),
+            q_validated: VecDeque::new(),
+            q_assimilated: VecDeque::new(),
+            stats: DaemonStats::default(),
+            cfg,
+        }
+    }
+
+    /// Route one effect batch from the core into the typed queues and
+    /// the sharded host lanes. Pure bookkeeping: no core access.
+    pub fn route(&mut self, fx: &[Effect]) {
+        for f in fx {
+            match f {
+                Effect::Submitted { wu }
+                | Effect::Reissue { wu, .. }
+                | Effect::Boosted { wu, .. } => {
+                    self.q_dispatchable.push_back(*wu);
+                }
+                Effect::ReleaseHeld { wu } => {
+                    // release patches the spec; drop any entry cached
+                    // before the patch (can't happen today — held WUs
+                    // have no replicas to cache — but cheap insurance)
+                    self.feeder.evict(*wu);
+                    self.q_dispatchable.push_back(*wu);
+                }
+                Effect::Validate { wu, result, valid } => {
+                    self.q_validated.push_back((*wu, *result, *valid));
+                }
+                Effect::Assimilate { wu } => self.q_assimilated.push_back(*wu),
+                Effect::Dispatch { host, .. } => self.hosts.lane(*host).dispatched += 1,
+                Effect::Registered { host } => {
+                    self.hosts.lane(*host);
+                }
+                Effect::Quarantine { host } => self.hosts.lane(*host).quarantines += 1,
+                _ => {}
+            }
+        }
+    }
+
+    /// The scheduler: apply `Event::RequestWork` through the core,
+    /// then build the reply from the dispatch cache — on a hit the
+    /// spec and signature come straight from the feeder's pre-signed
+    /// entry and the request path does **zero** `Db` result-row scans.
+    pub fn request_work(&mut self, core: &mut ServerCore, host_id: u64, now: f64) -> Reply {
+        // feeder fast path: adopt any newly-dispatchable WUs queued by
+        // earlier effects (O(new items), not O(requests))
+        self.drain_dispatchable(core);
+        let fx = core.handle_event(Event::RequestWork { host_id, now });
+        self.route(&fx);
+        if fx.iter().any(|f| matches!(f, Effect::MetricInc(Counter::UnknownHostRefusal))) {
+            return Reply::Error {
+                code: ErrorCode::UnknownHost,
+                detail: format!("host {host_id} is not registered"),
+            };
+        }
+        let Some((rid, wu_id)) = events::dispatched(&fx) else {
+            return Reply::NoWork { campaign_done: core.is_complete() };
+        };
+        if let Some(c) = self.feeder.get(wu_id) {
+            self.stats.cache_hits += 1;
+            return Reply::Work {
+                result_id: rid,
+                wu_id,
+                wu_name: c.name.clone(),
+                spec: c.spec.clone(),
+                flops_est: c.flops_est,
+                signature: c.signature.clone(),
+            };
+        }
+        // cache miss (cold cache or full shard): fall back to the row
+        // read + fresh signature, and adopt the entry for next time
+        self.stats.cache_misses += 1;
+        let entry = cache_entry(core, wu_id).expect("dispatched WU is live and unheld");
+        let reply = Reply::Work {
+            result_id: rid,
+            wu_id,
+            wu_name: entry.name.clone(),
+            spec: entry.spec.clone(),
+            flops_est: entry.flops_est,
+            signature: entry.signature.clone(),
+        };
+        if self.feeder.insert(entry) {
+            self.stats.fed += 1;
+        }
+        reply
+    }
+
+    /// The feeder loop: adopt queued dispatchable WUs, then peek the
+    /// head of the unsent queue (read-only) as the backstop for WUs
+    /// that entered the core without passing through this pipeline
+    /// (campaign intake, exchange releases during a poll).
+    pub fn feed(&mut self, core: &ServerCore) {
+        self.drain_dispatchable(core);
+        for rid in core.db.unsent_head(self.cfg.feed_batch) {
+            let Some(r) = core.db.result(rid) else { continue };
+            self.adopt(core, r.wu_id);
+        }
+    }
+
+    fn drain_dispatchable(&mut self, core: &ServerCore) {
+        while let Some(wu_id) = self.q_dispatchable.pop_front() {
+            self.adopt(core, wu_id);
+        }
+    }
+
+    fn adopt(&mut self, core: &ServerCore, wu_id: u64) {
+        if self.feeder.contains(wu_id) {
+            return;
+        }
+        if let Some(entry) = cache_entry(core, wu_id) {
+            if self.feeder.insert(entry) {
+                self.stats.fed += 1;
+            }
+        }
+    }
+
+    /// The transitioner loop: one `Event::Tick` through the core (the
+    /// deadline-expiry sweep), then an upkeep pass.
+    pub fn tick(&mut self, core: &mut ServerCore, now: f64) {
+        self.stats.ticks += 1;
+        let fx = core.handle_event(Event::Tick { now });
+        self.route(&fx);
+        self.upkeep(core);
+    }
+
+    /// Drain the validator/assimilator queues and run feeder upkeep.
+    /// Idempotent and event-free: calling it more or less often changes
+    /// no core state, only how fresh the cache and lanes are.
+    pub fn upkeep(&mut self, core: &ServerCore) {
+        while let Some((_wu, rid, valid)) = self.q_validated.pop_front() {
+            self.stats.validated += 1;
+            if let Some(host) = core.db.result(rid).map(|r| r.host_id) {
+                let lane = self.hosts.lane(host);
+                if valid {
+                    lane.valid += 1;
+                } else {
+                    lane.invalid += 1;
+                }
+            }
+        }
+        while let Some(wu) = self.q_assimilated.pop_front() {
+            self.stats.assimilated += 1;
+            if self.feeder.evict(wu) {
+                self.stats.evicted += 1;
+            }
+        }
+        // GC: error-poisoned WUs have no data-marker effect, so sweep
+        // the (bounded) cache for entries that went terminal
+        let dead: Vec<u64> = self
+            .feeder
+            .shards
+            .iter()
+            .flat_map(|s| s.keys().copied())
+            .filter(|id| core.db.wu(*id).map(|w| w.is_done()).unwrap_or(true))
+            .collect();
+        for id in dead {
+            if self.feeder.evict(id) {
+                self.stats.evicted += 1;
+            }
+        }
+        self.feed(core);
+    }
+
+    /// Cache entries currently live (bounded by
+    /// `SHARDS * cache_per_shard`).
+    pub fn cache_len(&self) -> usize {
+        self.feeder.len()
+    }
+
+    /// Per-shard cache occupancy, for load-balance assertions.
+    pub fn shard_loads(&self) -> Vec<usize> {
+        self.feeder.shard_loads()
+    }
+
+    /// Scheduler-side lane for one host, if it ever registered here.
+    pub fn host_lane(&self, host_id: u64) -> Option<HostLane> {
+        self.hosts.get(host_id).copied()
+    }
+}
+
+/// Build a cache entry for a live WU: clone the spec once, sign it
+/// once. `None` for held/done/unknown WUs — they are not dispatchable.
+fn cache_entry(core: &ServerCore, wu_id: u64) -> Option<CachedWu> {
+    let w = core.db.wu(wu_id)?;
+    if w.held || w.is_done() {
+        return None;
+    }
+    let spec = w.spec.clone();
+    let signature = core.key.sign(spec.to_string().as_bytes());
+    Some(CachedWu { wu_id, name: w.name.clone(), spec, flops_est: w.flops_est, signature })
+}
+
+/// Handle one scheduler RPC against the pipeline. Free-standing so the
+/// DES can drive it with borrowed parts while [`Service`] wraps it for
+/// the socket reactor — one implementation, two owners.
+pub fn handle_request(
+    core: &mut ServerCore,
+    daemons: &mut Daemons,
+    exchange: Option<&mut MigrationExchange>,
+    req: &Request,
+    now: f64,
+) -> Reply {
+    match req {
+        Request::Register { name, city, flops, ncpus, on_frac, active_frac } => {
+            let host = HostRow {
+                id: 0,
+                name: name.clone(),
+                city: city.clone(),
+                flops: *flops,
+                ncpus: *ncpus,
+                on_frac: *on_frac,
+                active_frac: *active_frac,
+                registered_at: now,
+                last_heartbeat: now,
+                error_results: 0,
+                valid_results: 0,
+                consecutive_errors: 0,
+                last_error_at: 0.0,
+                in_flight: 0,
+                credit: 0.0,
+            };
+            let fx = core.handle_event(Event::RegisterHost { host });
+            daemons.route(&fx);
+            match events::registered_id(&fx) {
+                Some(id) => Reply::Registered { host_id: id },
+                None => Reply::Error {
+                    code: ErrorCode::Internal,
+                    detail: "register produced no host id".into(),
+                },
+            }
+        }
+        Request::RequestWork { host_id } => daemons.request_work(core, *host_id, now),
+        Request::Heartbeat { host_id } => {
+            if core.db.host(*host_id).is_none() {
+                return Reply::Error {
+                    code: ErrorCode::UnknownHost,
+                    detail: format!("host {host_id} is not registered"),
+                };
+            }
+            let fx = core.handle_event(Event::Heartbeat { host_id: *host_id, now });
+            daemons.route(&fx);
+            Reply::Ok
+        }
+        Request::ReportSuccess { result_id, cpu_time, payload } => {
+            let fx = core.handle_event(Event::ReportSuccess {
+                result_id: *result_id,
+                now,
+                cpu_time: *cpu_time,
+                payload: payload.clone(),
+            });
+            daemons.route(&fx);
+            if let Some(ex) = exchange {
+                ex.poll(core, now);
+            }
+            Reply::Ok
+        }
+        Request::ReportError { result_id } => {
+            let fx = core.handle_event(Event::ReportError { result_id: *result_id, now });
+            daemons.route(&fx);
+            if let Some(ex) = exchange {
+                ex.poll(core, now);
+            }
+            Reply::Ok
+        }
+        Request::Stats => Reply::Stats {
+            snapshot: FleetSnapshot::from_parts(core, exchange.map(|e| &*e), now).to_json(),
+        },
+        Request::Shutdown => Reply::Ok,
+    }
+}
+
+/// The owning wrapper the socket reactor (and loopback transport)
+/// share behind a mutex: core + daemons + optional island exchange.
+pub struct Service {
+    pub core: ServerCore,
+    pub daemons: Daemons,
+    pub exchange: Option<MigrationExchange>,
+}
+
+impl Service {
+    pub fn new(core: ServerCore, exchange: Option<MigrationExchange>) -> Service {
+        Service { core, daemons: Daemons::new(DaemonConfig::default()), exchange }
+    }
+
+    pub fn with_config(
+        core: ServerCore,
+        exchange: Option<MigrationExchange>,
+        cfg: DaemonConfig,
+    ) -> Service {
+        Service { core, daemons: Daemons::new(cfg), exchange }
+    }
+
+    /// One RPC, time-explicit (the caller owns the clock).
+    pub fn handle(&mut self, req: &Request, now: f64) -> Reply {
+        handle_request(&mut self.core, &mut self.daemons, self.exchange.as_mut(), req, now)
+    }
+
+    /// One transitioner/upkeep pass + exchange poll, time-explicit.
+    pub fn tick(&mut self, now: f64) {
+        self.daemons.tick(&mut self.core, now);
+        if let Some(ex) = self.exchange.as_mut() {
+            ex.poll(&mut self.core, now);
+        }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.core.is_complete()
+    }
+
+    /// The `vgp.fleet.v1` snapshot for `Stats` / `--metrics-out`.
+    pub fn snapshot(&self, now: f64) -> Json {
+        FleetSnapshot::from_parts(&self.core, self.exchange.as_ref(), now).to_json()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boinc::server::ServerConfig;
+    use crate::boinc::workunit::WorkUnit;
+
+    fn register(svc: &mut Service, name: &str, now: f64) -> u64 {
+        let reply = svc.handle(
+            &Request::Register {
+                name: name.into(),
+                city: "Plasencia".into(),
+                flops: 1e9,
+                ncpus: 1,
+                on_frac: 1.0,
+                active_frac: 1.0,
+            },
+            now,
+        );
+        match reply {
+            Reply::Registered { host_id } => host_id,
+            other => panic!("expected Registered, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn scheduler_serves_warm_cache_with_zero_db_scans() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        for i in 0..4 {
+            let spec = Json::obj().set("i", i as u64);
+            core.submit_wu(WorkUnit::new(0, format!("wu{i}"), spec, 1e9));
+        }
+        let mut svc = Service::new(core, None);
+        let hosts: Vec<u64> = (0..4).map(|i| register(&mut svc, &format!("h{i}"), 0.0)).collect();
+        // warm the cache through the feeder loop, then count scans
+        svc.daemons.feed(&svc.core);
+        assert_eq!(svc.daemons.cache_len(), 4);
+        let scans_before = svc.core.db.scans();
+        let mut served = 0;
+        for (i, h) in hosts.iter().enumerate() {
+            match svc.handle(&Request::RequestWork { host_id: *h }, i as f64) {
+                Reply::Work { signature, spec, .. } => {
+                    served += 1;
+                    assert!(svc.core.key.verify(spec.to_string().as_bytes(), &signature));
+                }
+                other => panic!("expected Work, got {other:?}"),
+            }
+        }
+        assert_eq!(served, 4);
+        assert_eq!(
+            svc.core.db.scans(),
+            scans_before,
+            "the request path must do zero Db result-row scans"
+        );
+        assert_eq!(svc.daemons.stats.cache_hits, 4, "every dispatch came from the feeder cache");
+        assert_eq!(svc.daemons.stats.cache_misses, 0);
+    }
+
+    #[test]
+    fn cold_cache_misses_once_then_hits() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        core.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9).with_redundancy(2, 2));
+        let mut svc = Service::new(core, None);
+        let h1 = register(&mut svc, "a", 0.0);
+        let h2 = register(&mut svc, "b", 0.0);
+        // no feed(): the first dispatch falls back to the Db row...
+        let first = svc.handle(&Request::RequestWork { host_id: h1 }, 1.0);
+        assert!(matches!(first, Reply::Work { .. }), "{first:?}");
+        assert_eq!(svc.daemons.stats.cache_misses, 1);
+        // ...and primes the cache for the second replica
+        let second = svc.handle(&Request::RequestWork { host_id: h2 }, 2.0);
+        assert!(matches!(second, Reply::Work { .. }), "{second:?}");
+        assert_eq!(svc.daemons.stats.cache_hits, 1);
+    }
+
+    #[test]
+    fn pipeline_completes_a_quorum_campaign() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        core.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9).with_redundancy(2, 2));
+        let mut svc = Service::new(core, None);
+        let h1 = register(&mut svc, "a", 0.0);
+        let h2 = register(&mut svc, "b", 0.0);
+        svc.daemons.feed(&svc.core);
+        let Reply::Work { result_id: r1, .. } =
+            svc.handle(&Request::RequestWork { host_id: h1 }, 1.0)
+        else {
+            panic!("no work for h1")
+        };
+        let Reply::Work { result_id: r2, .. } =
+            svc.handle(&Request::RequestWork { host_id: h2 }, 2.0)
+        else {
+            panic!("no work for h2")
+        };
+        let p = Json::obj().set("hits", 9u64);
+        assert_eq!(
+            svc.handle(
+                &Request::ReportSuccess { result_id: r1, cpu_time: 5.0, payload: p.clone() },
+                3.0
+            ),
+            Reply::Ok
+        );
+        assert_eq!(
+            svc.handle(&Request::ReportSuccess { result_id: r2, cpu_time: 5.0, payload: p }, 4.0),
+            Reply::Ok
+        );
+        assert!(svc.is_complete());
+        svc.tick(5.0);
+        // the assimilator loop evicted the finished WU from the cache
+        assert_eq!(svc.daemons.cache_len(), 0);
+        assert_eq!(svc.daemons.stats.assimilated, 1);
+        assert_eq!(svc.daemons.stats.validated, 2);
+        // validator verdicts rolled up into the sharded host lanes
+        assert_eq!(svc.daemons.host_lane(h1).unwrap().valid, 1);
+        assert_eq!(svc.daemons.host_lane(h2).unwrap().dispatched, 1);
+        // NoWork now reports campaign completion
+        let done = svc.handle(&Request::RequestWork { host_id: h1 }, 6.0);
+        assert_eq!(done, Reply::NoWork { campaign_done: true });
+    }
+
+    #[test]
+    fn unknown_ids_get_typed_errors() {
+        let core = ServerCore::new(ServerConfig::default());
+        let mut svc = Service::new(core, None);
+        let r = svc.handle(&Request::RequestWork { host_id: 404 }, 0.0);
+        assert!(matches!(r, Reply::Error { code: ErrorCode::UnknownHost, .. }), "{r:?}");
+        let r = svc.handle(&Request::Heartbeat { host_id: 404 }, 0.0);
+        assert!(matches!(r, Reply::Error { code: ErrorCode::UnknownHost, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn cache_is_bounded_and_sharded() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        for i in 0..SHARDS * 3 {
+            let spec = Json::obj().set("i", i as u64);
+            core.submit_wu(WorkUnit::new(0, format!("wu{i}"), spec, 1e9));
+        }
+        let cfg = DaemonConfig { cache_per_shard: 2, feed_batch: 4096, ..DaemonConfig::default() };
+        let mut svc = Service::with_config(core, None, cfg);
+        svc.daemons.feed(&svc.core);
+        assert!(
+            svc.daemons.cache_len() <= SHARDS * 2,
+            "bounded: {} entries exceed the cap",
+            svc.daemons.cache_len()
+        );
+        let loads = svc.daemons.shard_loads();
+        assert!(loads.iter().all(|&l| l <= 2), "no shard over its cap: {loads:?}");
+        assert!(
+            loads.iter().filter(|&&l| l > 0).count() > SHARDS / 4,
+            "fibonacci sharding spreads sequential ids: {loads:?}"
+        );
+    }
+
+    #[test]
+    fn shard_router_is_deterministic_and_in_range() {
+        for k in [0u64, 1, 2, 63, 64, 1 << 20, u64::MAX] {
+            let s = shard_of(k);
+            assert!(s < SHARDS);
+            assert_eq!(s, shard_of(k), "stable for equal keys");
+        }
+    }
+
+    #[test]
+    fn gc_evicts_error_poisoned_wus() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        let mut wu = WorkUnit::new(0, "wu", Json::obj(), 1e9);
+        wu.max_error_results = 0;
+        core.submit_wu(wu);
+        let mut svc = Service::new(core, None);
+        let h = register(&mut svc, "a", 0.0);
+        svc.daemons.feed(&svc.core);
+        assert_eq!(svc.daemons.cache_len(), 1);
+        let Reply::Work { result_id, .. } = svc.handle(&Request::RequestWork { host_id: h }, 1.0)
+        else {
+            panic!("no work")
+        };
+        svc.handle(&Request::ReportError { result_id }, 2.0);
+        svc.tick(3.0);
+        assert_eq!(svc.daemons.cache_len(), 0, "terminal WU swept from the cache");
+    }
+}

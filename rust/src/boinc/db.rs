@@ -10,6 +10,7 @@
 //! `in_progress_for_host` is a map lookup instead of walking every
 //! result row — both load-bearing at million-host fleet sizes.
 
+use std::cell::Cell;
 use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 
 use super::workunit::{ResultRecord, ServerState, WorkUnit};
@@ -80,6 +81,23 @@ pub struct Db {
     /// monotone dispatch counter; expiry batches replay in dispatch
     /// order so the wheel reproduces the legacy scan order exactly
     dispatch_seq: u64,
+    /// index: `(wu_id, host_id)` pairs that ever left `Unsent` on that
+    /// host. Host ids are only assigned at dispatch and a dispatched
+    /// replica never returns to `Unsent`, so membership here is exactly
+    /// the scheduler's "this host already holds a replica of this WU"
+    /// predicate — answered in O(log n) instead of scanning the WU's
+    /// result rows on every work request.
+    wu_hosts: BTreeSet<(u64, u64)>,
+    /// count of WUs for which `is_done()` is true (assimilated or any
+    /// error-mask bit). `is_done()` transitions are monotone and flow
+    /// through the four `mark_*` mutators below, so campaign
+    /// completion is an O(1) comparison, not a full `wus` scan.
+    done_wus: usize,
+    /// observability probe: how many times a full result-row scan
+    /// (`results_of_wu`) ran. The daemon pipeline's zero-scan contract
+    /// for the scheduler request path is asserted against this counter
+    /// in tests; it never reaches snapshots or payloads.
+    scans: Cell<u64>,
     next_wu_id: u64,
     next_result_id: u64,
 }
@@ -146,10 +164,25 @@ impl Db {
     }
 
     pub fn results_of_wu(&self, wu_id: u64) -> Vec<&ResultRecord> {
+        self.scans.set(self.scans.get() + 1);
         self.by_wu
             .get(&wu_id)
             .map(|ids| ids.iter().filter_map(|id| self.results.get(id)).collect())
             .unwrap_or_default()
+    }
+
+    /// How many result-row scans (`results_of_wu`) have run so far.
+    /// A pure observability probe for the daemon pipeline's zero-scan
+    /// scheduler contract; excluded from snapshots and payloads.
+    pub fn scans(&self) -> u64 {
+        self.scans.get()
+    }
+
+    /// Has `host_id` ever been dispatched a replica of `wu_id`?
+    /// O(log n) via the `(wu_id, host_id)` index — the scheduler's
+    /// one-replica-per-host gate without a result-row scan.
+    pub fn wu_has_host(&self, wu_id: u64, host_id: u64) -> bool {
+        self.wu_hosts.contains(&(wu_id, host_id))
     }
 
     /// Pop the next unsent result (feeder queue head), if any.
@@ -165,6 +198,21 @@ impl Db {
 
     pub fn unsent_count(&self) -> usize {
         self.unsent.len()
+    }
+
+    /// Read-only peek at up to `k` live entries from the head of the
+    /// unsent queue (stale ids that already left `Unsent` are skipped,
+    /// not removed). The feeder daemon refills its dispatch cache from
+    /// this view without mutating scheduler state.
+    pub fn unsent_head(&self, k: usize) -> Vec<u64> {
+        self.unsent
+            .iter()
+            .filter(|id| {
+                self.results.get(id).map(|r| r.server_state == ServerState::Unsent).unwrap_or(false)
+            })
+            .take(k)
+            .copied()
+            .collect()
     }
 
     pub fn push_unsent(&mut self, id: u64) {
@@ -183,6 +231,11 @@ impl Db {
         self.wheel.insert((key, self.dispatch_seq, id));
         self.ip_meta.insert(id, (key, self.dispatch_seq, host_id));
         *self.ip_by_host.entry(host_id).or_insert(0) += 1;
+        if let Some(r) = self.results.get(&id) {
+            // permanent: a dispatched replica never returns to Unsent,
+            // so the pair stays valid for the WU's whole lifetime
+            self.wu_hosts.insert((r.wu_id, host_id));
+        }
     }
 
     /// Retire a result that left `InProgress` (success, error or
@@ -247,16 +300,74 @@ impl Db {
         n
     }
 
-    /// All WUs assimilated (campaign complete)?
+    // ------------------------------------------------- WU terminal states
+    // `WorkUnit::is_done()` transitions are monotone (no mask bit or
+    // canonical result is ever cleared) and happen at exactly four
+    // sites in the pure core, each routed through one of these
+    // mutators so the `done_wus` counter can never drift.
+
+    fn note_done(&mut self, wu_id: u64, was_done: bool) {
+        if !was_done && self.wus.get(&wu_id).map(|w| w.is_done()).unwrap_or(false) {
+            self.done_wus += 1;
+        }
+    }
+
+    /// Validator/assimilator terminal: record the canonical result and
+    /// mark the WU assimilated.
+    pub fn mark_assimilated(&mut self, wu_id: u64, canonical: u64) {
+        let was = self.wus.get(&wu_id).map(|w| w.is_done()).unwrap_or(true);
+        if let Some(w) = self.wus.get_mut(&wu_id) {
+            w.canonical_result = Some(canonical);
+            w.assimilated = true;
+        }
+        self.note_done(wu_id, was);
+    }
+
+    /// Transitioner terminal: the WU burned its client-error budget.
+    pub fn mark_too_many_errors(&mut self, wu_id: u64) {
+        let was = self.wus.get(&wu_id).map(|w| w.is_done()).unwrap_or(true);
+        if let Some(w) = self.wus.get_mut(&wu_id) {
+            w.error_mask.too_many_errors = true;
+        }
+        self.note_done(wu_id, was);
+    }
+
+    /// Transitioner terminal: the WU burned its total-replica budget.
+    pub fn mark_too_many_total(&mut self, wu_id: u64) {
+        let was = self.wus.get(&wu_id).map(|w| w.is_done()).unwrap_or(true);
+        if let Some(w) = self.wus.get_mut(&wu_id) {
+            w.error_mask.too_many_total = true;
+        }
+        self.note_done(wu_id, was);
+    }
+
+    /// Cancellation terminal (dead island chains): the WU will never
+    /// be sent.
+    pub fn mark_couldnt_send(&mut self, wu_id: u64) {
+        let was = self.wus.get(&wu_id).map(|w| w.is_done()).unwrap_or(true);
+        if let Some(w) = self.wus.get_mut(&wu_id) {
+            w.error_mask.couldnt_send = true;
+        }
+        self.note_done(wu_id, was);
+    }
+
+    /// All WUs assimilated (campaign complete)? O(1): the monotone
+    /// done-WU counter vs the table size, with the legacy full scan
+    /// kept as the debug-build ground truth.
     pub fn all_assimilated(&self) -> bool {
-        self.wus.values().all(|wu| wu.assimilated || wu.error_mask.any())
+        debug_assert_eq!(
+            self.done_wus,
+            self.wus.values().filter(|w| w.is_done()).count(),
+            "done-WU counter drifted from the wus table"
+        );
+        self.done_wus == self.wus.len()
     }
 
     pub fn stats(&self) -> DbStats {
         DbStats {
             hosts: self.hosts.len(),
             wus: self.wus.len(),
-            wus_done: self.wus.values().filter(|w| w.is_done()).count(),
+            wus_done: self.done_wus,
             results: self.results.len(),
             unsent: self.unsent.len(),
             in_progress: self.ip_meta.len(),
@@ -388,6 +499,71 @@ mod tests {
         assert_eq!(late, vec![r2]);
         db.result_mut(r2).unwrap().server_state = ServerState::Over;
         assert_eq!(db.in_progress_len(), 0);
+    }
+
+    #[test]
+    fn wu_host_index_matches_result_rows() {
+        let mut db = Db::new();
+        let h1 = db.upsert_host(host("a"));
+        let h2 = db.upsert_host(host("b"));
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        assert!(!db.wu_has_host(wu, h1));
+        let r = dispatch(&mut db, wu, h1, 100.0);
+        assert!(db.wu_has_host(wu, h1));
+        assert!(!db.wu_has_host(wu, h2));
+        // membership is permanent: the pair survives the replica
+        // leaving InProgress (dispatched replicas never return to
+        // Unsent, so the one-replica-per-host gate must keep holding)
+        db.result_mut(r).unwrap().server_state = ServerState::Over;
+        db.retire_in_progress(r);
+        assert!(db.wu_has_host(wu, h1));
+    }
+
+    #[test]
+    fn done_counter_tracks_terminal_transitions_idempotently() {
+        let mut db = Db::new();
+        let w1 = db.insert_wu(WorkUnit::new(0, "w1", Json::obj(), 1e9));
+        let w2 = db.insert_wu(WorkUnit::new(0, "w2", Json::obj(), 1e9));
+        let r = db.insert_result(ResultRecord::new(0, w1));
+        assert!(!db.all_assimilated());
+        assert_eq!(db.stats().wus_done, 0);
+        db.mark_assimilated(w1, r);
+        assert_eq!(db.stats().wus_done, 1);
+        // re-marking an already-done WU must not double count
+        db.mark_too_many_errors(w1);
+        assert_eq!(db.stats().wus_done, 1);
+        db.mark_couldnt_send(w2);
+        assert_eq!(db.stats().wus_done, 2);
+        assert!(db.all_assimilated());
+    }
+
+    #[test]
+    fn scan_probe_counts_result_row_scans() {
+        let mut db = Db::new();
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        db.insert_result(ResultRecord::new(0, wu));
+        let before = db.scans();
+        let _ = db.results_of_wu(wu);
+        let _ = db.results_of_wu(wu);
+        assert_eq!(db.scans(), before + 2);
+        // the O(log n) index paths never touch the probe
+        let _ = db.wu_has_host(wu, 1);
+        let _ = db.unsent_head(8);
+        assert_eq!(db.scans(), before + 2);
+    }
+
+    #[test]
+    fn unsent_head_peeks_without_consuming() {
+        let mut db = Db::new();
+        let wu = db.insert_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let r1 = db.insert_result(ResultRecord::new(0, wu));
+        let r2 = db.insert_result(ResultRecord::new(0, wu));
+        let r3 = db.insert_result(ResultRecord::new(0, wu));
+        db.result_mut(r2).unwrap().server_state = ServerState::Over;
+        assert_eq!(db.unsent_head(8), vec![r1, r3], "stale entries skipped");
+        assert_eq!(db.unsent_head(1), vec![r1]);
+        // still a peek: the queue itself is untouched
+        assert_eq!(db.pop_unsent(), Some(r1));
     }
 
     #[test]

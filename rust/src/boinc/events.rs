@@ -238,11 +238,9 @@ fn boost_wu(s: &mut CoreState<'_>, wu_id: u64) -> Vec<Effect> {
 }
 
 fn cancel_wu(s: &mut CoreState<'_>, wu_id: u64) -> Vec<Effect> {
-    if let Some(w) = s.db.wu_mut(wu_id) {
-        if !w.is_done() {
-            w.error_mask.couldnt_send = true;
-            return vec![Effect::MetricInc(Counter::WuCancelled)];
-        }
+    if s.db.wu(wu_id).map(|w| !w.is_done()).unwrap_or(false) {
+        s.db.mark_couldnt_send(wu_id);
+        return vec![Effect::MetricInc(Counter::WuCancelled)];
     }
     Vec::new()
 }
@@ -325,11 +323,10 @@ fn request_work(s: &mut CoreState<'_>, host_id: u64, now: f64) -> Vec<Effect> {
             fx.push(Effect::MetricInc(Counter::ResultDidntNeed));
             continue;
         }
-        let already_here = redundant
-            && s.db
-                .results_of_wu(wu_id)
-                .iter()
-                .any(|r| r.host_id == host_id && r.server_state != ServerState::Unsent);
+        // O(log n) via the (wu_id, host_id) dispatch index — the
+        // scheduler request path never scans result rows (the daemon
+        // pipeline's zero-scan contract, asserted by `Db::scans()`)
+        let already_here = redundant && s.db.wu_has_host(wu_id, host_id);
         if already_here {
             bounced.push(rid);
         } else {
@@ -585,12 +582,8 @@ fn transition_wu(s: &mut CoreState<'_>, wu_id: u64, now: f64, fx: &mut Vec<Effec
             }
             // ---- assimilator
             let payload = s.db.result(canon.0).and_then(|r| r.payload.clone()).unwrap_or(Json::Null);
-            let wu_name = {
-                let w = s.db.wu_mut(wu_id).unwrap();
-                w.canonical_result = Some(canon.0);
-                w.assimilated = true;
-                w.name.clone()
-            };
+            s.db.mark_assimilated(wu_id, canon.0);
+            let wu_name = s.db.wu(wu_id).expect("wu exists").name.clone();
             s.assimilated.push(Assimilated {
                 wu_id,
                 wu_name,
@@ -613,12 +606,12 @@ fn transition_wu(s: &mut CoreState<'_>, wu_id: u64, now: f64, fx: &mut Vec<Effec
 
     // ---- error masks
     if errors > wu.max_error_results {
-        s.db.wu_mut(wu_id).unwrap().error_mask.too_many_errors = true;
+        s.db.mark_too_many_errors(wu_id);
         fx.push(Effect::MetricInc(Counter::WuTooManyErrors));
         return;
     }
     if total >= wu.max_total_results && pending == 0 {
-        s.db.wu_mut(wu_id).unwrap().error_mask.too_many_total = true;
+        s.db.mark_too_many_total(wu_id);
         fx.push(Effect::MetricInc(Counter::WuTooManyTotal));
         return;
     }

@@ -694,8 +694,8 @@ mod tests {
         core.report_success(r1, 2.0, 1.0, payload1);
         ex.poll(&mut core, 3.0);
         assert_eq!(ex.stats.quarantined, 4, "both junk shapes dropped from both banks");
-        assert_eq!(core.metrics.counter("exchange.verify.rejected"), 4);
-        assert_eq!(core.metrics.counter("exchange.verify.ok"), 1);
+        assert_eq!(core.metrics.get(Counter::ExchangeVerifyRejected), 4);
+        assert_eq!(core.metrics.get(Counter::ExchangeVerifyOk), 1);
         // ring of 2: deme 1 imports deme 0's bank — only the verified
         // migrant survives; deme 0 imports deme 1's all-junk bank
         let spec1 = core.db.wu(ex.wu_id(1, 1)).unwrap().spec.clone();
@@ -733,7 +733,7 @@ mod tests {
         ex.poll(&mut core, 5.0);
         assert!(!ex.is_released(0, 1), "barrier still blocked by the straggler");
         assert_eq!(ex.stats.boosted, 1, "suspect straggler must be raced");
-        assert_eq!(core.metrics.counter("wu.boosted"), 1);
+        assert_eq!(core.metrics.get(Counter::WuBoosted), 1);
         // the good host picks up the racing replica (distinct-host
         // rule) and completes it long before the migration timeout
         let (r_race, w_race, _) = core.request_work(good, 6.0).unwrap();

@@ -23,16 +23,28 @@
 //!   state (`vgp serve --wal FILE`).
 //! * [`signature`] — SHA-256 checksums + HMAC code signing (the paper's
 //!   "only signed applications can be distributed").
-//! * [`protocol`] — JSON scheduler-RPC messages.
-//! * [`net`] — TCP front-end (`serve`) and a real worker client
-//!   (`Worker`) implementing fetch → compute → checkpoint → upload with
-//!   heartbeats.
+//! * [`protocol`] — `vgp.rpc.v1` envelope + JSON scheduler-RPC
+//!   messages with typed error replies (and a decode shim for pre-v1
+//!   bare frames).
+//! * [`daemon`] — the multi-daemon pipeline: feeder → bounded sharded
+//!   dispatch cache → scheduler (zero `Db` scans on the request path),
+//!   with validator/assimilator/transitioner loops draining typed
+//!   queues; [`daemon::Service`] is the owning wrapper both transports
+//!   share.
+//! * [`transport`] — the unified client [`transport::Transport`] trait:
+//!   in-process [`transport::Loopback`] (DES, tests) and the TCP
+//!   [`net::Connection`] speak the same API, so the worker loop exists
+//!   once.
+//! * [`net`] — non-blocking TCP reactor front-end (`serve`) and a real
+//!   worker client (`Worker`) implementing fetch → compute → upload
+//!   over any [`transport::Transport`].
 //! * [`exchange`] — the island-model migration broker: banks validated
 //!   emigrants per (deme, epoch) behind the assimilator and releases
 //!   dependency-gated next-epoch WUs (with straggler timeouts), turning
 //!   the server from a result sink into part of the GP population
 //!   structure.
 
+pub mod daemon;
 pub mod db;
 pub mod events;
 pub mod exchange;
@@ -40,9 +52,12 @@ pub mod net;
 pub mod protocol;
 pub mod server;
 pub mod signature;
+pub mod transport;
 pub mod wal;
 pub mod workunit;
 
+pub use daemon::{DaemonConfig, DaemonStats, Daemons, Service};
 pub use exchange::{ExchangeConfig, ExchangeStats, MigrationExchange};
+pub use transport::Transport;
 pub use server::{ServerConfig, ServerCore};
 pub use workunit::{Outcome, ResultRecord, ServerState, ValidateState, WorkUnit, WuError};

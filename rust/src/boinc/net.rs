@@ -1,13 +1,28 @@
-//! TCP front-end for the middleware: a threaded scheduler-RPC server
-//! (the "project server") and a real worker client implementing the
-//! BOINC core-client loop: register → fetch → verify signature →
-//! compute (with heartbeats) → report.
+//! TCP front-end for the middleware: a single-threaded non-blocking
+//! reactor (epoll-style readiness loop over `std::net`) serving the
+//! multi-daemon [`Service`](super::daemon::Service), plus the real
+//! worker client implementing the BOINC core-client loop: register →
+//! fetch → verify signature → compute (with heartbeats) → report.
 //!
-//! tokio is unavailable offline; `std::net` + a thread per connection
-//! is plenty for the scales involved (tens of workers on localhost) and
-//! keeps the hot path allocation-free.
+//! tokio is unavailable offline; the reactor is plain `std`:
+//! non-blocking listener + per-connection read/write buffers, newline
+//! framing, `WouldBlock` as the readiness signal and a ~1 ms idle
+//! sleep. That replaces the old thread-per-connection design — one
+//! thread now multiplexes every worker, which is both closer to the
+//! production BOINC server shape and immune to thread-count blowup at
+//! high fleet sizes.
+//!
+//! Frames are `vgp.rpc.v1` envelopes (see [`super::protocol`]); bare
+//! pre-v1 frames still decode through the shim and are answered with
+//! bare replies (symmetry for old clients), counted in
+//! `DaemonStats::legacy_frames`.
+//!
+//! This module is the only place in the server stack that reads a wall
+//! clock: it stamps `now` (seconds since serve start) onto each frame
+//! and drives the periodic transitioner tick. Everything below it is
+//! time-explicit.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
@@ -17,16 +32,18 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
-use super::protocol::{Reply, Request};
+use super::daemon::Service;
+use super::protocol::{ErrorCode, Reply, Request};
 use super::server::ServerCore;
+use super::transport::{Loopback, Transport};
 
 /// Shared handle to a running server.
 pub struct ServerHandle {
-    pub core: Arc<Mutex<ServerCore>>,
+    pub service: Arc<Mutex<Service>>,
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
     epoch: Instant,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
+    reactor: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -35,133 +52,178 @@ impl ServerHandle {
         self.epoch.elapsed().as_secs_f64()
     }
 
-    /// Request shutdown and join the acceptor.
+    /// A wall-clock [`Loopback`] transport onto this server's service —
+    /// same clock epoch as the socket path, minus the socket.
+    pub fn loopback(&self) -> Loopback {
+        let epoch = self.epoch;
+        Loopback::new(Arc::clone(&self.service), Box::new(move || epoch.elapsed().as_secs_f64()))
+    }
+
+    /// Request shutdown and join the reactor.
     pub fn shutdown(mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // unblock accept() with a dummy connection
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept_thread.take() {
+        if let Some(t) = self.reactor.take() {
             let _ = t.join();
         }
     }
 }
 
-/// Start serving on an ephemeral localhost port.
+/// Serve a bare core (no exchange) on an ephemeral localhost port.
 pub fn serve(core: ServerCore) -> Result<ServerHandle> {
-    let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+    serve_service(Service::new(core, None), 0)
+}
+
+/// Start the reactor for a full [`Service`]. `port` 0 picks an
+/// ephemeral port; the bound address is on the returned handle.
+pub fn serve_service(service: Service, port: u16) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(("127.0.0.1", port)).context("bind")?;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
     let addr = listener.local_addr()?;
-    let core = Arc::new(Mutex::new(core));
+    let cadence = service.daemons.cfg.tick_interval;
+    let service = Arc::new(Mutex::new(service));
     let stop = Arc::new(AtomicBool::new(false));
     let epoch = Instant::now();
 
-    let core2 = core.clone();
-    let stop2 = stop.clone();
-    let accept_thread = std::thread::spawn(move || {
-        for stream in listener.incoming() {
-            if stop2.load(Ordering::SeqCst) {
-                break;
-            }
-            let Ok(stream) = stream else { continue };
-            let core = core2.clone();
-            let stop = stop2.clone();
-            std::thread::spawn(move || {
-                let _ = handle_conn(stream, core, stop, epoch);
-            });
-        }
+    let svc2 = Arc::clone(&service);
+    let stop2 = Arc::clone(&stop);
+    let reactor = std::thread::spawn(move || {
+        reactor_loop(listener, svc2, stop2, epoch, cadence);
     });
 
-    Ok(ServerHandle { core, addr, stop, epoch, accept_thread: Some(accept_thread) })
+    Ok(ServerHandle { service, addr, stop, epoch, reactor: Some(reactor) })
 }
 
-fn handle_conn(
+/// One connection's reactor state: the socket plus buffered bytes in
+/// each direction (partial frames and partial writes survive across
+/// readiness iterations).
+struct Conn {
     stream: TcpStream,
-    core: Arc<Mutex<ServerCore>>,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    closed: bool,
+}
+
+fn reactor_loop(
+    listener: TcpListener,
+    service: Arc<Mutex<Service>>,
     stop: Arc<AtomicBool>,
     epoch: Instant,
-) -> Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
-    loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+    cadence: f64,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut buf = [0u8; 4096];
+    let mut last_tick = 0.0f64;
+    while !stop.load(Ordering::SeqCst) {
+        let mut progress = false;
+        // accept every pending connection without blocking
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if stream.set_nonblocking(true).is_ok() {
+                        conns.push(Conn {
+                            stream,
+                            rbuf: Vec::new(),
+                            wbuf: Vec::new(),
+                            closed: false,
+                        });
+                        progress = true;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
         }
         let now = epoch.elapsed().as_secs_f64();
-        let reply = match Json::parse(line.trim())
-            .and_then(|j| Request::from_json(&j))
-        {
-            Ok(req) => {
-                if matches!(req, Request::Shutdown) {
-                    stop.store(true, Ordering::SeqCst);
-                    Reply::Ok
-                } else {
-                    dispatch(&core, req, now)
+        // drain readable sockets, then answer every complete frame
+        for c in conns.iter_mut() {
+            loop {
+                match c.stream.read(&mut buf) {
+                    Ok(0) => {
+                        c.closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.rbuf.extend_from_slice(&buf[..n]);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(_) => {
+                        c.closed = true;
+                        break;
+                    }
                 }
             }
-            Err(e) => Reply::Error { message: format!("{e:#}") },
-        };
-        writeln!(writer, "{}", reply.to_json())?;
-    }
-}
-
-fn dispatch(core: &Arc<Mutex<ServerCore>>, req: Request, now: f64) -> Reply {
-    let mut s = core.lock().unwrap();
-    match req {
-        Request::Register { name, city, flops, ncpus } => {
-            let id = s.register_host(super::db::HostRow {
-                id: 0,
-                name,
-                city,
-                flops,
-                ncpus,
-                on_frac: 1.0,
-                active_frac: 1.0,
-                registered_at: now,
-                last_heartbeat: now,
-                error_results: 0,
-                valid_results: 0,
-                consecutive_errors: 0,
-                last_error_at: 0.0,
-                in_flight: 0,
-                credit: 0.0,
-            });
-            Reply::Registered { host_id: id }
-        }
-        Request::RequestWork { host_id } => {
-            s.tick(now); // run the transitioner opportunistically
-            match s.request_work(host_id, now) {
-                Some((rid, wu, sig)) => Reply::Work {
-                    result_id: rid,
-                    wu_id: wu.id,
-                    wu_name: wu.name,
-                    spec: wu.spec,
-                    flops_est: wu.flops_est,
-                    signature: sig,
-                },
-                None => Reply::NoWork { campaign_done: s.is_complete() },
+            while let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') {
+                let frame: Vec<u8> = c.rbuf.drain(..=pos).collect();
+                let line = String::from_utf8_lossy(&frame);
+                let out = respond(line.trim(), &service, &stop, now);
+                c.wbuf.extend_from_slice(out.as_bytes());
+                c.wbuf.push(b'\n');
+                progress = true;
             }
         }
-        Request::Heartbeat { host_id } => {
-            s.heartbeat(host_id, now);
-            Reply::Ok
+        // flush write buffers, keeping whatever the socket won't take
+        for c in conns.iter_mut() {
+            while !c.wbuf.is_empty() {
+                match c.stream.write(&c.wbuf) {
+                    Ok(0) => {
+                        c.closed = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.wbuf.drain(..n);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(_) => {
+                        c.closed = true;
+                        break;
+                    }
+                }
+            }
         }
-        Request::ReportSuccess { result_id, cpu_time, payload } => {
-            s.report_success(result_id, now, cpu_time, payload);
-            Reply::Ok
+        conns.retain(|c| !c.closed);
+        // periodic transitioner + feeder/validator/assimilator upkeep
+        if now - last_tick >= cadence {
+            last_tick = now;
+            service.lock().expect("service lock poisoned").tick(now);
         }
-        Request::ReportError { result_id } => {
-            s.report_error(result_id, now);
-            Reply::Ok
+        if !progress {
+            std::thread::sleep(std::time::Duration::from_millis(1));
         }
-        Request::Stats => Reply::Stats {
-            snapshot: crate::metrics::snapshot::FleetSnapshot::from_parts(&s, None, now).to_json(),
-        },
-        Request::Shutdown => Reply::Ok,
     }
 }
 
-/// Blocking RPC connection to the server.
+/// Decode one frame, run it through the service, encode the reply in
+/// the same dialect the client spoke: `vgp.rpc.v1` envelopes get
+/// envelopes back, legacy bare frames get bare replies.
+fn respond(line: &str, service: &Arc<Mutex<Service>>, stop: &AtomicBool, now: f64) -> String {
+    let (reply, bare) = match Json::parse(line) {
+        Ok(j) => {
+            let bare_frame = j.get("v").is_none();
+            match Request::from_wire(&j) {
+                Ok((req, legacy)) => {
+                    let mut svc = service.lock().expect("service lock poisoned");
+                    if legacy {
+                        svc.daemons.stats.legacy_frames += 1;
+                    }
+                    if matches!(req, Request::Shutdown) {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                    (svc.handle(&req, now), legacy)
+                }
+                Err((code, detail)) => (Reply::Error { code, detail }, bare_frame),
+            }
+        }
+        Err(e) => {
+            (Reply::Error { code: ErrorCode::Malformed, detail: format!("{e:#}") }, false)
+        }
+    };
+    if bare { reply.to_json().to_string() } else { reply.to_wire().to_string() }
+}
+
+/// Blocking RPC connection to the server: the socket-backed
+/// [`Transport`]. Speaks `vgp.rpc.v1` envelopes, newline-framed.
 pub struct Connection {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -174,10 +236,17 @@ impl Connection {
     }
 
     pub fn call(&mut self, req: &Request) -> Result<Reply> {
-        writeln!(self.writer, "{}", req.to_json())?;
+        writeln!(self.writer, "{}", req.to_wire())?;
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
-        Reply::from_json(&Json::parse(line.trim())?)
+        let (reply, _) = Reply::from_wire(&Json::parse(line.trim())?)?;
+        Ok(reply)
+    }
+}
+
+impl Transport for Connection {
+    fn call(&mut self, req: &Request) -> Result<Reply> {
+        Connection::call(self, req)
     }
 }
 
@@ -185,7 +254,9 @@ impl Connection {
 pub type WorkFn = dyn Fn(&Json) -> Result<Json>;
 
 /// The BOINC core-client analog: fetch → verify → compute → report,
-/// until the campaign is complete.
+/// until the campaign is complete. Written once against [`Transport`]:
+/// the same loop runs over a TCP [`Connection`] or an in-process
+/// [`Loopback`].
 pub struct Worker {
     pub name: String,
     pub city: String,
@@ -198,27 +269,28 @@ pub struct Worker {
 impl Worker {
     pub fn run(
         &self,
-        addr: std::net::SocketAddr,
+        transport: &mut dyn Transport,
         key: &super::signature::SigningKey,
         work_fn: &WorkFn,
     ) -> Result<WorkerReport> {
-        let mut conn = Connection::connect(addr)?;
-        let host_id = match conn.call(&Request::Register {
+        let host_id = match transport.call(&Request::Register {
             name: self.name.clone(),
             city: self.city.clone(),
             flops: self.flops,
             ncpus: 1,
+            on_frac: 1.0,
+            active_frac: 1.0,
         })? {
             Reply::Registered { host_id } => host_id,
             other => anyhow::bail!("unexpected register reply {other:?}"),
         };
         let mut report = WorkerReport::default();
         loop {
-            match conn.call(&Request::RequestWork { host_id })? {
+            match transport.call(&Request::RequestWork { host_id })? {
                 Reply::Work { result_id, spec, signature, .. } => {
                     // paper §2: only signed applications run
                     if !key.verify(spec.to_string().as_bytes(), &signature) {
-                        conn.call(&Request::ReportError { result_id })?;
+                        transport.call(&Request::ReportError { result_id })?;
                         report.rejected_signatures += 1;
                         continue;
                     }
@@ -226,7 +298,7 @@ impl Worker {
                     match work_fn(&spec) {
                         Ok(payload) => {
                             let cpu = t0.elapsed().as_secs_f64();
-                            conn.call(&Request::ReportSuccess {
+                            transport.call(&Request::ReportSuccess {
                                 result_id,
                                 cpu_time: cpu,
                                 payload,
@@ -235,17 +307,19 @@ impl Worker {
                             report.cpu_time += cpu;
                         }
                         Err(_) => {
-                            conn.call(&Request::ReportError { result_id })?;
+                            transport.call(&Request::ReportError { result_id })?;
                             report.errors += 1;
                         }
                     }
                 }
                 Reply::NoWork { campaign_done: true } => return Ok(report),
                 Reply::NoWork { campaign_done: false } => {
-                    conn.call(&Request::Heartbeat { host_id })?;
+                    transport.call(&Request::Heartbeat { host_id })?;
                     std::thread::sleep(self.poll_interval);
                 }
-                Reply::Error { message } => anyhow::bail!("server error: {message}"),
+                Reply::Error { code, detail } => {
+                    anyhow::bail!("server error [{}]: {detail}", code.as_str())
+                }
                 other => anyhow::bail!("unexpected reply {other:?}"),
             }
         }
@@ -286,16 +360,15 @@ mod tests {
             flops: 1e9,
             poll_interval: std::time::Duration::from_millis(5),
         };
+        let mut conn = Connection::connect(handle.addr).unwrap();
         let report = worker
-            .run(handle.addr, &key, &|spec| {
-                Ok(Json::obj().set("echo", spec.u64_of("x")?))
-            })
+            .run(&mut conn, &key, &|spec| Ok(Json::obj().set("echo", spec.u64_of("x")?)))
             .unwrap();
         assert_eq!(report.completed, 4);
         {
-            let core = handle.core.lock().unwrap();
-            assert!(core.is_complete());
-            assert_eq!(core.assimilated().len(), 4);
+            let svc = handle.service.lock().unwrap();
+            assert!(svc.core.is_complete());
+            assert_eq!(svc.core.assimilated().len(), 4);
         }
         handle.shutdown();
     }
@@ -314,9 +387,34 @@ mod tests {
         };
         // worker verifies against the wrong key -> rejects everything;
         // WU errors out after max_error_results and campaign completes.
-        let report = worker.run(handle.addr, &wrong_key, &|_| Ok(Json::Null)).unwrap();
+        let mut conn = Connection::connect(handle.addr).unwrap();
+        let report = worker.run(&mut conn, &wrong_key, &|_| Ok(Json::Null)).unwrap();
         assert_eq!(report.completed, 0);
         assert!(report.rejected_signatures > 0);
+        handle.shutdown();
+    }
+
+    #[test]
+    fn legacy_bare_frames_get_bare_replies() {
+        let core = ServerCore::new(ServerConfig::default());
+        let handle = serve(core).unwrap();
+        let stream = TcpStream::connect(handle.addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        // a pre-v1 client: bare body, no envelope
+        writeln!(writer, "{}", Json::obj().set("op", "stats")).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("v").is_none(), "bare request must get a bare reply: {line}");
+        assert_eq!(j.str_of("kind").unwrap(), "stats");
+        assert_eq!(handle.service.lock().unwrap().daemons.stats.legacy_frames, 1);
+        // a v1 client on the same reactor gets envelopes
+        writeln!(writer, "{}", Request::Stats.to_wire()).unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.str_of("v").unwrap(), crate::boinc::protocol::RPC_SCHEMA);
         handle.shutdown();
     }
 }

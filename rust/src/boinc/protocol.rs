@@ -1,13 +1,80 @@
-//! Scheduler-RPC wire protocol: newline-delimited canonical JSON over
-//! TCP. Mirrors the BOINC scheduler request/reply cycle (§2 of the
+//! Scheduler-RPC wire protocol: newline-delimited canonical JSON
+//! frames. Mirrors the BOINC scheduler request/reply cycle (§2 of the
 //! paper): register, work fetch, heartbeat, result report.
+//!
+//! # The `vgp.rpc.v1` envelope
+//!
+//! Every frame on the wire is a versioned envelope around a body:
+//!
+//! ```text
+//! {"body":{"host_id":3,"op":"request_work"},"v":"vgp.rpc.v1"}
+//! {"body":{"kind":"work","result_id":9,...},"v":"vgp.rpc.v1"}
+//! ```
+//!
+//! * `v` — the protocol schema id ([`RPC_SCHEMA`]). A frame carrying a
+//!   different value is refused with a typed
+//!   [`Reply::Error`]`{ code: `[`ErrorCode::Version`]` }` so old and
+//!   new fleets never mis-parse each other silently.
+//! * `body` — the request (`"op"` tag) or reply (`"kind"` tag) payload,
+//!   unchanged from the pre-envelope wire shape.
+//!
+//! Failures are typed: [`Reply::Error`] carries a machine-readable
+//! [`ErrorCode`] plus a human `detail` string, replacing the old
+//! free-text `message` variant.
+//!
+//! # Legacy decode shim
+//!
+//! Pre-v1 peers sent the bare body with no envelope. [`Request::from_wire`]
+//! / [`Reply::from_wire`] still accept such frames (an object with an
+//! `"op"`/`"kind"` tag and no `"v"` key) and flag them as legacy so the
+//! server can answer in kind — a legacy client gets bare replies, a
+//! v1 client gets envelopes. Old `{"kind":"error","message":…}` frames
+//! map onto [`ErrorCode::Internal`]. The shim is decode-only: every
+//! frame this module *encodes* wears the envelope.
 
 use crate::util::json::Json;
 
-/// Client -> server requests.
+/// The RPC envelope schema id carried in every frame's `"v"` field.
+pub const RPC_SCHEMA: &str = "vgp.rpc.v1";
+
+/// Machine-readable failure class for [`Reply::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The frame did not parse as a known request shape.
+    Malformed,
+    /// The frame's `"v"` field named a schema this server doesn't speak.
+    Version,
+    /// The request referenced a host id the server has never registered.
+    UnknownHost,
+    /// The server failed internally while handling a well-formed frame.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Version => "version",
+            ErrorCode::UnknownHost => "unknown_host",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<ErrorCode> {
+        Ok(match s {
+            "malformed" => ErrorCode::Malformed,
+            "version" => ErrorCode::Version,
+            "unknown_host" => ErrorCode::UnknownHost,
+            "internal" => ErrorCode::Internal,
+            other => anyhow::bail!("unknown error code '{other}'"),
+        })
+    }
+}
+
+/// Client -> server requests (the envelope body, `"op"`-tagged).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    Register { name: String, city: String, flops: f64, ncpus: u32 },
+    Register { name: String, city: String, flops: f64, ncpus: u32, on_frac: f64, active_frac: f64 },
     RequestWork { host_id: u64 },
     Heartbeat { host_id: u64 },
     ReportSuccess { result_id: u64, cpu_time: f64, payload: Json },
@@ -17,14 +84,17 @@ pub enum Request {
 }
 
 impl Request {
+    /// The envelope body (`{"op": …}`) — the pre-v1 bare wire shape.
     pub fn to_json(&self) -> Json {
         match self {
-            Request::Register { name, city, flops, ncpus } => Json::obj()
+            Request::Register { name, city, flops, ncpus, on_frac, active_frac } => Json::obj()
                 .set("op", "register")
                 .set("name", name.as_str())
                 .set("city", city.as_str())
                 .set("flops", *flops)
-                .set("ncpus", *ncpus as u64),
+                .set("ncpus", *ncpus as u64)
+                .set("on_frac", *on_frac)
+                .set("active_frac", *active_frac),
             Request::RequestWork { host_id } => {
                 Json::obj().set("op", "request_work").set("host_id", *host_id)
             }
@@ -51,6 +121,10 @@ impl Request {
                 city: j.str_of("city")?.to_string(),
                 flops: j.f64_of("flops")?,
                 ncpus: j.u64_of("ncpus")? as u32,
+                // legacy frames predate availability fields: a host
+                // that doesn't report them is assumed always-on
+                on_frac: j.get("on_frac").and_then(Json::as_f64).unwrap_or(1.0),
+                active_frac: j.get("active_frac").and_then(Json::as_f64).unwrap_or(1.0),
             },
             "request_work" => Request::RequestWork { host_id: j.u64_of("host_id")? },
             "heartbeat" => Request::Heartbeat { host_id: j.u64_of("host_id")? },
@@ -65,9 +139,45 @@ impl Request {
             other => anyhow::bail!("unknown op '{other}'"),
         })
     }
+
+    /// Wrap in the `vgp.rpc.v1` envelope — the only shape this module
+    /// ever puts on the wire.
+    pub fn to_wire(&self) -> Json {
+        Json::obj().set("v", RPC_SCHEMA).set("body", self.to_json())
+    }
+
+    /// Decode a wire frame, accepting both the v1 envelope and the
+    /// legacy bare body. `Ok((req, legacy))` flags which shape arrived;
+    /// `Err((code, detail))` is ready to become a typed
+    /// [`Reply::Error`].
+    pub fn from_wire(j: &Json) -> Result<(Request, bool), (ErrorCode, String)> {
+        match j.get("v") {
+            Some(v) => {
+                let Some(v) = v.as_str() else {
+                    return Err((ErrorCode::Malformed, "envelope 'v' is not a string".into()));
+                };
+                if v != RPC_SCHEMA {
+                    return Err((
+                        ErrorCode::Version,
+                        format!("unsupported rpc schema '{v}' (this server speaks {RPC_SCHEMA})"),
+                    ));
+                }
+                let Some(body) = j.get("body") else {
+                    return Err((ErrorCode::Malformed, "envelope has no 'body'".into()));
+                };
+                Request::from_json(body)
+                    .map(|r| (r, false))
+                    .map_err(|e| (ErrorCode::Malformed, e.to_string()))
+            }
+            // legacy shim: a bare pre-envelope body
+            None => Request::from_json(j)
+                .map(|r| (r, true))
+                .map_err(|e| (ErrorCode::Malformed, e.to_string())),
+        }
+    }
 }
 
-/// Server -> client replies.
+/// Server -> client replies (the envelope body, `"kind"`-tagged).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Reply {
     Registered { host_id: u64 },
@@ -75,13 +185,14 @@ pub enum Reply {
     NoWork { campaign_done: bool },
     Ok,
     /// A structured fleet snapshot (`metrics::snapshot`, schema
-    /// `vgp.fleet.v1`) — replaces the old free-text `dump` string so
-    /// clients read typed fields instead of string-parsing a dump.
+    /// `vgp.fleet.v1`) — typed fields, never a free-text dump.
     Stats { snapshot: Json },
-    Error { message: String },
+    /// Typed failure: a machine-readable [`ErrorCode`] plus detail.
+    Error { code: ErrorCode, detail: String },
 }
 
 impl Reply {
+    /// The envelope body (`{"kind": …}`) — the pre-v1 bare wire shape.
     pub fn to_json(&self) -> Json {
         match self {
             Reply::Registered { host_id } => {
@@ -99,10 +210,13 @@ impl Reply {
                 Json::obj().set("kind", "no_work").set("campaign_done", *campaign_done)
             }
             Reply::Ok => Json::obj().set("kind", "ok"),
-            Reply::Stats { snapshot } => Json::obj().set("kind", "stats").set("snapshot", snapshot.clone()),
-            Reply::Error { message } => {
-                Json::obj().set("kind", "error").set("message", message.as_str())
+            Reply::Stats { snapshot } => {
+                Json::obj().set("kind", "stats").set("snapshot", snapshot.clone())
             }
+            Reply::Error { code, detail } => Json::obj()
+                .set("kind", "error")
+                .set("code", code.as_str())
+                .set("detail", detail.as_str()),
         }
     }
 
@@ -122,9 +236,42 @@ impl Reply {
             },
             "ok" => Reply::Ok,
             "stats" => Reply::Stats { snapshot: j.get("snapshot").cloned().unwrap_or(Json::Null) },
-            "error" => Reply::Error { message: j.str_of("message")?.to_string() },
+            "error" => match j.get("code").and_then(Json::as_str) {
+                Some(code) => Reply::Error {
+                    code: ErrorCode::parse(code)?,
+                    detail: j.str_of("detail")?.to_string(),
+                },
+                // legacy shim: pre-v1 error frames carried only a
+                // free-text message; class them as internal failures
+                None => Reply::Error {
+                    code: ErrorCode::Internal,
+                    detail: j.str_of("message")?.to_string(),
+                },
+            },
             other => anyhow::bail!("unknown reply kind '{other}'"),
         })
+    }
+
+    /// Wrap in the `vgp.rpc.v1` envelope.
+    pub fn to_wire(&self) -> Json {
+        Json::obj().set("v", RPC_SCHEMA).set("body", self.to_json())
+    }
+
+    /// Decode a wire frame, accepting both the v1 envelope and the
+    /// legacy bare body; the flag marks a legacy frame.
+    pub fn from_wire(j: &Json) -> anyhow::Result<(Reply, bool)> {
+        match j.get("v") {
+            Some(v) => {
+                let v = v.as_str().ok_or_else(|| anyhow::anyhow!("envelope 'v' is not a string"))?;
+                if v != RPC_SCHEMA {
+                    anyhow::bail!("unsupported rpc schema '{v}' (this client speaks {RPC_SCHEMA})");
+                }
+                let body =
+                    j.get("body").ok_or_else(|| anyhow::anyhow!("envelope has no 'body'"))?;
+                Ok((Reply::from_json(body)?, false))
+            }
+            None => Ok((Reply::from_json(j)?, true)),
+        }
     }
 }
 
@@ -132,10 +279,20 @@ impl Reply {
 mod tests {
     use super::*;
 
-    #[test]
-    fn request_roundtrip() {
-        let reqs = vec![
-            Request::Register { name: "pc1".into(), city: "Mérida".into(), flops: 1.2e9, ncpus: 2 },
+    fn register() -> Request {
+        Request::Register {
+            name: "pc1".into(),
+            city: "Mérida".into(),
+            flops: 1.2e9,
+            ncpus: 2,
+            on_frac: 0.85,
+            active_frac: 0.7,
+        }
+    }
+
+    fn all_requests() -> Vec<Request> {
+        vec![
+            register(),
             Request::RequestWork { host_id: 3 },
             Request::Heartbeat { host_id: 3 },
             Request::ReportSuccess {
@@ -146,17 +303,11 @@ mod tests {
             Request::ReportError { result_id: 9 },
             Request::Stats,
             Request::Shutdown,
-        ];
-        for r in reqs {
-            let s = r.to_json().to_string();
-            let back = Request::from_json(&Json::parse(&s).unwrap()).unwrap();
-            assert_eq!(back, r);
-        }
+        ]
     }
 
-    #[test]
-    fn reply_roundtrip() {
-        let replies = vec![
+    fn all_replies() -> Vec<Reply> {
+        vec![
             Reply::Registered { host_id: 5 },
             Reply::Work {
                 result_id: 1,
@@ -171,17 +322,100 @@ mod tests {
             Reply::Stats {
                 snapshot: Json::obj().set("schema", "vgp.fleet.v1").set("virtual_time", 12.0),
             },
-            Reply::Error { message: "bad host".into() },
-        ];
-        for r in replies {
-            let s = r.to_json().to_string();
-            let back = Reply::from_json(&Json::parse(&s).unwrap()).unwrap();
+            Reply::Error { code: ErrorCode::UnknownHost, detail: "host 404".into() },
+        ]
+    }
+
+    #[test]
+    fn request_roundtrip_through_envelope() {
+        for r in all_requests() {
+            let wire = r.to_wire().to_string();
+            let j = Json::parse(&wire).unwrap();
+            assert_eq!(j.str_of("v").unwrap(), RPC_SCHEMA, "every encoded frame wears the envelope");
+            let (back, legacy) = Request::from_wire(&j).unwrap();
             assert_eq!(back, r);
+            assert!(!legacy);
         }
     }
 
     #[test]
-    fn rejects_unknown_op() {
-        assert!(Request::from_json(&Json::obj().set("op", "exploit")).is_err());
+    fn reply_roundtrip_through_envelope() {
+        for r in all_replies() {
+            let wire = r.to_wire().to_string();
+            let (back, legacy) = Reply::from_wire(&Json::parse(&wire).unwrap()).unwrap();
+            assert_eq!(back, r);
+            assert!(!legacy);
+        }
+    }
+
+    /// The decode shim: pre-envelope bare frames still parse, are
+    /// flagged as legacy, and mean the same thing their v1 envelope
+    /// does — the compat contract for old workers against new servers.
+    #[test]
+    fn legacy_bare_frames_decode_and_match_v1_semantics() {
+        for r in all_requests() {
+            let bare = r.to_json().to_string();
+            let (back, legacy) = Request::from_wire(&Json::parse(&bare).unwrap()).unwrap();
+            assert_eq!(back, r);
+            assert!(legacy, "bare frame must be flagged legacy: {bare}");
+        }
+        for r in all_replies() {
+            let bare = r.to_json().to_string();
+            let (back, legacy) = Reply::from_wire(&Json::parse(&bare).unwrap()).unwrap();
+            assert_eq!(back, r);
+            assert!(legacy);
+        }
+    }
+
+    /// Legacy registers predate the availability fields; they default
+    /// to an always-on host. Legacy error replies predate codes; they
+    /// class as internal.
+    #[test]
+    fn legacy_field_defaults() {
+        let j = Json::parse(
+            r#"{"city":"Cáceres","flops":1e9,"name":"old","ncpus":1,"op":"register"}"#,
+        )
+        .unwrap();
+        let (req, legacy) = Request::from_wire(&j).unwrap();
+        assert!(legacy);
+        match req {
+            Request::Register { on_frac, active_frac, .. } => {
+                assert_eq!(on_frac, 1.0);
+                assert_eq!(active_frac, 1.0);
+            }
+            other => panic!("expected register, got {other:?}"),
+        }
+        let j = Json::parse(r#"{"kind":"error","message":"bad host"}"#).unwrap();
+        let (rep, legacy) = Reply::from_wire(&j).unwrap();
+        assert!(legacy);
+        assert_eq!(rep, Reply::Error { code: ErrorCode::Internal, detail: "bad host".into() });
+    }
+
+    #[test]
+    fn wrong_schema_is_a_version_error() {
+        let j = Json::obj().set("v", "vgp.rpc.v9").set("body", Request::Stats.to_json());
+        let (code, detail) = Request::from_wire(&j).unwrap_err();
+        assert_eq!(code, ErrorCode::Version);
+        assert!(detail.contains("vgp.rpc.v9"), "detail names the bad schema: {detail}");
+        assert!(Reply::from_wire(&j.set("body", Reply::Ok.to_json())).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_op_as_malformed() {
+        let (code, _) =
+            Request::from_wire(&Json::obj().set("op", "exploit")).unwrap_err();
+        assert_eq!(code, ErrorCode::Malformed);
+        let enveloped = Json::obj().set("v", RPC_SCHEMA).set("body", Json::obj().set("op", "exploit"));
+        let (code, _) = Request::from_wire(&enveloped).unwrap_err();
+        assert_eq!(code, ErrorCode::Malformed);
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for c in [ErrorCode::Malformed, ErrorCode::Version, ErrorCode::UnknownHost, ErrorCode::Internal]
+        {
+            assert_eq!(ErrorCode::parse(c.as_str()).unwrap(), c);
+        }
+        assert!(ErrorCode::parse("nope").is_err());
     }
 }

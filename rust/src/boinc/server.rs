@@ -137,6 +137,15 @@ impl ServerCore {
         self.apply_replayed(ev)
     }
 
+    /// The event-level entry point: log, apply, interpret one [`Event`]
+    /// and hand back its effects. The daemon pipeline
+    /// ([`super::daemon`]) drives the core through this — the effects
+    /// are its typed work-queue feed — while the method API below stays
+    /// as the thin per-RPC sugar over the same path.
+    pub fn handle_event(&mut self, ev: Event) -> Vec<Effect> {
+        self.dispatch(ev)
+    }
+
     /// The effect interpreter: metrics and trace effects hit the
     /// registries; data markers are for the calling shell and no-op
     /// here. This is the ONLY place observability side effects happen.
@@ -267,6 +276,7 @@ impl ServerCore {
 mod tests {
     use super::*;
     use crate::boinc::workunit::{Outcome, ServerState};
+    use crate::metrics::Counter;
 
     fn host(flops: f64) -> HostRow {
         HostRow {
@@ -412,7 +422,7 @@ mod tests {
         assert_eq!(s.db.host(h).unwrap().consecutive_errors, 2);
         // quarantined even though work is available
         assert!(s.request_work(h, 10.0).is_none(), "flaky host must be starved");
-        assert!(s.metrics.counter("host.unreliable_refusal") >= 1);
+        assert!(s.metrics.get(Counter::HostUnreliableRefusal) >= 1);
         // probation over (last error at 1.5): ONE probe task goes out —
         // a second concurrent fetch is refused even though the host has
         // a free core and work exists
@@ -532,7 +542,7 @@ mod tests {
         assert!(s.is_complete());
         // the stale replica must not dispatch as dead work
         assert!(s.request_work(h2, 2.0).is_none());
-        assert_eq!(s.metrics.counter("result.didnt_need"), 1);
+        assert_eq!(s.metrics.get(Counter::ResultDidntNeed), 1);
         assert!(s.db.results_of_wu(id).iter().all(|r| r.server_state != ServerState::Unsent));
     }
 
@@ -578,12 +588,12 @@ mod tests {
         s.submit_wu(wu);
         let (r1, _, _) = s.request_work(h, 0.0).unwrap();
         s.tick(1_000.0); // expires r1
-        let before = s.metrics.counter("result.success");
+        let before = s.metrics.get(Counter::ResultSuccess);
         s.report_success(r1, 2_000.0, 10.0, payload(1));
-        assert_eq!(s.metrics.counter("result.success"), before, "late report ignored");
+        assert_eq!(s.metrics.get(Counter::ResultSuccess), before, "late report ignored");
         // PR 8: the drop is no longer *silent* — wasted volunteer work
         // is counted and traced for the dashboard
-        assert_eq!(s.metrics.counter("result.late_success"), 1);
+        assert_eq!(s.metrics.get(Counter::ResultLateSuccess), 1);
         assert!(
             s.trace.records().iter().any(|r| r.event.kind() == "late_report"),
             "late success must leave a trace event"
@@ -598,7 +608,7 @@ mod tests {
         // ghost host id on a synthetic 1e9-FLOPS profile, leaking an
         // in_flight slot nobody could ever release
         assert!(s.request_work(77, 0.0).is_none(), "unregistered host must get nothing");
-        assert_eq!(s.metrics.counter("host.unknown_refusal"), 1);
+        assert_eq!(s.metrics.get(Counter::UnknownHostRefusal), 1);
         assert_eq!(s.db.unsent_count(), 1, "the replica stays queued for a real host");
         let h = s.register_host(host(1e9));
         assert!(s.request_work(h, 1.0).is_some(), "a registered host still gets it");
@@ -629,7 +639,7 @@ mod tests {
                 Outcome::Success,
                 "report at now == deadline must win (report_first = {report_first})"
             );
-            assert_eq!(s.metrics.counter("result.no_reply"), 0, "no expiry on the boundary");
+            assert_eq!(s.metrics.get(Counter::ResultNoReply), 0, "no expiry on the boundary");
             assert!(s.is_complete());
             // strictly past the deadline the tick does expire
             let mut s2 = ServerCore::new(ServerConfig::default());

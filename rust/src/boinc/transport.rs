@@ -1,0 +1,117 @@
+//! The unified client-side `Transport` API: one trait, two transports.
+//!
+//! Every scheduler-RPC client in the repo — the real TCP worker, the
+//! DES's loopback drivers, the differential test harnesses — speaks to
+//! the server through [`Transport::call`]: hand over a
+//! [`Request`](super::protocol::Request), get back a
+//! [`Reply`](super::protocol::Reply). Retry, framing and envelope
+//! handling live *behind* the trait, so the `Worker` fetch→compute→
+//! report loop in [`super::net`] is written exactly once and runs
+//! unchanged over:
+//!
+//! * [`Loopback`] — in-process: the request round-trips through the
+//!   `vgp.rpc.v1` envelope codec (encode → parse → decode, same as the
+//!   socket path minus the socket) into a shared
+//!   [`Service`](super::daemon::Service). The clock is injected as a
+//!   closure, so the DES drives it in virtual time and the
+//!   wall-clock convenience constructor in [`super::net`] drives it in
+//!   real time — this module itself never reads a clock.
+//! * [`super::net::Connection`] — newline-framed canonical JSON over a
+//!   real TCP socket to the epoll-style reactor.
+//!
+//! The transport-equivalence differential test
+//! (`rust/tests/transport_equiv.rs`) holds the two to byte-identical
+//! campaign outcomes.
+
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+use super::daemon::Service;
+use super::protocol::{Reply, Request};
+
+/// One scheduler-RPC exchange: send a request, receive the reply.
+/// Errors are transport failures (lost connection, malformed frame);
+/// server-side failures arrive in-band as [`Reply::Error`].
+pub trait Transport {
+    fn call(&mut self, req: &Request) -> anyhow::Result<Reply>;
+}
+
+/// In-process transport: the DES / test loopback. Shares the
+/// [`Service`] behind a mutex exactly like the socket reactor does, and
+/// round-trips every frame through the `vgp.rpc.v1` envelope codec so
+/// the only thing the socket path adds is the socket.
+pub struct Loopback {
+    service: Arc<Mutex<Service>>,
+    clock: Box<dyn Fn() -> f64 + Send>,
+}
+
+impl Loopback {
+    /// `clock` supplies the `now` stamp for each call — virtual time
+    /// under the DES, wall time when constructed by the [`super::net`]
+    /// front-end helpers.
+    pub fn new(service: Arc<Mutex<Service>>, clock: Box<dyn Fn() -> f64 + Send>) -> Loopback {
+        Loopback { service, clock }
+    }
+
+    pub fn service(&self) -> Arc<Mutex<Service>> {
+        Arc::clone(&self.service)
+    }
+}
+
+impl Transport for Loopback {
+    fn call(&mut self, req: &Request) -> anyhow::Result<Reply> {
+        let now = (self.clock)();
+        // full wire round-trip, minus the socket: encode the envelope,
+        // re-parse it, decode — so loopback campaigns prove the codec,
+        // not just the service
+        let frame = req.to_wire().to_string();
+        let (decoded, legacy) = match Request::from_wire(&Json::parse(&frame)?) {
+            Ok(d) => d,
+            Err((code, detail)) => anyhow::bail!("loopback encode broke: {code:?} {detail}"),
+        };
+        debug_assert!(!legacy, "loopback always speaks v1");
+        let reply = {
+            let mut svc = self.service.lock().expect("service lock poisoned");
+            svc.handle(&decoded, now)
+        };
+        let back = reply.to_wire().to_string();
+        let (reply, _) = Reply::from_wire(&Json::parse(&back)?)?;
+        Ok(reply)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::boinc::protocol::ErrorCode;
+    use crate::boinc::server::{ServerConfig, ServerCore};
+    use crate::boinc::workunit::WorkUnit;
+
+    #[test]
+    fn loopback_round_trips_through_the_envelope() {
+        let mut core = ServerCore::new(ServerConfig::default());
+        core.submit_wu(WorkUnit::new(0, "wu", Json::obj(), 1e9));
+        let svc = Arc::new(Mutex::new(Service::new(core, None)));
+        let mut t = Loopback::new(Arc::clone(&svc), Box::new(|| 0.0));
+        let reply = t
+            .call(&Request::Register {
+                name: "pc".into(),
+                city: "Trujillo".into(),
+                flops: 1e9,
+                ncpus: 1,
+                on_frac: 1.0,
+                active_frac: 1.0,
+            })
+            .unwrap();
+        let Reply::Registered { host_id } = reply else { panic!("expected Registered: {reply:?}") };
+        let got = t.call(&Request::RequestWork { host_id }).unwrap();
+        assert!(matches!(got, Reply::Work { .. }), "work dispatches over loopback: {got:?}");
+        // typed errors arrive in-band, not as transport failures
+        let err = t.call(&Request::RequestWork { host_id: 404 }).unwrap();
+        assert!(
+            matches!(err, Reply::Error { code: ErrorCode::UnknownHost, .. }),
+            "ghost host gets a typed refusal: {err:?}"
+        );
+    }
+}

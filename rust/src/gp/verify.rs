@@ -822,7 +822,7 @@ mod tests {
         assert!(err.contains("op-range") && err.contains("tape"), "{err}");
         let m = Metrics::new();
         r.record(&m);
-        assert_eq!(m.counter("verify.rejected"), 1);
-        assert_eq!(m.counter("verify.warnings"), 1);
+        assert_eq!(m.get(Counter::VerifyRejected), 1);
+        assert_eq!(m.get(Counter::VerifyWarnings), 1);
     }
 }

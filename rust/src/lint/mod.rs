@@ -31,6 +31,12 @@
 //!   state transition must flow through `events::apply` so the WAL
 //!   captures it and crash replay reconstructs identical state. Shells
 //!   may read the db freely; they mutate it only by dispatching events.
+//! * **`legacy-metrics`** — no string-keyed metric reads
+//!   (`.counter("…")`) or free-text `.dump()` anywhere: both were
+//!   deleted in favor of the typed `Metrics::get(Counter::…)` /
+//!   `MetricsSnapshot` surface, and this rule keeps them from
+//!   reappearing (string keys silently read 0 on a typo; typed reads
+//!   are compile errors).
 //! * **`forbid-unsafe`** — `lib.rs` must carry
 //!   `#![forbid(unsafe_code)]` and `main.rs` `#![deny(unsafe_code)]`:
 //!   volunteer payloads are untrusted input.
@@ -88,8 +94,13 @@ pub const RULES: &[(&str, &[&str])] = &[
             ".db.mark_in_progress(",
             ".db.retire_in_progress(",
             ".db.take_expired(",
+            ".db.mark_assimilated(",
+            ".db.mark_too_many_errors(",
+            ".db.mark_too_many_total(",
+            ".db.mark_couldnt_send(",
         ],
     ),
+    ("legacy-metrics", &[".counter(\"", ".dump()"]),
 ];
 
 /// Does `rule` apply to the file at `rel` (root-relative, `/`-separated)?
@@ -100,6 +111,8 @@ fn in_scope(rule: &str, rel: &str) -> bool {
                 || rel == "boinc/exchange.rs"
                 || rel == "boinc/server.rs"
                 || rel == "boinc/events.rs"
+                || rel == "boinc/daemon.rs"
+                || rel == "boinc/transport.rs"
         }
         "wall-clock" => {
             rel.starts_with("gp/")
@@ -119,6 +132,8 @@ fn in_scope(rule: &str, rel: &str) -> bool {
         "core-mutation" => {
             rel.starts_with("boinc/") && rel != "boinc/events.rs" && rel != "boinc/db.rs"
         }
+        // the linter's own RULES table spells the banned tokens
+        "legacy-metrics" => !rel.starts_with("lint/"),
         _ => false,
     }
 }
@@ -304,6 +319,34 @@ mod tests {
         assert!(lint_source("metrics/snapshot.rs", src).is_empty());
         let allowed = "core.db.insert_wu(wu); // lint:allow(core-mutation): migration shim\n";
         assert!(lint_source("boinc/net.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn legacy_metrics_surface_stays_dead() {
+        let read = "let n = s.metrics.counter(\"result.valid\");\n";
+        let f = lint_source("boinc/server.rs", read);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "legacy-metrics");
+        assert_eq!(lint_source("metrics/mod.rs", "let s = m.dump();\n").len(), 1);
+        // applies crate-wide, not just to boinc/
+        assert_eq!(lint_source("coordinator/mod.rs", read).len(), 1);
+        // typed reads are the sanctioned surface
+        let typed = "let n = s.metrics.get(Counter::ResultValid);\n";
+        assert!(lint_source("boinc/server.rs", typed).is_empty());
+        // the linter itself (this RULES table) is exempt
+        assert!(lint_source("lint/mod.rs", read).is_empty());
+    }
+
+    #[test]
+    fn daemon_and_transport_are_in_determinism_scope() {
+        let map = "use std::collections::HashMap;\n";
+        assert_eq!(lint_source("boinc/daemon.rs", map)[0].rule, "unordered-map");
+        assert_eq!(lint_source("boinc/transport.rs", map)[0].rule, "unordered-map");
+        let clock = "let t = Instant::now();\n";
+        assert_eq!(lint_source("boinc/daemon.rs", clock)[0].rule, "wall-clock");
+        let mutator = "core.db.mark_assimilated(wu, canon);\n";
+        assert_eq!(lint_source("boinc/daemon.rs", mutator)[0].rule, "core-mutation");
+        assert!(lint_source("boinc/events.rs", mutator).is_empty());
     }
 
     #[test]

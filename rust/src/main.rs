@@ -17,8 +17,13 @@
 //!                                      # heterogeneous demes, epochs
 //!                                      # evaluated through the AOT
 //!                                      # artifact (Method 2)
+//! vgp sim ... --pipeline               # drive the DES through the
+//!                                      # multi-daemon pipeline (same
+//!                                      # bytes; differential-tested)
 //! vgp serve --runs 8 --problem mux6 --threads 4   # TCP server campaign
-//! vgp serve --demes 4 --epochs 3       # island campaign over TCP
+//! vgp serve --demes 4 --epochs 3 --port 9400      # island campaign
+//!                                      # over TCP (fixed port; default
+//!                                      # --port 0 = ephemeral)
 //! vgp worker --addr 127.0.0.1:PORT     # attach a worker (native eval,
 //!                                      # runs both WU kinds)
 //! vgp churn --days 30                  # Fig-2 style churn trace
@@ -59,8 +64,9 @@
 
 #![deny(unsafe_code)]
 
+use vgp::boinc::daemon::Service;
 use vgp::boinc::exchange::MigrationExchange;
-use vgp::boinc::net::{serve, Worker};
+use vgp::boinc::net::{serve_service, Connection, Worker};
 use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::churn::{churn_trace, sample_pool, PoolParams, Scenario, FIG1_CITIES_MUX11, FIG1_CITIES_MUX20};
 use vgp::config::{Args, Config};
@@ -71,7 +77,7 @@ use vgp::gp::eval::Schedule;
 use vgp::gp::islands::Topology;
 use vgp::gp::problems::ProblemKind;
 use vgp::metrics::dashboard::emit;
-use vgp::metrics::snapshot::{validate_snapshot_json, FleetSnapshot};
+use vgp::metrics::snapshot::validate_snapshot_json;
 use vgp::metrics::{ascii_plot, dashboard};
 use vgp::sim::queue::QueueKind;
 use vgp::sim::SimConfig;
@@ -208,6 +214,11 @@ fn schedule_of(args: &Args) -> Schedule {
 /// `--wal FILE` — append every server event to a sha256-chained
 /// write-ahead log ([`vgp::boinc::wal`]); a crashed run replays to its
 /// exact pre-crash state.
+/// `--pipeline` — route every DES server interaction through the
+/// multi-daemon pipeline ([`vgp::boinc::daemon`]) as `vgp.rpc.v1`
+/// requests instead of calling the core directly; trajectories are
+/// bit-identical either way (`sim` + `tests/transport_equiv.rs`
+/// differential proofs), so this is an exercise/verification knob.
 fn sim_config_of(args: &Args) -> SimConfig {
     // --queue heap selects the reference BinaryHeap loop; trajectories
     // are bit-identical either way (sim::queue differential tests), so
@@ -221,6 +232,7 @@ fn sim_config_of(args: &Args) -> SimConfig {
         trace_capacity: args.opt_u64("trace", 0) as usize,
         wal: args.opt("wal").map(str::to_string),
         queue,
+        pipeline: bool_flag(args, "pipeline"),
         ..SimConfig::default()
     }
 }
@@ -456,6 +468,9 @@ fn cmd_serve(args: &Args) -> i32 {
     let problem = ProblemKind::parse(args.opt_str("problem", "mux6")).expect("problem");
     let pop = args.opt_u64("population", 200) as usize;
     let threads = args.opt_u64("threads", 1).max(1) as usize;
+    // --port N: bind 127.0.0.1:N (0 = kernel-assigned ephemeral port,
+    // printed on the "vgp ... server on" line either way)
+    let port = args.opt_u64("port", 0) as u16;
     // --demes N: serve an island campaign — the migration exchange
     // runs in this loop, behind the assimilator, releasing each epoch
     // as its dependencies reach quorum
@@ -483,7 +498,10 @@ fn cmd_serve(args: &Args) -> i32 {
             }
             None => ex.install(&mut core, c.workunits()),
         }
-        let handle = serve(core).expect("serve");
+        // the exchange moves into the Service: the reactor's periodic
+        // tick drives transitioner + daemons + exchange poll, so this
+        // loop only observes
+        let handle = serve_service(Service::new(core, Some(ex)), port).expect("serve");
         emit(&format!(
             "vgp island server on {} ({} demes x {} epochs of {}); Ctrl-C to stop",
             handle.addr,
@@ -493,13 +511,12 @@ fn cmd_serve(args: &Args) -> i32 {
         ));
         loop {
             std::thread::sleep(std::time::Duration::from_secs(2));
-            let mut core = handle.core.lock().unwrap();
-            ex.poll(&mut core, handle.now());
-            write_metrics_out(args, &FleetSnapshot::from_parts(&core, Some(&ex), handle.now()).to_json());
-            let st = core.db.stats();
+            let svc = handle.service.lock().unwrap();
+            write_metrics_out(args, &svc.snapshot(handle.now()));
+            let st = svc.core.db.stats();
             emit(&format!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress));
-            if core.is_complete() {
-                match c.merge_best(core.assimilated()) {
+            if svc.core.is_complete() {
+                match c.merge_best(svc.core.assimilated()) {
                     Some(b) => emit(&format!(
                         "campaign complete; best raw={} hits={} (deme {}, epoch {})",
                         b.raw, b.hits, b.deme, b.epoch
@@ -541,15 +558,15 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         }
     }
-    let handle = serve(core).expect("serve");
+    let handle = serve_service(Service::new(core, None), port).expect("serve");
     emit(&format!("vgp server on {} ({runs} WUs of {}); Ctrl-C to stop", handle.addr, problem.name()));
     loop {
         std::thread::sleep(std::time::Duration::from_secs(2));
-        let core = handle.core.lock().unwrap();
-        write_metrics_out(args, &FleetSnapshot::from_parts(&core, None, handle.now()).to_json());
-        let st = core.db.stats();
+        let svc = handle.service.lock().unwrap();
+        write_metrics_out(args, &svc.snapshot(handle.now()));
+        let st = svc.core.db.stats();
         emit(&format!("wus {}/{} done; {} in progress", st.wus_done, st.wus, st.in_progress));
-        if core.is_complete() {
+        if svc.core.is_complete() {
             emit("campaign complete");
             return 0;
         }
@@ -576,7 +593,13 @@ fn cmd_worker(args: &Args) -> i32 {
     if rt.is_some() {
         vgp::log_info!("artifact runtime loaded: serving Method-2 (artifact-path) WUs");
     }
-    let report = worker.run(addr, &key, &|spec| exec::run_wu_auto_rt(rt.as_ref(), spec)).expect("worker run");
+    let mut conn = Connection::connect(addr).unwrap_or_else(|e| {
+        vgp::log_error!("worker: cannot reach {addr}: {e:#}");
+        std::process::exit(2);
+    });
+    let report = worker
+        .run(&mut conn, &key, &|spec| exec::run_wu_auto_rt(rt.as_ref(), spec))
+        .expect("worker run");
     emit(&format!(
         "worker done: {} completed, {} errors, {:.1}s cpu",
         report.completed, report.errors, report.cpu_time

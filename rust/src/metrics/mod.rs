@@ -7,10 +7,13 @@
 //! Every metric is declared at compile time in the tables below; there
 //! are no string-keyed entries, so a typo'd metric name is a compile
 //! error, the snapshot schema is closed, and the Prometheus label sets
-//! (`vgp_results_total{event="valid"}` …) are static. The legacy
-//! string-keyed `counter("result.valid")` *read* accessor is kept for
-//! tests and external callers — it resolves against the static name
-//! table and returns 0 for unknown names.
+//! (`vgp_results_total{event="valid"}` …) are static. Reads are typed
+//! too: [`Metrics::get`] takes a [`Counter`] variant — the old
+//! string-keyed `counter("result.valid")` accessor and the free-text
+//! `dump()` are gone (the `legacy-metrics` lint rule keeps them out),
+//! with [`Counter::from_name`] remaining as the one name→variant
+//! bridge for external tooling such as the dashboard's
+//! `--require-nonzero`.
 //!
 //! The registry is payload-neutral by construction: nothing in the
 //! WU-payload path reads a metric back, and recording takes interior
@@ -220,12 +223,6 @@ impl Metrics {
         d.count += 1;
     }
 
-    /// Legacy name-keyed read accessor (tests, external tooling).
-    /// Resolves against the static counter table; unknown names read 0.
-    pub fn counter(&self, name: &str) -> u64 {
-        Counter::from_name(name).map(|c| self.get(c)).unwrap_or(0)
-    }
-
     /// Structured point-in-time snapshot of every registered metric.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let s = self.state.lock().unwrap();
@@ -248,13 +245,6 @@ impl Metrics {
                 })
                 .collect(),
         }
-    }
-
-    /// Human-readable text render. Superseded by [`Metrics::snapshot`]
-    /// (typed) — do not string-parse this output; it is kept only as a
-    /// terminal convenience.
-    pub fn dump(&self) -> String {
-        self.snapshot().render()
     }
 
     /// Prometheus text exposition (version 0.0.4).
@@ -466,15 +456,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn typed_counters_and_legacy_reads() {
+    fn typed_counter_reads() {
         let m = Metrics::new();
         m.inc(Counter::ResultDispatched);
         m.add(Counter::ResultDispatched, 4);
         assert_eq!(m.get(Counter::ResultDispatched), 5);
-        // legacy name-keyed read resolves through the static table
-        assert_eq!(m.counter("result.dispatched"), 5);
-        assert_eq!(m.counter("no.such.metric"), 0);
-        assert!(m.dump().contains("result.dispatched = 5"));
+        // the one remaining name→variant bridge (external tooling)
+        assert_eq!(Counter::from_name("result.dispatched"), Some(Counter::ResultDispatched));
+        assert_eq!(Counter::from_name("no.such.metric"), None);
+        assert!(m.snapshot().render().contains("result.dispatched = 5"));
     }
 
     #[test]

@@ -34,11 +34,22 @@
 //! campaigns). An attached [`WuExecutor`] instead *runs the WU spec for
 //! real* — island campaigns need true checkpoints/emigrants for the
 //! attached [`MigrationExchange`] to route between epochs.
+//!
+//! **Pipeline mode** (`SimConfig::pipeline`): instead of calling the
+//! `ServerCore` convenience wrappers, every simulated RPC goes through
+//! [`crate::boinc::daemon::handle_request`] — the same multi-daemon
+//! scheduler/feeder path the TCP reactor serves. The daemons emit the
+//! identical `Event` sequence (their caches are pure read-side state),
+//! so direct and pipeline runs produce byte-identical fleet snapshots
+//! — the DES is a second driver of the production code path, proven by
+//! `tests/transport_equiv.rs`.
 
 pub mod queue;
 
+use crate::boinc::daemon::{self, DaemonConfig, Daemons};
 use crate::boinc::db::HostRow;
 use crate::boinc::exchange::MigrationExchange;
+use crate::boinc::protocol::{Reply, Request};
 use crate::boinc::server::{ServerConfig, ServerCore};
 use crate::boinc::workunit::WorkUnit;
 use crate::churn::{ComputingPower, HostSlab, SimHost};
@@ -76,6 +87,12 @@ pub struct SimConfig {
     /// identical total order, so this knob cannot change a trajectory
     /// — only how fast it runs (proven by the differential tests).
     pub queue: QueueKind,
+    /// Route every simulated RPC through the multi-daemon pipeline
+    /// ([`crate::boinc::daemon`]) instead of the `ServerCore`
+    /// convenience wrappers. Event-sequence-neutral: the daemons are
+    /// read-side state over the same events, so this knob cannot
+    /// change a trajectory either (proven by `tests/transport_equiv`).
+    pub pipeline: bool,
 }
 
 impl Default for SimConfig {
@@ -88,6 +105,7 @@ impl Default for SimConfig {
             trace_capacity: 0,
             wal: None,
             queue: QueueKind::Calendar,
+            pipeline: false,
         }
     }
 }
@@ -145,6 +163,9 @@ pub struct Simulation {
     rng: Rng,
     exchange: Option<MigrationExchange>,
     executor: Option<WuExecutor>,
+    /// present iff `cfg.pipeline`: the daemon set the virtual-time RPCs
+    /// run through (feeder cache, typed queues, host lanes)
+    daemons: Option<Daemons>,
 }
 
 impl Simulation {
@@ -165,6 +186,7 @@ impl Simulation {
                 Err(e) => crate::log_error!("sim: wal {path}: {e:#}"),
             }
         }
+        let daemons = cfg.pipeline.then(|| Daemons::new(DaemonConfig::default()));
         Simulation {
             core,
             host_ids: vec![0; slab.len()],
@@ -176,7 +198,13 @@ impl Simulation {
             rng: Rng::new(seed ^ 0x51315),
             exchange: None,
             executor: None,
+            daemons,
         }
+    }
+
+    /// Pipeline-mode telemetry (cache hits, queue drains), if enabled.
+    pub fn daemons(&self) -> Option<&Daemons> {
+        self.daemons.as_ref()
     }
 
     /// The simulated pool, in slab form.
@@ -261,23 +289,45 @@ impl Simulation {
             }
             match ev {
                 Ev::Arrive(i) => {
-                    let id = self.core.register_host(HostRow {
-                        id: 0,
-                        name: self.slab.name_of(i),
-                        city: self.slab.city_of(i).to_string(),
-                        flops: self.slab.flops[i],
-                        ncpus: self.slab.ncpus[i],
-                        on_frac: self.slab.on_frac[i],
-                        active_frac: self.slab.active_frac[i],
-                        registered_at: now,
-                        last_heartbeat: now,
-                        error_results: 0,
-                        valid_results: 0,
-                        consecutive_errors: 0,
-                        last_error_at: 0.0,
-                        in_flight: 0,
-                        credit: 0.0,
-                    });
+                    let id = if let Some(daemons) = self.daemons.as_mut() {
+                        let req = Request::Register {
+                            name: self.slab.name_of(i),
+                            city: self.slab.city_of(i).to_string(),
+                            flops: self.slab.flops[i],
+                            ncpus: self.slab.ncpus[i],
+                            on_frac: self.slab.on_frac[i],
+                            active_frac: self.slab.active_frac[i],
+                        };
+                        let reply = daemon::handle_request(
+                            &mut self.core,
+                            daemons,
+                            self.exchange.as_mut(),
+                            &req,
+                            now,
+                        );
+                        match reply {
+                            Reply::Registered { host_id } => host_id,
+                            other => panic!("sim register failed: {other:?}"),
+                        }
+                    } else {
+                        self.core.register_host(HostRow {
+                            id: 0,
+                            name: self.slab.name_of(i),
+                            city: self.slab.city_of(i).to_string(),
+                            flops: self.slab.flops[i],
+                            ncpus: self.slab.ncpus[i],
+                            on_frac: self.slab.on_frac[i],
+                            active_frac: self.slab.active_frac[i],
+                            registered_at: now,
+                            last_heartbeat: now,
+                            error_results: 0,
+                            valid_results: 0,
+                            consecutive_errors: 0,
+                            last_error_at: 0.0,
+                            in_flight: 0,
+                            credit: 0.0,
+                        })
+                    };
                     self.host_ids[i] = id;
                     self.attached[i] = true;
                     self.attached_count += 1;
@@ -305,14 +355,36 @@ impl Simulation {
                         continue;
                     }
                     last_comm = last_comm.max(now);
-                    match self.core.request_work(self.host_ids[i], now) {
-                        Some((rid, wu, _sig)) => {
+                    // pipeline mode serves from the feeder cache; direct
+                    // mode from the ServerCore wrapper — same event either
+                    // way, and the sim only needs (result id, flops_est)
+                    let got = if let Some(daemons) = self.daemons.as_mut() {
+                        let req = Request::RequestWork { host_id: self.host_ids[i] };
+                        match daemon::handle_request(
+                            &mut self.core,
+                            daemons,
+                            self.exchange.as_mut(),
+                            &req,
+                            now,
+                        ) {
+                            Reply::Work { result_id, flops_est, .. } => {
+                                Some((result_id, flops_est))
+                            }
+                            _ => None,
+                        }
+                    } else {
+                        self.core
+                            .request_work(self.host_ids[i], now)
+                            .map(|(rid, wu, _sig)| (rid, wu.flops_est))
+                    };
+                    match got {
+                        Some((rid, flops_est)) => {
                             self.active[i] += 1;
                             // per-core task model: each concurrent WU
                             // computes on ONE core at the host's
                             // effective per-core rate; ncpus shows up as
                             // queue width, not as a rate multiplier
-                            let compute = wu.flops_est / self.slab.effective_flops(i).max(1e3);
+                            let compute = flops_est / self.slab.effective_flops(i).max(1e3);
                             let dur = compute + self.cfg.transfer_overhead;
                             let ok = !self.rng.chance(self.slab.client_error_rate[i]);
                             // client errors surface early (crash on start)
@@ -343,8 +415,10 @@ impl Simulation {
                         continue; // host died mid-computation
                     }
                     last_comm = last_comm.max(now);
-                    if ok {
-                        let payload = match self.executor.as_mut() {
+                    let payload = if !ok {
+                        None
+                    } else {
+                        match self.executor.as_mut() {
                             // real execution: the payload is the WU's
                             // actual result content (island epochs)
                             Some(exec_fn) => {
@@ -376,21 +450,44 @@ impl Simulation {
                                     self.core.db.result(rid).map(|r| r.wu_id).unwrap_or(0);
                                 Some(Json::obj().set("wu", wu_id).set("status", "done"))
                             }
+                        }
+                    };
+                    // report-then-exchange-poll, in both modes:
+                    // handle_request polls internally after each report,
+                    // keeping the event sequence identical to direct mode
+                    if let Some(daemons) = self.daemons.as_mut() {
+                        let req = match payload {
+                            Some(p) => {
+                                Request::ReportSuccess { result_id: rid, cpu_time: cpu, payload: p }
+                            }
+                            None => Request::ReportError { result_id: rid },
                         };
+                        daemon::handle_request(
+                            &mut self.core,
+                            daemons,
+                            self.exchange.as_mut(),
+                            &req,
+                            now,
+                        );
+                    } else {
                         match payload {
                             Some(p) => self.core.report_success(rid, now, cpu, p),
                             None => self.core.report_error(rid, now),
                         }
-                    } else {
-                        self.core.report_error(rid, now);
-                    }
-                    if let Some(ex) = self.exchange.as_mut() {
-                        ex.poll(&mut self.core, now);
+                        if let Some(ex) = self.exchange.as_mut() {
+                            ex.poll(&mut self.core, now);
+                        }
                     }
                     push(&mut q, &mut pending_work, now + 1.0, Ev::Poll(i));
                 }
                 Ev::Tick => {
-                    self.core.tick(now);
+                    // transitioner pass (+ daemon upkeep in pipeline
+                    // mode), then the exchange — the same Tick-then-Poll
+                    // order as the TCP reactor's Service::tick
+                    match self.daemons.as_mut() {
+                        Some(daemons) => daemons.tick(&mut self.core, now),
+                        None => self.core.tick(now),
+                    }
                     if let Some(ex) = self.exchange.as_mut() {
                         ex.poll(&mut self.core, now);
                     }
@@ -639,5 +736,38 @@ mod tests {
             assert_eq!(out_h.events_processed, out_c.events_processed, "{scenario:?}");
             assert_eq!(out_h.no_replies, out_c.no_replies, "{scenario:?}");
         }
+    }
+
+    /// Pipeline mode routes every RPC through the multi-daemon path;
+    /// since the daemons are pure read-side state over the same events,
+    /// the fleet snapshot must not move by a byte.
+    #[test]
+    fn daemon_pipeline_is_bit_identical_to_direct_dispatch() {
+        let run = |pipeline: bool| {
+            let mut rng = Rng::new(42);
+            let hosts = sample_pool(&mut rng, &PoolParams::volunteer(40), FIG1_CITIES_MUX11);
+            let mut sim = Simulation::new(
+                SimConfig { pipeline, ..SimConfig::default() },
+                ServerConfig::default(),
+                hosts,
+                42,
+            );
+            for wu in wus(30, 1e10) {
+                sim.submit(wu);
+            }
+            let out = sim.run_mut(1.3e9 * 0.9);
+            let snap =
+                FleetSnapshot::from_parts(&sim.core, None, out.makespan).to_json().to_string();
+            let hits = sim.daemons().map(|d| d.stats.cache_hits).unwrap_or(0);
+            (snap, out, hits)
+        };
+        let (snap_d, out_d, _) = run(false);
+        let (snap_p, out_p, hits) = run(true);
+        assert_eq!(snap_d, snap_p, "daemon pipeline changed the fleet snapshot");
+        assert_eq!(out_d.completions, out_p.completions);
+        assert_eq!(out_d.makespan, out_p.makespan);
+        assert_eq!(out_d.events_processed, out_p.events_processed);
+        assert!(out_p.completed > 0, "campaign must make progress");
+        assert!(hits > 0, "the scheduler must actually serve from the feeder cache");
     }
 }

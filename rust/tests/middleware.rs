@@ -5,6 +5,7 @@
 use vgp::boinc::db::HostRow;
 use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::boinc::workunit::{Outcome, WorkUnit};
+use vgp::metrics::Counter;
 use vgp::util::json::Json;
 
 fn host(name: &str, flops: f64) -> HostRow {
@@ -91,7 +92,7 @@ fn mass_timeout_storm_recovers() {
     }
     // all dispatched; nobody reports; deadlines expire
     s.tick(10_000.0);
-    assert!(s.metrics.counter("result.no_reply") >= 3);
+    assert!(s.metrics.get(Counter::ResultNoReply) >= 3);
     let reliable = s.register_host(host("reliable", 2e9));
     let mut now = 10_001.0;
     for _ in 0..100 {

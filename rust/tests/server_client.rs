@@ -1,10 +1,12 @@
-//! Real TCP end-to-end: server + multiple concurrent workers executing
-//! native GP runs, with redundancy validation over the wire.
+//! Real TCP end-to-end: the daemon-pipeline reactor + multiple
+//! concurrent workers executing native GP runs, with redundancy
+//! validation over the wire.
 
-use vgp::boinc::net::{serve, Worker};
+use vgp::boinc::net::{serve, Connection, Worker};
 use vgp::boinc::server::{ServerConfig, ServerCore};
 use vgp::coordinator::{exec, Campaign};
 use vgp::gp::problems::ProblemKind;
+use vgp::metrics::Counter;
 
 #[test]
 fn multi_worker_campaign_over_tcp() {
@@ -28,7 +30,8 @@ fn multi_worker_campaign_over_tcp() {
                 flops: 1e9,
                 poll_interval: std::time::Duration::from_millis(10),
             };
-            worker.run(addr, &key, &|spec| exec::run_wu_native(spec)).unwrap()
+            let mut conn = Connection::connect(addr).unwrap();
+            worker.run(&mut conn, &key, &|spec| exec::run_wu_native(spec)).unwrap()
         }));
     }
     let mut total = 0;
@@ -37,14 +40,14 @@ fn multi_worker_campaign_over_tcp() {
     }
     assert_eq!(total, 6);
     {
-        let core = handle.core.lock().unwrap();
-        assert!(core.is_complete());
-        assert_eq!(core.assimilated().len(), 6);
-        for a in core.assimilated() {
+        let svc = handle.service.lock().unwrap();
+        assert!(svc.core.is_complete());
+        assert_eq!(svc.core.assimilated().len(), 6);
+        for a in svc.core.assimilated() {
             assert!(a.payload.get("best_raw").is_some());
         }
         // all workers got registered and heartbeated
-        assert_eq!(core.metrics.counter("host.registered"), 3);
+        assert_eq!(svc.core.metrics.get(Counter::HostRegistered), 3);
     }
     handle.shutdown();
 }
@@ -72,18 +75,19 @@ fn quorum_over_tcp_with_deterministic_payloads() {
                 flops: 1e9,
                 poll_interval: std::time::Duration::from_millis(10),
             };
-            worker.run(addr, &key, &|spec| exec::run_wu_native(spec)).unwrap()
+            let mut conn = Connection::connect(addr).unwrap();
+            worker.run(&mut conn, &key, &|spec| exec::run_wu_native(spec)).unwrap()
         }));
     }
     for j in joins {
         j.join().unwrap();
     }
     {
-        let core = handle.core.lock().unwrap();
-        assert!(core.is_complete(), "quorum must be reached by agreement");
-        assert_eq!(core.assimilated().len(), 3);
-        assert_eq!(core.metrics.counter("result.valid"), 6, "both replicas validate");
-        assert_eq!(core.metrics.counter("result.invalid"), 0);
+        let svc = handle.service.lock().unwrap();
+        assert!(svc.core.is_complete(), "quorum must be reached by agreement");
+        assert_eq!(svc.core.assimilated().len(), 3);
+        assert_eq!(svc.core.metrics.get(Counter::ResultValid), 6, "both replicas validate");
+        assert_eq!(svc.core.metrics.get(Counter::ResultInvalid), 0);
     }
     handle.shutdown();
 }

@@ -1,0 +1,159 @@
+//! Transport-equivalence differential proofs for the multi-daemon
+//! pipeline (the PR's acceptance gate):
+//!
+//! * **virtual time** — the same island campaign simulated with direct
+//!   core calls and with every interaction routed through the daemon
+//!   pipeline as `vgp.rpc.v1` requests must produce a **byte-identical**
+//!   fleet snapshot (counters, hosts, campaign grid, trace section),
+//!   the same makespan bits and the same merged best individual;
+//! * **wall clock** — the same campaign driven by a real worker over
+//!   the in-process [`Loopback`] transport and over a real TCP
+//!   [`Connection`] must assimilate **byte-identical payloads**
+//!   (compared by sha256, in assimilation order) and agree on every
+//!   snapshot field that is not derived from the wall clock
+//!   (`virtual_time`, the `sim.virtual_time` gauge and the
+//!   time-valued histograms are normalized before comparison).
+//!
+//! Both tests ride the CI determinism matrix (1-thread and 8-thread
+//! legs), so transport equivalence is also checked across worker
+//! thread counts.
+
+use vgp::boinc::net::{serve, Connection, Worker};
+use vgp::boinc::server::{ServerConfig, ServerCore};
+use vgp::boinc::signature::sha256_hex;
+use vgp::churn::PoolParams;
+use vgp::coordinator::{exec, simulate_island_campaign, Campaign, IslandCampaign};
+use vgp::gp::problems::ProblemKind;
+use vgp::metrics::snapshot::FleetSnapshot;
+use vgp::metrics::Gauge;
+use vgp::sim::SimConfig;
+use vgp::util::json::Json;
+
+// ---------------------------------------------------------- virtual time
+
+#[test]
+fn pipeline_island_campaign_is_byte_identical_to_direct_dispatch() {
+    let mut c = IslandCampaign::new("equiv_islands", ProblemKind::Mux6, 3, 2, 4, 60);
+    c.migration_k = 2;
+    c.seed = 5;
+    let pool = PoolParams::volunteer(8);
+    let cities = &[("vol", 8)];
+    let direct = simulate_island_campaign(&c, &pool, cities, SimConfig::default(), 9);
+    let piped = simulate_island_campaign(
+        &c,
+        &pool,
+        cities,
+        SimConfig { pipeline: true, ..SimConfig::default() },
+        9,
+    );
+
+    // the whole observable end state, byte for byte: metrics counters,
+    // gauges, histograms, per-host rows, the campaign grid and stats
+    assert_eq!(
+        direct.snapshot.to_string(),
+        piped.snapshot.to_string(),
+        "pipeline mode must not change a single snapshot byte"
+    );
+    assert_eq!(direct.outcome.completed, piped.outcome.completed);
+    assert_eq!(direct.outcome.total_wus, piped.outcome.total_wus);
+    assert_eq!(
+        direct.outcome.makespan.to_bits(),
+        piped.outcome.makespan.to_bits(),
+        "same virtual trajectory, same makespan bits"
+    );
+    assert_eq!(direct.stats.released, piped.stats.released);
+    assert_eq!(direct.stats.immigrants_delivered, piped.stats.immigrants_delivered);
+
+    // the merged best individual is the same genome with the same bits
+    let (a, b) = (direct.best.expect("direct best"), piped.best.expect("piped best"));
+    assert_eq!(a.raw.to_bits(), b.raw.to_bits());
+    assert_eq!(a.hits, b.hits);
+    assert_eq!((a.deme, a.epoch), (b.deme, b.epoch));
+    assert_eq!(a.tree, b.tree, "merged best genome must be identical");
+
+    // and the campaign actually completed on both sides
+    assert_eq!(direct.outcome.completed, direct.outcome.total_wus);
+}
+
+// ----------------------------------------------------------- wall clock
+
+/// Snapshot rendering with every wall-clock-derived field normalized:
+/// `virtual_time`, the `sim.virtual_time` gauge and all histograms
+/// (turnaround/cpu observations are wall seconds under `vgp serve`).
+/// Everything else — counters, per-host credit/valid/error rows — must
+/// match exactly between transports.
+fn normalized(snapshot: &Json) -> String {
+    let mut s = FleetSnapshot::from_json(snapshot).expect("valid vgp.fleet.v1 snapshot");
+    s.virtual_time = 0.0;
+    for (g, v) in s.metrics.gauges.iter_mut() {
+        if *g == Gauge::VirtualTime {
+            *v = 0.0;
+        }
+    }
+    for (_, h) in s.metrics.hists.iter_mut() {
+        h.counts.iter_mut().for_each(|c| *c = 0);
+        h.sum = 0.0;
+        h.count = 0;
+    }
+    s.to_json().to_string()
+}
+
+/// Run one single-worker campaign leg against a freshly served core,
+/// over TCP or over the in-process loopback transport. Returns the
+/// sha256 of every assimilated payload (in assimilation order) plus
+/// the normalized end-state snapshot.
+fn run_leg(over_tcp: bool) -> (Vec<String>, String) {
+    let mut campaign = Campaign::new("equiv_tcp", ProblemKind::Mux6, 4, 6, 80);
+    campaign.seed = 11;
+    let mut core = ServerCore::new(ServerConfig::default());
+    for wu in campaign.workunits() {
+        core.submit_wu(wu);
+    }
+    let key = core.key.clone();
+    let handle = serve(core).unwrap();
+    let worker = Worker {
+        name: "w0".into(),
+        city: "lab".into(),
+        flops: 1e9,
+        poll_interval: std::time::Duration::from_millis(5),
+    };
+    let work = |spec: &Json| exec::run_wu_native(spec);
+    let report = if over_tcp {
+        let mut conn = Connection::connect(handle.addr).unwrap();
+        worker.run(&mut conn, &key, &work).unwrap()
+    } else {
+        let mut lb = handle.loopback();
+        worker.run(&mut lb, &key, &work).unwrap()
+    };
+    assert_eq!(report.completed, 4);
+    let (hashes, snap) = {
+        let svc = handle.service.lock().unwrap();
+        assert!(svc.core.is_complete());
+        let hashes = svc
+            .core
+            .assimilated()
+            .iter()
+            .map(|a| sha256_hex(a.payload.to_string().as_bytes()))
+            .collect();
+        // snapshot at now = 0.0 on both legs; the remaining wall-clock
+        // fields are scrubbed by normalized()
+        (hashes, normalized(&svc.snapshot(0.0)))
+    };
+    handle.shutdown();
+    (hashes, snap)
+}
+
+#[test]
+fn loopback_and_tcp_transports_assimilate_identical_bytes() {
+    let (h_loop, s_loop) = run_leg(false);
+    let (h_tcp, s_tcp) = run_leg(true);
+    assert_eq!(h_loop.len(), 4, "every WU assimilated");
+    assert_eq!(
+        h_loop, h_tcp,
+        "assimilated payload hashes must be byte-identical across transports"
+    );
+    assert_eq!(
+        s_loop, s_tcp,
+        "snapshots must agree on every non-wall-clock field across transports"
+    );
+}
